@@ -1,0 +1,76 @@
+//! Quickstart: the paper's Figure-1 DAG, executed for real.
+//!
+//! Builds the 7-task example DAG from §2 with real kernel payloads
+//! (matmul / sort / copy), runs it on the real-thread XiTAO engine with
+//! the performance-based scheduler on a TX2-shaped 6-core topology, and
+//! prints what the scheduler did: which tasks were critical, where each
+//! TAO ran, at what width, and what the PTT learned.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+use xitao::coordinator::dag::TaoDag;
+use xitao::coordinator::ptt::Ptt;
+use xitao::coordinator::{PerformanceBased, RealEngineOpts, run_dag_real};
+use xitao::kernels::{CopyTao, KernelSizes, MatMulTao, SortTao};
+use xitao::platform::{KernelClass, Topology};
+
+fn main() {
+    // The TX2 topology from the paper: 2 Denver-class cores + 4 A57-class
+    // cores, one shared L2 per cluster. (On this host the workers
+    // time-share whatever cores exist — functionality, not speed.)
+    let topo = Topology::from_clusters(
+        "tx2-shaped",
+        &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)],
+    );
+    let sizes = KernelSizes::small();
+
+    // Figure 1: A→C→G→D→F critical path, B and E off-path.
+    let mut dag = TaoDag::new();
+    let mk_mm = |seed| Arc::new(MatMulTao::new(sizes.matmul_n, seed));
+    let mk_sort = |seed| Arc::new(SortTao::new(sizes.sort_len, seed));
+    let mk_copy = |seed| Arc::new(CopyTao::new(sizes.copy_bytes, seed));
+    let a = dag.add_task_payload(KernelClass::MatMul, 0, 1.0, Some(mk_mm(1)));
+    let b = dag.add_task_payload(KernelClass::Sort, 1, 1.0, Some(mk_sort(2)));
+    let c = dag.add_task_payload(KernelClass::Copy, 2, 1.0, Some(mk_copy(3)));
+    let e = dag.add_task_payload(KernelClass::Sort, 1, 1.0, Some(mk_sort(4)));
+    let g = dag.add_task_payload(KernelClass::MatMul, 0, 1.0, Some(mk_mm(5)));
+    let d = dag.add_task_payload(KernelClass::Copy, 2, 1.0, Some(mk_copy(6)));
+    let f = dag.add_task_payload(KernelClass::MatMul, 0, 1.0, Some(mk_mm(7)));
+    for (x, y) in [(a, c), (a, e), (b, g), (c, g), (e, d), (g, d), (d, f)] {
+        dag.add_edge(x, y);
+    }
+    dag.finalize().expect("acyclic");
+
+    println!("Figure-1 DAG: {} tasks, critical path {}, parallelism {:.2}", dag.len(), dag.critical_path_len(), dag.parallelism());
+    println!("criticalities: {:?}\n", dag.nodes.iter().map(|n| n.criticality).collect::<Vec<_>>());
+
+    let ptt = Ptt::new(dag.n_types(), &topo);
+    let result = run_dag_real(&dag, &topo, &PerformanceBased, Some(&ptt), &RealEngineOpts::default());
+
+    let names = ["A", "B", "C", "E", "G", "D", "F"];
+    println!("execution trace (wall time):");
+    for r in &result.records {
+        println!(
+            "  {:>2}  {:6}  crit={}  leader=core{} width={}  [{:.4}s → {:.4}s]",
+            names[r.task],
+            r.class.name(),
+            if r.critical { "yes" } else { "no " },
+            r.partition.leader,
+            r.partition.width,
+            r.t_start,
+            r.t_end,
+        );
+    }
+    println!("\nmakespan: {:.4}s", result.makespan);
+    println!("\nwhat the PTT learned (type 0 = matmul):");
+    for (core, width, val) in ptt.dump(0, &topo) {
+        if val > 0.0 {
+            println!("  core {core} width {width}: {val:.6}s");
+        }
+    }
+    // Criticality sanity: C, G, D, F were woken over the critical path.
+    let crit: Vec<&str> =
+        result.records.iter().filter(|r| r.critical).map(|r| names[r.task]).collect();
+    println!("\ncritical tasks observed: {crit:?} (expected C, G, D, F in some order)");
+}

@@ -1,0 +1,97 @@
+//! END-TO-END driver: VGG-16 inference through the full three-layer stack.
+//!
+//! This is the repository's integration proof (§4.3 / §5.4 of the paper,
+//! EXPERIMENTS.md §E2E): the L1 Pallas GEMM kernel was AOT-lowered to HLO
+//! text at build time (`make artifacts`), the L2 JAX model likewise; here
+//! the L3 Rust coordinator loads both with the PJRT CPU client and runs
+//! one real inference three ways on identical weights:
+//!
+//!   1. whole-model — the single JAX/Pallas executable;
+//!   2. pipeline    — Rust layer loop over the tiled Pallas GEMM artifact;
+//!   3. TAO-DAG     — the same GEMMs as XiTAO tasks under the
+//!                    performance-based scheduler on real worker threads.
+//!
+//! All three must agree (allclose) — that single assertion exercises the
+//! kernel, the AOT path, the runtime service, the im2col/pool glue, the
+//! DAG builder, the scheduler and the worker engine at once.
+//!
+//!     make artifacts && cargo run --release --example vgg16_infer
+
+use std::sync::Arc;
+use std::time::Instant;
+use xitao::coordinator::{PerformanceBased, RealEngineOpts, run_dag_real};
+use xitao::platform::Topology;
+use xitao::runtime::{PjrtService, VggWeights, build_real_dag, pipeline_infer, synthetic_image};
+
+fn main() {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let t0 = Instant::now();
+    let svc = PjrtService::start(artifacts).expect("start PJRT service");
+    let spec = svc.manifest().vgg.clone().expect("VGG artifact in manifest");
+    println!(
+        "[{:.1}s] PJRT service up: {} GEMM tiles compiled, VGG at {}×{} input",
+        t0.elapsed().as_secs_f64(),
+        svc.manifest().gemm_tiles.len(),
+        spec.input_hw,
+        spec.input_hw
+    );
+
+    let hw = spec.input_hw;
+    let weights = Arc::new(VggWeights::synthetic(hw, 1));
+    let image = synthetic_image(hw, 2);
+    let h = svc.handle();
+
+    // Path 1: whole-model (L2 artifact).
+    h.vgg_load(weights.flat()).expect("load weights");
+    let t = Instant::now();
+    let logits_whole = h.vgg_infer(&image).expect("whole-model inference");
+    let t_whole = t.elapsed().as_secs_f64();
+    println!("[whole-model] {t_whole:.2}s  argmax={}", argmax(&logits_whole));
+
+    // Path 2: Rust pipeline over the tiled Pallas GEMM (L1 artifact).
+    let t = Instant::now();
+    let logits_pipe = pipeline_infer(&weights, &image, &h).expect("pipeline inference");
+    let t_pipe = t.elapsed().as_secs_f64();
+    println!("[pipeline   ] {t_pipe:.2}s  argmax={}", argmax(&logits_pipe));
+
+    // Path 3: the XiTAO TAO-DAG on real worker threads.
+    let (dag, out) = build_real_dag(weights.clone(), image.clone(), h.clone(), 128);
+    println!(
+        "[tao-dag    ] DAG: {} TAOs ({} GEMM + prep), critical path {}",
+        dag.len(),
+        dag.nodes.iter().filter(|n| n.class == xitao::platform::KernelClass::Gemm).count(),
+        dag.critical_path_len()
+    );
+    let topo = Topology::homogeneous(4);
+    let t = Instant::now();
+    let res = run_dag_real(&dag, &topo, &PerformanceBased, None, &RealEngineOpts::default());
+    let t_dag = t.elapsed().as_secs_f64();
+    let logits_dag = out.snapshot();
+    println!(
+        "[tao-dag    ] {t_dag:.2}s  argmax={}  widths {:?}",
+        argmax(&logits_dag),
+        res.width_histogram()
+    );
+
+    // The cross-language assertion.
+    let scale = logits_whole.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);
+    let d1 = max_diff(&logits_whole, &logits_pipe) / scale;
+    let d2 = max_diff(&logits_whole, &logits_dag) / scale;
+    println!("\nrelative max deviation: pipeline {d1:.2e}, tao-dag {d2:.2e}");
+    assert!(d1 < 1e-2 && d2 < 1e-2, "paths disagree!");
+    assert_eq!(argmax(&logits_whole), argmax(&logits_pipe));
+    assert_eq!(argmax(&logits_whole), argmax(&logits_dag));
+    println!("E2E VALIDATION OK — JAX/Pallas whole model ≡ Rust tiled pipeline ≡ XiTAO TAO-DAG");
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().fold((0, f32::NEG_INFINITY), |a, (i, &v)| if v > a.1 { (i, v) } else { a }).0
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).fold(0f32, |m, (x, y)| m.max((x - y).abs()))
+}

@@ -1,0 +1,111 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Emits (under --out, default ../artifacts):
+  - gemm_acc_<b>.hlo.txt   — one-tile `c + a@b` Pallas executables
+                             (b ∈ {128, 64, 32}); the Rust tiled-GEMM
+                             executor loops these over tile coordinates.
+  - vgg16_<hw>.hlo.txt     — the full VGG-16 forward (weights as
+                             parameters) at a small input, for the
+                             whole-model PJRT path.
+  - manifest.json          — shapes and file names, consumed by
+                             rust/src/runtime.
+
+Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Python runs only here — never on the Rust request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import gemm
+
+GEMM_BLOCKS = [128, 64, 32]
+VGG_INPUT_HW = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple convention)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gemm_acc(block: int) -> str:
+    spec = jax.ShapeDtypeStruct((block, block), jnp.float32)
+    lowered = jax.jit(gemm.gemm_acc).lower(spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def lower_vgg(input_hw: int, use_pallas: bool = False) -> str:
+    """Lower the VGG forward.
+
+    Default is the jnp-dot variant: interpret-mode Pallas grids lower to
+    HLO while-loops, and 16 layers of them push the PJRT CPU compiler past
+    10 minutes. The tile artifacts keep the Pallas kernel on the Rust hot
+    path (every pipeline/TAO-DAG GEMM); the whole-model executable serves
+    as the independent numeric oracle, which is *stronger* validation for
+    being Pallas-free.
+    """
+    shapes = model.param_shapes(input_hw)
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    args.append(jax.ShapeDtypeStruct((3, input_hw, input_hw), jnp.float32))
+
+    def fn(*flat):
+        return model.forward_flat(list(flat), input_hw=input_hw, use_pallas=use_pallas)
+
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--vgg-hw", type=int, default=VGG_INPUT_HW, help="VGG artifact input size"
+    )
+    ap.add_argument(
+        "--skip-vgg", action="store_true", help="emit only the GEMM tiles"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"gemm_acc": {}, "vgg": None}
+    for b in GEMM_BLOCKS:
+        name = f"gemm_acc_{b}.hlo.txt"
+        text = lower_gemm_acc(b)
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest["gemm_acc"][str(b)] = {"file": name, "block": b}
+        print(f"wrote {name} ({len(text)} chars)")
+
+    if not args.skip_vgg:
+        name = f"vgg16_{args.vgg_hw}.hlo.txt"
+        text = lower_vgg(args.vgg_hw)
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest["vgg"] = {
+            "file": name,
+            "input_hw": args.vgg_hw,
+            "param_shapes": [list(s) for s in model.param_shapes(args.vgg_hw)],
+            "n_logits": 1000,
+        }
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

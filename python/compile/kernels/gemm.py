@@ -1,0 +1,118 @@
+"""Layer-1: Pallas GEMM kernels (the VGG-16 compute hot-spot).
+
+The paper's showcase application spends nearly all of its time in GEMM
+("Each convolutional (CONV) and fully-connected (FC) layer implements
+GEneral Matrix Multiply (GEMM) that takes most of the computation time",
+§4.3). This module implements that hot-spot as a tiled Pallas kernel.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): blocks are 128×128 — the
+MXU systolic tile — and each grid step holds three blocks in VMEM
+(x, y, o = 3 × 64 KiB f32 ≪ 16 MiB VMEM), leaving headroom for Mosaic's
+double buffering. The K dimension is innermost so the output block stays
+resident across the accumulation ("revisiting" schedule).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers the kernel to plain HLO that both
+jax and the Rust PJRT runtime can run (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The MXU-shaped default tile.
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm × bk) @ (bk × bn) step, accumulated into the output block.
+
+    The output BlockSpec maps every k-step of a given (i, j) to the same
+    block, so ``o_ref`` is resident across the K loop; the first step
+    zeroes it.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x, y, *, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, bn=DEFAULT_BLOCK):
+    """Tiled Pallas matmul for shapes that are multiples of the block.
+
+    Grid order (i, j, k): K innermost keeps the f32 accumulator block in
+    VMEM; (i, j) sweeps output tiles.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"shape ({m},{k},{n}) not a multiple of blocks ({bm},{bk},{bn})"
+    )
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(x, y)
+
+
+def _pad_to(v, multiple, axis):
+    pad = (-v.shape[axis]) % multiple
+    if pad == 0:
+        return v
+    widths = [(0, 0)] * v.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(v, widths)
+
+
+def _fit_block(dim, block):
+    """Largest power-of-two tile ≤ `block` that doesn't more-than-double
+    `dim` when padded (skewed shapes like GEMV get skewed tiles — a cubic
+    shrink would explode the grid instead)."""
+    b = block
+    while b > 8 and dim < b // 2 + 1:
+        b //= 2
+    return b
+
+
+def matmul_any(x, y, *, block=DEFAULT_BLOCK):
+    """Pallas matmul for arbitrary shapes: zero-pad each dimension to its
+    own block multiple, multiply, slice back. Zero padding is exact for
+    matmul."""
+    m, k = x.shape
+    _, n = y.shape
+    bm, bk, bn = _fit_block(m, block), _fit_block(k, block), _fit_block(n, block)
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    yp = _pad_to(_pad_to(y, bk, 0), bn, 1)
+    out = matmul(xp, yp, bm=bm, bk=bk, bn=bn)
+    return out[:m, :n]
+
+
+def gemm_bias_relu(x, w, b):
+    """Fused layer primitive: relu(w @ x + b[:, None]) — the conv/FC body."""
+    out = matmul_any(w, x) + b[:, None]
+    return jnp.maximum(out, 0.0)
+
+
+def gemm_acc(a, b, c):
+    """The AOT artifact function: ``c + a @ b`` over one tile.
+
+    The Rust runtime's tiled-GEMM executor loops this executable over tile
+    coordinates, passing the running accumulator as ``c`` — the K-innermost
+    schedule of `matmul` realised on the host side. Returns a 1-tuple to
+    match the text-HLO interchange convention (return_tuple=True).
+    """
+    return (c + matmul(a, b, bm=a.shape[0], bk=a.shape[1], bn=b.shape[1]),)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels and the VGG-16 model.
+
+Every Pallas kernel in this package has a reference implementation here
+built only from `jnp`/`lax` primitives; pytest (and hypothesis sweeps)
+assert allclose between the two. This is the core correctness signal of
+the build-time layer.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain jnp matmul in f32 accumulation."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def gemm_bias_relu_ref(x, w, b):
+    return jnp.maximum(matmul_ref(w, x) + b[:, None], 0.0)
+
+
+def gemm_acc_ref(a, b, c):
+    return (c + matmul_ref(a, b),)
+
+
+def conv2d_3x3_ref(x, w, b):
+    """Reference 3×3 SAME convolution via lax.conv.
+
+    x: [c_in, h, w]; w: [c_out, c_in, 3, 3]; b: [c_out] → [c_out, h, w].
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None],  # NCHW
+        w,  # OIHW
+        window_strides=(1, 1),
+        padding="SAME",
+    )[0]
+    return out + b[:, None, None]
+
+
+def maxpool2_ref(x):
+    """2×2 max-pool, stride 2. x: [c, h, w] with even h, w."""
+    c, h, w = x.shape
+    return x.reshape(c, h // 2, 2, w // 2, 2).max(axis=(2, 4))
+
+
+def im2col_3x3(x):
+    """3×3 SAME im2col: [c, h, w] → [c·9, h·w].
+
+    Row ordering matches the weight reshape in `model.py`:
+    index = c·9 + (ky·3 + kx).
+    """
+    c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+    cols = []
+    for ky in range(3):
+        for kx in range(3):
+            cols.append(xp[:, ky : ky + h, kx : kx + w].reshape(c, h * w))
+    # cols[ky*3+kx][c] → want [c, 9, h*w] → [c*9, h*w]
+    stacked = jnp.stack(cols, axis=1)  # [c, 9, h*w]
+    return stacked.reshape(c * 9, h * w)

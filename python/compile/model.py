@@ -1,0 +1,110 @@
+"""Layer-2: VGG-16 forward pass in JAX, calling the Pallas GEMM kernel.
+
+Mirrors the paper's Darknet port (§4.3): every conv layer is im2col +
+GEMM, every FC layer is GEMM; 2×2 max-pools between blocks. The GEMMs go
+through `kernels.gemm.matmul_any` (the Pallas kernel), so lowering this
+function produces one HLO module in which the paper's hot-spot is the L1
+kernel.
+
+The weight layout matches the Rust runtime (`rust/src/runtime/vgg.rs`):
+conv weights are stored pre-reshaped as [c_out, c_in·9] with column order
+c·9 + (ky·3 + kx), biases as [c_out]. Weights enter as parameters so the
+AOT artifact is weight-agnostic (the Rust side feeds its own).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gemm, ref
+
+# VGG-16 configuration D: (out_channels, repeats) per conv block.
+CONV_BLOCKS = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+FC_SIZES = [4096, 4096, 1000]
+
+
+def layer_specs(input_hw):
+    """[(kind, c_in, c_out, hw_in)] for all weight layers, in order."""
+    assert input_hw % 32 == 0, "input must be a multiple of 32"
+    specs = []
+    hw = input_hw
+    c_in = 3
+    for c_out, reps in CONV_BLOCKS:
+        for _ in range(reps):
+            specs.append(("conv", c_in, c_out, hw))
+            c_in = c_out
+        hw //= 2
+    flat = c_in * hw * hw
+    for c_out in FC_SIZES:
+        specs.append(("fc", flat, c_out, hw))
+        flat = c_out
+    return specs
+
+
+def param_shapes(input_hw):
+    """Flat list of parameter shapes: W, b per layer, model order."""
+    shapes = []
+    for kind, c_in, c_out, _ in layer_specs(input_hw):
+        k = c_in * 9 if kind == "conv" else c_in
+        shapes.append((c_out, k))
+        shapes.append((c_out,))
+    return shapes
+
+
+def init_params(input_hw, seed=0):
+    """He-style deterministic init (synthetic weights; the experiment
+    measures scheduling, not accuracy — DESIGN.md §Substitutions)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    params = []
+    for shape in param_shapes(input_hw):
+        if len(shape) == 2:
+            fan_in = shape[1]
+            params.append(
+                jnp.asarray(
+                    rng.standard_normal(shape, dtype=np.float32)
+                    * np.sqrt(2.0 / fan_in)
+                )
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def forward(params, image, *, input_hw, use_pallas=True):
+    """VGG-16 forward. image: [3, hw, hw] → logits [1000].
+
+    `use_pallas=False` swaps in the jnp oracle GEMM (model-level A/B test).
+    """
+    mm = gemm.matmul_any if use_pallas else ref.matmul_ref
+    x = image
+    p = iter(params)
+    li = 0
+    specs = layer_specs(input_hw)
+    hw = input_hw
+    for c_out, reps in CONV_BLOCKS:
+        for _ in range(reps):
+            kind, c_in, c_out_s, hw_s = specs[li]
+            assert kind == "conv" and c_out_s == c_out and hw_s == hw
+            w = next(p)  # [c_out, c_in*9]
+            b = next(p)
+            cols = ref.im2col_3x3(x)  # [c_in*9, hw*hw]
+            out = mm(w, cols) + b[:, None]
+            x = jnp.maximum(out, 0.0).reshape(c_out, hw, hw)
+            li += 1
+        x = ref.maxpool2_ref(x)
+        hw //= 2
+    x = x.reshape(-1, 1)  # [flat, 1]
+    for fi, c_out in enumerate(FC_SIZES):
+        w = next(p)
+        b = next(p)
+        out = mm(w, x) + b[:, None]
+        # No ReLU after the final classifier layer.
+        x = jnp.maximum(out, 0.0) if fi < len(FC_SIZES) - 1 else out
+        li += 1
+    return x[:, 0]
+
+
+def forward_flat(args, *, input_hw, use_pallas=True):
+    """AOT entry point: args = [*params, image] → (logits,)."""
+    *params, image = args
+    return (forward(params, image, input_hw=input_hw, use_pallas=use_pallas),)

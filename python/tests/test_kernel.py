@@ -1,0 +1,140 @@
+"""L1 correctness: the Pallas GEMM kernels against the pure-jnp oracle.
+
+Hypothesis sweeps the shape/value space; fixed cases pin the block-edge
+behaviour the AOT artifacts rely on.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import gemm, ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=10, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape, dtype=np.float32)
+
+
+def assert_close(a, b, atol=2e-3):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=1e-4)
+
+
+class TestMatmulAligned:
+    @pytest.mark.parametrize("b", [32, 64, 128])
+    def test_single_tile(self, b):
+        x, y = rand((b, b), 1), rand((b, b), 2)
+        assert_close(gemm.matmul(jnp.array(x), jnp.array(y), bm=b, bk=b, bn=b), x @ y)
+
+    def test_multi_tile_grid(self):
+        x, y = rand((256, 384), 3), rand((384, 128), 4)
+        assert_close(gemm.matmul(jnp.array(x), jnp.array(y)), x @ y)
+
+    def test_k_accumulation_order(self):
+        # K = 4 blocks: exercises the revisiting accumulator.
+        x, y = rand((128, 512), 5), rand((512, 128), 6)
+        assert_close(gemm.matmul(jnp.array(x), jnp.array(y)), x @ y)
+
+    def test_rectangular_blocks(self):
+        x, y = rand((64, 128), 7), rand((128, 192), 8)
+        assert_close(
+            gemm.matmul(jnp.array(x), jnp.array(y), bm=64, bk=64, bn=64), x @ y
+        )
+
+    def test_misaligned_rejected(self):
+        with pytest.raises(AssertionError):
+            gemm.matmul(jnp.zeros((100, 128)), jnp.zeros((128, 128)))
+
+
+class TestMatmulAny:
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 200),
+        n=st.integers(1, 200),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_reference(self, m, k, n, seed):
+        x, y = rand((m, k), seed), rand((k, n), seed + 1)
+        got = gemm.matmul_any(jnp.array(x), jnp.array(y))
+        assert got.shape == (m, n)
+        assert_close(got, ref.matmul_ref(jnp.array(x), jnp.array(y)))
+
+    def test_vector_rhs(self):
+        # VGG FC layers: n == 1.
+        x, y = rand((1000, 4096), 9), rand((4096, 1), 10)
+        assert_close(gemm.matmul_any(jnp.array(x), jnp.array(y)), x @ y, atol=5e-3)
+
+    def test_zero_padding_is_exact(self):
+        # Padding with zeros must not perturb results even for adversarial
+        # magnitudes.
+        x = np.full((65, 129), 1e3, dtype=np.float32)
+        y = np.full((129, 3), -1e3, dtype=np.float32)
+        assert_close(gemm.matmul_any(jnp.array(x), jnp.array(y)), x @ y, atol=1.0)
+
+
+class TestGemmBiasRelu:
+    @given(
+        m=st.integers(1, 64),
+        k=st.integers(1, 64),
+        n=st.integers(1, 64),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_reference(self, m, k, n, seed):
+        x = rand((k, n), seed)
+        w = rand((m, k), seed + 1)
+        b = rand((m,), seed + 2)
+        got = gemm.gemm_bias_relu(jnp.array(x), jnp.array(w), jnp.array(b))
+        want = ref.gemm_bias_relu_ref(jnp.array(x), jnp.array(w), jnp.array(b))
+        assert_close(got, want)
+        assert (np.asarray(got) >= 0).all()
+
+
+class TestGemmAcc:
+    @pytest.mark.parametrize("b", [32, 64, 128])
+    def test_accumulates(self, b):
+        a, x, c = rand((b, b), 11), rand((b, b), 12), rand((b, b), 13)
+        (got,) = gemm.gemm_acc(jnp.array(a), jnp.array(x), jnp.array(c))
+        assert_close(got, c + a @ x)
+
+    def test_host_side_k_loop_equals_full_gemm(self):
+        # Emulate the Rust tiled executor: loop gemm_acc over K tiles.
+        b = 32
+        a, x = rand((b, 3 * b), 14), rand((3 * b, b), 15)
+        acc = jnp.zeros((b, b), jnp.float32)
+        for kt in range(3):
+            (acc,) = gemm.gemm_acc(
+                jnp.array(a[:, kt * b : (kt + 1) * b]),
+                jnp.array(x[kt * b : (kt + 1) * b, :]),
+                acc,
+            )
+        assert_close(acc, a @ x)
+
+
+class TestLowering:
+    """The artifact path itself: lower → parse → shape check."""
+
+    def test_gemm_acc_lowers_to_hlo_text(self):
+        from compile import aot
+
+        text = aot.lower_gemm_acc(32)
+        assert "HloModule" in text
+        assert "f32[32,32]" in text
+
+    def test_lowered_hlo_entry_signature(self):
+        from compile import aot
+
+        text = aot.lower_gemm_acc(32)
+        # Three f32[32,32] inputs, one-tuple output — the contract the Rust
+        # tiled executor relies on.
+        assert (
+            "entry_computation_layout={(f32[32,32]{1,0}, f32[32,32]{1,0}, "
+            "f32[32,32]{1,0})->(f32[32,32]{1,0})}" in text
+        )

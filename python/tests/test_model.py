@@ -1,0 +1,109 @@
+"""L2 correctness: the JAX VGG-16 against lax.conv references, plus the
+im2col/pool building blocks, plus the AOT artifact shape contract."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import ref
+
+HW = 32  # smallest legal VGG input (5 pools → 1×1)
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape, dtype=np.float32)
+
+
+class TestIm2col:
+    @given(c=st.integers(1, 8), h=st.integers(2, 12), seed=st.integers(0, 2**31))
+    @settings(max_examples=20, deadline=None)
+    def test_conv_equivalence(self, c, h, seed):
+        """im2col + GEMM must equal lax.conv for 3×3 SAME."""
+        x = rand((c, h, h), seed)
+        w4 = rand((4, c, 3, 3), seed + 1)  # 4 output channels
+        b = rand((4,), seed + 2)
+        want = ref.conv2d_3x3_ref(jnp.array(x), jnp.array(w4), jnp.array(b))
+        cols = ref.im2col_3x3(jnp.array(x))
+        w2 = w4.reshape(4, c * 9)
+        got = (w2 @ np.asarray(cols) + b[:, None]).reshape(4, h, h)
+        np.testing.assert_allclose(got, np.asarray(want), atol=1e-3, rtol=1e-4)
+
+    def test_shape(self):
+        cols = ref.im2col_3x3(jnp.zeros((5, 8, 8)))
+        assert cols.shape == (45, 64)
+
+
+class TestMaxpool:
+    def test_known_values(self):
+        x = jnp.arange(16.0).reshape(1, 4, 4)
+        out = ref.maxpool2_ref(x)
+        np.testing.assert_allclose(np.asarray(out[0]), [[5, 7], [13, 15]])
+
+
+class TestLayerSpecs:
+    def test_sixteen_weight_layers(self):
+        specs = model.layer_specs(224)
+        assert len(specs) == 16
+        assert sum(1 for s in specs if s[0] == "conv") == 13
+
+    def test_param_shapes_conv1(self):
+        shapes = model.param_shapes(224)
+        assert shapes[0] == (64, 27)  # conv1_1: 3·9 = 27
+        assert shapes[1] == (64,)
+        assert shapes[-2] == (1000, 4096)
+
+    def test_param_count_at_224(self):
+        # VGG-16 has ~138 M parameters.
+        total = sum(int(np.prod(s)) for s in model.param_shapes(224))
+        assert 130e6 < total < 145e6
+
+
+class TestForward:
+    @pytest.fixture(scope="class")
+    def params(self):
+        return model.init_params(HW, seed=1)
+
+    def test_logit_shape(self, params):
+        image = jnp.array(rand((3, HW, HW), 3))
+        logits = model.forward(params, image, input_hw=HW, use_pallas=False)
+        assert logits.shape == (1000,)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_pallas_matches_jnp_model(self, params):
+        """The whole model with Pallas GEMMs equals the jnp-GEMM model."""
+        image = jnp.array(rand((3, HW, HW), 4))
+        a = model.forward(params, image, input_hw=HW, use_pallas=True)
+        b = model.forward(params, image, input_hw=HW, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-2, rtol=1e-3)
+
+    def test_deterministic(self, params):
+        image = jnp.array(rand((3, HW, HW), 5))
+        a = model.forward(params, image, input_hw=HW, use_pallas=False)
+        b = model.forward(params, image, input_hw=HW, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_different_images_differ(self, params):
+        a = model.forward(
+            params, jnp.array(rand((3, HW, HW), 6)), input_hw=HW, use_pallas=False
+        )
+        b = model.forward(
+            params, jnp.array(rand((3, HW, HW), 7)), input_hw=HW, use_pallas=False
+        )
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+class TestAotVgg:
+    def test_vgg_lowering_param_count(self):
+        from compile import aot
+
+        text = aot.lower_vgg(32, use_pallas=False)
+        assert "HloModule" in text
+        # 16 layers × (W, b) + image = 33 entry parameters (nested
+        # computations add their own `parameter(` lines, so count commas
+        # in the entry layout instead).
+        layout = text.split("entry_computation_layout={(", 1)[1].split(")->")[0]
+        assert layout.count("f32[") == 33

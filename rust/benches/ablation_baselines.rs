@@ -1,0 +1,9 @@
+//! `cargo bench --bench ablation_baselines` — the §6 baselines (CATS-like,
+//! dHEFT-like) against the paper's two schedulers.
+use xitao::bench::{self, BenchOpts};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() };
+    bench::emit("ablation_baselines", &bench::ablation_baselines(&opts));
+}

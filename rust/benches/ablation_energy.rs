@@ -1,0 +1,9 @@
+//! `cargo bench --bench ablation_energy` — §3.3's alternative objective:
+//! energy-per-task placement vs the performance objective.
+use xitao::bench::{self, BenchOpts};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() };
+    bench::emit("ablation_energy", &bench::ablation_energy(&opts));
+}

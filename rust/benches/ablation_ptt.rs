@@ -1,0 +1,9 @@
+//! `cargo bench --bench ablation_ptt` — PTT history-weight ablation (§3.2's
+//! 4:1 moving average vs alternatives).
+use xitao::bench::{self, BenchOpts};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() };
+    bench::emit("ablation_ptt", &bench::ablation_ptt(&opts));
+}

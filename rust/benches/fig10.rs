@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig10` — regenerates the paper's Figure 10 on the
+//! modelled platform and writes bench_out/fig10*.csv. See bench::figures.
+use xitao::bench::{self, BenchOpts};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() };
+    let t = std::time::Instant::now();
+    bench::emit("fig10", &bench::fig10(&opts));
+    eprintln!("[fig10] regenerated in {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig6` — regenerates the paper's Figure 6 on the
+//! modelled platform and writes bench_out/fig6*.csv. See bench::figures.
+use xitao::bench::{self, BenchOpts};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() };
+    let t = std::time::Instant::now();
+    bench::emit("fig6", &bench::fig6(&opts));
+    eprintln!("[fig6] regenerated in {:.1}s", t.elapsed().as_secs_f64());
+}

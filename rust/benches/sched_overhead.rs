@@ -1,0 +1,140 @@
+//! `cargo bench --bench sched_overhead` — L3 hot-path micro-benchmarks.
+//!
+//! The paper claims the PTT's overhead is negligible ("the number of
+//! entries in the PTT is only 2×N−1 for each NUMA node"); this harness
+//! measures it, plus every other operation on the scheduling hot path:
+//!
+//!   - PTT read / update / global search / local width search
+//!   - policy placement decisions (all four policies)
+//!   - WSQ push/pop/steal and AQ push/pop
+//!   - end-to-end real-engine scheduling overhead per TAO (nop payloads)
+//!   - simulator event rate (simulated TAOs per wall second)
+//!
+//! Results feed EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+use xitao::coordinator::aq::AssemblyQueue;
+use xitao::coordinator::dag::TaoDag;
+use xitao::coordinator::ptt::Ptt;
+use xitao::coordinator::scheduler::{PlaceCtx, policy_by_name};
+use xitao::coordinator::wsq::WsQueue;
+use xitao::coordinator::{NopPayload, RealEngineOpts, run_dag_real};
+use xitao::dag_gen::{DagParams, generate};
+use xitao::platform::{KernelClass, Platform, Topology};
+use xitao::sim::{SimOpts, run_dag_sim};
+
+/// Time `f` over `iters` iterations, returning ns/op.
+fn time_ns<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    for _ in 0..iters / 10 + 1 {
+        f(); // warmup
+    }
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let iters = if quick { 20_000 } else { 200_000 };
+    println!("== sched_overhead (iters={iters}) ==");
+
+    // --- PTT operations on the two paper topologies ---------------------
+    for topo in [
+        Topology::from_clusters("tx2", &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)]),
+        Topology::from_clusters("haswell20", &[(10, "haswell", 25 << 20), (10, "haswell", 25 << 20)]),
+    ] {
+        let ptt = Ptt::new(4, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        let read = time_ns(iters, || {
+            std::hint::black_box(ptt.read(0, 0, 1));
+        });
+        let update = time_ns(iters, || {
+            ptt.update(0, 0, 1, std::hint::black_box(0.5));
+        });
+        let global = time_ns(iters, || {
+            std::hint::black_box(ptt.best_global(0, &topo));
+        });
+        let local = time_ns(iters, || {
+            std::hint::black_box(ptt.best_width_for(0, topo.n_cores() - 1, &topo));
+        });
+        println!(
+            "[{:9}] ptt.read {read:7.1} ns | update {update:7.1} ns | global search {global:8.1} ns | local search {local:7.1} ns",
+            topo.name
+        );
+    }
+
+    // --- policy placement ------------------------------------------------
+    let topo = Topology::from_clusters("tx2", &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)]);
+    let ptt = Ptt::new(1, &topo);
+    for p in topo.all_partitions() {
+        ptt.update(0, p.leader, p.width, 1.0);
+    }
+    for name in ["performance", "homogeneous", "cats", "dheft"] {
+        let policy = policy_by_name(name, topo.n_cores()).unwrap();
+        for critical in [true, false] {
+            let ns = time_ns(iters, || {
+                let ctx =
+                    PlaceCtx { core: 3, type_id: 0, critical, ptt: &ptt, topo: &topo, now: 0.0 };
+                std::hint::black_box(policy.place(&ctx));
+            });
+            println!("[place] {name:12} critical={critical:5}: {ns:7.1} ns");
+        }
+    }
+
+    // --- queues -----------------------------------------------------------
+    let wsq: WsQueue<usize> = WsQueue::new();
+    let push_pop = time_ns(iters, || {
+        wsq.push(1);
+        std::hint::black_box(wsq.pop());
+    });
+    let aq: AssemblyQueue<usize> = AssemblyQueue::new();
+    let aq_pp = time_ns(iters, || {
+        aq.push(1);
+        std::hint::black_box(aq.pop());
+    });
+    println!("[queues] wsq push+pop {push_pop:6.1} ns | aq push+pop {aq_pp:6.1} ns");
+
+    // --- end-to-end real-engine overhead per TAO --------------------------
+    // Nop payloads: the measured time is pure runtime overhead.
+    let n_tasks = if quick { 2_000 } else { 20_000 };
+    let mut dag = TaoDag::new();
+    for _ in 0..n_tasks {
+        dag.add_task_payload(
+            KernelClass::MatMul,
+            0,
+            1.0,
+            Some(std::sync::Arc::new(NopPayload(KernelClass::MatMul))),
+        );
+    }
+    dag.finalize().unwrap();
+    let host_cores = xitao::platform::detect::online_cpus();
+    let topo_r = Topology::homogeneous(host_cores.min(4));
+    for name in ["performance", "homogeneous"] {
+        let policy = policy_by_name(name, topo_r.n_cores()).unwrap();
+        let t = Instant::now();
+        let res = run_dag_real(&dag, &topo_r, policy.as_ref(), None, &RealEngineOpts::default());
+        let per_tao = t.elapsed().as_nanos() as f64 / res.n_tasks() as f64;
+        println!(
+            "[real-engine] {name:12}: {per_tao:8.1} ns/TAO over {} nop TAOs ({} workers)",
+            res.n_tasks(),
+            topo_r.n_cores()
+        );
+    }
+
+    // --- simulator throughput ----------------------------------------------
+    let (sim_dag, _) = generate(&DagParams::mix(if quick { 2_000 } else { 20_000 }, 8.0, 3));
+    let plat = Platform::tx2();
+    let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
+    let t = Instant::now();
+    let run = run_dag_sim(&sim_dag, &plat, policy.as_ref(), None, &SimOpts::default());
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "[simulator] {:.0} simulated TAOs/s wall ({} TAOs in {dt:.2}s)",
+        run.result.n_tasks() as f64 / dt,
+        run.result.n_tasks()
+    );
+}

@@ -1,0 +1,9 @@
+//! Benchmark/figure harness: one regenerator per table and figure in the
+//! paper's evaluation (§5), plus the design ablations called out in
+//! DESIGN.md. Used by the `repro` CLI and the `cargo bench` targets.
+
+pub mod figures;
+
+pub use figures::{
+    BenchOpts, ablation_baselines, ablation_energy, ablation_ptt, emit, fig5, fig6, fig7, fig8, fig9, fig10,
+};

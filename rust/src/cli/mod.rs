@@ -1,0 +1,105 @@
+//! Minimal command-line parsing (no external crates offline).
+//!
+//! Grammar: `repro <command> [positional...] [--flag value | --switch]`.
+//! Flags may also be written `--flag=value`.
+
+use std::collections::{HashMap, HashSet};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(flag.to_string(), iter.next().unwrap());
+                } else {
+                    out.switches.insert(flag.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+
+    /// Typed flag with default; exits with a message on parse failure.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.flag(name) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("error: invalid value '{s}' for --{name}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse("fig5 one two");
+        assert_eq!(a.command.as_deref(), Some("fig5"));
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn flags_both_styles() {
+        let a = parse("run --tasks 500 --policy=cats --quick");
+        assert_eq!(a.get::<usize>("tasks", 0), 500);
+        assert_eq!(a.get_str("policy", ""), "cats");
+        assert!(a.switch("quick"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn switch_before_flag_value_ambiguity() {
+        // `--quick` followed by another flag stays a switch.
+        let a = parse("x --quick --tasks 9");
+        assert!(a.switch("quick"));
+        assert_eq!(a.get::<usize>("tasks", 0), 9);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.get::<u64>("seed", 7), 7);
+        assert_eq!(a.get_str("platform", "tx2"), "tx2");
+    }
+}

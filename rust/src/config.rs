@@ -1,0 +1,204 @@
+//! Run configuration: JSON config files merged with CLI flags.
+//!
+//! `repro run-dag --config my.json --policy cats` loads `my.json` and lets
+//! the explicit flags win. The JSON schema mirrors the flag names:
+//!
+//! ```json
+//! {
+//!   "platform": "tx2",          // tx2 | haswell20 | hom<N>
+//!   "policy": "performance",    // performance | homogeneous | cats | dheft
+//!   "tasks": 1000,
+//!   "parallelism": 4.0,
+//!   "kernel": "mix",            // mix | matmul | sort | copy
+//!   "edge_rate": 1.5,
+//!   "seed": 42,
+//!   "artifacts": "artifacts"
+//! }
+//! ```
+
+use crate::cli::Args;
+use crate::platform::{KernelClass, Platform};
+use crate::util::Json;
+use std::path::PathBuf;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub platform: String,
+    pub policy: String,
+    pub tasks: usize,
+    pub parallelism: f64,
+    pub kernel: String,
+    pub edge_rate: f64,
+    pub seed: u64,
+    pub artifacts: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            platform: "tx2".into(),
+            policy: "performance".into(),
+            tasks: 1000,
+            parallelism: 4.0,
+            kernel: "mix".into(),
+            edge_rate: 1.5,
+            seed: 42,
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; unknown keys are rejected (typo safety).
+    pub fn from_json(text: &str) -> Result<RunConfig, String> {
+        let json = Json::parse(text).map_err(|e| e.to_string())?;
+        let obj = json.as_obj().ok_or("config must be a JSON object")?;
+        let mut cfg = RunConfig::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "platform" => cfg.platform = v.as_str().ok_or("platform: string")?.into(),
+                "policy" => cfg.policy = v.as_str().ok_or("policy: string")?.into(),
+                "tasks" => cfg.tasks = v.as_usize().ok_or("tasks: integer")?,
+                "parallelism" => cfg.parallelism = v.as_f64().ok_or("parallelism: number")?,
+                "kernel" => cfg.kernel = v.as_str().ok_or("kernel: string")?.into(),
+                "edge_rate" => cfg.edge_rate = v.as_f64().ok_or("edge_rate: number")?,
+                "seed" => cfg.seed = v.as_u64().ok_or("seed: integer")?,
+                "artifacts" => cfg.artifacts = v.as_str().ok_or("artifacts: string")?.into(),
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Start from `--config file` (if given), then apply explicit flags.
+    pub fn from_args(args: &Args) -> Result<RunConfig, String> {
+        let mut cfg = match args.flag("config") {
+            Some(path) => {
+                let text =
+                    std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+                RunConfig::from_json(&text)?
+            }
+            None => RunConfig::default(),
+        };
+        if let Some(v) = args.flag("platform") {
+            cfg.platform = v.into();
+        }
+        if let Some(v) = args.flag("policy") {
+            cfg.policy = v.into();
+        }
+        if let Some(v) = args.flag("tasks") {
+            cfg.tasks = v.parse().map_err(|_| "tasks: integer")?;
+        }
+        if let Some(v) = args.flag("parallelism") {
+            cfg.parallelism = v.parse().map_err(|_| "parallelism: number")?;
+        }
+        if let Some(v) = args.flag("kernel") {
+            cfg.kernel = v.into();
+        }
+        if let Some(v) = args.flag("edge-rate") {
+            cfg.edge_rate = v.parse().map_err(|_| "edge-rate: number")?;
+        }
+        if let Some(v) = args.flag("seed") {
+            cfg.seed = v.parse().map_err(|_| "seed: integer")?;
+        }
+        if let Some(v) = args.flag("artifacts") {
+            cfg.artifacts = v.into();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        self.make_platform()?;
+        if self.kernel != "mix" && KernelClass::from_name(&self.kernel).is_none() {
+            return Err(format!("unknown kernel '{}'", self.kernel));
+        }
+        if self.tasks == 0 {
+            return Err("tasks must be positive".into());
+        }
+        if self.parallelism < 1.0 {
+            return Err("parallelism must be ≥ 1".into());
+        }
+        Ok(())
+    }
+
+    /// Resolve the platform name.
+    pub fn make_platform(&self) -> Result<Platform, String> {
+        match self.platform.as_str() {
+            "tx2" => Ok(Platform::tx2()),
+            "haswell20" => Ok(Platform::haswell20()),
+            other => {
+                if let Some(n) = other.strip_prefix("hom") {
+                    let n: usize =
+                        n.parse().map_err(|_| format!("bad platform '{other}'"))?;
+                    if n == 0 {
+                        return Err("hom platform needs ≥ 1 core".into());
+                    }
+                    Ok(Platform::homogeneous(n))
+                } else {
+                    Err(format!("unknown platform '{other}' (tx2|haswell20|hom<N>)"))
+                }
+            }
+        }
+    }
+
+    /// Kernel selection for the DAG generator (`None` = mix).
+    pub fn kernel_class(&self) -> Option<KernelClass> {
+        KernelClass::from_name(&self.kernel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = RunConfig::from_json(
+            r#"{"platform": "haswell20", "tasks": 99, "parallelism": 2.5, "policy": "cats"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.platform, "haswell20");
+        assert_eq!(cfg.tasks, 99);
+        assert_eq!(cfg.parallelism, 2.5);
+        assert_eq!(cfg.policy, "cats");
+        // Unspecified keys keep defaults.
+        assert_eq!(cfg.kernel, "mix");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RunConfig::from_json(r#"{"platfrom": "tx2"}"#).is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(RunConfig::from_json(r#"{"tasks": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"parallelism": 0.5}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"kernel": "nope"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"platform": "riscv"}"#).is_err());
+    }
+
+    #[test]
+    fn hom_platform_parses() {
+        let cfg = RunConfig::from_json(r#"{"platform": "hom8"}"#).unwrap();
+        assert_eq!(cfg.make_platform().unwrap().topo.n_cores(), 8);
+        assert!(RunConfig::from_json(r#"{"platform": "hom0"}"#).is_err());
+    }
+
+    #[test]
+    fn flags_override_config() {
+        use crate::cli::Args;
+        let dir = std::env::temp_dir().join("xitao_cfg_test.json");
+        std::fs::write(&dir, r#"{"tasks": 10, "policy": "cats"}"#).unwrap();
+        let args = Args::parse(
+            ["run", "--config", dir.to_str().unwrap(), "--tasks", "77"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.tasks, 77); // flag wins
+        assert_eq!(cfg.policy, "cats"); // file value kept
+    }
+}

@@ -1,0 +1,56 @@
+//! Per-core FIFO assembly queues (§3.1).
+//!
+//! When a ready TAO's resource partition is decided, a pointer to the TAO
+//! is inserted into the AQ of **every core in the partition**; each core
+//! then fetches its pointer asynchronously and executes its share. AQs are
+//! strictly FIFO: placement is irrevocable, and consistent insertion order
+//! across AQs (one placement inserts to all member queues before the next
+//! placement's inserts can interleave on the same queues — guaranteed by
+//! the engines) keeps multi-queue fetches deadlock-free.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+pub struct AssemblyQueue<T> {
+    q: Mutex<VecDeque<T>>,
+}
+
+impl<T> AssemblyQueue<T> {
+    pub fn new() -> AssemblyQueue<T> {
+        AssemblyQueue { q: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Insert at the tail (placement time).
+    pub fn push(&self, item: T) {
+        self.q.lock().unwrap().push_back(item);
+    }
+
+    /// Fetch from the head (execution time).
+    pub fn pop(&self) -> Option<T> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strict_fifo() {
+        let q = AssemblyQueue::new();
+        q.push("a");
+        q.push("b");
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+    }
+}

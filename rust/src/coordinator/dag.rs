@@ -1,0 +1,376 @@
+//! TAO-DAGs and criticality (§2).
+//!
+//! The critical path of a task-DAG is its longest path; the *criticality*
+//! of a node is `1 + max(criticality of children)` (leaves have criticality
+//! 1), assigned by a bottom-up traversal. The first node of the longest
+//! path then carries the highest criticality, equal to the critical-path
+//! length. The paper's runtime rule re-derives per-task criticality when a
+//! parent wakes a child: the child is critical iff
+//! `parent.criticality - child.criticality == 1`.
+//!
+//! Average DAG parallelism is `total tasks / critical-path length` (§2).
+
+use super::tao::TaoPayload;
+use crate::platform::KernelClass;
+use std::sync::Arc;
+
+/// Node index within a [`TaoDag`].
+pub type TaskId = usize;
+
+/// One TAO node of a DAG.
+pub struct TaoNode {
+    pub id: TaskId,
+    pub class: KernelClass,
+    /// PTT row group — the paper's "TAO type". Tasks sharing a `type_id`
+    /// share latency estimates (random-DAG kernels: one type per class;
+    /// VGG: one type per layer shape).
+    pub type_id: usize,
+    /// Work multiplier relative to the class's base work (simulation).
+    pub work_scale: f64,
+    /// Real-mode body; `None` for simulation-only DAGs.
+    pub payload: Option<Arc<dyn TaoPayload>>,
+    /// Successor task ids (edges point forward in execution order).
+    pub succs: Vec<TaskId>,
+    /// Predecessor task ids.
+    pub preds: Vec<TaskId>,
+    /// Bottom-up criticality; valid after [`TaoDag::finalize`].
+    pub criticality: u32,
+    /// The successor this node hands the critical path to (the first child
+    /// whose criticality is exactly one less), if the node is on the path.
+    /// Valid after [`TaoDag::finalize`].
+    pub cp_child: Option<TaskId>,
+}
+
+impl std::fmt::Debug for TaoNode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TaoNode")
+            .field("id", &self.id)
+            .field("class", &self.class)
+            .field("type_id", &self.type_id)
+            .field("crit", &self.criticality)
+            .field("succs", &self.succs)
+            .finish()
+    }
+}
+
+/// A directed acyclic graph of TAOs.
+#[derive(Debug, Default)]
+pub struct TaoDag {
+    pub nodes: Vec<TaoNode>,
+    finalized: bool,
+}
+
+impl TaoDag {
+    pub fn new() -> TaoDag {
+        TaoDag::default()
+    }
+
+    /// Add a simulation-only task.
+    pub fn add_task(&mut self, class: KernelClass, type_id: usize, work_scale: f64) -> TaskId {
+        self.add_task_payload(class, type_id, work_scale, None)
+    }
+
+    /// Add a task with a real-mode payload.
+    pub fn add_task_payload(
+        &mut self,
+        class: KernelClass,
+        type_id: usize,
+        work_scale: f64,
+        payload: Option<Arc<dyn TaoPayload>>,
+    ) -> TaskId {
+        assert!(!self.finalized, "cannot add tasks after finalize()");
+        let id = self.nodes.len();
+        self.nodes.push(TaoNode {
+            id,
+            class,
+            type_id,
+            work_scale,
+            payload,
+            succs: Vec::new(),
+            preds: Vec::new(),
+            criticality: 0,
+            cp_child: None,
+        });
+        id
+    }
+
+    /// Add a dependency edge `from → to` (`to` runs after `from`).
+    pub fn add_edge(&mut self, from: TaskId, to: TaskId) {
+        assert!(!self.finalized, "cannot add edges after finalize()");
+        assert!(from < self.nodes.len() && to < self.nodes.len(), "edge endpoints must exist");
+        assert_ne!(from, to, "self-edges are cycles");
+        // Ignore duplicate edges (the random generator can propose repeats).
+        if !self.nodes[from].succs.contains(&to) {
+            self.nodes[from].succs.push(to);
+            self.nodes[to].preds.push(from);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Root tasks (no predecessors).
+    pub fn roots(&self) -> Vec<TaskId> {
+        self.nodes.iter().filter(|n| n.preds.is_empty()).map(|n| n.id).collect()
+    }
+
+    /// Topological order; `Err` if the graph contains a cycle.
+    pub fn topo_order(&self) -> Result<Vec<TaskId>, String> {
+        let n = self.nodes.len();
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|x| x.preds.len()).collect();
+        let mut queue: Vec<TaskId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for &v in &self.nodes[u].succs {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if order.len() == n {
+            Ok(order)
+        } else {
+            Err(format!("cycle detected: {} of {} nodes ordered", order.len(), n))
+        }
+    }
+
+    /// Compute criticalities bottom-up and freeze the DAG. Must be called
+    /// before execution. Returns `Err` on cyclic graphs.
+    pub fn finalize(&mut self) -> Result<(), String> {
+        let order = self.topo_order()?;
+        for &u in order.iter().rev() {
+            let max_child =
+                self.nodes[u].succs.iter().map(|&v| self.nodes[v].criticality).max().unwrap_or(0);
+            self.nodes[u].criticality = max_child + 1;
+            self.nodes[u].cp_child = self.nodes[u]
+                .succs
+                .iter()
+                .copied()
+                .find(|&v| self.nodes[v].criticality == max_child && max_child > 0);
+        }
+        self.finalized = true;
+        Ok(())
+    }
+
+    /// Whether `task` starts the critical path (a root of maximal
+    /// criticality). §3.3: initial tasks are *placed* as non-critical, but
+    /// they still hand the critical path to their children.
+    pub fn is_cp_root(&self, task: TaskId) -> bool {
+        assert!(self.finalized);
+        self.nodes[task].preds.is_empty()
+            && self.nodes[task].criticality == self.critical_path_len()
+    }
+
+    pub fn is_finalized(&self) -> bool {
+        self.finalized
+    }
+
+    /// Critical-path length (max criticality). 0 for an empty DAG.
+    pub fn critical_path_len(&self) -> u32 {
+        assert!(self.finalized, "finalize() first");
+        self.nodes.iter().map(|n| n.criticality).max().unwrap_or(0)
+    }
+
+    /// Average DAG parallelism = tasks / critical-path length (§2).
+    pub fn parallelism(&self) -> f64 {
+        let cp = self.critical_path_len();
+        if cp == 0 {
+            return 0.0;
+        }
+        self.nodes.len() as f64 / cp as f64
+    }
+
+    /// The paper's runtime criticality test, applied when `parent` wakes
+    /// `child`: the child is critical iff the criticalities differ by 1.
+    pub fn is_critical_edge(&self, parent: TaskId, child: TaskId) -> bool {
+        self.nodes[parent].criticality == self.nodes[child].criticality + 1
+    }
+
+    /// One maximal-length path (node ids), for tests and trace annotation.
+    pub fn critical_path(&self) -> Vec<TaskId> {
+        assert!(self.finalized);
+        let mut path = Vec::new();
+        let Some(start) = self
+            .nodes
+            .iter()
+            .max_by_key(|n| n.criticality)
+            .map(|n| n.id)
+        else {
+            return path;
+        };
+        let mut cur = start;
+        path.push(cur);
+        loop {
+            let next = self.nodes[cur]
+                .succs
+                .iter()
+                .copied()
+                .find(|&v| self.nodes[v].criticality + 1 == self.nodes[cur].criticality);
+            match next {
+                Some(v) => {
+                    path.push(v);
+                    cur = v;
+                }
+                None => break,
+            }
+        }
+        path
+    }
+
+    /// Count of distinct TAO types referenced (PTT sizing).
+    pub fn n_types(&self) -> usize {
+        self.nodes.iter().map(|n| n.type_id).max().map_or(0, |m| m + 1)
+    }
+
+    /// Total modelled work units (for sanity checks in benches).
+    pub fn total_work(&self) -> f64 {
+        self.nodes.iter().map(|n| n.class.traits().base_work * n.work_scale).sum()
+    }
+}
+
+/// Build the 7-task example DAG from Figure 1 of the paper:
+/// `A→C→G→D→F` is the critical path (length 5), `B` and `E` are non-critical.
+/// Returns (dag, [A,B,C,E,G,D,F] ids).
+pub fn paper_figure1_dag() -> (TaoDag, [TaskId; 7]) {
+    let mut d = TaoDag::new();
+    let a = d.add_task(KernelClass::MatMul, 0, 1.0);
+    let b = d.add_task(KernelClass::Sort, 1, 1.0);
+    let c = d.add_task(KernelClass::Copy, 2, 1.0);
+    let e = d.add_task(KernelClass::Sort, 1, 1.0);
+    let g = d.add_task(KernelClass::MatMul, 0, 1.0);
+    let dd = d.add_task(KernelClass::Copy, 2, 1.0);
+    let f = d.add_task(KernelClass::MatMul, 0, 1.0);
+    d.add_edge(a, c);
+    d.add_edge(a, e);
+    d.add_edge(b, g);
+    d.add_edge(c, g);
+    d.add_edge(e, dd); // E feeds D but off the critical path
+    d.add_edge(g, dd);
+    d.add_edge(dd, f);
+    d.finalize().unwrap();
+    (d, [a, b, c, e, g, dd, f])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_criticalities() {
+        let (d, [a, b, c, e, g, dd, f]) = paper_figure1_dag();
+        assert_eq!(d.nodes[a].criticality, 5);
+        assert_eq!(d.nodes[c].criticality, 4);
+        assert_eq!(d.nodes[g].criticality, 3);
+        assert_eq!(d.nodes[dd].criticality, 2);
+        assert_eq!(d.nodes[f].criticality, 1);
+        assert_eq!(d.nodes[b].criticality, 4); // B→G chain
+        assert_eq!(d.nodes[e].criticality, 3); // E→D chain
+        assert_eq!(d.critical_path_len(), 5);
+        assert!((d.parallelism() - 7.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn figure1_critical_edges() {
+        let (d, [a, _b, c, e, g, dd, f]) = paper_figure1_dag();
+        assert!(d.is_critical_edge(a, c));
+        assert!(d.is_critical_edge(c, g));
+        assert!(d.is_critical_edge(g, dd));
+        assert!(d.is_critical_edge(dd, f));
+        assert!(!d.is_critical_edge(a, e)); // 5 vs 3
+    }
+
+    #[test]
+    fn figure1_critical_path_nodes() {
+        let (d, [a, _b, c, _e, g, dd, f]) = paper_figure1_dag();
+        assert_eq!(d.critical_path(), vec![a, c, g, dd, f]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut d = TaoDag::new();
+        let x = d.add_task(KernelClass::MatMul, 0, 1.0);
+        let y = d.add_task(KernelClass::MatMul, 0, 1.0);
+        d.add_edge(x, y);
+        d.add_edge(y, x);
+        assert!(d.finalize().is_err());
+    }
+
+    #[test]
+    fn chain_parallelism_is_one() {
+        let mut d = TaoDag::new();
+        let ids: Vec<_> = (0..10).map(|_| d.add_task(KernelClass::Copy, 0, 1.0)).collect();
+        for w in ids.windows(2) {
+            d.add_edge(w[0], w[1]);
+        }
+        d.finalize().unwrap();
+        assert_eq!(d.critical_path_len(), 10);
+        assert_eq!(d.parallelism(), 1.0);
+    }
+
+    #[test]
+    fn independent_tasks_full_parallelism() {
+        let mut d = TaoDag::new();
+        for _ in 0..8 {
+            d.add_task(KernelClass::Sort, 0, 1.0);
+        }
+        d.finalize().unwrap();
+        assert_eq!(d.critical_path_len(), 1);
+        assert_eq!(d.parallelism(), 8.0);
+        assert_eq!(d.roots().len(), 8);
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut d = TaoDag::new();
+        let x = d.add_task(KernelClass::MatMul, 0, 1.0);
+        let y = d.add_task(KernelClass::MatMul, 0, 1.0);
+        d.add_edge(x, y);
+        d.add_edge(x, y);
+        assert_eq!(d.nodes[x].succs.len(), 1);
+        assert_eq!(d.nodes[y].preds.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_edge_panics() {
+        let mut d = TaoDag::new();
+        let x = d.add_task(KernelClass::MatMul, 0, 1.0);
+        d.add_edge(x, x);
+    }
+
+    #[test]
+    fn n_types_counts_max() {
+        let mut d = TaoDag::new();
+        d.add_task(KernelClass::MatMul, 0, 1.0);
+        d.add_task(KernelClass::Sort, 3, 1.0);
+        assert_eq!(d.n_types(), 4);
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let (d, _) = paper_figure1_dag();
+        let order = d.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; d.len()];
+            for (i, &t) in order.iter().enumerate() {
+                p[t] = i;
+            }
+            p
+        };
+        for n in &d.nodes {
+            for &s in &n.succs {
+                assert!(pos[n.id] < pos[s]);
+            }
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Execution traces and derived metrics.
+//!
+//! Both engines record one [`TraceRecord`] per executed TAO. The figure
+//! harnesses derive everything from these records: throughput (Fig 5/6),
+//! speedups (Fig 7), per-core scheduling timelines (Fig 8), scaling
+//! (Fig 9) and width histograms (Fig 10).
+
+use crate::platform::{KernelClass, Partition};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One executed TAO.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub task: usize,
+    pub class: KernelClass,
+    pub type_id: usize,
+    pub critical: bool,
+    pub partition: Partition,
+    /// Seconds since run start (virtual or wall).
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+impl TraceRecord {
+    pub fn exec_time(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// Thread-safe trace collector.
+#[derive(Debug, Default)]
+pub struct Trace {
+    records: Mutex<Vec<TraceRecord>>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    pub fn push(&self, r: TraceRecord) {
+        self.records.lock().unwrap().push(r);
+    }
+
+    pub fn into_records(self) -> Vec<TraceRecord> {
+        self.records.into_inner().unwrap()
+    }
+
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        self.records.lock().unwrap().clone()
+    }
+}
+
+/// Result of one DAG execution.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub policy: String,
+    pub platform: String,
+    /// Total run time, seconds (virtual or wall).
+    pub makespan: f64,
+    pub records: Vec<TraceRecord>,
+}
+
+impl RunResult {
+    pub fn n_tasks(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Tasks per second — the paper's throughput metric (Fig 5/6).
+    pub fn throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.records.len() as f64 / self.makespan
+    }
+
+    /// `width → number of TAOs` (Fig 10).
+    pub fn width_histogram(&self) -> BTreeMap<usize, usize> {
+        let mut h = BTreeMap::new();
+        for r in &self.records {
+            *h.entry(r.partition.width).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// `width → percentage of TAOs` (Fig 10's Y axis).
+    pub fn width_percentages(&self) -> BTreeMap<usize, f64> {
+        let n = self.records.len().max(1) as f64;
+        self.width_histogram().into_iter().map(|(w, c)| (w, 100.0 * c as f64 / n)).collect()
+    }
+
+    /// Records of critical tasks only (Fig 8 plots these).
+    pub fn critical_records(&self) -> Vec<&TraceRecord> {
+        self.records.iter().filter(|r| r.critical).collect()
+    }
+
+    /// Distinct leader cores used by critical tasks inside `[t0, t1)`.
+    pub fn critical_leaders_in_window(&self, t0: f64, t1: f64) -> Vec<usize> {
+        let mut cores: Vec<usize> = self
+            .records
+            .iter()
+            .filter(|r| r.critical && r.t_start >= t0 && r.t_start < t1)
+            .map(|r| r.partition.leader)
+            .collect();
+        cores.sort_unstable();
+        cores.dedup();
+        cores
+    }
+
+    /// Mean execution time of records matching `class`.
+    pub fn mean_exec_time(&self, class: KernelClass) -> f64 {
+        let times: Vec<f64> =
+            self.records.iter().filter(|r| r.class == class).map(|r| r.exec_time()).collect();
+        crate::util::stats::mean(&times)
+    }
+
+    /// Per-core busy time (sum over records of exec_time for every core in
+    /// the partition). Index = core id.
+    pub fn core_busy_time(&self, n_cores: usize) -> Vec<f64> {
+        let mut busy = vec![0.0; n_cores];
+        for r in &self.records {
+            for c in r.partition.cores() {
+                if c < n_cores {
+                    busy[c] += r.exec_time();
+                }
+            }
+        }
+        busy
+    }
+
+    /// Overall resource utilisation in `[0,1]`: busy core-seconds over
+    /// `n_cores × makespan`.
+    pub fn utilisation(&self, n_cores: usize) -> f64 {
+        if self.makespan <= 0.0 || n_cores == 0 {
+            return 0.0;
+        }
+        self.core_busy_time(n_cores).iter().sum::<f64>() / (n_cores as f64 * self.makespan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(task: usize, critical: bool, leader: usize, width: usize, t0: f64, t1: f64) -> TraceRecord {
+        TraceRecord {
+            task,
+            class: KernelClass::MatMul,
+            type_id: 0,
+            critical,
+            partition: Partition { leader, width },
+            t_start: t0,
+            t_end: t1,
+        }
+    }
+
+    fn result(records: Vec<TraceRecord>, makespan: f64) -> RunResult {
+        RunResult { policy: "test".into(), platform: "test".into(), makespan, records }
+    }
+
+    #[test]
+    fn throughput_tasks_over_makespan() {
+        let r = result(vec![rec(0, false, 0, 1, 0.0, 1.0), rec(1, false, 1, 1, 0.0, 2.0)], 4.0);
+        assert_eq!(r.throughput(), 0.5);
+    }
+
+    #[test]
+    fn width_histogram_counts() {
+        let r = result(
+            vec![
+                rec(0, false, 0, 1, 0.0, 1.0),
+                rec(1, false, 0, 4, 0.0, 1.0),
+                rec(2, false, 0, 4, 1.0, 2.0),
+            ],
+            2.0,
+        );
+        let h = r.width_histogram();
+        assert_eq!(h[&1], 1);
+        assert_eq!(h[&4], 2);
+        let p = r.width_percentages();
+        assert!((p[&4] - 66.666).abs() < 0.01);
+    }
+
+    #[test]
+    fn critical_window_filter() {
+        let r = result(
+            vec![
+                rec(0, true, 2, 1, 0.0, 1.0),
+                rec(1, true, 5, 1, 2.0, 3.0),
+                rec(2, false, 7, 1, 2.0, 3.0),
+            ],
+            3.0,
+        );
+        assert_eq!(r.critical_leaders_in_window(0.0, 1.5), vec![2]);
+        assert_eq!(r.critical_leaders_in_window(1.5, 3.0), vec![5]);
+        assert_eq!(r.critical_records().len(), 2);
+    }
+
+    #[test]
+    fn busy_time_spans_partition() {
+        let r = result(vec![rec(0, false, 0, 2, 0.0, 3.0)], 3.0);
+        let busy = r.core_busy_time(4);
+        assert_eq!(busy, vec![3.0, 3.0, 0.0, 0.0]);
+        assert!((r.utilisation(4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_collects_concurrently() {
+        use std::sync::Arc;
+        let trace = Arc::new(Trace::new());
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let t = trace.clone();
+                std::thread::spawn(move || {
+                    t.push(rec(i, false, 0, 1, 0.0, 1.0));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(trace.snapshot().len(), 4);
+    }
+}

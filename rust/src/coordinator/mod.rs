@@ -1,0 +1,34 @@
+//! The paper's contribution: the XiTAO coordinator with the Performance
+//! Trace Table.
+//!
+//! - [`tao`] — Task Assembly Objects (internally parallel tasks).
+//! - [`dag`] — TAO-DAGs, bottom-up criticality, average parallelism (§2).
+//! - [`ptt`] — the Performance Trace Table (§3.2).
+//! - [`wsq`] / [`aq`] — per-core work-stealing and assembly queues (§3.1).
+//! - [`scheduler`] — the performance-based policy and the baselines (§3.3, §6).
+//! - [`worker`] — the real-thread execution engine.
+//! - [`metrics`] — traces and derived run metrics.
+//!
+//! The simulated engine that drives the paper-figure reproductions lives in
+//! [`crate::sim`] and reuses `dag`, `ptt`, `scheduler` and `metrics`
+//! verbatim — the scheduling logic under test is the same code in both
+//! engines.
+
+pub mod aq;
+pub mod dag;
+pub mod metrics;
+pub mod ptt;
+pub mod scheduler;
+pub mod tao;
+pub mod worker;
+pub mod wsq;
+
+pub use dag::{TaoDag, TaoNode, TaskId};
+pub use metrics::{RunResult, Trace, TraceRecord};
+pub use ptt::Ptt;
+pub use scheduler::{
+    CatsLike, DheftLike, EnergyMinimizing, HomogeneousWs, PerformanceBased, PlaceCtx, Policy,
+    policy_by_name,
+};
+pub use tao::{NopPayload, TaoPayload, payload_fn};
+pub use worker::{RealEngineOpts, run_dag_real};

@@ -1,0 +1,350 @@
+//! The Performance Trace Table (§3.2) — the paper's core data structure.
+//!
+//! One table per TAO type; each table has one *row per core* and one column
+//! per resource width. Entry `(c, w)` holds a weighted moving average of the
+//! execution time observed when a TAO of this type ran on the partition
+//! *led by* core `c` at width `w`:
+//!
+//! ```text
+//! updated = (4 · old + new) / 5        // 80% history, 20% new sample
+//! ```
+//!
+//! Entries start at **0**, which models "zero execution time": because the
+//! schedulers minimise `time × width`, untrained entries win every search
+//! and the configuration space is explored automatically ("this ensures
+//! that all configuration pairs will eventually be visited and trained").
+//!
+//! Implementation notes mirrored from the paper:
+//! - only the **leader core** of a partition writes its entry (fewer cache
+//!   migrations, no write races);
+//! - each core's row is cache-line padded so concurrent leaders never
+//!   false-share;
+//! - reads are racy by design (schedulers tolerate slightly stale values).
+//!   Values are stored as bit-cast `f64` in `AtomicU64`s, so every read and
+//!   write is individually atomic — stale is possible, torn is not.
+
+use crate::platform::{CoreId, Partition, Topology};
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// History weight: `(WEIGHT·old + new) / (WEIGHT + 1)`.
+pub const HISTORY_WEIGHT: f64 = 4.0;
+
+/// One core's row: per-width moving averages, cache-line padded.
+struct Row {
+    /// Indexed by width *index* (position in `Ptt::widths`).
+    cells: CachePadded<Vec<AtomicU64>>,
+}
+
+/// The PTT for a set of TAO types on a fixed topology.
+pub struct Ptt {
+    /// Sorted valid widths (union over clusters); the column axis.
+    widths: Vec<usize>,
+    n_cores: usize,
+    n_types: usize,
+    /// `rows[type * n_cores + core]`.
+    rows: Vec<Row>,
+    /// Tunable history weight (paper default 4.0 = 4:1). Stored bit-cast so
+    /// the table stays `Sync` without locks.
+    weight: AtomicU64,
+}
+
+impl Ptt {
+    pub fn new(n_types: usize, topo: &Topology) -> Ptt {
+        let widths = topo.all_widths();
+        let n_cores = topo.n_cores();
+        let rows = (0..n_types.max(1) * n_cores)
+            .map(|_| Row {
+                cells: CachePadded::new(
+                    (0..widths.len()).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
+                ),
+            })
+            .collect();
+        Ptt {
+            widths,
+            n_cores,
+            n_types: n_types.max(1),
+            rows,
+            weight: AtomicU64::new(HISTORY_WEIGHT.to_bits()),
+        }
+    }
+
+    /// Override the history weight (ablation `ablation_ptt`).
+    pub fn set_history_weight(&self, w: f64) {
+        assert!(w >= 0.0);
+        self.weight.store(w.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn history_weight(&self) -> f64 {
+        f64::from_bits(self.weight.load(Ordering::Relaxed))
+    }
+
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.n_types
+    }
+
+    fn width_index(&self, width: usize) -> Option<usize> {
+        self.widths.iter().position(|&w| w == width)
+    }
+
+    fn cell(&self, type_id: usize, core: CoreId, width: usize) -> &AtomicU64 {
+        let wi = self
+            .width_index(width)
+            .unwrap_or_else(|| panic!("width {width} not in PTT axis {:?}", self.widths));
+        assert!(type_id < self.n_types, "type {type_id} out of range {}", self.n_types);
+        assert!(core < self.n_cores, "core {core} out of range {}", self.n_cores);
+        &self.rows[type_id * self.n_cores + core].cells[wi]
+    }
+
+    /// Read the moving average for `(type, leader core, width)`; 0 = untrained.
+    pub fn read(&self, type_id: usize, core: CoreId, width: usize) -> f64 {
+        f64::from_bits(self.cell(type_id, core, width).load(Ordering::Relaxed))
+    }
+
+    /// Leader-side update with an observed execution time (seconds).
+    ///
+    /// First sample replaces the 0 initialiser outright (a 4:1 blend with a
+    /// fictitious zero would underestimate fivefold and distort the first
+    /// few searches).
+    pub fn update(&self, type_id: usize, leader: CoreId, width: usize, exec_time: f64) {
+        debug_assert!(exec_time >= 0.0 && exec_time.is_finite());
+        let cell = self.cell(type_id, leader, width);
+        let old = f64::from_bits(cell.load(Ordering::Relaxed));
+        let w = self.history_weight();
+        let new = if old == 0.0 { exec_time } else { (w * old + exec_time) / (w + 1.0) };
+        cell.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    /// **Global search** (critical tasks, §3.3): over every valid partition
+    /// `(leader, width)` of the machine, minimise `time × width` — the
+    /// system's resource occupation. Untrained entries (0) naturally win,
+    /// forcing exploration. Deterministic tie-break: first in
+    /// `Topology::all_partitions` order.
+    pub fn best_global(&self, type_id: usize, topo: &Topology) -> (Partition, f64) {
+        let mut best: Option<(Partition, f64)> = None;
+        for p in topo.all_partitions() {
+            let t = self.read(type_id, p.leader, p.width);
+            let cost = t * p.width as f64;
+            match best {
+                Some((_, c)) if c <= cost => {}
+                _ => best = Some((p, cost)),
+            }
+        }
+        best.expect("topology has at least one partition")
+    }
+
+    /// **Local width search** (non-critical tasks, §3.3): the task stays
+    /// near `core`; only the width of the partition *containing* `core` is
+    /// chosen, reading the leader's entries. Minimises `time × width`.
+    pub fn best_width_for(&self, type_id: usize, core: CoreId, topo: &Topology) -> (Partition, f64) {
+        let cluster = topo.cluster_of(core);
+        let mut best: Option<(Partition, f64)> = None;
+        for w in cluster.valid_widths() {
+            let p = topo
+                .enclosing_partition(core, w)
+                .expect("cluster width must yield an enclosing partition");
+            let t = self.read(type_id, p.leader, p.width);
+            let cost = t * w as f64;
+            match best {
+                Some((_, c)) if c <= cost => {}
+                _ => best = Some((p, cost)),
+            }
+        }
+        best.expect("cluster has at least width 1")
+    }
+
+    /// Lowest observed width-1 time per cluster (used by the CATS-like
+    /// baseline to rank clusters as "big" vs "LITTLE").
+    pub fn cluster_width1_estimate(&self, type_id: usize, topo: &Topology, cluster: usize) -> f64 {
+        let cl = &topo.clusters[cluster];
+        let vals: Vec<f64> =
+            cl.cores().map(|c| self.read(type_id, c, 1)).filter(|&v| v > 0.0).collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    /// Fraction of entries still untrained (diagnostics / convergence bench).
+    pub fn untrained_fraction(&self, topo: &Topology) -> f64 {
+        let mut total = 0usize;
+        let mut zero = 0usize;
+        for ty in 0..self.n_types {
+            for p in topo.all_partitions() {
+                total += 1;
+                if self.read(ty, p.leader, p.width) == 0.0 {
+                    zero += 1;
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zero as f64 / total as f64
+        }
+    }
+
+    /// Dump one type's table as `(core, width, value)` triples (traces/CLI).
+    pub fn dump(&self, type_id: usize, topo: &Topology) -> Vec<(CoreId, usize, f64)> {
+        let mut out = Vec::new();
+        for p in topo.all_partitions() {
+            out.push((p.leader, p.width, self.read(type_id, p.leader, p.width)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Topology;
+
+    fn tx2() -> Topology {
+        Topology::from_clusters("tx2", &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)])
+    }
+
+    #[test]
+    fn starts_untrained() {
+        let topo = tx2();
+        let ptt = Ptt::new(2, &topo);
+        assert_eq!(ptt.read(0, 0, 1), 0.0);
+        assert_eq!(ptt.untrained_fraction(&topo), 1.0);
+    }
+
+    #[test]
+    fn first_update_replaces_zero() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        ptt.update(0, 0, 1, 10.0);
+        assert_eq!(ptt.read(0, 0, 1), 10.0);
+    }
+
+    #[test]
+    fn weighted_update_is_4_to_1() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        ptt.update(0, 0, 1, 10.0);
+        ptt.update(0, 0, 1, 5.0);
+        // (4*10 + 5) / 5 = 9
+        assert!((ptt.read(0, 0, 1) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_converges_to_steady_input() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        ptt.update(0, 2, 2, 100.0);
+        for _ in 0..100 {
+            ptt.update(0, 2, 2, 3.0);
+        }
+        // Error decays ×0.8 per sample: 97 × 0.8^100 ≈ 2e-8.
+        assert!((ptt.read(0, 2, 2) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn global_search_explores_zeros_first() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        ptt.update(0, 0, 1, 0.5);
+        let (p, cost) = ptt.best_global(0, &topo);
+        // Some untrained entry must win over the trained 0.5.
+        assert_eq!(cost, 0.0);
+        assert_ne!((p.leader, p.width), (0, 1));
+    }
+
+    #[test]
+    fn global_search_minimises_time_times_width() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        // Train everything to something large...
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 10.0);
+        }
+        // ...then make (2, 4) clearly best even after the ×4 width factor.
+        for _ in 0..50 {
+            ptt.update(0, 2, 4, 0.4);
+        }
+        let (p, _) = ptt.best_global(0, &topo);
+        assert_eq!((p.leader, p.width), (2, 4));
+    }
+
+    #[test]
+    fn local_search_restricted_to_enclosing_partitions() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        // Core 3 (a57, offset 1): candidates are (3,1), (2,2), (2,4).
+        for _ in 0..50 {
+            ptt.update(0, 2, 2, 0.01);
+        }
+        let (p, _) = ptt.best_width_for(0, 3, &topo);
+        assert_eq!((p.leader, p.width), (2, 2));
+        assert!(p.contains(3));
+    }
+
+    #[test]
+    fn local_search_never_leaves_cluster() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        // Make a denver entry look amazing; core 3 must not pick it.
+        for _ in 0..50 {
+            ptt.update(0, 0, 1, 1e-6);
+        }
+        let (p, _) = ptt.best_width_for(0, 3, &topo);
+        assert!(topo.cluster_of(p.leader).id == 1);
+    }
+
+    #[test]
+    fn per_type_isolation() {
+        let topo = tx2();
+        let ptt = Ptt::new(2, &topo);
+        ptt.update(0, 0, 1, 7.0);
+        assert_eq!(ptt.read(1, 0, 1), 0.0);
+        assert_eq!(ptt.read(0, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn history_weight_override() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        ptt.set_history_weight(1.0); // 1:1 averaging
+        ptt.update(0, 0, 1, 10.0);
+        ptt.update(0, 0, 1, 20.0);
+        assert!((ptt.read(0, 0, 1) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_estimate_ignores_untrained() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        assert_eq!(ptt.cluster_width1_estimate(0, &topo, 0), 0.0);
+        ptt.update(0, 0, 1, 2.0);
+        assert_eq!(ptt.cluster_width1_estimate(0, &topo, 0), 2.0);
+        ptt.update(0, 1, 1, 4.0);
+        assert_eq!(ptt.cluster_width1_estimate(0, &topo, 0), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_width_panics() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        ptt.read(0, 0, 3);
+    }
+
+    #[test]
+    fn untrained_fraction_decreases() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        let before = ptt.untrained_fraction(&topo);
+        ptt.update(0, 0, 1, 1.0);
+        assert!(ptt.untrained_fraction(&topo) < before);
+    }
+}

@@ -1,0 +1,437 @@
+//! Scheduling policies (§3.3 and the §6 baselines).
+//!
+//! A policy answers one question: *when core C pops a ready TAO from its
+//! work-stealing queue, which partition `(leader, width)` should execute
+//! it?* The decision is made **before** the TAO is inserted into assembly
+//! queues and is irrevocable afterwards (§3.1).
+//!
+//! Implemented policies:
+//! - [`PerformanceBased`] — the paper's contribution: critical tasks search
+//!   the PTT globally for the `(core, width)` minimising
+//!   `exec_time × width`; non-critical tasks only pick the best width of
+//!   the partition containing the current core.
+//! - [`HomogeneousWs`] — the baseline the paper compares against (§5.1):
+//!   XiTAO's default random work stealing, width 1, PTT-unaware.
+//! - [`CatsLike`] — a CATS-style criticality-aware baseline (§6): critical
+//!   tasks go to the empirically fastest cluster ("big"), width fixed at 1.
+//! - [`DheftLike`] — a dynamic-HEFT-style baseline (§6): earliest-finish-
+//!   time placement from learned width-1 latencies, width fixed at 1.
+//!
+//! All policies are `Sync`; mutable baseline state (round-robin cursors,
+//! core-availability estimates) uses atomics.
+
+use super::ptt::Ptt;
+use crate::platform::{CoreId, Partition, Topology};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Everything a policy may consult when placing one task.
+pub struct PlaceCtx<'a> {
+    /// Core making the decision (the one that popped/stole the task).
+    pub core: CoreId,
+    /// TAO type (PTT row group).
+    pub type_id: usize,
+    /// Criticality as determined at wake-up time (§3.3; initial tasks are
+    /// non-critical).
+    pub critical: bool,
+    pub ptt: &'a Ptt,
+    pub topo: &'a Topology,
+    /// Engine time in seconds (virtual in sim, wall in real mode).
+    pub now: f64,
+}
+
+/// A placement policy.
+pub trait Policy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Decide the partition for one ready task.
+    fn place(&self, ctx: &PlaceCtx<'_>) -> Partition;
+
+    /// Completion hook (time bookkeeping for EFT-style baselines).
+    fn on_complete(&self, _leader: CoreId, _width: usize, _exec_time: f64, _now: f64) {}
+
+    /// Whether the engine should bother updating the PTT (the homogeneous
+    /// baseline is PTT-unaware; skipping updates mirrors its zero overhead).
+    fn uses_ptt(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Performance-based scheduler (the paper's contribution)
+// ---------------------------------------------------------------------------
+
+/// §3.3: criticality-aware, PTT-driven elastic scheduling.
+#[derive(Debug, Default)]
+pub struct PerformanceBased;
+
+impl Policy for PerformanceBased {
+    fn name(&self) -> &'static str {
+        "performance-based"
+    }
+
+    fn place(&self, ctx: &PlaceCtx<'_>) -> Partition {
+        if ctx.critical {
+            // Global search: best (core, width) anywhere on the machine.
+            ctx.ptt.best_global(ctx.type_id, ctx.topo).0
+        } else {
+            // Local search: stay near the current core, pick only the width.
+            ctx.ptt.best_width_for(ctx.type_id, ctx.core, ctx.topo).0
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Homogeneous random-work-stealing baseline
+// ---------------------------------------------------------------------------
+
+/// The "homogeneous scheduler" of §5: plain work stealing, every TAO runs
+/// at width 1 on whichever core dequeued it. Load balance comes entirely
+/// from random stealing; the PTT is neither read nor written.
+#[derive(Debug, Default)]
+pub struct HomogeneousWs;
+
+impl Policy for HomogeneousWs {
+    fn name(&self) -> &'static str {
+        "homogeneous-ws"
+    }
+
+    fn place(&self, ctx: &PlaceCtx<'_>) -> Partition {
+        Partition { leader: ctx.core, width: 1 }
+    }
+
+    fn uses_ptt(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CATS-like baseline
+// ---------------------------------------------------------------------------
+
+/// Criticality-Aware Task Scheduling, adapted: CATS routes critical tasks to
+/// the "big" core cluster and the rest to "LITTLE" cores, always
+/// single-threaded. Our heterogeneity-unaware variant learns which cluster
+/// is fast from PTT width-1 entries instead of being told.
+#[derive(Debug, Default)]
+pub struct CatsLike {
+    rr: AtomicUsize,
+}
+
+impl Policy for CatsLike {
+    fn name(&self) -> &'static str {
+        "cats-like"
+    }
+
+    fn place(&self, ctx: &PlaceCtx<'_>) -> Partition {
+        if !ctx.critical {
+            return Partition { leader: ctx.core, width: 1 };
+        }
+        // Rank clusters by learned width-1 latency; untrained (0) clusters
+        // are explored first, matching the PTT bootstrap behaviour.
+        let mut best_cluster = ctx.topo.cores[ctx.core].cluster;
+        let mut best_t = f64::INFINITY;
+        for cl in &ctx.topo.clusters {
+            let t = ctx.ptt.cluster_width1_estimate(ctx.type_id, ctx.topo, cl.id);
+            if t < best_t {
+                best_t = t;
+                best_cluster = cl.id;
+            }
+        }
+        // Round-robin across the chosen cluster's cores (CATS's critical
+        // queue feeds all big cores).
+        let cl = &ctx.topo.clusters[best_cluster];
+        let off = self.rr.fetch_add(1, Ordering::Relaxed) % cl.len;
+        Partition { leader: cl.first_core + off, width: 1 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dHEFT-like baseline
+// ---------------------------------------------------------------------------
+
+/// Dynamic HEFT: place every task on the core with the earliest predicted
+/// finish time, using learned per-core width-1 latencies and a per-core
+/// availability clock. Criticality is ignored (HEFT ranks ahead of time;
+/// dynamically the EFT rule is the essence).
+pub struct DheftLike {
+    /// Per-core next-free-time estimates, f64 bit-cast.
+    avail: Vec<AtomicU64>,
+}
+
+impl DheftLike {
+    pub fn new(n_cores: usize) -> DheftLike {
+        DheftLike { avail: (0..n_cores).map(|_| AtomicU64::new(0f64.to_bits())).collect() }
+    }
+
+    fn avail_of(&self, c: CoreId) -> f64 {
+        f64::from_bits(self.avail[c].load(Ordering::Relaxed))
+    }
+
+    fn bump(&self, c: CoreId, until: f64) {
+        self.avail[c].store(until.to_bits(), Ordering::Relaxed);
+    }
+}
+
+impl Policy for DheftLike {
+    fn name(&self) -> &'static str {
+        "dheft-like"
+    }
+
+    fn place(&self, ctx: &PlaceCtx<'_>) -> Partition {
+        let mut best = Partition { leader: ctx.core, width: 1 };
+        let mut best_finish = f64::INFINITY;
+        for c in 0..ctx.topo.n_cores() {
+            let est = ctx.ptt.read(ctx.type_id, c, 1); // 0 ⇒ explore
+            let finish = self.avail_of(c).max(ctx.now) + est;
+            if finish < best_finish {
+                best_finish = finish;
+                best = Partition { leader: c, width: 1 };
+            }
+        }
+        // Reserve the slot optimistically; corrected on completion.
+        self.bump(best.leader, best_finish);
+        best
+    }
+
+    fn on_complete(&self, leader: CoreId, _width: usize, _exec_time: f64, now: f64) {
+        // The task finished; the core is free from `now` (the optimistic
+        // reservation may have drifted under contention).
+        let cur = self.avail_of(leader);
+        if now > cur {
+            self.bump(leader, now);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Energy-minimizing variant (§3.3's alternative objective)
+// ---------------------------------------------------------------------------
+
+/// The paper's stated alternative: "a system trying to minimize the energy
+/// consumption would instead find the best pair that minimizes energy per
+/// task". Identical structure to [`PerformanceBased`], but the search cost
+/// is `exec_time × Σ active-power(partition cores)` (joules per task)
+/// instead of `exec_time × width`.
+#[derive(Debug, Default)]
+pub struct EnergyMinimizing;
+
+impl EnergyMinimizing {
+    fn energy_cost(ptt: &Ptt, ctx: &PlaceCtx<'_>, p: Partition) -> f64 {
+        let t = ptt.read(ctx.type_id, p.leader, p.width);
+        t * crate::platform::partition_power(ctx.topo, p)
+    }
+}
+
+impl Policy for EnergyMinimizing {
+    fn name(&self) -> &'static str {
+        "energy-minimizing"
+    }
+
+    fn place(&self, ctx: &PlaceCtx<'_>) -> Partition {
+        if ctx.critical {
+            let mut best: Option<(Partition, f64)> = None;
+            for p in ctx.topo.all_partitions() {
+                let cost = Self::energy_cost(ctx.ptt, ctx, p);
+                match best {
+                    Some((_, c)) if c <= cost => {}
+                    _ => best = Some((p, cost)),
+                }
+            }
+            best.expect("at least one partition").0
+        } else {
+            let cluster = ctx.topo.cluster_of(ctx.core);
+            let mut best: Option<(Partition, f64)> = None;
+            for w in cluster.valid_widths() {
+                let p = ctx.topo.enclosing_partition(ctx.core, w).expect("valid width");
+                let cost = Self::energy_cost(ctx.ptt, ctx, p);
+                match best {
+                    Some((_, c)) if c <= cost => {}
+                    _ => best = Some((p, cost)),
+                }
+            }
+            best.expect("width 1 always valid").0
+        }
+    }
+}
+
+/// Construct a policy by CLI/config name.
+pub fn policy_by_name(name: &str, n_cores: usize) -> Option<Box<dyn Policy>> {
+    match name {
+        "performance" | "performance-based" | "ptt" => Some(Box::new(PerformanceBased)),
+        "homogeneous" | "ws" | "homogeneous-ws" => Some(Box::new(HomogeneousWs)),
+        "cats" | "cats-like" => Some(Box::new(CatsLike::default())),
+        "dheft" | "dheft-like" => Some(Box::new(DheftLike::new(n_cores))),
+        "energy" | "energy-minimizing" => Some(Box::new(EnergyMinimizing)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Topology;
+
+    fn tx2() -> Topology {
+        Topology::from_clusters("tx2", &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)])
+    }
+
+    fn ctx<'a>(
+        core: CoreId,
+        critical: bool,
+        ptt: &'a Ptt,
+        topo: &'a Topology,
+    ) -> PlaceCtx<'a> {
+        PlaceCtx { core, type_id: 0, critical, ptt, topo, now: 0.0 }
+    }
+
+    #[test]
+    fn performance_critical_goes_global() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        for _ in 0..50 {
+            ptt.update(0, 0, 2, 0.05); // denver pair clearly best
+        }
+        let pol = PerformanceBased;
+        let p = pol.place(&ctx(5, true, &ptt, &topo));
+        assert_eq!((p.leader, p.width), (0, 2));
+    }
+
+    #[test]
+    fn performance_noncritical_stays_local() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        for _ in 0..50 {
+            ptt.update(0, 0, 1, 1e-6); // denver looks amazing
+        }
+        let pol = PerformanceBased;
+        let p = pol.place(&ctx(5, false, &ptt, &topo));
+        // Must remain in core 5's cluster (a57) regardless.
+        assert_eq!(topo.cluster_of(p.leader).id, 1);
+        assert!(p.contains(5) || p.leader == 5 || p.cores().contains(&5));
+    }
+
+    #[test]
+    fn homogeneous_is_width1_local_always() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        let pol = HomogeneousWs;
+        for core in 0..topo.n_cores() {
+            for critical in [false, true] {
+                let p = pol.place(&ctx(core, critical, &ptt, &topo));
+                assert_eq!(p, Partition { leader: core, width: 1 });
+            }
+        }
+        assert!(!pol.uses_ptt());
+    }
+
+    #[test]
+    fn cats_sends_critical_to_fast_cluster() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        // Train: denver (cluster 0) fast, a57 slow.
+        for c in 0..2 {
+            ptt.update(0, c, 1, 0.5);
+        }
+        for c in 2..6 {
+            ptt.update(0, c, 1, 1.0);
+        }
+        let pol = CatsLike::default();
+        for _ in 0..8 {
+            let p = pol.place(&ctx(4, true, &ptt, &topo));
+            assert_eq!(topo.cluster_of(p.leader).id, 0);
+            assert_eq!(p.width, 1);
+        }
+    }
+
+    #[test]
+    fn cats_noncritical_stays_put() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        let pol = CatsLike::default();
+        let p = pol.place(&ctx(3, false, &ptt, &topo));
+        assert_eq!(p, Partition { leader: 3, width: 1 });
+    }
+
+    #[test]
+    fn dheft_spreads_by_finish_time() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for c in 0..6 {
+            ptt.update(0, c, 1, 1.0);
+        }
+        let pol = DheftLike::new(6);
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..6 {
+            let p = pol.place(&ctx(0, true, &ptt, &topo));
+            used.insert(p.leader);
+        }
+        // Equal latencies + EFT ⇒ all six cores get one task each.
+        assert_eq!(used.len(), 6);
+    }
+
+    #[test]
+    fn dheft_prefers_fast_core_until_saturated() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        ptt.update(0, 0, 1, 0.1);
+        for c in 1..6 {
+            ptt.update(0, c, 1, 1.0);
+        }
+        let pol = DheftLike::new(6);
+        // First several placements should pile onto core 0 while its queue
+        // is still the earliest finish.
+        let first = pol.place(&ctx(3, true, &ptt, &topo));
+        assert_eq!(first.leader, 0);
+    }
+
+    #[test]
+    fn energy_policy_prefers_low_power_when_times_equal() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0); // equal times everywhere
+        }
+        let pol = EnergyMinimizing;
+        let p = pol.place(&ctx(0, true, &ptt, &topo));
+        // Equal times: the cheapest-power width-1 partition wins — an A57
+        // core (1.1 W) over a Denver (2.0 W).
+        assert_eq!(p.width, 1);
+        assert_eq!(topo.cluster_of(p.leader).id, 1, "{p:?}");
+    }
+
+    #[test]
+    fn energy_policy_accepts_fast_core_when_much_faster() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        // Denver width-1 is 4× faster: 0.25 s × 2 W = 0.5 J beats 1 s × 1.1 J.
+        for _ in 0..60 {
+            ptt.update(0, 0, 1, 0.25);
+        }
+        let pol = EnergyMinimizing;
+        let p = pol.place(&ctx(3, true, &ptt, &topo));
+        assert_eq!((p.leader, p.width), (0, 1));
+    }
+
+    #[test]
+    fn policy_by_name_resolves() {
+        for (n, expect) in [
+            ("performance", "performance-based"),
+            ("homogeneous", "homogeneous-ws"),
+            ("cats", "cats-like"),
+            ("dheft", "dheft-like"),
+            ("energy", "energy-minimizing"),
+        ] {
+            assert_eq!(policy_by_name(n, 4).unwrap().name(), expect);
+        }
+        assert!(policy_by_name("nope", 4).is_none());
+    }
+}

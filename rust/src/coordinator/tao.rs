@@ -1,0 +1,95 @@
+//! Task Assembly Objects (TAOs).
+//!
+//! In XiTAO (§3.1) a TAO bundles a concurrent computation, an internal
+//! scheduler and a *resource width* — the number of cores that execute it.
+//! Here the computation is a [`TaoPayload`]: an object whose `execute` is
+//! called once per participating core with a distinct `rank` in
+//! `0..width`. The payload performs its own internal work partitioning
+//! (the "internal scheduler" of the paper — all our kernels use static
+//! rank-sliced decomposition).
+//!
+//! The *resource width is decided by the runtime scheduler*, not the
+//! payload; payloads must therefore handle any width ≥ 1.
+
+use crate::platform::KernelClass;
+use std::sync::Arc;
+
+/// A TAO body: executed by `width` cooperating cores, each with a unique
+/// rank. Implementations must be safe to call concurrently from the
+/// participating worker threads.
+pub trait TaoPayload: Send + Sync {
+    /// Workload class (drives the simulator's performance model and, in
+    /// real mode, documents the kernel's character).
+    fn class(&self) -> KernelClass;
+
+    /// Execute rank `rank` of `width`. Called exactly once per rank.
+    fn execute(&self, rank: usize, width: usize);
+
+    /// Human-readable kernel name for traces.
+    fn name(&self) -> &'static str {
+        self.class().name()
+    }
+}
+
+/// A trivial payload that does nothing (DAG-structure tests, sim-only runs).
+pub struct NopPayload(pub KernelClass);
+
+impl TaoPayload for NopPayload {
+    fn class(&self) -> KernelClass {
+        self.0
+    }
+
+    fn execute(&self, _rank: usize, _width: usize) {}
+}
+
+/// A payload wrapping a closure; the closure receives `(rank, width)`.
+pub struct FnPayload<F: Fn(usize, usize) + Send + Sync> {
+    pub class: KernelClass,
+    pub f: F,
+}
+
+impl<F: Fn(usize, usize) + Send + Sync> TaoPayload for FnPayload<F> {
+    fn class(&self) -> KernelClass {
+        self.class
+    }
+
+    fn execute(&self, rank: usize, width: usize) {
+        (self.f)(rank, width)
+    }
+}
+
+/// Convenience constructor for closure payloads.
+pub fn payload_fn<F: Fn(usize, usize) + Send + Sync + 'static>(
+    class: KernelClass,
+    f: F,
+) -> Arc<dyn TaoPayload> {
+    Arc::new(FnPayload { class, f })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fn_payload_executes_with_rank() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let p = payload_fn(KernelClass::MatMul, move |rank, width| {
+            assert!(rank < width);
+            h.fetch_add(1 << rank, Ordering::SeqCst);
+        });
+        p.execute(0, 2);
+        p.execute(1, 2);
+        assert_eq!(hits.load(Ordering::SeqCst), 0b11);
+        assert_eq!(p.class(), KernelClass::MatMul);
+    }
+
+    #[test]
+    fn nop_payload_class() {
+        let p = NopPayload(KernelClass::Sort);
+        assert_eq!(p.class(), KernelClass::Sort);
+        assert_eq!(p.name(), "sort");
+        p.execute(0, 1);
+    }
+}

@@ -1,0 +1,465 @@
+//! Real-thread execution engine.
+//!
+//! One worker thread per (virtual) core runs the XiTAO loop from §3.1/§3.3:
+//!
+//! 1. fetch from the own **assembly queue** and execute the next TAO share;
+//! 2. otherwise pop the own **work-stealing queue**, decide the placement
+//!    with the active [`Policy`] and insert the TAO into the AQs of the
+//!    chosen partition;
+//! 3. otherwise **steal** from a random victim's WSQ (the thief becomes the
+//!    deciding core — §3.3's "locally executed or randomly stolen").
+//!
+//! TAO instances are executed cooperatively: each member core claims a rank
+//! on arrival at its AQ head and runs `payload.execute(rank, width)`
+//! immediately (XiTAO's asynchronous entry/exit — no entry barrier). The
+//! last rank to finish performs *commit-and-wake-up*: it decrements each
+//! child's dependency count and pushes newly ready children onto its own
+//! WSQ, tagging them critical per the paper's rule (criticality difference
+//! of exactly 1 along any incoming edge).
+//!
+//! The **leader core** times its own share and is the only writer of the
+//! PTT entry — the paper's design for avoiding cache-line migration.
+//!
+//! On the single-core build host this engine validates *functionality*
+//! (the perf figures come from `crate::sim`); on a real multicore it is a
+//! faithful runtime, including optional thread pinning.
+
+use super::aq::AssemblyQueue;
+use super::dag::{TaoDag, TaskId};
+use super::metrics::{RunResult, Trace, TraceRecord};
+use super::ptt::Ptt;
+use super::scheduler::{PlaceCtx, Policy};
+use super::wsq::WsQueue;
+use crate::platform::Topology;
+use crate::util::Pcg32;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Engine options.
+#[derive(Debug, Clone)]
+pub struct RealEngineOpts {
+    /// Pin worker `i` to cpu `i % online` (only meaningful on multicore).
+    pub pin_threads: bool,
+    /// Seed for victim selection and root distribution.
+    pub seed: u64,
+}
+
+impl Default for RealEngineOpts {
+    fn default() -> Self {
+        RealEngineOpts { pin_threads: false, seed: 0x7a0 }
+    }
+}
+
+/// A TAO that has been placed on a partition and sits in member AQs.
+struct TaoInstance {
+    task: TaskId,
+    partition: crate::platform::Partition,
+    critical: bool,
+    /// Rank dispenser: arrival order claims ranks 0..width.
+    arrivals: AtomicUsize,
+    /// Completion countdown; the rank that drops it to zero commits.
+    remaining: AtomicUsize,
+    /// Wall-clock start/end of the leader's share, f64 bits (0 = unset).
+    leader_start: AtomicU64,
+    leader_end: AtomicU64,
+}
+
+struct Shared<'a> {
+    dag: &'a TaoDag,
+    topo: &'a Topology,
+    policy: &'a dyn Policy,
+    ptt: &'a Ptt,
+    wsqs: Vec<WsQueue<TaskId>>,
+    aqs: Vec<AssemblyQueue<Arc<TaoInstance>>>,
+    /// Per-task remaining-dependency counters.
+    pending: Vec<AtomicUsize>,
+    /// Criticality flags resolved at wake time.
+    critical: Vec<AtomicBool>,
+    /// Critical-path membership, propagated at commit time.
+    on_cp: Vec<AtomicBool>,
+    completed: AtomicUsize,
+    done: AtomicBool,
+    trace: Trace,
+    t0: Instant,
+}
+
+impl<'a> Shared<'a> {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Insert a placed TAO into all member AQs. No cross-queue ordering
+    /// lock is needed: members execute their share immediately on arrival
+    /// (asynchronous entry, no barrier), so inconsistent interleavings
+    /// cannot produce a circular wait.
+    fn insert_into_aqs(&self, inst: Arc<TaoInstance>) {
+        for c in inst.partition.cores() {
+            self.aqs[c].push(inst.clone());
+        }
+    }
+
+    /// Place one ready task from the perspective of `core`.
+    fn place_task(&self, core: usize, task: TaskId) {
+        let node = &self.dag.nodes[task];
+        let critical = self.critical[task].load(Ordering::Relaxed);
+        let ctx = PlaceCtx {
+            core,
+            type_id: node.type_id,
+            critical,
+            ptt: self.ptt,
+            topo: self.topo,
+            now: self.now(),
+        };
+        let partition = self.policy.place(&ctx);
+        debug_assert!(self.topo.is_valid_partition(partition), "{partition:?}");
+        let inst = Arc::new(TaoInstance {
+            task,
+            partition,
+            critical,
+            arrivals: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(partition.width),
+            leader_start: AtomicU64::new(0),
+            leader_end: AtomicU64::new(0),
+        });
+        self.insert_into_aqs(inst);
+    }
+
+    /// Execute this core's share of a TAO instance; commit if last.
+    fn execute_share(&self, core: usize, inst: &Arc<TaoInstance>) {
+        let rank = inst.arrivals.fetch_add(1, Ordering::AcqRel);
+        debug_assert!(rank < inst.partition.width);
+        let node = &self.dag.nodes[inst.task];
+        let is_leader = core == inst.partition.leader;
+        let t_start = self.now();
+        if let Some(p) = &node.payload {
+            p.execute(rank, inst.partition.width);
+        }
+        let t_end = self.now();
+        if is_leader {
+            inst.leader_start.store(t_start.to_bits(), Ordering::Relaxed);
+            inst.leader_end.store(t_end.to_bits(), Ordering::Release);
+            if self.policy.uses_ptt() {
+                // §3.2: the leader records its own execution time; the 4:1
+                // moving average absorbs rank-imbalance skew.
+                self.ptt.update(node.type_id, inst.partition.leader, inst.partition.width, t_end - t_start);
+            }
+        }
+        if inst.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.commit_and_wake(core, inst, t_end);
+        }
+    }
+
+    /// Commit-and-wake-up (§3.3): record the trace, resolve children.
+    fn commit_and_wake(&self, core: usize, inst: &Arc<TaoInstance>, t_end: f64) {
+        let node = &self.dag.nodes[inst.task];
+        let le_bits = inst.leader_end.load(Ordering::Acquire);
+        let (ls, le) = if le_bits == 0 {
+            (t_end, t_end) // leader still mid-share; attribute to committer
+        } else {
+            (f64::from_bits(inst.leader_start.load(Ordering::Relaxed)), f64::from_bits(le_bits))
+        };
+        self.trace.push(TraceRecord {
+            task: inst.task,
+            class: node.class,
+            type_id: node.type_id,
+            critical: inst.critical,
+            partition: inst.partition,
+            t_start: ls,
+            t_end: le.max(t_end),
+        });
+        self.policy.on_complete(inst.partition.leader, inst.partition.width, le - ls, t_end);
+        // Critical-path hand-off (see sim/engine.rs for the rationale):
+        // a task on the path marks its criticality-minus-one child before
+        // any wake-up can read the flag.
+        if self.on_cp[inst.task].load(Ordering::Acquire) {
+            if let Some(c) = node.cp_child {
+                self.on_cp[c].store(true, Ordering::Release);
+            }
+        }
+        for &child in &node.succs {
+            if self.pending[child].fetch_sub(1, Ordering::AcqRel) == 1 {
+                let crit = self.on_cp[child].load(Ordering::Acquire);
+                self.critical[child].store(crit, Ordering::Relaxed);
+                self.wsqs[core].push(child);
+            }
+        }
+        let done = self.completed.fetch_add(1, Ordering::AcqRel) + 1;
+        if done == self.dag.len() {
+            self.done.store(true, Ordering::Release);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32) {
+    let n = shared.topo.n_cores();
+    let mut idle_spins = 0u32;
+    while !shared.done.load(Ordering::Acquire) {
+        // 1. Assembly queue: committed work for this core.
+        if let Some(inst) = shared.aqs[core].pop() {
+            shared.execute_share(core, &inst);
+            idle_spins = 0;
+            continue;
+        }
+        // 2. Own WSQ: ready tasks needing a placement decision.
+        if let Some(task) = shared.wsqs[core].pop() {
+            shared.place_task(core, task);
+            idle_spins = 0;
+            continue;
+        }
+        // 3. Random steal.
+        if n > 1 {
+            let victim = rng.gen_usize(0, n - 1);
+            let victim = if victim >= core { victim + 1 } else { victim };
+            if let Some(task) = shared.wsqs[victim].steal() {
+                shared.place_task(core, task);
+                idle_spins = 0;
+                continue;
+            }
+        }
+        // 4. Back off (crucial on hosts with fewer physical cores than
+        // workers: spinning would starve the workers that hold work).
+        idle_spins += 1;
+        if idle_spins < 16 {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+    }
+}
+
+/// Pin the calling thread to `cpu` (best effort; Linux only).
+fn pin_to_cpu(cpu: usize) {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(cpu, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    }
+}
+
+/// Execute `dag` with `policy` on `topo.n_cores()` worker threads.
+///
+/// The PTT is created fresh unless `ptt` is provided (warm-started PTTs let
+/// callers chain DAGs, as the paper's VGG port does between layers).
+pub fn run_dag_real(
+    dag: &TaoDag,
+    topo: &Topology,
+    policy: &dyn Policy,
+    ptt: Option<&Ptt>,
+    opts: &RealEngineOpts,
+) -> RunResult {
+    assert!(dag.is_finalized(), "finalize() the DAG first");
+    assert!(dag.len() > 0, "empty DAG");
+    let fresh;
+    let ptt = match ptt {
+        Some(p) => p,
+        None => {
+            fresh = Ptt::new(dag.n_types(), topo);
+            &fresh
+        }
+    };
+    let shared = Shared {
+        dag,
+        topo,
+        policy,
+        ptt,
+        wsqs: (0..topo.n_cores()).map(|_| WsQueue::new()).collect(),
+        aqs: (0..topo.n_cores()).map(|_| AssemblyQueue::new()).collect(),
+        pending: dag.nodes.iter().map(|x| AtomicUsize::new(x.preds.len())).collect(),
+        critical: dag.nodes.iter().map(|_| AtomicBool::new(false)).collect(),
+        on_cp: {
+            // Seed critical-path roots; hoist the max-criticality scan out
+            // of the per-task test (is_cp_root per task would be O(n²)).
+            let max_crit = dag.critical_path_len();
+            dag.nodes
+                .iter()
+                .map(|n| AtomicBool::new(n.preds.is_empty() && n.criticality == max_crit))
+                .collect()
+        },
+        completed: AtomicUsize::new(0),
+        done: AtomicBool::new(false),
+        trace: Trace::new(),
+        t0: Instant::now(),
+    };
+    // Distribute roots round-robin (§3.3's "default policy"); initial tasks
+    // are non-critical by definition (their criticality cannot be checked).
+    for (i, root) in dag.roots().into_iter().enumerate() {
+        shared.wsqs[i % topo.n_cores()].push(root);
+    }
+
+    let mut root_rng = Pcg32::seeded(opts.seed);
+    let online = crate::platform::detect::online_cpus();
+    std::thread::scope(|s| {
+        for core in 0..topo.n_cores() {
+            let rng = root_rng.split(core as u64);
+            let shared = &shared;
+            let pin = opts.pin_threads;
+            s.spawn(move || {
+                if pin {
+                    pin_to_cpu(core % online);
+                }
+                worker_loop(shared, core, rng);
+            });
+        }
+    });
+
+    assert_eq!(shared.completed.load(Ordering::Acquire), dag.len());
+    let makespan = shared.now();
+    let mut records = shared.trace.snapshot();
+    records.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
+    RunResult {
+        policy: policy.name().to_string(),
+        platform: topo.name.clone(),
+        makespan,
+        records,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+    use crate::coordinator::dag::paper_figure1_dag;
+    use crate::coordinator::scheduler::{HomogeneousWs, PerformanceBased};
+    use crate::coordinator::tao::payload_fn;
+    use crate::platform::KernelClass;
+    use std::sync::atomic::AtomicUsize as Counter;
+
+    fn counting_dag(n: usize, chain: bool) -> (TaoDag, Arc<Counter>) {
+        let hits = Arc::new(Counter::new(0));
+        let mut d = TaoDag::new();
+        let ids: Vec<_> = (0..n)
+            .map(|_| {
+                let h = hits.clone();
+                d.add_task_payload(
+                    KernelClass::MatMul,
+                    0,
+                    1.0,
+                    Some(payload_fn(KernelClass::MatMul, move |_r, _w| {
+                        h.fetch_add(1, Ordering::SeqCst);
+                    })),
+                )
+            })
+            .collect();
+        if chain {
+            for w in ids.windows(2) {
+                d.add_edge(w[0], w[1]);
+            }
+        }
+        d.finalize().unwrap();
+        (d, hits)
+    }
+
+    #[test]
+    fn executes_every_task_exactly_width_times() {
+        let topo = Topology::homogeneous(4);
+        let (dag, hits) = counting_dag(40, false);
+        let res = run_dag_real(&dag, &topo, &HomogeneousWs, None, &Default::default());
+        assert_eq!(res.n_tasks(), 40);
+        // HomogeneousWs is width-1: exactly one execute() per task.
+        assert_eq!(hits.load(Ordering::SeqCst), 40);
+    }
+
+    #[test]
+    fn chain_respects_order() {
+        let topo = Topology::homogeneous(2);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut d = TaoDag::new();
+        let ids: Vec<_> = (0..10)
+            .map(|i| {
+                let o = order.clone();
+                d.add_task_payload(
+                    KernelClass::MatMul,
+                    0,
+                    1.0,
+                    // Record once per TAO (rank 0), not once per member —
+                    // the scheduler may legally choose width > 1.
+                    Some(payload_fn(KernelClass::MatMul, move |r, _w| {
+                        if r == 0 {
+                            o.lock().unwrap().push(i);
+                        }
+                    })),
+                )
+            })
+            .collect();
+        for w in ids.windows(2) {
+            d.add_edge(w[0], w[1]);
+        }
+        d.finalize().unwrap();
+        run_dag_real(&d, &topo, &PerformanceBased, None, &Default::default());
+        let got = order.lock().unwrap().clone();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn figure1_runs_with_performance_policy() {
+        let topo =
+            Topology::from_clusters("tx2", &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)]);
+        let (dag, _) = paper_figure1_dag();
+        let res = run_dag_real(&dag, &topo, &PerformanceBased, None, &Default::default());
+        assert_eq!(res.n_tasks(), 7);
+        // Initial tasks are non-critical; at least one woken task on the
+        // critical path must be tagged critical.
+        assert!(res.records.iter().any(|r| r.critical));
+        // Every partition recorded must be valid.
+        for r in &res.records {
+            assert!(topo.is_valid_partition(r.partition));
+        }
+    }
+
+    #[test]
+    fn wide_tao_executes_all_ranks() {
+        let topo = Topology::homogeneous(4);
+        let ranks_seen = Arc::new(Mutex::new(Vec::new()));
+        let mut d = TaoDag::new();
+        // Force width 4 by pre-training the PTT: leader 0 width 4 is best.
+        let rs = ranks_seen.clone();
+        d.add_task_payload(
+            KernelClass::MatMul,
+            0,
+            1.0,
+            Some(payload_fn(KernelClass::MatMul, move |r, w| {
+                rs.lock().unwrap().push((r, w));
+            })),
+        );
+        d.finalize().unwrap();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        for _ in 0..50 {
+            ptt.update(0, 0, 4, 0.01); // width 4 wins even ×4
+        }
+        // Mark critical? Roots are non-critical; local search from any core
+        // in the single cluster can still pick width 4.
+        let res = run_dag_real(&dag_with(d), &topo, &PerformanceBased, Some(&ptt), &Default::default());
+        assert_eq!(res.records[0].partition.width, 4);
+        let mut seen = ranks_seen.lock().unwrap().clone();
+        seen.sort();
+        assert_eq!(seen, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
+    }
+
+    fn dag_with(d: TaoDag) -> TaoDag {
+        d
+    }
+
+    #[test]
+    fn ptt_gets_trained_by_execution() {
+        let topo = Topology::homogeneous(2);
+        let (dag, _) = counting_dag(30, false);
+        let ptt = Ptt::new(1, &topo);
+        run_dag_real(&dag, &topo, &PerformanceBased, Some(&ptt), &Default::default());
+        // After 30 width-free placements at least one entry is trained.
+        assert!(ptt.untrained_fraction(&topo) < 1.0);
+    }
+
+    #[test]
+    fn single_core_topology_works() {
+        let topo = Topology::homogeneous(1);
+        let (dag, hits) = counting_dag(10, true);
+        let res = run_dag_real(&dag, &topo, &HomogeneousWs, None, &Default::default());
+        assert_eq!(res.n_tasks(), 10);
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+        assert!(res.makespan > 0.0);
+    }
+}

@@ -1,0 +1,366 @@
+//! Seeded random TAO-DAG generation (§4.2.2).
+//!
+//! The generator follows the paper's three-step construction, itself
+//! modelled on Topcuoglu et al.'s DAG synthesiser:
+//!
+//! 1. **Shape** — nodes are arranged in levels whose width is drawn around
+//!    the requested average (this fixes the critical-path length and hence
+//!    the *average parallelism* = tasks / critical-path length); a spine
+//!    of one edge per level keeps the longest path equal to the level
+//!    count, and the *edge rate* controls how many extra edges each node
+//!    receives from the previous level.
+//! 2. **Memory** — a per-kernel vector of data locations is maintained; a
+//!    node reuses a predecessor's location when one of the same kernel is
+//!    found, otherwise it claims a fresh slot. This maximises data reuse
+//!    between same-kernel tasks "while guaranteeing isolated data
+//!    execution when tasks run in parallel".
+//! 3. **Spawn** — tasks and edges are emitted in XiTAO form
+//!    ([`crate::coordinator::TaoDag`]), with real kernel payloads attached
+//!    on request.
+//!
+//! A fixed seed recreates the identical DAG, which is how the paper
+//! compares schedulers on the same workload.
+
+use crate::coordinator::dag::TaoDag;
+use crate::coordinator::tao::TaoPayload;
+use crate::kernels::{CopyTao, KernelSizes, MatMulTao, SortTao};
+use crate::platform::KernelClass;
+use crate::util::Pcg32;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Generator parameters (the paper's §4.2.2 configuration set).
+#[derive(Debug, Clone)]
+pub struct DagParams {
+    /// Number of tasks per kernel class ("which kernel should be most
+    /// prominent in the DAG").
+    pub tasks_per_kernel: Vec<(KernelClass, usize)>,
+    /// Average level width — the target degree of parallelism.
+    pub avg_width: f64,
+    /// Average number of incoming edges per non-root task beyond the spine.
+    pub edge_rate: f64,
+    /// Reproducibility seed.
+    pub seed: u64,
+    /// Attach real kernel payloads of these sizes (`None` = sim-only DAG).
+    pub payload_sizes: Option<KernelSizes>,
+}
+
+impl DagParams {
+    /// Equal mixture of the paper's three kernels.
+    pub fn mix(total: usize, parallelism: f64, seed: u64) -> DagParams {
+        let per = total / 3;
+        DagParams {
+            tasks_per_kernel: vec![
+                (KernelClass::MatMul, total - 2 * per),
+                (KernelClass::Sort, per),
+                (KernelClass::Copy, per),
+            ],
+            avg_width: parallelism,
+            edge_rate: 1.5,
+            seed,
+            payload_sizes: None,
+        }
+    }
+
+    /// Single-kernel DAG (Fig 6/7 sweeps).
+    pub fn single(class: KernelClass, total: usize, parallelism: f64, seed: u64) -> DagParams {
+        DagParams {
+            tasks_per_kernel: vec![(class, total)],
+            avg_width: parallelism,
+            edge_rate: 1.5,
+            seed,
+            payload_sizes: None,
+        }
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.tasks_per_kernel.iter().map(|&(_, n)| n).sum()
+    }
+
+    pub fn with_payloads(mut self, sizes: KernelSizes) -> DagParams {
+        self.payload_sizes = Some(sizes);
+        self
+    }
+}
+
+/// Statistics of a generated DAG (exposed for tests and bench logs).
+#[derive(Debug, Clone)]
+pub struct DagStats {
+    pub tasks: usize,
+    pub levels: usize,
+    pub edges: usize,
+    pub parallelism: f64,
+    /// Distinct data locations allocated per class (memory-reuse step).
+    pub data_locations: HashMap<&'static str, usize>,
+}
+
+/// Generate a random TAO-DAG. Returns the finalized DAG and its stats.
+pub fn generate(params: &DagParams) -> (TaoDag, DagStats) {
+    let total = params.total_tasks();
+    assert!(total > 0, "no tasks requested");
+    assert!(params.avg_width >= 1.0, "avg_width must be ≥ 1");
+    let mut rng = Pcg32::seeded(params.seed);
+
+    // ---- step 1: shape ----------------------------------------------------
+    // Draw level widths around avg_width until all tasks are placed. The
+    // spine edge per level makes the critical path equal the level count,
+    // so average parallelism ≈ avg_width by construction.
+    let mut level_sizes: Vec<usize> = Vec::new();
+    let mut placed = 0usize;
+    while placed < total {
+        let jitter = if params.avg_width > 1.0 {
+            // ±50% uniform jitter, at least 1.
+            let lo = (params.avg_width * 0.5).max(1.0);
+            let hi = params.avg_width * 1.5;
+            rng.gen_f64_range(lo, hi + 1.0).floor() as usize
+        } else {
+            1
+        };
+        let take = jitter.max(1).min(total - placed);
+        level_sizes.push(take);
+        placed += take;
+    }
+
+    // Node ids assigned level-major.
+    let mut levels: Vec<Vec<usize>> = Vec::with_capacity(level_sizes.len());
+    let mut next_id = 0usize;
+    for &sz in &level_sizes {
+        levels.push((0..sz).map(|i| next_id + i).collect());
+        next_id += sz;
+    }
+
+    // Kernel classes per node: the requested counts, shuffled.
+    let mut classes: Vec<KernelClass> = params
+        .tasks_per_kernel
+        .iter()
+        .flat_map(|&(c, n)| std::iter::repeat(c).take(n))
+        .collect();
+    rng.shuffle(&mut classes);
+
+    // Edges: spine + random fan-in from the previous level.
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for li in 1..levels.len() {
+        let prev = &levels[li - 1];
+        let cur = &levels[li];
+        // Spine: first node links to a random node of the previous level.
+        edges.push((*rng.choose(prev), cur[0]));
+        for &node in cur.iter() {
+            // Extra predecessors per edge_rate (Poisson-ish via repeated
+            // Bernoulli draws, capped by the previous level size).
+            let mut extra = 0usize;
+            let mut p = params.edge_rate;
+            while p > 0.0 && extra < prev.len() {
+                if rng.gen_f64() < p.min(1.0) {
+                    extra += 1;
+                }
+                p -= 1.0;
+            }
+            for _ in 0..extra {
+                edges.push((*rng.choose(prev), node));
+            }
+        }
+    }
+
+    // ---- step 2: memory / data reuse --------------------------------------
+    // Per class, a vector of location slots; node claims a predecessor's
+    // slot of the same class when free, else a new one (paper's algorithm).
+    let mut preds_of: Vec<Vec<usize>> = vec![Vec::new(); total];
+    for &(a, b) in &edges {
+        preds_of[b].push(a);
+    }
+    let mut loc_of: Vec<usize> = vec![usize::MAX; total];
+    let mut next_loc: HashMap<usize, usize> = HashMap::new(); // class idx → count
+    // `owner[class][loc]` = node currently owning the slot (replaced on reuse).
+    let mut owner: HashMap<(usize, usize), usize> = HashMap::new();
+    for node in 0..total {
+        let ci = classes[node].index();
+        let mut claimed = None;
+        for &p in &preds_of[node] {
+            if classes[p].index() == ci {
+                let loc = loc_of[p];
+                if owner.get(&(ci, loc)) == Some(&p) {
+                    claimed = Some(loc);
+                    break;
+                }
+            }
+        }
+        let loc = claimed.unwrap_or_else(|| {
+            let c = next_loc.entry(ci).or_insert(0);
+            let l = *c;
+            *c += 1;
+            l
+        });
+        loc_of[node] = loc;
+        owner.insert((ci, loc), node);
+    }
+
+    // ---- step 3: spawn -----------------------------------------------------
+    // Shared input arenas per (class, location) when payloads are requested.
+    let mut dag = TaoDag::new();
+    let mut arenas: HashMap<(usize, usize), ArenaEntry> = HashMap::new();
+    for node in 0..total {
+        let class = classes[node];
+        let payload: Option<Arc<dyn TaoPayload>> = params.payload_sizes.map(|sizes| {
+            let key = (class.index(), loc_of[node]);
+            let arena = arenas
+                .entry(key)
+                .or_insert_with(|| ArenaEntry::new(class, sizes, params.seed ^ node as u64));
+            arena.instantiate(class, sizes)
+        });
+        let id = dag.add_task_payload(class, class.index(), 1.0, payload);
+        debug_assert_eq!(id, node);
+    }
+    for &(a, b) in &edges {
+        if a != b {
+            dag.add_edge(a, b);
+        }
+    }
+    dag.finalize().expect("layered construction is acyclic");
+
+    let stats = DagStats {
+        tasks: total,
+        levels: levels.len(),
+        edges: dag.nodes.iter().map(|n| n.succs.len()).sum(),
+        parallelism: dag.parallelism(),
+        data_locations: params
+            .tasks_per_kernel
+            .iter()
+            .map(|&(c, _)| (c.name(), next_loc.get(&c.index()).copied().unwrap_or(0)))
+            .collect(),
+    };
+    (dag, stats)
+}
+
+/// Shared input buffers for one (class, data-location) pair.
+enum ArenaEntry {
+    MatMul { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
+    Copy { src: Arc<Vec<u8>> },
+    Fresh { seed: u64 },
+}
+
+impl ArenaEntry {
+    fn new(class: KernelClass, sizes: KernelSizes, seed: u64) -> ArenaEntry {
+        let mut rng = Pcg32::seeded(seed);
+        match class {
+            KernelClass::MatMul | KernelClass::Gemm => {
+                let n = sizes.matmul_n;
+                ArenaEntry::MatMul {
+                    a: Arc::new((0..n * n).map(|_| rng.gen_f64() as f32).collect()),
+                    b: Arc::new((0..n * n).map(|_| rng.gen_f64() as f32).collect()),
+                }
+            }
+            KernelClass::Copy => ArenaEntry::Copy {
+                src: Arc::new((0..sizes.copy_bytes).map(|_| rng.next_u32() as u8).collect()),
+            },
+            // Sort mutates its input in place, so each task gets fresh data
+            // (reuse would re-sort already sorted data — trivial work).
+            KernelClass::Sort => ArenaEntry::Fresh { seed },
+        }
+    }
+
+    fn instantiate(&self, class: KernelClass, sizes: KernelSizes) -> Arc<dyn TaoPayload> {
+        match self {
+            ArenaEntry::MatMul { a, b } => {
+                Arc::new(MatMulTao::with_inputs(sizes.matmul_n, a.clone(), b.clone()))
+            }
+            ArenaEntry::Copy { src } => Arc::new(CopyTao::with_source(src.clone())),
+            ArenaEntry::Fresh { seed } => {
+                debug_assert_eq!(class, KernelClass::Sort);
+                Arc::new(SortTao::new(sizes.sort_len, *seed))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_task_counts() {
+        let (dag, stats) = generate(&DagParams::mix(300, 4.0, 1));
+        assert_eq!(dag.len(), 300);
+        assert_eq!(stats.tasks, 300);
+        let matmuls =
+            dag.nodes.iter().filter(|n| n.class == KernelClass::MatMul).count();
+        assert_eq!(matmuls, 100);
+    }
+
+    #[test]
+    fn parallelism_close_to_target() {
+        for target in [1.0, 2.0, 4.0, 8.0, 16.0] {
+            let (_, stats) = generate(&DagParams::mix(1000, target, 7));
+            let ratio = stats.parallelism / target;
+            assert!(
+                (0.6..=1.6).contains(&ratio),
+                "target {target} got {} (ratio {ratio})",
+                stats.parallelism
+            );
+        }
+    }
+
+    #[test]
+    fn seed_reproducibility() {
+        let (d1, s1) = generate(&DagParams::mix(200, 4.0, 99));
+        let (d2, s2) = generate(&DagParams::mix(200, 4.0, 99));
+        assert_eq!(s1.edges, s2.edges);
+        assert_eq!(s1.levels, s2.levels);
+        for (a, b) in d1.nodes.iter().zip(&d2.nodes) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.succs, b.succs);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (_, s1) = generate(&DagParams::mix(200, 4.0, 1));
+        let (_, s2) = generate(&DagParams::mix(200, 4.0, 2));
+        assert_ne!(s1.edges, s2.edges);
+    }
+
+    #[test]
+    fn acyclic_and_connected_spine() {
+        let (dag, stats) = generate(&DagParams::mix(500, 8.0, 3));
+        assert!(dag.topo_order().is_ok());
+        // Critical path == number of levels (spine construction).
+        assert_eq!(dag.critical_path_len() as usize, stats.levels);
+    }
+
+    #[test]
+    fn chain_when_parallelism_one() {
+        let (dag, _) = generate(&DagParams::single(KernelClass::Sort, 50, 1.0, 5));
+        assert_eq!(dag.critical_path_len(), 50);
+        assert_eq!(dag.parallelism(), 1.0);
+    }
+
+    #[test]
+    fn data_reuse_allocates_fewer_locations_than_tasks() {
+        let (_, stats) = generate(&DagParams::mix(600, 2.0, 11));
+        // Low-parallelism DAG chains same-kernel tasks often; reuse must
+        // keep allocations well below the task count.
+        let total_locs: usize = stats.data_locations.values().sum();
+        assert!(total_locs < 600, "locations {total_locs}");
+        assert!(total_locs > 0);
+    }
+
+    #[test]
+    fn payloads_attached_and_runnable() {
+        let params = DagParams::mix(30, 4.0, 13).with_payloads(KernelSizes::small());
+        let (dag, _) = generate(&params);
+        for n in &dag.nodes {
+            let p = n.payload.as_ref().expect("payload attached");
+            p.execute(0, 1);
+        }
+    }
+
+    #[test]
+    fn edge_rate_increases_edges() {
+        let mut lo = DagParams::mix(400, 8.0, 21);
+        lo.edge_rate = 0.2;
+        let mut hi = lo.clone();
+        hi.edge_rate = 3.0;
+        let (_, s_lo) = generate(&lo);
+        let (_, s_hi) = generate(&hi);
+        assert!(s_hi.edges > s_lo.edges, "{} vs {}", s_hi.edges, s_lo.edges);
+    }
+}

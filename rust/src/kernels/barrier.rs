@@ -1,0 +1,91 @@
+//! A width-agnostic spin barrier for TAO-internal phase synchronisation.
+//!
+//! TAO payloads learn their width only at execution time (the scheduler
+//! picks it), so `std::sync::Barrier` — whose count is fixed at
+//! construction — does not fit. This barrier is armed by the first arriver
+//! of each TAO execution and supports multiple phases (generations).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[derive(Debug, Default)]
+pub struct SpinBarrier {
+    /// Arrivals in the current generation.
+    arrived: AtomicUsize,
+    /// Generation counter; bumping it releases the waiters.
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    pub fn new() -> SpinBarrier {
+        SpinBarrier::default()
+    }
+
+    /// Wait until `width` participants have called `wait(width)` for the
+    /// current generation. The last arriver resets the count and advances
+    /// the generation. Spin-waits with `yield_now` (phases are short and
+    /// the host may have fewer cores than workers).
+    pub fn wait(&self, width: usize) {
+        debug_assert!(width >= 1);
+        if width == 1 {
+            return;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        let n = self.arrived.fetch_add(1, Ordering::AcqRel) + 1;
+        if n == width {
+            self.arrived.store(0, Ordering::Relaxed);
+            self.generation.store(gen + 1, Ordering::Release);
+        } else {
+            while self.generation.load(Ordering::Acquire) == gen {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn width_one_is_noop() {
+        let b = SpinBarrier::new();
+        b.wait(1);
+        b.wait(1);
+    }
+
+    #[test]
+    fn synchronises_phases() {
+        let b = Arc::new(SpinBarrier::new());
+        let phase_marks = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let width = 4;
+        let handles: Vec<_> = (0..width)
+            .map(|r| {
+                let b = b.clone();
+                let m = phase_marks.clone();
+                std::thread::spawn(move || {
+                    m.lock().unwrap().push((0, r));
+                    b.wait(width);
+                    m.lock().unwrap().push((1, r));
+                    b.wait(width);
+                    m.lock().unwrap().push((2, r));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let marks = phase_marks.lock().unwrap();
+        // Every phase-0 mark precedes every phase-1 mark, etc.
+        let pos = |phase: usize| -> Vec<usize> {
+            marks
+                .iter()
+                .enumerate()
+                .filter(|(_, &(p, _))| p == phase)
+                .map(|(i, _)| i)
+                .collect()
+        };
+        assert!(pos(0).iter().max() < pos(1).iter().min());
+        assert!(pos(1).iter().max() < pos(2).iter().min());
+    }
+}

@@ -1,0 +1,91 @@
+//! The streaming kernel (§4.2.1): a large memory copy. "Each core copies a
+//! subset of the data" — rank-sliced, continuously touching main memory
+//! (the default 16.8 MB source plus destination = 33.6 MB footprint, far
+//! beyond any L2).
+
+use super::shared_buf::SharedBuf;
+use crate::coordinator::tao::TaoPayload;
+use crate::platform::KernelClass;
+use std::sync::Arc;
+
+/// Default byte count from the paper: 16.8 MB.
+pub const DEFAULT_BYTES: usize = 16_800_000;
+
+pub struct CopyTao {
+    src: Arc<Vec<u8>>,
+    dst: SharedBuf<u8>,
+}
+
+impl CopyTao {
+    pub fn new(bytes: usize, seed: u64) -> CopyTao {
+        let mut rng = crate::util::Pcg32::seeded(seed);
+        let src: Vec<u8> = (0..bytes).map(|_| rng.next_u32() as u8).collect();
+        CopyTao { src: Arc::new(src), dst: SharedBuf::zeroed(bytes) }
+    }
+
+    /// Reuse a source buffer allocated by the DAG generator.
+    pub fn with_source(src: Arc<Vec<u8>>) -> CopyTao {
+        let n = src.len();
+        CopyTao { src, dst: SharedBuf::zeroed(n) }
+    }
+
+    pub fn source(&self) -> &Arc<Vec<u8>> {
+        &self.src
+    }
+
+    pub fn output(&self) -> Vec<u8> {
+        self.dst.snapshot()
+    }
+}
+
+impl TaoPayload for CopyTao {
+    fn class(&self) -> KernelClass {
+        KernelClass::Copy
+    }
+
+    fn execute(&self, rank: usize, width: usize) {
+        let n = self.src.len();
+        let lo = rank * n / width;
+        let hi = (rank + 1) * n / width;
+        // SAFETY: rank slices are disjoint.
+        let dst = unsafe { self.dst.slice_mut(lo, hi) };
+        dst.copy_from_slice(&self.src[lo..hi]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copies_width_1() {
+        let t = CopyTao::new(10_000, 7);
+        t.execute(0, 1);
+        assert_eq!(t.output(), **t.source());
+    }
+
+    #[test]
+    fn copies_width_4_threads() {
+        let t = Arc::new(CopyTao::new(100_003, 8)); // odd size
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let t = t.clone();
+                std::thread::spawn(move || t.execute(r, 4))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.output(), **t.source());
+    }
+
+    #[test]
+    fn shared_source_not_cloned() {
+        let src = Arc::new(vec![1u8; 64]);
+        let t1 = CopyTao::with_source(src.clone());
+        let t2 = CopyTao::with_source(src.clone());
+        t1.execute(0, 1);
+        t2.execute(0, 1);
+        assert_eq!(Arc::strong_count(&src), 3);
+    }
+}

@@ -1,0 +1,152 @@
+//! The compute-intensive kernel (§4.2.1): a 64×64 single-precision matrix
+//! multiplication. Parallelised exactly as the paper describes — each
+//! participating core writes a disjoint block of output rows ("writing of
+//! output data is done to separate cache lines for each thread while still
+//! sharing the input data").
+
+use super::shared_buf::SharedBuf;
+use crate::coordinator::tao::TaoPayload;
+use crate::platform::KernelClass;
+use std::sync::Arc;
+
+/// Default matrix dimension from the paper.
+pub const DEFAULT_N: usize = 64;
+
+pub struct MatMulTao {
+    n: usize,
+    a: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
+    c: SharedBuf<f32>,
+}
+
+impl MatMulTao {
+    /// Create with deterministic pseudo-random inputs derived from `seed`.
+    pub fn new(n: usize, seed: u64) -> MatMulTao {
+        let mut rng = crate::util::Pcg32::seeded(seed);
+        let a: Vec<f32> = (0..n * n).map(|_| rng.gen_f64() as f32).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.gen_f64() as f32).collect();
+        MatMulTao { n, a: Arc::new(a), b: Arc::new(b), c: SharedBuf::zeroed(n * n) }
+    }
+
+    /// Shared-input constructor (the random-DAG generator reuses input
+    /// buffers across tasks to model data reuse, §4.2.2).
+    pub fn with_inputs(n: usize, a: Arc<Vec<f32>>, b: Arc<Vec<f32>>) -> MatMulTao {
+        assert_eq!(a.len(), n * n);
+        assert_eq!(b.len(), n * n);
+        MatMulTao { n, a, b, c: SharedBuf::zeroed(n * n) }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Copy of the output (test oracle access).
+    pub fn output(&self) -> Vec<f32> {
+        self.c.snapshot()
+    }
+
+    /// Reference result computed serially (oracle).
+    pub fn reference(&self) -> Vec<f32> {
+        let n = self.n;
+        let mut c = vec![0f32; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.a[i * n + k];
+                for j in 0..n {
+                    c[i * n + j] += aik * self.b[k * n + j];
+                }
+            }
+        }
+        c
+    }
+}
+
+impl TaoPayload for MatMulTao {
+    fn class(&self) -> KernelClass {
+        KernelClass::MatMul
+    }
+
+    fn execute(&self, rank: usize, width: usize) {
+        let n = self.n;
+        // Row-block decomposition: rank r owns rows [r·n/w, (r+1)·n/w).
+        let lo = rank * n / width;
+        let hi = (rank + 1) * n / width;
+        // SAFETY: row blocks are disjoint across ranks.
+        let c = unsafe { self.c.slice_mut(lo * n, hi * n) };
+        for i in lo..hi {
+            let crow = &mut c[(i - lo) * n..(i - lo + 1) * n];
+            crow.fill(0.0);
+            for k in 0..n {
+                let aik = self.a[i * n + k];
+                let brow = &self.b[k * n..(k + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn width1_matches_reference() {
+        let t = MatMulTao::new(16, 1);
+        t.execute(0, 1);
+        assert_close(&t.output(), &t.reference());
+    }
+
+    #[test]
+    fn width4_matches_reference() {
+        let t = MatMulTao::new(DEFAULT_N, 2);
+        for r in 0..4 {
+            t.execute(r, 4);
+        }
+        assert_close(&t.output(), &t.reference());
+    }
+
+    #[test]
+    fn uneven_width_covers_all_rows() {
+        // 16 rows across width 3: blocks 0..5, 5..10, 10..16.
+        let t = MatMulTao::new(16, 3);
+        for r in 0..3 {
+            t.execute(r, 3);
+        }
+        assert_close(&t.output(), &t.reference());
+    }
+
+    #[test]
+    fn concurrent_ranks_are_race_free() {
+        let t = Arc::new(MatMulTao::new(DEFAULT_N, 4));
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let t = t.clone();
+                std::thread::spawn(move || t.execute(r, 4))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_close(&t.output(), &t.reference());
+    }
+
+    #[test]
+    fn shared_inputs_reused() {
+        let a = Arc::new(vec![1f32; 8 * 8]);
+        let b = Arc::new(vec![2f32; 8 * 8]);
+        let t = MatMulTao::with_inputs(8, a.clone(), b);
+        t.execute(0, 1);
+        // Every entry is sum of 8 × (1×2) = 16.
+        assert!(t.output().iter().all(|&v| (v - 16.0).abs() < 1e-5));
+        assert_eq!(Arc::strong_count(&a), 2);
+    }
+}

@@ -1,0 +1,86 @@
+//! The paper's three benchmark kernels (§4.2.1), implemented as real,
+//! width-elastic [`TaoPayload`]s:
+//!
+//! | kernel   | character          | default working set |
+//! |----------|--------------------|---------------------|
+//! | [`matmul`] | compute-intensive  | 64×64 f32 (48 KB)  |
+//! | [`sort`]   | cache-intensive    | 262 KB (+262 KB scratch) |
+//! | [`copy`]   | memory streaming   | 16.8 MB (+16.8 MB dst)   |
+//!
+//! All three accept any width the scheduler chooses and decompose
+//! internally by rank. [`shared_buf`] provides the disjoint-write output
+//! abstraction; [`barrier`] the TAO-internal phase barrier used by sort.
+//!
+//! [`TaoPayload`]: crate::coordinator::tao::TaoPayload
+
+pub mod barrier;
+pub mod copy;
+pub mod matmul;
+pub mod shared_buf;
+pub mod sort;
+
+pub use copy::CopyTao;
+pub use matmul::MatMulTao;
+pub use sort::SortTao;
+
+use crate::coordinator::tao::TaoPayload;
+use crate::platform::KernelClass;
+use std::sync::Arc;
+
+/// Scaled-down kernel sizes for fast functional tests/examples on the
+/// single-core build host (full paper sizes remain available through the
+/// type constructors).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelSizes {
+    pub matmul_n: usize,
+    pub sort_len: usize,
+    pub copy_bytes: usize,
+}
+
+impl KernelSizes {
+    /// The paper's sizes (§4.2.1).
+    pub fn paper() -> KernelSizes {
+        KernelSizes {
+            matmul_n: matmul::DEFAULT_N,
+            sort_len: sort::DEFAULT_LEN,
+            copy_bytes: copy::DEFAULT_BYTES,
+        }
+    }
+
+    /// Small sizes for CI-speed runs.
+    pub fn small() -> KernelSizes {
+        KernelSizes { matmul_n: 32, sort_len: 4096, copy_bytes: 1 << 16 }
+    }
+
+    /// Instantiate a payload of `class` with these sizes.
+    pub fn instantiate(&self, class: KernelClass, seed: u64) -> Arc<dyn TaoPayload> {
+        match class {
+            KernelClass::MatMul => Arc::new(MatMulTao::new(self.matmul_n, seed)),
+            KernelClass::Sort => Arc::new(SortTao::new(self.sort_len, seed)),
+            KernelClass::Copy => Arc::new(CopyTao::new(self.copy_bytes, seed)),
+            KernelClass::Gemm => Arc::new(MatMulTao::new(self.matmul_n * 2, seed)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instantiate_all_classes() {
+        let sizes = KernelSizes::small();
+        for class in KernelClass::ALL {
+            let p = sizes.instantiate(class, 1);
+            p.execute(0, 1);
+        }
+    }
+
+    #[test]
+    fn paper_sizes_match_section_421() {
+        let s = KernelSizes::paper();
+        assert_eq!(s.matmul_n, 64);
+        assert_eq!(s.sort_len * 4, 262144);
+        assert_eq!(s.copy_bytes, 16_800_000);
+    }
+}

@@ -1,0 +1,88 @@
+//! A shared output buffer written by cooperating TAO ranks.
+//!
+//! TAO payloads receive `&self` from every participating worker thread but
+//! must write disjoint regions of a common output. `SharedBuf` provides
+//! exactly that: interior-mutable storage whose safety contract is
+//! *disjointness of the requested ranges across concurrent callers* —
+//! upheld by the kernels' rank-block decompositions and exercised under
+//! threads in the kernel tests.
+
+use std::cell::UnsafeCell;
+
+pub struct SharedBuf<T> {
+    data: UnsafeCell<Vec<T>>,
+}
+
+// SAFETY: concurrent access is restricted to disjoint ranges by callers of
+// `slice_mut` (see module docs); reads happen only after all writers joined.
+unsafe impl<T: Send> Sync for SharedBuf<T> {}
+unsafe impl<T: Send> Send for SharedBuf<T> {}
+
+impl<T: Copy + Default> SharedBuf<T> {
+    pub fn zeroed(len: usize) -> SharedBuf<T> {
+        SharedBuf { data: UnsafeCell::new(vec![T::default(); len]) }
+    }
+
+    pub fn from_vec(v: Vec<T>) -> SharedBuf<T> {
+        SharedBuf { data: UnsafeCell::new(v) }
+    }
+
+    pub fn len(&self) -> usize {
+        unsafe { (*self.data.get()).len() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mutable view of `[lo, hi)`.
+    ///
+    /// # Safety
+    /// Concurrent callers must request pairwise-disjoint ranges, and no
+    /// reader may overlap an active writer's range.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len());
+        let base = (*self.data.get()).as_mut_ptr();
+        std::slice::from_raw_parts_mut(base.add(lo), hi - lo)
+    }
+
+    /// Snapshot the whole buffer (call after writers joined).
+    pub fn snapshot(&self) -> Vec<T> {
+        unsafe { (*self.data.get()).clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let buf: Arc<SharedBuf<u32>> = Arc::new(SharedBuf::zeroed(400));
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let b = buf.clone();
+                std::thread::spawn(move || {
+                    let s = unsafe { b.slice_mut(r * 100, (r + 1) * 100) };
+                    for (i, v) in s.iter_mut().enumerate() {
+                        *v = (r * 100 + i) as u32;
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let out = buf.snapshot();
+        assert_eq!(out, (0..400).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let b = SharedBuf::from_vec(vec![7u8; 3]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.snapshot(), vec![7, 7, 7]);
+    }
+}

@@ -1,0 +1,34 @@
+//! # xitao — PTT-based adaptive performance-oriented scheduling
+//!
+//! Reproduction of *"An Adaptive Performance-oriented Scheduler for Static
+//! and Dynamic Heterogeneity"* (Chen, Abduljabbar, Soomro, Pericàs, 2019):
+//! a XiTAO-style runtime for mixed-mode parallelism extended with a
+//! **Performance Trace Table (PTT)** — a lightweight online model of
+//! per-(core, resource-width) task latency that drives criticality-aware,
+//! interference-free scheduling with no static platform knowledge.
+//!
+//! ## Layout
+//! - [`platform`] — topology, heterogeneity + contention model, episodes.
+//! - [`coordinator`] — the paper's contribution: TAOs, TAO-DAGs,
+//!   criticality, the PTT, scheduling policies, and the real-thread runtime.
+//! - [`sim`] — discrete-event execution of the same coordinator logic on
+//!   modelled platforms (TX2, Haswell) in virtual time.
+//! - [`kernels`] — the paper's three benchmark kernels (matmul/sort/copy).
+//! - [`dag_gen`] — seeded random TAO-DAG generator (§4.2.2).
+//! - [`vgg`] — VGG-16 as a TAO-DAG of GEMM blocks (§4.3).
+//! - [`runtime`] — PJRT engine loading the JAX/Pallas AOT artifacts.
+//! - [`bench`] — regenerators for every figure in the paper's evaluation.
+//! - [`cli`] / [`config`] — argument parsing and JSON run configs.
+//! - [`util`] — RNG, stats, JSON, tables, property-testing.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dag_gen;
+pub mod kernels;
+pub mod platform;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod vgg;

@@ -1,0 +1,320 @@
+//! `repro` — the CLI driver for the XiTAO/PTT reproduction.
+//!
+//! Figure regeneration:
+//!   repro fig5|fig6|fig7|fig8|fig9|fig10 [--quick] [--seeds N]
+//!   repro ablation-ptt | ablation-baselines | all
+//!
+//! Single experiments:
+//!   repro run-dag [--config f.json] [--platform tx2] [--policy performance]
+//!                 [--tasks 1000] [--parallelism 4] [--kernel mix] [--seed 42]
+//!                 [--real]            # real threads instead of the simulator
+//!   repro vgg16 [--threads 8] [--repeats 3] [--block-len 64]
+//!   repro vgg16-infer [--mode pipeline|whole|dag] [--hw 64] [--block-len 64]
+//!   repro ptt-dump [--platform tx2] [--tasks 500] ...
+//!
+//! The simulator reproduces the paper's platforms (see DESIGN.md); `--real`
+//! and `vgg16-infer` exercise the actual thread runtime and the PJRT
+//! artifacts end to end.
+
+use xitao::bench::{self, BenchOpts};
+use xitao::cli::Args;
+use xitao::config::RunConfig;
+use xitao::coordinator::{RealEngineOpts, run_dag_real};
+use xitao::coordinator::ptt::Ptt;
+use xitao::coordinator::scheduler::policy_by_name;
+use xitao::dag_gen::{DagParams, generate};
+use xitao::kernels::KernelSizes;
+use xitao::platform::Platform;
+use xitao::runtime::{PjrtService, VggWeights, build_real_dag, pipeline_infer, synthetic_image};
+use xitao::sim::{SimOpts, run_dag_sim};
+use xitao::vgg::{VggConfig, build_dag as build_vgg_dag};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    let code = match cmd.as_str() {
+        "fig5" | "fig6" | "fig7" | "fig8" | "fig9" | "fig10" | "ablation-ptt"
+        | "ablation-baselines" | "ablation-energy" | "all" => cmd_figures(&cmd, &args),
+        "run-dag" => cmd_run_dag(&args),
+        "vgg16" => cmd_vgg16(&args),
+        "vgg16-infer" => cmd_vgg16_infer(&args),
+        "ptt-dump" => cmd_ptt_dump(&args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+repro — XiTAO + Performance Trace Table reproduction
+
+figures:    fig5 fig6 fig7 fig8 fig9 fig10 ablation-ptt ablation-baselines
+            ablation-energy all
+            options: --quick --seeds N
+single run: run-dag [--config f.json] [--platform tx2|haswell20|hom<N>]
+                    [--policy performance|homogeneous|cats|dheft]
+                    [--tasks N] [--parallelism P] [--kernel mix|matmul|sort|copy]
+                    [--seed S] [--real]
+vgg:        vgg16 [--threads N] [--repeats R] [--block-len B] [--policy ...]
+            vgg16-infer [--mode pipeline|whole|dag|validate] [--hw 64]
+diag:       ptt-dump [--platform ...] [--tasks N]
+";
+
+fn bench_opts(args: &Args) -> BenchOpts {
+    let mut opts = if args.switch("quick") { BenchOpts::quick() } else { BenchOpts::default() };
+    opts.seeds = args.get("seeds", opts.seeds);
+    opts
+}
+
+fn cmd_figures(cmd: &str, args: &Args) -> i32 {
+    let opts = bench_opts(args);
+    let run = |name: &str| {
+        let tables = match name {
+            "fig5" => bench::fig5(&opts),
+            "fig6" => bench::fig6(&opts),
+            "fig7" => bench::fig7(&opts),
+            "fig8" => bench::fig8(&opts),
+            "fig9" => bench::fig9(&opts),
+            "fig10" => bench::fig10(&opts),
+            "ablation-ptt" => bench::ablation_ptt(&opts),
+            "ablation-energy" => bench::ablation_energy(&opts),
+            "ablation-baselines" => bench::ablation_baselines(&opts),
+            _ => unreachable!(),
+        };
+        bench::emit(name, &tables);
+    };
+    if cmd == "all" {
+        for name in [
+            "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "ablation-ptt",
+            "ablation-baselines", "ablation-energy",
+        ] {
+            run(name);
+        }
+    } else {
+        run(cmd);
+    }
+    0
+}
+
+fn cmd_run_dag(args: &Args) -> i32 {
+    let cfg = match RunConfig::from_args(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let plat = cfg.make_platform().expect("validated");
+    let params = match cfg.kernel_class() {
+        Some(class) => DagParams::single(class, cfg.tasks, cfg.parallelism, cfg.seed),
+        None => DagParams::mix(cfg.tasks, cfg.parallelism, cfg.seed),
+    };
+    let policy = match policy_by_name(&cfg.policy, plat.topo.n_cores()) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy '{}'", cfg.policy);
+            return 2;
+        }
+    };
+    let result = if args.switch("real") {
+        let params = params.with_payloads(KernelSizes::small());
+        let (dag, stats) = generate(&params);
+        println!(
+            "generated DAG: {} tasks, {} levels, parallelism {:.2} (real threads)",
+            stats.tasks, stats.levels, stats.parallelism
+        );
+        run_dag_real(&dag, &plat.topo, policy.as_ref(), None, &RealEngineOpts::default())
+    } else {
+        let (dag, stats) = generate(&params);
+        println!(
+            "generated DAG: {} tasks, {} levels, parallelism {:.2} (simulated on {})",
+            stats.tasks, stats.levels, stats.parallelism, plat.topo.name
+        );
+        run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts { seed: cfg.seed, ..Default::default() })
+            .result
+    };
+    println!(
+        "policy={} makespan={:.4}s throughput={:.1} tasks/s utilisation={:.2}",
+        result.policy,
+        result.makespan,
+        result.throughput(),
+        result.utilisation(plat.topo.n_cores()),
+    );
+    println!("width histogram: {:?}", result.width_histogram());
+    let crit = result.critical_records().len();
+    println!(
+        "critical tasks: {} / {} ({:.1}%)",
+        crit,
+        result.n_tasks(),
+        100.0 * crit as f64 / result.n_tasks() as f64
+    );
+    let busy = result.core_busy_time(plat.topo.n_cores());
+    println!("per-core busy [s]: {:?}", busy.iter().map(|b| (b * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    0
+}
+
+fn cmd_vgg16(args: &Args) -> i32 {
+    let threads: usize = args.get("threads", 8);
+    let repeats: usize = args.get("repeats", 3);
+    let block_len: usize = args.get("block-len", 64);
+    let policy_name = args.get_str("policy", "performance");
+    let plat = Platform::homogeneous(threads);
+    let policy = match policy_by_name(&policy_name, threads) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy '{policy_name}'");
+            return 2;
+        }
+    };
+    let dag = build_vgg_dag(&VggConfig { input_hw: 224, block_len, repeats }, None);
+    println!("VGG-16 DAG: {} TAOs, critical path {}", dag.len(), dag.critical_path_len());
+    let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default());
+    println!(
+        "threads={} makespan={:.4}s throughput={:.1} TAO/s",
+        threads,
+        run.result.makespan,
+        run.result.throughput()
+    );
+    println!("width %: {:?}", run.result.width_percentages());
+    0
+}
+
+fn cmd_vgg16_infer(args: &Args) -> i32 {
+    let mode = args.get_str("mode", "validate");
+    let hw: usize = args.get("hw", 64);
+    let block_len: usize = args.get("block-len", 64);
+    let artifacts = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let t0 = std::time::Instant::now();
+    let svc = match PjrtService::start(&artifacts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("PJRT service failed to start: {e:#}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    println!("[{:.2}s] PJRT service up (tiles compiled)", t0.elapsed().as_secs_f64());
+    let weights = std::sync::Arc::new(VggWeights::synthetic(hw, 1));
+    let image = synthetic_image(hw, 2);
+    let h = svc.handle();
+
+    let top = |logits: &[f32]| -> (usize, f32) {
+        logits
+            .iter()
+            .enumerate()
+            .fold((0, f32::NEG_INFINITY), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc })
+    };
+
+    let run_pipeline = || {
+        let t = std::time::Instant::now();
+        let logits = pipeline_infer(&weights, &image, &h).expect("pipeline inference");
+        (logits, t.elapsed().as_secs_f64())
+    };
+    let run_whole = || {
+        h.vgg_load(weights.flat()).expect("vgg_load");
+        let t = std::time::Instant::now();
+        let logits = h.vgg_infer(&image).expect("whole-model inference");
+        (logits, t.elapsed().as_secs_f64())
+    };
+    let run_dag = || {
+        let (dag, out) = build_real_dag(weights.clone(), image.clone(), h.clone(), block_len);
+        let topo = xitao::platform::Topology::homogeneous(4);
+        let t = std::time::Instant::now();
+        let res = run_dag_real(
+            &dag,
+            &topo,
+            &xitao::coordinator::PerformanceBased,
+            None,
+            &RealEngineOpts::default(),
+        );
+        let dt = t.elapsed().as_secs_f64();
+        println!(
+            "DAG run: {} TAOs, makespan {:.2}s, width histogram {:?}",
+            res.n_tasks(),
+            res.makespan,
+            res.width_histogram()
+        );
+        (out.snapshot(), dt)
+    };
+
+    match mode.as_str() {
+        "pipeline" => {
+            let (logits, dt) = run_pipeline();
+            let (idx, val) = top(&logits);
+            println!("pipeline: {dt:.2}s, argmax={idx} ({val:.4})");
+        }
+        "whole" => {
+            let (logits, dt) = run_whole();
+            let (idx, val) = top(&logits);
+            println!("whole-model: {dt:.2}s, argmax={idx} ({val:.4})");
+        }
+        "dag" => {
+            let (logits, dt) = run_dag();
+            let (idx, val) = top(&logits);
+            println!("TAO-DAG: {dt:.2}s, argmax={idx} ({val:.4})");
+        }
+        "validate" => {
+            // The E2E cross-check: all three paths on the same weights.
+            let (a, ta) = run_pipeline();
+            let (b, tb) = run_whole();
+            let (c, tc) = run_dag();
+            let diff_ab = max_abs_diff(&a, &b);
+            let diff_ac = max_abs_diff(&a, &c);
+            println!("pipeline {ta:.2}s | whole-model {tb:.2}s | TAO-DAG {tc:.2}s");
+            println!("max |pipeline − whole|  = {diff_ab:.4}");
+            println!("max |pipeline − TAO-DAG| = {diff_ac:.4}");
+            let (idx, _) = top(&a);
+            println!("argmax (all paths) = {idx} / {} / {}", top(&b).0, top(&c).0);
+            let scale = a.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);
+            if diff_ab / scale > 1e-2 || diff_ac / scale > 1e-2 {
+                eprintln!("VALIDATION FAILED: paths disagree");
+                return 1;
+            }
+            println!("VALIDATION OK: rust pipeline ≡ JAX whole model ≡ XiTAO DAG");
+        }
+        other => {
+            eprintln!("unknown mode '{other}'");
+            return 2;
+        }
+    }
+    0
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).fold(0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+fn cmd_ptt_dump(args: &Args) -> i32 {
+    let cfg = match RunConfig::from_args(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let plat = cfg.make_platform().unwrap();
+    let params = DagParams::mix(cfg.tasks, cfg.parallelism, cfg.seed);
+    let (dag, _) = generate(&params);
+    let ptt = Ptt::new(dag.n_types(), &plat.topo);
+    run_dag_sim(
+        &dag,
+        &plat,
+        &xitao::coordinator::PerformanceBased,
+        Some(&ptt),
+        &SimOpts { seed: cfg.seed, ..Default::default() },
+    );
+    for ty in 0..dag.n_types() {
+        println!("== PTT type {ty} ==");
+        for (core, width, val) in ptt.dump(ty, &plat.topo) {
+            if val > 0.0 {
+                println!("  core {core:2} width {width:2}: {val:.6}s (cost {:.6})", val * width as f64);
+            }
+        }
+    }
+    0
+}

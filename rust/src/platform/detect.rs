@@ -1,0 +1,92 @@
+//! Best-effort topology detection for *real-thread* execution mode.
+//!
+//! The paper obtains the core-cluster/cache layout from hwloc; offline we
+//! parse `/sys/devices/system/cpu` + `/proc/cpuinfo` and fall back to a
+//! single homogeneous cluster. Only the real-mode runner uses this; the
+//! simulator always receives an explicit [`Topology`].
+
+use super::topology::Topology;
+use std::fs;
+
+/// Number of online logical CPUs (fallback 1).
+pub fn online_cpus() -> usize {
+    // sysconf is the portable truth; /sys parsing is a cross-check.
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n > 0 {
+        n as usize
+    } else {
+        1
+    }
+}
+
+/// Read the last-level cache size (bytes) of cpu0, if exposed by sysfs.
+pub fn llc_bytes() -> Option<u64> {
+    // Highest index directory under cpu0/cache is the LLC.
+    let base = "/sys/devices/system/cpu/cpu0/cache";
+    let mut best: Option<(u32, u64)> = None;
+    for entry in fs::read_dir(base).ok()? {
+        let entry = entry.ok()?;
+        let name = entry.file_name().into_string().ok()?;
+        if !name.starts_with("index") {
+            continue;
+        }
+        let level: u32 = fs::read_to_string(entry.path().join("level"))
+            .ok()?
+            .trim()
+            .parse()
+            .ok()?;
+        let size_s = fs::read_to_string(entry.path().join("size")).ok()?;
+        let size = parse_size(size_s.trim())?;
+        if best.map_or(true, |(l, _)| level > l) {
+            best = Some((level, size));
+        }
+    }
+    best.map(|(_, s)| s)
+}
+
+/// Parse "32K" / "2048K" / "25M" style sysfs sizes.
+fn parse_size(s: &str) -> Option<u64> {
+    if let Some(k) = s.strip_suffix('K') {
+        k.parse::<u64>().ok().map(|v| v << 10)
+    } else if let Some(m) = s.strip_suffix('M') {
+        m.parse::<u64>().ok().map(|v| v << 20)
+    } else {
+        s.parse::<u64>().ok()
+    }
+}
+
+/// Detect the host as a single-cluster topology (one shared LLC). Accurate
+/// multi-socket detection would read `physical_package_id` per cpu; for this
+/// reproduction real mode is functional validation only, so one cluster is
+/// sufficient and always safe (widths remain natural divisors).
+pub fn detect() -> Topology {
+    let n = online_cpus();
+    let cache = llc_bytes().unwrap_or(8 << 20);
+    Topology::from_clusters("host", &[(n, "generic", cache)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_cpus_positive() {
+        assert!(online_cpus() >= 1);
+    }
+
+    #[test]
+    fn detect_yields_valid_topology() {
+        let t = detect();
+        assert!(t.n_cores() >= 1);
+        assert_eq!(t.clusters.len(), 1);
+        assert!(!t.all_widths().is_empty());
+    }
+
+    #[test]
+    fn parse_size_units() {
+        assert_eq!(parse_size("32K"), Some(32 << 10));
+        assert_eq!(parse_size("25M"), Some(25 << 20));
+        assert_eq!(parse_size("123"), Some(123));
+        assert_eq!(parse_size("x"), None);
+    }
+}

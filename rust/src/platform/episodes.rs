@@ -1,0 +1,175 @@
+//! Dynamic-heterogeneity episodes: time windows during which the effective
+//! behaviour of a set of cores changes.
+//!
+//! Two families from the paper:
+//! - **Interference** (§5.3): a background process time-shares some cores,
+//!   cutting the CPU share our runtime gets on them and adding memory
+//!   traffic. The paper's experiment runs a chain of MatMul DAGs on cores
+//!   0–1 of the Haswell box.
+//! - **DVFS** (§1): frequency changes scale a core's speed for *all* kernel
+//!   classes.
+//!
+//! Both are modelled as multiplicative speed factors active on a core during
+//! `[t_start, t_end)` of simulated time, plus an optional extra memory
+//! bandwidth demand, and both are invisible to the scheduler — only the PTT
+//! observes their effect through inflated execution times.
+
+use super::topology::CoreId;
+
+/// Kind of episode; affects how the performance model composes factors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpisodeKind {
+    /// Time-sharing with another process: the runtime gets `speed_factor`
+    /// of each affected core, and the other process adds `extra_bw_gbps`
+    /// of memory traffic.
+    Interference,
+    /// Frequency scaling: the core runs at `speed_factor` of nominal.
+    Dvfs,
+}
+
+/// One episode of dynamic heterogeneity.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub kind: EpisodeKind,
+    /// Affected cores.
+    pub cores: Vec<CoreId>,
+    /// Simulated-seconds window `[t_start, t_end)`.
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Multiplicative speed factor in `(0, 1]` while active.
+    pub speed_factor: f64,
+    /// Additional memory-bandwidth demand (GB/s) while active.
+    pub extra_bw_gbps: f64,
+}
+
+impl Episode {
+    /// A background process time-sharing `cores` during `[t0, t1)`.
+    /// `share` is the CPU fraction our runtime keeps (e.g. 0.5 for a
+    /// same-priority spinner per core).
+    pub fn interference(cores: Vec<CoreId>, t0: f64, t1: f64, share: f64, bw: f64) -> Episode {
+        assert!(t1 > t0 && share > 0.0 && share <= 1.0);
+        Episode {
+            kind: EpisodeKind::Interference,
+            cores,
+            t_start: t0,
+            t_end: t1,
+            speed_factor: share,
+            extra_bw_gbps: bw,
+        }
+    }
+
+    /// A DVFS throttle of `cores` to `factor` of nominal frequency.
+    pub fn dvfs(cores: Vec<CoreId>, t0: f64, t1: f64, factor: f64) -> Episode {
+        assert!(t1 > t0 && factor > 0.0);
+        Episode {
+            kind: EpisodeKind::Dvfs,
+            cores,
+            t_start: t0,
+            t_end: t1,
+            speed_factor: factor,
+            extra_bw_gbps: 0.0,
+        }
+    }
+
+    pub fn active_at(&self, t: f64) -> bool {
+        t >= self.t_start && t < self.t_end
+    }
+
+    pub fn affects(&self, core: CoreId) -> bool {
+        self.cores.contains(&core)
+    }
+}
+
+/// A schedule of episodes with boundary-time queries (the simulator needs the
+/// next boundary to re-rate running tasks exactly when conditions change).
+#[derive(Debug, Clone, Default)]
+pub struct EpisodeSchedule {
+    pub episodes: Vec<Episode>,
+}
+
+impl EpisodeSchedule {
+    pub fn new(episodes: Vec<Episode>) -> EpisodeSchedule {
+        EpisodeSchedule { episodes }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.episodes.is_empty()
+    }
+
+    /// Combined speed factor on `core` at time `t` (product of active
+    /// episodes touching the core).
+    pub fn speed_factor(&self, core: CoreId, t: f64) -> f64 {
+        self.episodes
+            .iter()
+            .filter(|e| e.active_at(t) && e.affects(core))
+            .map(|e| e.speed_factor)
+            .product()
+    }
+
+    /// Extra bandwidth demand from active episodes at `t`.
+    pub fn extra_bw(&self, t: f64) -> f64 {
+        self.episodes.iter().filter(|e| e.active_at(t)).map(|e| e.extra_bw_gbps).sum()
+    }
+
+    /// The earliest episode boundary strictly after `t`, if any. The DES
+    /// schedules a re-rate event at each boundary.
+    pub fn next_boundary_after(&self, t: f64) -> Option<f64> {
+        self.episodes
+            .iter()
+            .flat_map(|e| [e.t_start, e.t_end])
+            .filter(|&b| b > t)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_semantics_half_open() {
+        let e = Episode::interference(vec![0, 1], 1.0, 2.0, 0.5, 3.0);
+        assert!(!e.active_at(0.99));
+        assert!(e.active_at(1.0));
+        assert!(e.active_at(1.99));
+        assert!(!e.active_at(2.0));
+    }
+
+    #[test]
+    fn speed_factor_composes() {
+        let s = EpisodeSchedule::new(vec![
+            Episode::interference(vec![0], 0.0, 10.0, 0.5, 0.0),
+            Episode::dvfs(vec![0, 1], 5.0, 10.0, 0.8),
+        ]);
+        assert_eq!(s.speed_factor(0, 1.0), 0.5);
+        assert!((s.speed_factor(0, 6.0) - 0.4).abs() < 1e-12);
+        assert_eq!(s.speed_factor(1, 6.0), 0.8);
+        assert_eq!(s.speed_factor(2, 6.0), 1.0);
+    }
+
+    #[test]
+    fn extra_bw_sums() {
+        let s = EpisodeSchedule::new(vec![
+            Episode::interference(vec![0], 0.0, 10.0, 0.5, 3.0),
+            Episode::interference(vec![1], 5.0, 10.0, 0.5, 2.0),
+        ]);
+        assert_eq!(s.extra_bw(1.0), 3.0);
+        assert_eq!(s.extra_bw(6.0), 5.0);
+        assert_eq!(s.extra_bw(11.0), 0.0);
+    }
+
+    #[test]
+    fn next_boundary() {
+        let s = EpisodeSchedule::new(vec![Episode::dvfs(vec![0], 2.0, 4.0, 0.5)]);
+        assert_eq!(s.next_boundary_after(0.0), Some(2.0));
+        assert_eq!(s.next_boundary_after(2.0), Some(4.0));
+        assert_eq!(s.next_boundary_after(4.0), None);
+        assert_eq!(EpisodeSchedule::default().next_boundary_after(0.0), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_window() {
+        Episode::dvfs(vec![0], 3.0, 3.0, 0.5);
+    }
+}

@@ -1,0 +1,19 @@
+//! Platform substrate: topology, static heterogeneity, dynamic episodes
+//! (DVFS, interference) and the analytic performance model used by the
+//! discrete-event simulator.
+//!
+//! See DESIGN.md §Substitutions: the paper's Jetson TX2 and dual-socket
+//! Haswell testbeds are modelled here because the build host has one CPU
+//! core. The scheduler under test never reads this module's heterogeneity
+//! data — it learns everything through the PTT, as on real hardware.
+
+pub mod detect;
+pub mod episodes;
+pub mod perf_model;
+pub mod power;
+pub mod topology;
+
+pub use episodes::{Episode, EpisodeKind, EpisodeSchedule};
+pub use perf_model::{ClassTraits, KernelClass, Platform, RunningTask};
+pub use power::{CorePower, core_power, partition_power, run_energy};
+pub use topology::{CoreDesc, CoreId, CoreKind, Cluster, Partition, Topology};

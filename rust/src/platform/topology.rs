@@ -1,0 +1,275 @@
+//! Hardware topology description.
+//!
+//! The paper requires "as little information as the number of cores and their
+//! distribution into core-clusters with shared caches" (§3.2) — the data
+//! hwloc provides. Here a [`Topology`] is an explicit description: cores with
+//! a type label, grouped into clusters that share a last-level cache.
+//!
+//! XiTAO's placement rules (§3.1) are encoded here:
+//! - a resource width must be a *natural divisor* of the cluster size;
+//! - partitions are consecutive core ids within one cluster;
+//! - the leader is the lowest id in the partition, and leaders are aligned
+//!   (a width-w partition starts at a multiple of w within its cluster).
+
+/// Index of a logical core.
+pub type CoreId = usize;
+
+/// A core type label (e.g. "denver2", "a57", "haswell"). Purely descriptive —
+/// the scheduler never reads it (it is *heterogeneity-unaware*, §3.3); only
+/// the simulator's performance model does.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreKind(pub String);
+
+/// One logical core.
+#[derive(Debug, Clone)]
+pub struct CoreDesc {
+    pub id: CoreId,
+    /// Index into `Topology::clusters`.
+    pub cluster: usize,
+    pub kind: CoreKind,
+}
+
+/// A group of cores sharing a last-level cache (e.g. a NUMA node or a
+/// big.LITTLE cluster).
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub id: usize,
+    /// First core id in the cluster (cores are consecutive).
+    pub first_core: CoreId,
+    /// Number of cores.
+    pub len: usize,
+    /// Shared cache capacity in bytes (L2 on the TX2, L3 on Haswell).
+    pub cache_bytes: u64,
+}
+
+impl Cluster {
+    pub fn cores(&self) -> std::ops::Range<CoreId> {
+        self.first_core..self.first_core + self.len
+    }
+
+    pub fn contains(&self, core: CoreId) -> bool {
+        self.cores().contains(&core)
+    }
+
+    /// Natural divisors of the cluster size — the valid resource widths
+    /// (§3.1: "The resource width must be a natural divisor of the number of
+    /// available logical cores in a particular core-cluster").
+    pub fn valid_widths(&self) -> Vec<usize> {
+        (1..=self.len).filter(|w| self.len % w == 0).collect()
+    }
+}
+
+/// A full platform topology.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub cores: Vec<CoreDesc>,
+    pub clusters: Vec<Cluster>,
+}
+
+/// A concrete resource partition: `width` consecutive cores led by `leader`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Partition {
+    pub leader: CoreId,
+    pub width: usize,
+}
+
+impl Partition {
+    pub fn cores(&self) -> std::ops::Range<CoreId> {
+        self.leader..self.leader + self.width
+    }
+
+    pub fn contains(&self, core: CoreId) -> bool {
+        self.cores().contains(&core)
+    }
+}
+
+impl Topology {
+    /// Build a topology from `(cluster_size, kind, cache_bytes)` groups.
+    pub fn from_clusters(name: &str, groups: &[(usize, &str, u64)]) -> Topology {
+        let mut cores = Vec::new();
+        let mut clusters = Vec::new();
+        let mut next = 0;
+        for (ci, &(len, kind, cache)) in groups.iter().enumerate() {
+            assert!(len > 0, "empty cluster");
+            clusters.push(Cluster { id: ci, first_core: next, len, cache_bytes: cache });
+            for _ in 0..len {
+                cores.push(CoreDesc { id: next, cluster: ci, kind: CoreKind(kind.to_string()) });
+                next += 1;
+            }
+        }
+        Topology { name: name.to_string(), cores, clusters }
+    }
+
+    /// Uniform single-cluster topology (tests, generic machines).
+    pub fn homogeneous(n: usize) -> Topology {
+        Self::from_clusters("homogeneous", &[(n, "generic", 8 << 20)])
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn cluster_of(&self, core: CoreId) -> &Cluster {
+        &self.clusters[self.cores[core].cluster]
+    }
+
+    /// All widths valid for partitions led by `core` (divisors of its cluster
+    /// size at which `core` is alignment-eligible as leader).
+    pub fn leader_widths(&self, core: CoreId) -> Vec<usize> {
+        let cl = self.cluster_of(core);
+        let off = core - cl.first_core;
+        cl.valid_widths().into_iter().filter(|w| off % w == 0).collect()
+    }
+
+    /// The union of all valid widths across clusters, sorted ascending.
+    /// This is the PTT's width axis.
+    pub fn all_widths(&self) -> Vec<usize> {
+        let mut ws: Vec<usize> =
+            self.clusters.iter().flat_map(|c| c.valid_widths()).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    }
+
+    /// Check that `(leader, width)` denotes a valid partition.
+    pub fn is_valid_partition(&self, p: Partition) -> bool {
+        if p.width == 0 || p.leader >= self.n_cores() {
+            return false;
+        }
+        let cl = self.cluster_of(p.leader);
+        let off = p.leader - cl.first_core;
+        cl.len % p.width == 0 && off % p.width == 0 && p.leader + p.width <= cl.first_core + cl.len
+    }
+
+    /// The partition led by `leader` at `width`; `None` if invalid.
+    pub fn partition(&self, leader: CoreId, width: usize) -> Option<Partition> {
+        let p = Partition { leader, width };
+        self.is_valid_partition(p).then_some(p)
+    }
+
+    /// The partition of width `w` *containing* `core` (for non-critical
+    /// placement: the paper keeps the task near the current core and only
+    /// picks a width). `None` if `w` is invalid for the core's cluster.
+    pub fn enclosing_partition(&self, core: CoreId, width: usize) -> Option<Partition> {
+        let cl = self.cluster_of(core);
+        if cl.len % width != 0 {
+            return None;
+        }
+        let off = core - cl.first_core;
+        let leader = cl.first_core + (off / width) * width;
+        Some(Partition { leader, width })
+    }
+
+    /// Every valid partition on the machine (used by exhaustive tests and by
+    /// the dHEFT baseline).
+    pub fn all_partitions(&self) -> Vec<Partition> {
+        let mut out = Vec::new();
+        for cl in &self.clusters {
+            for w in cl.valid_widths() {
+                let mut leader = cl.first_core;
+                while leader + w <= cl.first_core + cl.len {
+                    out.push(Partition { leader, width: w });
+                    leader += w;
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of PTT entries per cluster of N cores is 2N−1 when N is a power
+    /// of two (§3.3 states the per-NUMA-node entry count); exposed for tests.
+    pub fn ptt_entries_per_cluster(&self, cluster: usize) -> usize {
+        let cl = &self.clusters[cluster];
+        cl.valid_widths().iter().map(|w| cl.len / w).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tx2_like() -> Topology {
+        Topology::from_clusters(
+            "tx2",
+            &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)],
+        )
+    }
+
+    #[test]
+    fn cluster_layout() {
+        let t = tx2_like();
+        assert_eq!(t.n_cores(), 6);
+        assert_eq!(t.clusters.len(), 2);
+        assert_eq!(t.clusters[0].cores(), 0..2);
+        assert_eq!(t.clusters[1].cores(), 2..6);
+        assert_eq!(t.cluster_of(3).id, 1);
+    }
+
+    #[test]
+    fn valid_widths_are_divisors() {
+        let t = tx2_like();
+        assert_eq!(t.clusters[0].valid_widths(), vec![1, 2]);
+        assert_eq!(t.clusters[1].valid_widths(), vec![1, 2, 4]);
+        assert_eq!(t.all_widths(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn leader_alignment() {
+        let t = tx2_like();
+        // Core 2 is first of the a57 cluster: can lead widths 1,2,4.
+        assert_eq!(t.leader_widths(2), vec![1, 2, 4]);
+        // Core 3 is offset 1: only width 1.
+        assert_eq!(t.leader_widths(3), vec![1]);
+        // Core 4 is offset 2: widths 1,2.
+        assert_eq!(t.leader_widths(4), vec![1, 2]);
+    }
+
+    #[test]
+    fn partition_validity() {
+        let t = tx2_like();
+        assert!(t.is_valid_partition(Partition { leader: 2, width: 4 }));
+        assert!(!t.is_valid_partition(Partition { leader: 3, width: 2 })); // misaligned
+        assert!(!t.is_valid_partition(Partition { leader: 0, width: 4 })); // exceeds cluster
+        assert!(!t.is_valid_partition(Partition { leader: 0, width: 0 }));
+        assert!(!t.is_valid_partition(Partition { leader: 99, width: 1 }));
+    }
+
+    #[test]
+    fn enclosing_partition_snaps_to_alignment() {
+        let t = tx2_like();
+        let p = t.enclosing_partition(3, 2).unwrap();
+        assert_eq!(p, Partition { leader: 2, width: 2 });
+        let p = t.enclosing_partition(5, 4).unwrap();
+        assert_eq!(p, Partition { leader: 2, width: 4 });
+        assert!(t.enclosing_partition(0, 4).is_none()); // 4 doesn't divide 2... no: 2%4 != 0
+    }
+
+    #[test]
+    fn all_partitions_are_valid_and_complete() {
+        let t = tx2_like();
+        let ps = t.all_partitions();
+        for p in &ps {
+            assert!(t.is_valid_partition(*p), "{p:?}");
+        }
+        // denver: 2 width-1 + 1 width-2 = 3; a57: 4 + 2 + 1 = 7.
+        assert_eq!(ps.len(), 10);
+    }
+
+    #[test]
+    fn ptt_entries_match_2n_minus_1() {
+        let t = Topology::homogeneous(4);
+        // widths 1,2,4 -> 4 + 2 + 1 = 7 = 2*4 - 1.
+        assert_eq!(t.ptt_entries_per_cluster(0), 7);
+        let t = Topology::homogeneous(8);
+        assert_eq!(t.ptt_entries_per_cluster(0), 15);
+    }
+
+    #[test]
+    fn homogeneous_topology() {
+        let t = Topology::homogeneous(16);
+        assert_eq!(t.n_cores(), 16);
+        assert_eq!(t.clusters.len(), 1);
+        assert_eq!(t.all_widths(), vec![1, 2, 4, 8, 16]);
+    }
+}

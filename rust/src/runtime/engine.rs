@@ -1,0 +1,450 @@
+//! The PJRT execution service.
+//!
+//! The `xla` crate's PJRT types are not `Send`/`Sync` (raw C-API handles),
+//! so the runtime confines the client, the compiled executables and all
+//! literals to one dedicated **service thread**. Worker threads (TAO
+//! payloads) talk to it through an mpsc request channel and block on a
+//! reply channel — the PJRT engine is a tiny serving backend inside the
+//! process. Python is never involved: the service loads the HLO-text
+//! artifacts produced at build time and compiles them once.
+//!
+//! The hot operation is [`GemmHandle::gemm`]: an arbitrary-shape
+//! `C = A·B (+C₀)` decomposed into fixed-shape tile executions of the
+//! Pallas `gemm_acc` artifact (`c + a@b` over one tile). The tile loop
+//! keeps the running accumulator as an on-device literal across K steps,
+//! mirroring the kernel's K-innermost VMEM-resident schedule at the host
+//! level.
+
+use super::manifest::Manifest;
+use anyhow::{Context, Result, anyhow};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+
+/// A GEMM job: row-major `a` (m×k) times `b` (k×n), plus optional `c0`.
+struct GemmJob {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c0: Option<Vec<f32>>,
+    m: usize,
+    k: usize,
+    n: usize,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// VGG whole-model inference job (parameters are cached in the service).
+struct VggJob {
+    image: Vec<f32>,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+enum Request {
+    Gemm(GemmJob),
+    /// Load VGG params into the service (once, before inference).
+    VggLoad { params: Vec<Vec<f32>>, reply: mpsc::Sender<Result<()>> },
+    VggInfer(VggJob),
+    Shutdown,
+}
+
+/// Handle to the PJRT service; clonable and `Send` — one per TAO payload.
+#[derive(Clone)]
+pub struct GemmHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl GemmHandle {
+    /// `C = A·B` (row-major flat buffers).
+    pub fn gemm(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Result<Vec<f32>> {
+        self.gemm_acc(a, b, None, m, k, n)
+    }
+
+    /// `C = C₀ + A·B`.
+    pub fn gemm_acc(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c0: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(a.len(), m * k, "a shape");
+        assert_eq!(b.len(), k * n, "b shape");
+        if let Some(c) = c0 {
+            assert_eq!(c.len(), m * n, "c0 shape");
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::Gemm(GemmJob {
+                a: a.to_vec(),
+                b: b.to_vec(),
+                c0: c0.map(|c| c.to_vec()),
+                m,
+                k,
+                n,
+                reply: rtx,
+            }))
+            .map_err(|_| anyhow!("PJRT service is down"))?;
+        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+
+    /// Install VGG parameters (flat, model order) for whole-model inference.
+    pub fn vgg_load(&self, params: Vec<Vec<f32>>) -> Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::VggLoad { params, reply: rtx })
+            .map_err(|_| anyhow!("PJRT service is down"))?;
+        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+
+    /// Whole-model inference: image `[3·hw·hw]` → logits.
+    pub fn vgg_infer(&self, image: &[f32]) -> Result<Vec<f32>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::VggInfer(VggJob { image: image.to_vec(), reply: rtx }))
+            .map_err(|_| anyhow!("PJRT service is down"))?;
+        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+}
+
+/// The running service; shuts down on drop.
+pub struct PjrtService {
+    tx: mpsc::Sender<Request>,
+    join: Option<std::thread::JoinHandle<()>>,
+    manifest: Manifest,
+}
+
+impl PjrtService {
+    /// Start the service from an artifact directory (compiles all GEMM tile
+    /// executables up front; the VGG executable lazily at `vgg_load`).
+    pub fn start(artifact_dir: &Path) -> Result<PjrtService> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let m2 = manifest.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(m2, rx, ready_tx))
+            .context("spawn pjrt service")?;
+        ready_rx.recv().map_err(|_| anyhow!("service died during init"))??;
+        Ok(PjrtService { tx, join: Some(join), manifest })
+    }
+
+    pub fn handle(&self) -> GemmHandle {
+        GemmHandle { tx: self.tx.clone() }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service thread
+// ---------------------------------------------------------------------------
+
+struct ServiceState {
+    client: xla::PjRtClient,
+    /// block size → compiled gemm_acc executable.
+    tiles: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+    vgg_exe: Option<xla::PjRtLoadedExecutable>,
+    vgg_params: Option<Vec<xla::Literal>>,
+}
+
+fn service_main(manifest: Manifest, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
+    let state = match init_state(&manifest) {
+        Ok(s) => {
+            let _ = ready.send(Ok(()));
+            s
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let mut state = state;
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Gemm(job) => {
+                let result = tiled_gemm(&state, &job);
+                let _ = job.reply.send(result);
+            }
+            Request::VggLoad { params, reply } => {
+                let _ = reply.send(vgg_load(&mut state, params));
+            }
+            Request::VggInfer(job) => {
+                let _ = job.reply.send(vgg_infer(&state, &job.image));
+            }
+        }
+    }
+}
+
+fn init_state(manifest: &Manifest) -> Result<ServiceState> {
+    let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+    let mut tiles = BTreeMap::new();
+    for tile in &manifest.gemm_tiles {
+        let proto = xla::HloModuleProto::from_text_file(&tile.path)
+            .with_context(|| format!("load {}", tile.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compile tile {}", tile.block))?;
+        tiles.insert(tile.block, exe);
+    }
+    Ok(ServiceState { client, tiles, manifest: manifest.clone(), vgg_exe: None, vgg_params: None })
+}
+
+/// Pick the largest tile not exceeding every padded dimension's "waste
+/// budget": the smallest dimension determines how much padding a large tile
+/// would add.
+fn pick_block(tiles: &BTreeMap<usize, xla::PjRtLoadedExecutable>, m: usize, k: usize, n: usize) -> usize {
+    let smallest_dim = m.min(k).min(n);
+    let mut best = *tiles.keys().next().expect("at least one tile");
+    for &b in tiles.keys() {
+        // Accept b if padding the smallest dim to b wastes < 2× its size,
+        // i.e. b ≤ 2 × smallest_dim, preferring the largest such b.
+        if b <= (2 * smallest_dim).max(best) {
+            best = b;
+        }
+    }
+    best
+}
+
+/// Extract the zero-padded tile `(ti, tj)` of the row-major `src` (r×c).
+fn tile_of(src: &[f32], r: usize, c: usize, ti: usize, tj: usize, b: usize) -> Vec<f32> {
+    let mut out = vec![0f32; b * b];
+    let r0 = ti * b;
+    let c0 = tj * b;
+    let rows = b.min(r.saturating_sub(r0));
+    let cols = b.min(c.saturating_sub(c0));
+    for i in 0..rows {
+        let srow = (r0 + i) * c + c0;
+        out[i * b..i * b + cols].copy_from_slice(&src[srow..srow + cols]);
+    }
+    out
+}
+
+fn literal_2d(data: &[f32], r: usize, c: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(&[r as i64, c as i64])?)
+}
+
+/// The tiled GEMM: pads (m, k, n) to tile multiples and loops the
+/// single-tile `gemm_acc` executable, keeping the accumulator as a device
+/// literal across the K loop.
+fn tiled_gemm(state: &ServiceState, job: &GemmJob) -> Result<Vec<f32>> {
+    let (m, k, n) = (job.m, job.k, job.n);
+    let b = pick_block(&state.tiles, m, k, n);
+    let exe = &state.tiles[&b];
+    let (tm, tk, tn) = (m.div_ceil(b), k.div_ceil(b), n.div_ceil(b));
+    let mut out = vec![0f32; m * n];
+    let zeros = vec![0f32; b * b];
+    for ti in 0..tm {
+        for tj in 0..tn {
+            // Seed the accumulator with C₀'s tile (or zeros).
+            let seed = match &job.c0 {
+                Some(c0) => tile_of(c0, m, n, ti, tj, b),
+                None => zeros.clone(),
+            };
+            let mut acc = literal_2d(&seed, b, b)?;
+            for tkk in 0..tk {
+                let at = tile_of(&job.a, m, k, ti, tkk, b);
+                let bt = tile_of(&job.b, k, n, tkk, tj, b);
+                let al = literal_2d(&at, b, b)?;
+                let bl = literal_2d(&bt, b, b)?;
+                let result = exe.execute::<xla::Literal>(&[al, bl, acc])?[0][0]
+                    .to_literal_sync()?;
+                acc = result.to_tuple1()?;
+            }
+            let tile: Vec<f32> = acc.to_vec::<f32>()?;
+            // Scatter the valid region back.
+            let r0 = ti * b;
+            let c0 = tj * b;
+            let rows = b.min(m - r0);
+            let cols = b.min(n - c0);
+            for i in 0..rows {
+                let drow = (r0 + i) * n + c0;
+                out[drow..drow + cols].copy_from_slice(&tile[i * b..i * b + cols]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn vgg_load(state: &mut ServiceState, params: Vec<Vec<f32>>) -> Result<()> {
+    let spec = state
+        .manifest
+        .vgg
+        .clone()
+        .ok_or_else(|| anyhow!("manifest has no VGG artifact"))?;
+    anyhow::ensure!(
+        params.len() == spec.param_shapes.len(),
+        "expected {} params, got {}",
+        spec.param_shapes.len(),
+        params.len()
+    );
+    if state.vgg_exe.is_none() {
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .with_context(|| format!("load {}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        state.vgg_exe = Some(state.client.compile(&comp).context("compile VGG model")?);
+    }
+    let mut lits = Vec::with_capacity(params.len());
+    for (p, shape) in params.iter().zip(&spec.param_shapes) {
+        let numel: usize = shape.iter().product();
+        anyhow::ensure!(p.len() == numel, "param shape mismatch: {} vs {shape:?}", p.len());
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lits.push(xla::Literal::vec1(p).reshape(&dims)?);
+    }
+    state.vgg_params = Some(lits);
+    Ok(())
+}
+
+fn vgg_infer(state: &ServiceState, image: &[f32]) -> Result<Vec<f32>> {
+    let spec = state.manifest.vgg.as_ref().ok_or_else(|| anyhow!("no VGG artifact"))?;
+    let exe = state.vgg_exe.as_ref().ok_or_else(|| anyhow!("vgg_load first"))?;
+    let params = state.vgg_params.as_ref().ok_or_else(|| anyhow!("vgg_load first"))?;
+    let hw = spec.input_hw;
+    anyhow::ensure!(image.len() == 3 * hw * hw, "image must be 3×{hw}×{hw}");
+    let img = xla::Literal::vec1(image).reshape(&[3, hw as i64, hw as i64])?;
+    let mut args: Vec<&xla::Literal> = params.iter().collect();
+    args.push(&img);
+    let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    let logits = result.to_tuple1()?;
+    Ok(logits.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn artifacts_available() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    fn reference_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                for j in 0..n {
+                    c[i * n + j] += aik * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..len).map(|_| (rng.gen_f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tile_of_pads_with_zeros() {
+        let src: Vec<f32> = (0..6).map(|v| v as f32).collect(); // 2×3
+        let t = tile_of(&src, 2, 3, 0, 0, 4);
+        assert_eq!(t[0..3], [0.0, 1.0, 2.0]);
+        assert_eq!(t[3], 0.0); // padded col
+        assert_eq!(t[4..7], [3.0, 4.0, 5.0]);
+        assert_eq!(&t[8..], &[0.0; 8]); // padded rows
+    }
+
+    #[test]
+    fn tile_of_offset_block() {
+        let src: Vec<f32> = (0..16).map(|v| v as f32).collect(); // 4×4
+        let t = tile_of(&src, 4, 4, 1, 1, 2);
+        assert_eq!(t, vec![10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn service_gemm_exact_tile() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+        let h = svc.handle();
+        let (m, k, n) = (32, 32, 32);
+        let a = rand_vec(m * k, 1);
+        let b = rand_vec(k * n, 2);
+        let got = h.gemm(&a, &b, m, k, n).unwrap();
+        assert_close(&got, &reference_gemm(&a, &b, m, k, n), 1e-3);
+    }
+
+    #[test]
+    fn service_gemm_ragged_shapes() {
+        if !artifacts_available() {
+            return;
+        }
+        let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+        let h = svc.handle();
+        for &(m, k, n) in &[(5usize, 7usize, 3usize), (70, 33, 100), (64, 576, 50), (1, 100, 1)] {
+            let a = rand_vec(m * k, m as u64);
+            let b = rand_vec(k * n, n as u64);
+            let got = h.gemm(&a, &b, m, k, n).unwrap();
+            assert_close(&got, &reference_gemm(&a, &b, m, k, n), 1e-2);
+        }
+    }
+
+    #[test]
+    fn service_gemm_acc_seeds_accumulator() {
+        if !artifacts_available() {
+            return;
+        }
+        let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+        let h = svc.handle();
+        let (m, k, n) = (16, 16, 16);
+        let a = rand_vec(m * k, 3);
+        let b = rand_vec(k * n, 4);
+        let c0 = rand_vec(m * n, 5);
+        let got = h.gemm_acc(&a, &b, Some(&c0), m, k, n).unwrap();
+        let mut want = reference_gemm(&a, &b, m, k, n);
+        for (w, c) in want.iter_mut().zip(&c0) {
+            *w += c;
+        }
+        assert_close(&got, &want, 1e-3);
+    }
+
+    #[test]
+    fn handles_are_cloneable_across_threads() {
+        if !artifacts_available() {
+            return;
+        }
+        let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let h = svc.handle();
+                std::thread::spawn(move || {
+                    let a = rand_vec(8 * 8, i);
+                    let b = rand_vec(8 * 8, i + 10);
+                    let got = h.gemm(&a, &b, 8, 8, 8).unwrap();
+                    assert_close(&got, &reference_gemm(&a, &b, 8, 8, 8), 1e-3);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    // `pick_block` needs real executables to construct the map; its choice
+    // logic is covered indirectly by `service_gemm_ragged_shapes`, which
+    // exercises shapes that hit every tile size.
+}

@@ -1,0 +1,142 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use crate::util::Json;
+use std::path::{Path, PathBuf};
+
+/// One GEMM tile executable.
+#[derive(Debug, Clone)]
+pub struct GemmTileSpec {
+    pub block: usize,
+    pub path: PathBuf,
+}
+
+/// The whole-model VGG executable.
+#[derive(Debug, Clone)]
+pub struct VggSpec {
+    pub path: PathBuf,
+    pub input_hw: usize,
+    /// Flat parameter shapes, model order (W, b per layer).
+    pub param_shapes: Vec<Vec<usize>>,
+    pub n_logits: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub gemm_tiles: Vec<GemmTileSpec>,
+    pub vgg: Option<VggSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("read manifest in {}: {e}", dir.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse manifest: {e}"))?;
+        let mut gemm_tiles = Vec::new();
+        let tiles = json
+            .get("gemm_acc")
+            .and_then(|j| j.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing gemm_acc"))?;
+        for entry in tiles.values() {
+            let block = entry
+                .get("block")
+                .and_then(|b| b.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("gemm_acc entry missing block"))?;
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow::anyhow!("gemm_acc entry missing file"))?;
+            gemm_tiles.push(GemmTileSpec { block, path: dir.join(file) });
+        }
+        gemm_tiles.sort_by_key(|t| t.block);
+        anyhow::ensure!(!gemm_tiles.is_empty(), "no gemm tiles in manifest");
+
+        let vgg = match json.get("vgg") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let file = v
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("vgg entry missing file"))?;
+                let shapes = v
+                    .get("param_shapes")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("vgg entry missing param_shapes"))?
+                    .iter()
+                    .map(|shape| {
+                        shape
+                            .as_arr()
+                            .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                            .ok_or_else(|| anyhow::anyhow!("bad shape"))
+                    })
+                    .collect::<anyhow::Result<Vec<Vec<usize>>>>()?;
+                Some(VggSpec {
+                    path: dir.join(file),
+                    input_hw: v
+                        .get("input_hw")
+                        .and_then(|x| x.as_usize())
+                        .ok_or_else(|| anyhow::anyhow!("vgg missing input_hw"))?,
+                    param_shapes: shapes,
+                    n_logits: v.get("n_logits").and_then(|x| x.as_usize()).unwrap_or(1000),
+                })
+            }
+        };
+        Ok(Manifest { dir: dir.to_path_buf(), gemm_tiles, vgg })
+    }
+
+    /// Default artifact directory (repo-relative).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_full_manifest() {
+        let dir = std::env::temp_dir().join("xitao_manifest_test1");
+        write_manifest(
+            &dir,
+            r#"{"gemm_acc": {"32": {"file": "g32.hlo.txt", "block": 32},
+                             "128": {"file": "g128.hlo.txt", "block": 128}},
+                "vgg": {"file": "v.hlo.txt", "input_hw": 64,
+                        "param_shapes": [[64, 27], [64]], "n_logits": 1000}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.gemm_tiles.len(), 2);
+        assert_eq!(m.gemm_tiles[0].block, 32); // sorted ascending
+        let vgg = m.vgg.unwrap();
+        assert_eq!(vgg.input_hw, 64);
+        assert_eq!(vgg.param_shapes[0], vec![64, 27]);
+    }
+
+    #[test]
+    fn vgg_optional() {
+        let dir = std::env::temp_dir().join("xitao_manifest_test2");
+        write_manifest(&dir, r#"{"gemm_acc": {"32": {"file": "g.hlo.txt", "block": 32}}, "vgg": null}"#);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.vgg.is_none());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(!m.gemm_tiles.is_empty());
+        }
+    }
+}

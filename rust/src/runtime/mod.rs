@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` (JAX/Pallas, build-time only) and executes them
+//! from the Rust hot path.
+//!
+//! - [`manifest`] — the artifact manifest contract.
+//! - [`engine`] — the thread-confined PJRT service with its tiled-GEMM
+//!   executor over the Pallas `gemm_acc` tile.
+//! - [`vgg`] — VGG-16 weights, glue (im2col/pool), the sequential pipeline
+//!   and the real TAO-DAG whose payloads call the service.
+
+pub mod engine;
+pub mod manifest;
+pub mod vgg;
+
+pub use engine::{GemmHandle, PjrtService};
+pub use manifest::Manifest;
+pub use vgg::{VggWeights, build_real_dag, pipeline_infer, synthetic_image};

@@ -1,0 +1,408 @@
+//! VGG-16 on the PJRT runtime: weights, the im2col/pool glue, the
+//! sequential pipeline, and the real TAO-DAG whose GEMM payloads execute
+//! through the AOT-compiled Pallas artifacts.
+//!
+//! Two independent execution paths exist on purpose:
+//! 1. **Whole-model** (`GemmHandle::vgg_infer`) — one PJRT executable for
+//!    the entire forward pass (lowered from the JAX model).
+//! 2. **Pipeline / TAO-DAG** — layer-by-layer GEMMs through the tiled
+//!    Pallas `gemm_acc` executable, either sequentially
+//!    ([`pipeline_infer`]) or as a XiTAO DAG ([`build_real_dag`]) under
+//!    any scheduling policy.
+//!
+//! Running both on the same weights and asserting allclose validates that
+//! the Rust im2col/pool/layer plumbing exactly matches the JAX model —
+//! the cross-language integration test of the whole stack.
+
+use super::engine::GemmHandle;
+use crate::coordinator::dag::TaoDag;
+use crate::coordinator::tao::TaoPayload;
+use crate::kernels::shared_buf::SharedBuf;
+use crate::platform::KernelClass;
+use crate::util::Pcg32;
+use crate::vgg::{LayerKind, LayerSpec, vgg16_layers};
+use std::sync::Arc;
+
+/// Weight-layer view (convs and FCs only, pools carry no weights).
+fn weight_layers(input_hw: usize) -> Vec<LayerSpec> {
+    vgg16_layers(input_hw)
+        .into_iter()
+        .filter(|l| !matches!(l.kind, LayerKind::Pool { .. }))
+        .collect()
+}
+
+/// Synthetic VGG-16 weights in the Rust/JAX shared layout:
+/// conv W `[c_out, c_in·9]` (column order `c·9 + ky·3 + kx`), FC W
+/// `[c_out, c_in]`, biases `[c_out]`.
+pub struct VggWeights {
+    pub input_hw: usize,
+    /// `(W, b)` per weight layer, model order.
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl VggWeights {
+    /// He-style deterministic init (accuracy is irrelevant — the
+    /// experiments measure scheduling; see DESIGN.md §Substitutions).
+    pub fn synthetic(input_hw: usize, seed: u64) -> VggWeights {
+        let mut rng = Pcg32::seeded(seed);
+        let mut layers = Vec::new();
+        for spec in weight_layers(input_hw) {
+            let (m, k, _) = spec.gemm_dims();
+            // Uniform(-s, s) has variance s²/3; s = √(6/k) gives He's 2/k.
+            let scale = (6.0 / k as f64).sqrt();
+            let w: Vec<f32> = (0..m * k)
+                .map(|_| ((rng.gen_f64() * 2.0 - 1.0) * scale) as f32)
+                .collect();
+            let b = vec![0f32; m];
+            layers.push((w, b));
+        }
+        VggWeights { input_hw, layers }
+    }
+
+    /// Flat parameter list (W, b interleaved) for `GemmHandle::vgg_load`.
+    pub fn flat(&self) -> Vec<Vec<f32>> {
+        self.layers.iter().flat_map(|(w, b)| [w.clone(), b.clone()]).collect()
+    }
+
+    pub fn specs(&self) -> Vec<LayerSpec> {
+        weight_layers(self.input_hw)
+    }
+}
+
+/// Deterministic test image in `[0, 1)`.
+pub fn synthetic_image(input_hw: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..3 * input_hw * input_hw).map(|_| rng.gen_f64() as f32).collect()
+}
+
+/// 3×3 SAME im2col matching `python/compile/kernels/ref.py::im2col_3x3`:
+/// `[c, h, w]` → `[c·9, h·w]`, row index `c·9 + (ky·3 + kx)`.
+pub fn im2col_3x3(x: &[f32], c: usize, h: usize, w: usize) -> Vec<f32> {
+    assert_eq!(x.len(), c * h * w);
+    let n = h * w;
+    let mut out = vec![0f32; c * 9 * n];
+    for ci in 0..c {
+        for ky in 0..3usize {
+            for kx in 0..3usize {
+                let row = ci * 9 + ky * 3 + kx;
+                let dst = &mut out[row * n..(row + 1) * n];
+                for y in 0..h {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue; // zero padding
+                    }
+                    for xx in 0..w {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        dst[y * w + xx] = x[ci * n + sy as usize * w + sx as usize];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2×2 max-pool stride 2: `[c, hw, hw]` → `[c, hw/2, hw/2]`.
+pub fn maxpool2(x: &[f32], c: usize, hw: usize) -> Vec<f32> {
+    assert_eq!(x.len(), c * hw * hw);
+    let ho = hw / 2;
+    let mut out = vec![0f32; c * ho * ho];
+    for ci in 0..c {
+        for y in 0..ho {
+            for xx in 0..ho {
+                let base = ci * hw * hw + 2 * y * hw + 2 * xx;
+                let m = x[base]
+                    .max(x[base + 1])
+                    .max(x[base + hw])
+                    .max(x[base + hw + 1]);
+                out[ci * ho * ho + y * ho + xx] = m;
+            }
+        }
+    }
+    out
+}
+
+fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Sequential layer-by-layer inference through the tiled-GEMM service.
+pub fn pipeline_infer(weights: &VggWeights, image: &[f32], h: &GemmHandle) -> anyhow::Result<Vec<f32>> {
+    let hw0 = weights.input_hw;
+    assert_eq!(image.len(), 3 * hw0 * hw0);
+    let specs = weights.specs();
+    let mut act = image.to_vec();
+    let mut conv_idx_after_pool = [2usize, 4, 7, 10, 13]; // layer indices where a pool precedes
+    conv_idx_after_pool.sort_unstable();
+    let mut hw = hw0;
+    let mut c = 3usize;
+    for (li, spec) in specs.iter().enumerate() {
+        let (w, b) = &weights.layers[li];
+        match spec.kind {
+            LayerKind::Conv { c_in, c_out, hw: shw } => {
+                // Pool boundary: the previous block ended.
+                if c_in != c {
+                    unreachable!("layer table is consistent");
+                }
+                if shw != hw {
+                    act = maxpool2(&act, c, hw);
+                    hw = shw;
+                }
+                let cols = im2col_3x3(&act, c, hw, hw);
+                let n = hw * hw;
+                let mut out = h.gemm(w, &cols, c_out, c_in * 9, n)?;
+                for (row, bias) in out.chunks_mut(n).zip(b) {
+                    for v in row.iter_mut() {
+                        *v += bias;
+                    }
+                }
+                relu(&mut out);
+                act = out;
+                c = c_out;
+            }
+            LayerKind::Fc { c_in, c_out } => {
+                if act.len() != c_in {
+                    // First FC: pool then flatten.
+                    act = maxpool2(&act, c, hw);
+                    hw /= 2;
+                    assert_eq!(act.len(), c_in, "flatten size");
+                }
+                let mut out = h.gemm(w, &act, c_out, c_in, 1)?;
+                for (v, bias) in out.iter_mut().zip(b) {
+                    *v += bias;
+                }
+                if li + 1 < specs.len() {
+                    relu(&mut out);
+                }
+                act = out;
+                c = c_out;
+            }
+            LayerKind::Pool { .. } => unreachable!("weight layers only"),
+        }
+    }
+    Ok(act)
+}
+
+// ---------------------------------------------------------------------------
+// The real TAO-DAG
+// ---------------------------------------------------------------------------
+
+struct Stage {
+    spec: LayerSpec,
+    /// im2col / flattened input, written by the prep TAO.
+    cols: Arc<SharedBuf<f32>>,
+    /// Raw (pre-ReLU) GEMM output `[c_out × n]`.
+    out: Arc<SharedBuf<f32>>,
+    n: usize,
+    k: usize,
+}
+
+/// Build a XiTAO DAG that performs one VGG-16 inference with GEMM TAOs
+/// executing through the PJRT service. Returns the DAG and the logits
+/// buffer (read it after the run).
+///
+/// Per layer: one *prep* TAO (ReLU of the previous raw output, pool at
+/// block boundaries, im2col/flatten) followed by `⌈c_out/block_len⌉` GEMM
+/// TAOs, each computing a channel block, rank-sliced by the width the
+/// scheduler picks. Layer barriers are dense edges, like the sim DAG.
+pub fn build_real_dag(
+    weights: Arc<VggWeights>,
+    image: Vec<f32>,
+    handle: GemmHandle,
+    block_len: usize,
+) -> (TaoDag, Arc<SharedBuf<f32>>) {
+    let hw0 = weights.input_hw;
+    assert_eq!(image.len(), 3 * hw0 * hw0);
+    let specs = weights.specs();
+    // Precompute stage geometry.
+    let mut stages: Vec<Stage> = Vec::new();
+    for spec in &specs {
+        let (_, k, n) = spec.gemm_dims();
+        let m = spec.out_channels();
+        stages.push(Stage {
+            spec: spec.clone(),
+            cols: Arc::new(SharedBuf::zeroed(k * n)),
+            out: Arc::new(SharedBuf::zeroed(m * n)),
+            n,
+            k,
+        });
+    }
+    let stages = Arc::new(stages);
+    let image = Arc::new(image);
+
+    let mut dag = TaoDag::new();
+    let mut prev_gemm_ids: Vec<usize> = Vec::new();
+    for li in 0..stages.len() {
+        // ---- prep TAO -----------------------------------------------------
+        let prep_payload: Arc<dyn TaoPayload> = {
+            let stages = stages.clone();
+            let weights = weights.clone();
+            let image = image.clone();
+            crate::coordinator::tao::payload_fn(KernelClass::Copy, move |rank, _width| {
+                if rank != 0 {
+                    return; // prep is cheap; only rank 0 works
+                }
+                let stage = &stages[li];
+                // Input activation: image for layer 0, else the previous
+                // layer's raw output with ReLU applied.
+                let (mut act, mut c, mut hw) = if li == 0 {
+                    ((*image).clone(), 3usize, weights.input_hw)
+                } else {
+                    let prev = &stages[li - 1];
+                    let mut a = prev.out.snapshot();
+                    relu(&mut a);
+                    let c = prev.spec.out_channels();
+                    let hw = match prev.spec.kind {
+                        LayerKind::Conv { hw, .. } => hw,
+                        _ => 1,
+                    };
+                    (a, c, hw)
+                };
+                match stage.spec.kind {
+                    LayerKind::Conv { c_in, hw: shw, .. } => {
+                        if shw != hw {
+                            act = maxpool2(&act, c, hw);
+                            hw = shw;
+                        }
+                        debug_assert_eq!(c, c_in);
+                        let cols = im2col_3x3(&act, c, hw, hw);
+                        let dst = unsafe { stage.cols.slice_mut(0, cols.len()) };
+                        dst.copy_from_slice(&cols);
+                    }
+                    LayerKind::Fc { c_in, .. } => {
+                        if act.len() != c_in {
+                            act = maxpool2(&act, c, hw);
+                        }
+                        debug_assert_eq!(act.len(), c_in);
+                        let dst = unsafe { stage.cols.slice_mut(0, c_in) };
+                        dst.copy_from_slice(&act);
+                    }
+                    LayerKind::Pool { .. } => unreachable!(),
+                }
+                c = c.max(1); // silence unused on non-debug builds
+                let _ = c;
+            })
+        };
+        // Prep uses the *layer* type id space shifted: types 0..L are GEMM
+        // layers, L..2L the preps (distinct latencies).
+        let prep_id = dag.add_task_payload(
+            KernelClass::Copy,
+            stages.len() + li,
+            0.05,
+            Some(prep_payload),
+        );
+        for &p in &prev_gemm_ids {
+            dag.add_edge(p, prep_id);
+        }
+
+        // ---- GEMM TAOs ----------------------------------------------------
+        let stage_m = stages[li].spec.out_channels();
+        let n_taos = stage_m.div_ceil(block_len);
+        let mut gemm_ids = Vec::with_capacity(n_taos);
+        for bi in 0..n_taos {
+            let lo = bi * block_len;
+            let hi = ((bi + 1) * block_len).min(stage_m);
+            let payload: Arc<dyn TaoPayload> = {
+                let stages = stages.clone();
+                let weights = weights.clone();
+                let handle = handle.clone();
+                crate::coordinator::tao::payload_fn(KernelClass::Gemm, move |rank, width| {
+                    let stage = &stages[li];
+                    let (w, b) = &weights.layers[li];
+                    // Rank-slice the channel block.
+                    let rows = hi - lo;
+                    let rlo = lo + rank * rows / width;
+                    let rhi = lo + (rank + 1) * rows / width;
+                    if rlo >= rhi {
+                        return;
+                    }
+                    let (k, n) = (stage.k, stage.n);
+                    let cols = unsafe { stage.cols.slice_mut(0, k * n) };
+                    let wslice = &w[rlo * k..rhi * k];
+                    let mut out = handle
+                        .gemm(wslice, cols, rhi - rlo, k, n)
+                        .expect("PJRT gemm");
+                    for (ri, row) in out.chunks_mut(n).enumerate() {
+                        let bias = b[rlo + ri];
+                        for v in row.iter_mut() {
+                            *v += bias;
+                        }
+                    }
+                    let dst = unsafe { stage.out.slice_mut(rlo * n, rhi * n) };
+                    dst.copy_from_slice(&out);
+                })
+            };
+            let (_, k, n) = stages[li].spec.gemm_dims();
+            let flops = 2.0 * (hi - lo) as f64 * k as f64 * n as f64;
+            let id = dag.add_task_payload(
+                KernelClass::Gemm,
+                li,
+                flops / crate::vgg::REF_FLOPS,
+                Some(payload),
+            );
+            dag.add_edge(prep_id, id);
+            gemm_ids.push(id);
+        }
+        prev_gemm_ids = gemm_ids;
+    }
+    dag.finalize().expect("VGG real DAG is acyclic");
+    let logits = stages.last().unwrap().out.clone();
+    (dag, logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_matches_manual_center() {
+        // 1 channel, 3×3 input, center tap (ky=kx=1) must equal the input.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let cols = im2col_3x3(&x, 1, 3, 3);
+        let center = &cols[4 * 9..5 * 9];
+        assert_eq!(center, &x[..]);
+    }
+
+    #[test]
+    fn im2col_zero_pads_edges() {
+        let x = vec![1f32; 4]; // 1×2×2
+        let cols = im2col_3x3(&x, 1, 2, 2);
+        // Top-left tap (ky=0,kx=0) at output (0,0) reads x[-1,-1] = 0.
+        assert_eq!(cols[0], 0.0);
+        // Center tap all ones.
+        assert_eq!(&cols[4 * 4..5 * 4], &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect(); // 1×4×4
+        let out = maxpool2(&x, 1, 4);
+        assert_eq!(out, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn weights_shapes_match_manifest_convention() {
+        let w = VggWeights::synthetic(64, 1);
+        assert_eq!(w.layers.len(), 16);
+        // conv1_1: [64, 27].
+        assert_eq!(w.layers[0].0.len(), 64 * 27);
+        assert_eq!(w.layers[0].1.len(), 64);
+        // fc8: [1000, 4096].
+        assert_eq!(w.layers[15].0.len(), 1000 * 4096);
+        let flat = w.flat();
+        assert_eq!(flat.len(), 32);
+    }
+
+    #[test]
+    fn synthetic_image_deterministic() {
+        assert_eq!(synthetic_image(32, 7), synthetic_image(32, 7));
+        assert_ne!(synthetic_image(32, 7), synthetic_image(32, 8));
+    }
+}

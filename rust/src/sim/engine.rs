@@ -1,0 +1,536 @@
+//! Discrete-event execution of the XiTAO coordinator on modelled platforms.
+//!
+//! This engine runs the *same* scheduling code as the real-thread engine —
+//! the DAG/criticality logic, the PTT, and the [`Policy`] implementations
+//! are shared — but executes TAOs in **virtual time** against the
+//! [`Platform`] performance model. That is what makes the paper's
+//! experiments reproducible on this single-core build host: heterogeneity,
+//! cache/bandwidth contention and interference episodes are modelled, while
+//! every scheduling decision is made by the code under test, driven only by
+//! what the PTT observed (see DESIGN.md §Substitutions).
+//!
+//! ## Execution model
+//!
+//! Virtual cores mirror the worker loop of `coordinator::worker`:
+//! AQ first, then own WSQ (placement decision), then a random steal. A TAO
+//! placed on a width-w partition starts when all w member cores have
+//! reached it at their AQ heads (members that arrive early wait — the
+//! convoy behaviour of resource aggregation the paper relies on to prevent
+//! interference). While running, a TAO progresses at the piecewise-constant
+//! rate given by [`Platform::rate`]; every start, finish, or episode
+//! boundary re-rates all running TAOs.
+//!
+//! Deadlock-freedom: placements insert into all member AQs atomically, so
+//! any two TAOs appear in the same relative order in every AQ that holds
+//! both; FIFO fetch therefore cannot produce a circular wait.
+
+use crate::coordinator::dag::{TaoDag, TaskId};
+use crate::coordinator::metrics::{RunResult, TraceRecord};
+use crate::coordinator::ptt::Ptt;
+use crate::coordinator::scheduler::{PlaceCtx, Policy};
+use crate::platform::{Partition, Platform, RunningTask};
+use crate::util::Pcg32;
+use std::collections::VecDeque;
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimOpts {
+    /// Seed for root distribution and steal-victim selection.
+    pub seed: u64,
+    /// If set, sample the PTT entry `(type_id, core, width)` after every
+    /// simulation event — reproduces the PTT-value trace of Fig 8(a).
+    pub ptt_probe: Option<(usize, usize, usize)>,
+}
+
+impl Default for SimOpts {
+    fn default() -> Self {
+        SimOpts { seed: 0x51b, ptt_probe: None }
+    }
+}
+
+/// Result of a simulated run: the usual [`RunResult`] plus probe samples.
+#[derive(Debug, Clone)]
+pub struct SimRun {
+    pub result: RunResult,
+    /// `(virtual time, PTT value)` samples if a probe was configured.
+    pub ptt_samples: Vec<(f64, f64)>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum CoreState {
+    Idle,
+    /// Waiting at the AQ head for the rest of the partition (inst index).
+    Arrived(usize),
+    /// Executing (inst index).
+    Running(usize),
+}
+
+#[derive(Debug)]
+struct Inst {
+    task: TaskId,
+    partition: Partition,
+    critical: bool,
+    arrived: usize,
+    started: bool,
+    t_start: f64,
+    remaining_work: f64,
+    rate: f64,
+}
+
+struct Sim<'a> {
+    dag: &'a TaoDag,
+    plat: &'a Platform,
+    policy: &'a dyn Policy,
+    ptt: &'a Ptt,
+    t: f64,
+    cores: Vec<CoreState>,
+    wsqs: Vec<VecDeque<TaskId>>,
+    aqs: Vec<VecDeque<usize>>,
+    insts: Vec<Inst>,
+    running: Vec<usize>,
+    pending: Vec<usize>,
+    critical: Vec<bool>,
+    /// Critical-path membership, propagated at commit time.
+    on_cp: Vec<bool>,
+    completed: usize,
+    records: Vec<TraceRecord>,
+    rng: Pcg32,
+    probe: Option<(usize, usize, usize)>,
+    samples: Vec<(f64, f64)>,
+    /// Reusable rate-snapshot buffer (avoids per-event allocation).
+    snapshot_buf: Vec<RunningTask>,
+    /// Reusable completion buffer.
+    done_buf: Vec<usize>,
+}
+
+impl<'a> Sim<'a> {
+    fn n(&self) -> usize {
+        self.plat.topo.n_cores()
+    }
+
+    fn sample_probe(&mut self) {
+        if let Some((ty, c, w)) = self.probe {
+            self.samples.push((self.t, self.ptt.read(ty, c, w)));
+        }
+    }
+
+    /// Place `task` from the perspective of `core`, inserting the new
+    /// instance into every member AQ (atomic w.r.t. other placements —
+    /// we're single-threaded here, so trivially so).
+    fn place(&mut self, core: usize, task: TaskId) {
+        let node = &self.dag.nodes[task];
+        let ctx = PlaceCtx {
+            core,
+            type_id: node.type_id,
+            critical: self.critical[task],
+            ptt: self.ptt,
+            topo: &self.plat.topo,
+            now: self.t,
+        };
+        let partition = self.policy.place(&ctx);
+        debug_assert!(self.plat.topo.is_valid_partition(partition), "{partition:?}");
+        let idx = self.insts.len();
+        self.insts.push(Inst {
+            task,
+            partition,
+            critical: self.critical[task],
+            arrived: 0,
+            started: false,
+            t_start: 0.0,
+            remaining_work: node.class.traits().base_work * node.work_scale,
+            rate: 0.0,
+        });
+        for c in partition.cores() {
+            self.aqs[c].push_back(idx);
+        }
+    }
+
+    /// Idle cores acquire work until nothing changes.
+    ///
+    /// The scan order is re-shuffled every pass: on real hardware all idle
+    /// cores race for WSQ entries and the winner is effectively random, so a
+    /// fixed order would systematically hand work to low-numbered cores and
+    /// (on the TX2 model) silently gift the fast Denver cluster to the
+    /// homogeneous baseline.
+    fn acquire_fixpoint(&mut self) {
+        let mut order: Vec<usize> = (0..self.n()).collect();
+        loop {
+            let mut progress = false;
+            self.rng.shuffle(&mut order);
+            for oi in 0..order.len() {
+                let core = order[oi];
+                if self.cores[core] != CoreState::Idle {
+                    continue;
+                }
+                // 1. AQ head — arrive at the next committed TAO.
+                if let Some(&idx) = self.aqs[core].front() {
+                    self.aqs[core].pop_front();
+                    self.insts[idx].arrived += 1;
+                    self.cores[core] = CoreState::Arrived(idx);
+                    if self.insts[idx].arrived == self.insts[idx].partition.width {
+                        self.start_tao(idx);
+                    }
+                    progress = true;
+                    continue;
+                }
+                // 2. Own WSQ (LIFO pop like the real engine).
+                if let Some(task) = self.wsqs[core].pop_back() {
+                    self.place(core, task);
+                    progress = true;
+                    continue;
+                }
+                // 3. Random steal (FIFO from the victim) — reservoir-pick a
+                // non-empty victim without allocating.
+                let mut victim = None;
+                let mut seen = 0u32;
+                for v in 0..self.n() {
+                    if v != core && !self.wsqs[v].is_empty() {
+                        seen += 1;
+                        if self.rng.gen_range(seen) == 0 {
+                            victim = Some(v);
+                        }
+                    }
+                }
+                if let Some(v) = victim {
+                    let task = self.wsqs[v].pop_front().unwrap();
+                    self.place(core, task);
+                    progress = true;
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+    }
+
+    fn start_tao(&mut self, idx: usize) {
+        let inst = &mut self.insts[idx];
+        inst.started = true;
+        inst.t_start = self.t;
+        for c in inst.partition.cores() {
+            self.cores[c] = CoreState::Running(idx);
+        }
+        self.running.push(idx);
+    }
+
+    /// Recompute rates of all running TAOs against current contention.
+    fn rerate(&mut self) {
+        self.snapshot_buf.clear();
+        self.snapshot_buf.extend(self.running.iter().map(|&i| RunningTask {
+            class: self.dag.nodes[self.insts[i].task].class,
+            partition: self.insts[i].partition,
+        }));
+        for &i in &self.running {
+            let class = self.dag.nodes[self.insts[i].task].class;
+            let r = self.plat.rate(class, self.insts[i].partition, &self.snapshot_buf, self.t);
+            assert!(r > 0.0, "rate must be positive (class {class:?})");
+            self.insts[i].rate = r;
+        }
+    }
+
+    /// Advance virtual time to the next completion or episode boundary.
+    fn advance(&mut self) {
+        assert!(
+            !self.running.is_empty(),
+            "no running tasks but {} of {} incomplete — scheduler deadlock",
+            self.dag.len() - self.completed,
+            self.dag.len()
+        );
+        let dt_complete = self
+            .running
+            .iter()
+            .map(|&i| self.insts[i].remaining_work / self.insts[i].rate)
+            .fold(f64::INFINITY, f64::min);
+        let dt = match self.plat.episodes.next_boundary_after(self.t) {
+            Some(b) if b - self.t < dt_complete => b - self.t,
+            _ => dt_complete,
+        };
+        self.t += dt;
+        for &i in &self.running {
+            let inst = &mut self.insts[i];
+            inst.remaining_work -= inst.rate * dt;
+        }
+        // Complete everything that reached zero (tolerance for fp drift).
+        let mut done = std::mem::take(&mut self.done_buf);
+        done.clear();
+        done.extend(self.running.iter().copied().filter(|&i| self.insts[i].remaining_work <= 1e-12));
+        for &idx in &done {
+            self.complete(idx);
+        }
+        self.done_buf = done;
+    }
+
+    fn complete(&mut self, idx: usize) {
+        self.running.retain(|&i| i != idx);
+        let (task, partition, critical, t_start) = {
+            let inst = &self.insts[idx];
+            (inst.task, inst.partition, inst.critical, inst.t_start)
+        };
+        let node = &self.dag.nodes[task];
+        let exec = self.t - t_start;
+        if self.policy.uses_ptt() {
+            // Real timers jitter by a few percent (system activity, timer
+            // resolution). Modelling it matters: without noise, PTT values
+            // of identical partitions stay exactly tied and the argmin
+            // degenerates to one partition instead of wandering among
+            // near-equals like the real scheduler.
+            let noise = 1.0 + 0.05 * (self.rng.gen_f64() * 2.0 - 1.0);
+            self.ptt.update(node.type_id, partition.leader, partition.width, exec * noise);
+        }
+        self.policy.on_complete(partition.leader, partition.width, exec, self.t);
+        self.records.push(TraceRecord {
+            task,
+            class: node.class,
+            type_id: node.type_id,
+            critical,
+            partition,
+            t_start,
+            t_end: self.t,
+        });
+        for c in partition.cores() {
+            debug_assert_eq!(self.cores[c], CoreState::Running(idx));
+            self.cores[c] = CoreState::Idle;
+        }
+        // Commit-and-wake-up. Critical-path propagation: a task on the
+        // path hands it to exactly one child — the one whose criticality
+        // is one less (§2: critical tasks are the tasks *of the critical
+        // path*; the diff-by-1 check alone floods layered DAGs where every
+        // edge decrements criticality).
+        if self.on_cp[task] {
+            if let Some(c) = node.cp_child {
+                self.on_cp[c] = true;
+            }
+        }
+        for &child in &node.succs {
+            self.pending[child] -= 1;
+            if self.pending[child] == 0 {
+                self.critical[child] = self.on_cp[child];
+                self.wsqs[partition.leader].push_back(child);
+            }
+        }
+        self.completed += 1;
+        self.sample_probe();
+    }
+}
+
+/// Simulate `dag` under `policy` on `plat`, returning the trace in virtual
+/// time. Pass a warm `ptt` to chain runs (otherwise a fresh table is used).
+pub fn run_dag_sim(
+    dag: &TaoDag,
+    plat: &Platform,
+    policy: &dyn Policy,
+    ptt: Option<&Ptt>,
+    opts: &SimOpts,
+) -> SimRun {
+    assert!(dag.is_finalized(), "finalize() the DAG first");
+    assert!(!dag.is_empty(), "empty DAG");
+    let fresh;
+    let ptt = match ptt {
+        Some(p) => p,
+        None => {
+            fresh = Ptt::new(dag.n_types(), &plat.topo);
+            &fresh
+        }
+    };
+    let n = plat.topo.n_cores();
+    let mut sim = Sim {
+        dag,
+        plat,
+        policy,
+        ptt,
+        t: 0.0,
+        cores: vec![CoreState::Idle; n],
+        wsqs: (0..n).map(|_| VecDeque::new()).collect(),
+        aqs: (0..n).map(|_| VecDeque::new()).collect(),
+        insts: Vec::with_capacity(dag.len()),
+        running: Vec::new(),
+        pending: dag.nodes.iter().map(|x| x.preds.len()).collect(),
+        critical: vec![false; dag.len()],
+        on_cp: {
+            let max_crit = dag.critical_path_len(); // hoisted: O(n), not O(n²)
+            dag.nodes.iter().map(|n| n.preds.is_empty() && n.criticality == max_crit).collect()
+        },
+        completed: 0,
+        records: Vec::with_capacity(dag.len()),
+        rng: Pcg32::seeded(opts.seed),
+        probe: opts.ptt_probe,
+        samples: Vec::new(),
+        snapshot_buf: Vec::with_capacity(n),
+        done_buf: Vec::with_capacity(n),
+    };
+    // Roots distributed round-robin; initial tasks are non-critical (§3.3).
+    for (i, root) in dag.roots().into_iter().enumerate() {
+        sim.wsqs[i % n].push_back(root);
+    }
+    while sim.completed < dag.len() {
+        sim.acquire_fixpoint();
+        if sim.completed == dag.len() {
+            break;
+        }
+        sim.rerate();
+        sim.advance();
+    }
+    let mut records = sim.records;
+    records.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
+    SimRun {
+        result: RunResult {
+            policy: policy.name().to_string(),
+            platform: plat.topo.name.clone(),
+            makespan: sim.t,
+            records,
+        },
+        ptt_samples: sim.samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dag::paper_figure1_dag;
+    use crate::coordinator::scheduler::{HomogeneousWs, PerformanceBased};
+    use crate::platform::KernelClass;
+
+    fn independent_dag(n: usize, class: KernelClass) -> TaoDag {
+        let mut d = TaoDag::new();
+        for _ in 0..n {
+            d.add_task(class, class.index(), 1.0);
+        }
+        d.finalize().unwrap();
+        d
+    }
+
+    #[test]
+    fn completes_all_tasks() {
+        let plat = Platform::tx2();
+        let dag = independent_dag(100, KernelClass::MatMul);
+        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default());
+        assert_eq!(run.result.n_tasks(), 100);
+        assert!(run.result.makespan > 0.0);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let plat = Platform::tx2();
+        let dag = independent_dag(60, KernelClass::Sort);
+        let a = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default());
+        let b = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default());
+        assert_eq!(a.result.makespan, b.result.makespan);
+        assert_eq!(a.result.records.len(), b.result.records.len());
+    }
+
+    #[test]
+    fn chain_is_sequential_in_virtual_time() {
+        let plat = Platform::homogeneous(4);
+        let mut d = TaoDag::new();
+        let ids: Vec<_> = (0..5).map(|_| d.add_task(KernelClass::MatMul, 0, 1.0)).collect();
+        for w in ids.windows(2) {
+            d.add_edge(w[0], w[1]);
+        }
+        d.finalize().unwrap();
+        let run = run_dag_sim(&d, &plat, &HomogeneousWs, None, &Default::default());
+        let recs = &run.result.records;
+        for w in recs.windows(2) {
+            assert!(w[1].t_start >= w[0].t_end - 1e-12);
+        }
+        // Makespan ≈ 5 × single-task time.
+        let single = plat.ideal_exec_time(KernelClass::MatMul, Partition { leader: 0, width: 1 });
+        assert!((run.result.makespan - 5.0 * single).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_tasks_overlap() {
+        let plat = Platform::homogeneous(4);
+        let dag = independent_dag(4, KernelClass::MatMul);
+        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default());
+        // Four independent width-1 tasks on four cores: makespan ≈ one task.
+        let single = plat.ideal_exec_time(KernelClass::MatMul, Partition { leader: 0, width: 1 });
+        assert!(run.result.makespan < 1.5 * single, "{}", run.result.makespan);
+    }
+
+    #[test]
+    fn figure1_dag_critical_tagging() {
+        let plat = Platform::tx2();
+        let (dag, _) = paper_figure1_dag();
+        let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default());
+        let crit_tasks: Vec<usize> =
+            run.result.records.iter().filter(|r| r.critical).map(|r| r.task).collect();
+        // C (id 2), G (4), D (5), F (6) are woken over critical edges;
+        // roots A, B are non-critical by definition; E is not.
+        assert!(crit_tasks.contains(&2));
+        assert!(crit_tasks.contains(&4));
+        assert!(crit_tasks.contains(&5));
+        assert!(crit_tasks.contains(&6));
+        assert!(!crit_tasks.contains(&0));
+        assert!(!crit_tasks.contains(&1));
+        assert!(!crit_tasks.contains(&3));
+    }
+
+    #[test]
+    fn ptt_learns_denver_faster() {
+        let plat = Platform::tx2();
+        let dag = independent_dag(300, KernelClass::MatMul);
+        let ptt = Ptt::new(1, &plat.topo);
+        run_dag_sim(&dag, &plat, &PerformanceBased, Some(&ptt), &Default::default());
+        let denver = ptt.read(0, 0, 1);
+        let a57 = ptt.read(0, 2, 1);
+        assert!(denver > 0.0 && a57 > 0.0, "both trained");
+        assert!(denver < a57, "PTT must discover the Denver cores are faster");
+    }
+
+    #[test]
+    fn performance_policy_beats_homogeneous_on_hetero_low_parallelism() {
+        // The paper's headline: at low parallelism the PTT scheduler routes
+        // critical work to fast cores and picks useful widths.
+        let plat = Platform::tx2();
+        let mut d = TaoDag::new();
+        let ids: Vec<_> = (0..200).map(|_| d.add_task(KernelClass::MatMul, 0, 1.0)).collect();
+        for w in ids.windows(2) {
+            d.add_edge(w[0], w[1]); // parallelism = 1
+        }
+        d.finalize().unwrap();
+        let perf = run_dag_sim(&d, &plat, &PerformanceBased, None, &Default::default());
+        let homo = run_dag_sim(&d, &plat, &HomogeneousWs, None, &Default::default());
+        let speedup = homo.result.makespan / perf.result.makespan;
+        assert!(speedup > 1.3, "expected clear win, got {speedup:.2}×");
+    }
+
+    #[test]
+    fn probe_samples_are_monotone_in_time() {
+        let plat = Platform::tx2();
+        let dag = independent_dag(50, KernelClass::MatMul);
+        let opts = SimOpts { ptt_probe: Some((0, 1, 1)), ..Default::default() };
+        let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &opts);
+        assert_eq!(run.ptt_samples.len(), 50);
+        for w in run.ptt_samples.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+        }
+    }
+
+    #[test]
+    fn interference_inflates_exec_times_on_affected_cores() {
+        use crate::platform::{Episode, EpisodeSchedule};
+        let plat = Platform::homogeneous(4).with_episodes(EpisodeSchedule::new(vec![
+            Episode::interference(vec![0], 0.0, 1e9, 0.25, 0.0),
+        ]));
+        let dag = independent_dag(200, KernelClass::MatMul);
+        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default());
+        let on0: Vec<f64> = run
+            .result
+            .records
+            .iter()
+            .filter(|r| r.partition.leader == 0)
+            .map(|r| r.exec_time())
+            .collect();
+        let on1: Vec<f64> = run
+            .result
+            .records
+            .iter()
+            .filter(|r| r.partition.leader == 1)
+            .map(|r| r.exec_time())
+            .collect();
+        assert!(!on0.is_empty() && !on1.is_empty());
+        let m0 = crate::util::stats::mean(&on0);
+        let m1 = crate::util::stats::mean(&on1);
+        assert!((m0 / m1 - 4.0).abs() < 0.5, "interfered core ~4× slower, got {}", m0 / m1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Virtual-time execution substrate.
+//!
+//! Runs the coordinator's scheduling logic (shared with the real-thread
+//! engine) against the analytic platform model in `crate::platform`,
+//! which is how the paper's TX2/Haswell experiments are reproduced on a
+//! host without that hardware.
+
+pub mod engine;
+
+pub use engine::{SimOpts, SimRun, run_dag_sim};

@@ -1,0 +1,13 @@
+//! Foundation utilities: deterministic RNG, statistics, JSON, table/CSV
+//! output, and a minimal property-testing engine (offline stand-in for
+//! `proptest`).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Pcg32;
+pub use table::Table;

@@ -1,0 +1,258 @@
+//! Minimal property-based testing engine.
+//!
+//! `proptest` is not available in the offline crate set, so this module
+//! provides the subset the test suite needs: seeded case generation from
+//! closures over [`Pcg32`], greedy shrinking via a [`Shrink`] trait, and a
+//! failure report that includes the reproducing seed.
+//!
+//! Usage:
+//! ```text
+//! use xitao::util::prop::{check, Config};
+//! check(Config::default(), "addition commutes",
+//!     |rng| (rng.gen_range(1000), rng.gen_range(1000)),
+//!     |&(a, b)| {
+//!         if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//!     });
+//! ```
+
+use super::rng::Pcg32;
+use std::fmt::Debug;
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses stream `i` of this seed.
+    pub seed: u64,
+    /// Cap on shrinking steps (guards against pathological shrink graphs).
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x5eed_cafe, max_shrink_steps: 2000 }
+    }
+}
+
+impl Config {
+    pub fn cases(n: usize) -> Config {
+        Config { cases: n, ..Default::default() }
+    }
+}
+
+/// Types that can propose strictly "smaller" candidate values.
+pub trait Shrink: Sized {
+    /// Candidate simpler values; must not include `self` (or shrinking loops).
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        shrink_int(*self as u64).into_iter().map(|v| v as u32).collect()
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        shrink_int(*self)
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        shrink_int(*self as u64).into_iter().map(|v| v as usize).collect()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            if self.fract() != 0.0 {
+                out.push(self.trunc());
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for bool {
+    fn shrink(&self) -> Vec<Self> {
+        if *self {
+            vec![false]
+        } else {
+            vec![]
+        }
+    }
+}
+
+fn shrink_int(v: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if v == 0 {
+        return out;
+    }
+    out.push(0);
+    out.push(v / 2);
+    if v > 1 {
+        out.push(v - 1);
+    }
+    out.dedup();
+    out.retain(|&c| c != v);
+    out
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Remove halves, then single elements, then shrink one element.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            for i in 0..self.len() {
+                for cand in self[i].shrink() {
+                    let mut v = self.clone();
+                    v[i] = cand;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone, C: Shrink + Clone> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+/// Run `prop` against `cases` random values from `gen`.
+///
+/// On failure, greedily shrinks the counterexample and panics with the
+/// minimal case, the original case, the failure message and the seed.
+pub fn check<T, G, P>(cfg: Config, name: &str, gen: G, prop: P)
+where
+    T: Shrink + Clone + Debug,
+    G: Fn(&mut Pcg32) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case_idx in 0..cfg.cases {
+        let mut rng = Pcg32::new(cfg.seed, case_idx as u64);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_msg = first_msg.clone();
+            let mut steps = 0;
+            'outer: loop {
+                for cand in best.shrink() {
+                    steps += 1;
+                    if steps > cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case_idx}, seed {:#x})\n  \
+                 original: {input:?}\n  original error: {first_msg}\n  \
+                 shrunk:   {best:?}\n  shrunk error:   {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Boolean-property convenience wrapper.
+pub fn check_bool<T, G, P>(cfg: Config, name: &str, gen: G, prop: P)
+where
+    T: Shrink + Clone + Debug,
+    G: Fn(&mut Pcg32) -> T,
+    P: Fn(&T) -> bool,
+{
+    check(cfg, name, gen, |t| if prop(t) { Ok(()) } else { Err("returned false".into()) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_clean() {
+        check(Config::cases(64), "reverse twice is identity",
+            |rng| (0..rng.gen_usize(0, 20)).map(|_| rng.gen_range(100)).collect::<Vec<u32>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v { Ok(()) } else { Err("mismatch".into()) }
+            });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            check(Config::cases(256), "all values below 10",
+                |rng| rng.gen_range(1000),
+                |&v| if v < 10 { Ok(()) } else { Err(format!("{v}")) });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy integer shrinking should land on exactly 10.
+        assert!(msg.contains("shrunk:   10"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let v: Vec<u32> = vec![5, 6, 7, 8];
+        assert!(v.shrink().iter().any(|c| c.len() < 4));
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t = (4u32, 6u32);
+        let cands = t.shrink();
+        assert!(cands.iter().any(|&(a, _)| a < 4));
+        assert!(cands.iter().any(|&(_, b)| b < 6));
+    }
+
+    #[test]
+    fn shrink_terminates_on_zero() {
+        assert!(0u64.shrink().is_empty());
+        assert!(!5u64.shrink().contains(&5));
+    }
+}

@@ -1,0 +1,264 @@
+//! VGG-16 as a TAO-DAG (§4.3).
+//!
+//! Following the paper's port of Darknet's VGG-16: every convolutional and
+//! fully-connected layer is expressed as GEMM (conv via im2col), the work
+//! inside a layer is partitioned across TAOs by output-channel blocks
+//! (`block_len` channels per TAO), and consecutive layers are separated by
+//! a barrier ("each layer is dependent on the previous layer, we therefore
+//! synchronize all TAOs at the end of each layer") — realised as dense
+//! edges from every TAO of layer *l* to every TAO of layer *l+1*.
+//!
+//! Two levels of parallelism result: TAO-level (channel blocks within a
+//! layer) and intra-TAO (the width the scheduler picks at runtime).
+//!
+//! Each layer gets its own PTT type id: layer shapes differ wildly, so
+//! sharing latency estimates across layers would poison the table.
+
+use crate::coordinator::dag::TaoDag;
+use crate::coordinator::tao::TaoPayload;
+use crate::platform::KernelClass;
+use std::sync::Arc;
+
+/// One VGG-16 layer in GEMM form.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 3×3 convolution: GEMM of M=c_out, K=c_in·9, N=h·w.
+    Conv { c_in: usize, c_out: usize, hw: usize },
+    /// 2×2 max-pool (streaming pass over c·hw·4 values).
+    Pool { c: usize, hw_out: usize },
+    /// Fully connected: GEMM of M=c_out, K=c_in, N=1.
+    Fc { c_in: usize, c_out: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+impl LayerSpec {
+    /// GEMM dimensions `(m, k, n)`; pools report a pseudo-GEMM of their
+    /// touched elements for work accounting.
+    pub fn gemm_dims(&self) -> (usize, usize, usize) {
+        match &self.kind {
+            LayerKind::Conv { c_in, c_out, hw } => (*c_out, c_in * 9, hw * hw),
+            LayerKind::Pool { c, hw_out } => (*c, 4, hw_out * hw_out),
+            LayerKind::Fc { c_in, c_out } => (*c_out, *c_in, 1),
+        }
+    }
+
+    pub fn flops(&self) -> f64 {
+        let (m, k, n) = self.gemm_dims();
+        2.0 * m as f64 * k as f64 * n as f64
+    }
+
+    /// Output channels — the axis we block across TAOs.
+    pub fn out_channels(&self) -> usize {
+        match &self.kind {
+            LayerKind::Conv { c_out, .. } => *c_out,
+            LayerKind::Pool { c, .. } => *c,
+            LayerKind::Fc { c_out, .. } => *c_out,
+        }
+    }
+}
+
+/// Model configuration.
+#[derive(Debug, Clone)]
+pub struct VggConfig {
+    /// Input spatial size (224 in the paper; smaller for real-mode runs).
+    pub input_hw: usize,
+    /// Output channels per TAO ("the parameter block length refers to the
+    /// number of channels assigned to each TAO").
+    pub block_len: usize,
+    /// Number of consecutive inferences chained into one DAG (the paper's
+    /// scalability study predicts repeatedly; more repeats = more PTT
+    /// training data).
+    pub repeats: usize,
+}
+
+impl Default for VggConfig {
+    fn default() -> Self {
+        VggConfig { input_hw: 224, block_len: 64, repeats: 1 }
+    }
+}
+
+/// Reference FLOP count that corresponds to one `KernelClass::Gemm` work
+/// unit (`base_work`) in the platform model — i.e. the modelled reference
+/// core sustains `REF_FLOPS / base_work` FLOP/s on GEMM.
+pub const REF_FLOPS: f64 = 200.0e6;
+
+/// The 16 weight layers of VGG-16 (configuration D) plus pools, scaled to
+/// `input_hw`.
+pub fn vgg16_layers(input_hw: usize) -> Vec<LayerSpec> {
+    assert!(input_hw >= 32 && input_hw % 32 == 0, "input must be a multiple of 32");
+    let mut layers = Vec::new();
+    let mut hw = input_hw;
+    let mut c_in = 3;
+    let blocks: &[(usize, usize)] = &[(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    for (bi, &(c_out, reps)) in blocks.iter().enumerate() {
+        for r in 0..reps {
+            layers.push(LayerSpec {
+                name: format!("conv{}_{}-{}", bi + 1, r + 1, c_out),
+                kind: LayerKind::Conv { c_in, c_out, hw },
+            });
+            c_in = c_out;
+        }
+        hw /= 2;
+        layers.push(LayerSpec {
+            name: format!("pool{}", bi + 1),
+            kind: LayerKind::Pool { c: c_in, hw_out: hw },
+        });
+    }
+    let flat = c_in * hw * hw;
+    layers.push(LayerSpec { name: "fc6-4096".into(), kind: LayerKind::Fc { c_in: flat, c_out: 4096 } });
+    layers.push(LayerSpec { name: "fc7-4096".into(), kind: LayerKind::Fc { c_in: 4096, c_out: 4096 } });
+    layers.push(LayerSpec { name: "fc8-1000".into(), kind: LayerKind::Fc { c_in: 4096, c_out: 1000 } });
+    layers
+}
+
+/// Total model FLOPs at `input_hw` (sanity anchor: ~15.5 GFLOP at 224).
+pub fn total_flops(input_hw: usize) -> f64 {
+    vgg16_layers(input_hw).iter().map(|l| l.flops()).sum()
+}
+
+/// A factory producing the real payload for one TAO: layer + channel range.
+pub type PayloadFactory<'a> =
+    &'a dyn Fn(&LayerSpec, std::ops::Range<usize>) -> Arc<dyn TaoPayload>;
+
+/// Build the VGG-16 TAO-DAG.
+///
+/// Sim-only when `factory` is `None`; each TAO's `work_scale` is its GEMM
+/// FLOPs over [`REF_FLOPS`]. Layer *i* uses PTT type id *i* (repeats share
+/// types — that is the point: later inferences reuse what the PTT learned
+/// on earlier ones).
+pub fn build_dag(cfg: &VggConfig, factory: Option<PayloadFactory<'_>>) -> TaoDag {
+    assert!(cfg.repeats >= 1);
+    let layers = vgg16_layers(cfg.input_hw);
+    let mut dag = TaoDag::new();
+    let mut prev_layer: Vec<usize> = Vec::new();
+    for _rep in 0..cfg.repeats {
+        for (li, layer) in layers.iter().enumerate() {
+            let out_c = layer.out_channels();
+            let n_taos = out_c.div_ceil(cfg.block_len);
+            let (_, k, n) = layer.gemm_dims();
+            let mut this_layer = Vec::with_capacity(n_taos);
+            for b in 0..n_taos {
+                let lo = b * cfg.block_len;
+                let hi = ((b + 1) * cfg.block_len).min(out_c);
+                let block_flops = 2.0 * (hi - lo) as f64 * k as f64 * n as f64;
+                let class = match layer.kind {
+                    LayerKind::Pool { .. } => KernelClass::Copy,
+                    _ => KernelClass::Gemm,
+                };
+                let payload = factory.map(|f| f(layer, lo..hi));
+                let id = dag.add_task_payload(
+                    class,
+                    li, // PTT type per layer
+                    block_flops / REF_FLOPS,
+                    payload,
+                );
+                this_layer.push(id);
+            }
+            // Layer barrier: dense edges from the previous layer.
+            for &p in &prev_layer {
+                for &t in &this_layer {
+                    dag.add_edge(p, t);
+                }
+            }
+            prev_layer = this_layer;
+        }
+    }
+    dag.finalize().expect("layered VGG DAG is acyclic");
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_table_matches_vgg16_d() {
+        let layers = vgg16_layers(224);
+        let convs = layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv { .. })).count();
+        let fcs = layers.iter().filter(|l| matches!(l.kind, LayerKind::Fc { .. })).count();
+        let pools = layers.iter().filter(|l| matches!(l.kind, LayerKind::Pool { .. })).count();
+        assert_eq!(convs, 13);
+        assert_eq!(fcs, 3);
+        assert_eq!(pools, 5);
+        // 13 conv + 3 fc = 16 weight layers.
+    }
+
+    #[test]
+    fn total_flops_anchor() {
+        // VGG-16 forward ≈ 15.5 GFLOP at 224² (2 FLOP per MAC).
+        let g = total_flops(224) / 1e9;
+        assert!((28.0..34.0).contains(&g), "got {g} GFLOP"); // 2×MACs ≈ 31G
+    }
+
+    #[test]
+    fn fc6_input_dimension() {
+        let layers = vgg16_layers(224);
+        let fc6 = layers.iter().find(|l| l.name.starts_with("fc6")).unwrap();
+        match fc6.kind {
+            LayerKind::Fc { c_in, c_out } => {
+                assert_eq!(c_in, 512 * 7 * 7); // 25088
+                assert_eq!(c_out, 4096);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn dag_layer_structure() {
+        let cfg = VggConfig { input_hw: 224, block_len: 64, repeats: 1 };
+        let dag = build_dag(&cfg, None);
+        // conv1: 64/64 = 1 TAO; conv3 block: 256/64 = 4; conv5: 512/64 = 8.
+        // Total TAOs: conv 1+1+2+2+4+4+4+8+8+8+8+8+8=66, pools 1+2+4+8+8=23,
+        // fc 64+64+16=144. (fc6: 4096/64=64 etc, fc8: 1000/64=16)
+        assert_eq!(dag.len(), 66 + 23 + 144);
+        // Critical path = number of layers (barriers serialise layers).
+        assert_eq!(dag.critical_path_len() as usize, vgg16_layers(224).len());
+    }
+
+    #[test]
+    fn repeats_extend_chain() {
+        let cfg = VggConfig { input_hw: 224, block_len: 64, repeats: 3 };
+        let dag = build_dag(&cfg, None);
+        let single = build_dag(&VggConfig { repeats: 1, ..cfg.clone() }, None);
+        assert_eq!(dag.len(), 3 * single.len());
+        assert_eq!(dag.critical_path_len(), 3 * single.critical_path_len());
+    }
+
+    #[test]
+    fn work_scale_proportional_to_flops() {
+        let cfg = VggConfig::default();
+        let dag = build_dag(&cfg, None);
+        let total_work: f64 = dag.nodes.iter().map(|n| n.work_scale).sum::<f64>() * REF_FLOPS;
+        let expect = total_flops(224);
+        let ratio = total_work / expect;
+        assert!((0.95..1.05).contains(&ratio), "work {total_work:.3e} vs {expect:.3e}");
+    }
+
+    #[test]
+    fn type_ids_are_per_layer() {
+        let dag = build_dag(&VggConfig::default(), None);
+        let n_layers = vgg16_layers(224).len();
+        assert_eq!(dag.n_types(), n_layers);
+    }
+
+    #[test]
+    fn small_input_scales() {
+        let layers = vgg16_layers(64);
+        let fc6 = layers.iter().find(|l| l.name.starts_with("fc6")).unwrap();
+        match fc6.kind {
+            LayerKind::Fc { c_in, .. } => assert_eq!(c_in, 512 * 2 * 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_multiple_input() {
+        vgg16_layers(100);
+    }
+}

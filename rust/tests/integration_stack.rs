@@ -1,0 +1,224 @@
+//! Cross-module integration: generator → engines → metrics → figures.
+//!
+//! These tests exercise whole slices of the stack (no PJRT — see
+//! `integration_vgg.rs` for that) and pin the paper's qualitative claims
+//! so regressions in any module surface as claim failures.
+
+use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use xitao::bench::{BenchOpts, figures};
+use xitao::coordinator::scheduler::policy_by_name;
+use xitao::coordinator::{PerformanceBased, RealEngineOpts, run_dag_real};
+use xitao::dag_gen::{DagParams, generate};
+use xitao::kernels::KernelSizes;
+use xitao::platform::{Episode, EpisodeSchedule, KernelClass, Platform};
+use xitao::sim::{SimOpts, run_dag_sim};
+use xitao::vgg::{VggConfig, build_dag as build_vgg_dag};
+
+#[test]
+fn real_engine_runs_generated_dag_with_kernel_payloads() {
+    let params = DagParams::mix(60, 4.0, 3).with_payloads(KernelSizes::small());
+    let (dag, _) = generate(&params);
+    let topo = xitao::platform::Topology::homogeneous(3);
+    for policy_name in ["performance", "homogeneous", "cats", "dheft"] {
+        let policy = policy_by_name(policy_name, 3).unwrap();
+        let res = run_dag_real(&dag, &topo, policy.as_ref(), None, &RealEngineOpts::default());
+        assert_eq!(res.n_tasks(), 60, "{policy_name}");
+        assert!(res.makespan > 0.0);
+    }
+}
+
+#[test]
+fn real_engine_executes_payload_work_correctly_under_scheduling() {
+    // A DAG of counting payloads with enforced dependencies: the counter
+    // sequence proves ordering AND exactly-once-per-rank execution.
+    let counter = Arc::new(AtomicUsize::new(0));
+    let mut dag = xitao::coordinator::TaoDag::new();
+    let mut prev: Option<usize> = None;
+    for i in 0..20 {
+        let c = counter.clone();
+        let id = dag.add_task_payload(
+            KernelClass::MatMul,
+            0,
+            1.0,
+            Some(xitao::coordinator::payload_fn(KernelClass::MatMul, move |rank, _w| {
+                if rank == 0 {
+                    let v = c.fetch_add(1, Ordering::SeqCst);
+                    assert_eq!(v, i, "chain order violated");
+                }
+            })),
+        );
+        if let Some(p) = prev {
+            dag.add_edge(p, id);
+        }
+        prev = Some(id);
+    }
+    dag.finalize().unwrap();
+    let topo = xitao::platform::Topology::homogeneous(2);
+    run_dag_real(&dag, &topo, &PerformanceBased, None, &RealEngineOpts::default());
+    assert_eq!(counter.load(Ordering::SeqCst), 20);
+}
+
+#[test]
+fn sim_and_real_agree_on_task_accounting() {
+    let params = DagParams::mix(80, 8.0, 9);
+    let (dag, _) = generate(&params);
+    let plat = Platform::homogeneous(4);
+    let sim = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+    let (dag2, _) = generate(&params.clone().with_payloads(KernelSizes::small()));
+    let real = run_dag_real(&dag2, &plat.topo, &PerformanceBased, None, &RealEngineOpts::default());
+    assert_eq!(sim.result.n_tasks(), real.n_tasks());
+    // Same DAG shape ⇒ same criticality structure: identical sets of
+    // critical task ids.
+    let crit_sim: std::collections::BTreeSet<usize> =
+        sim.result.records.iter().filter(|r| r.critical).map(|r| r.task).collect();
+    let crit_real: std::collections::BTreeSet<usize> =
+        real.records.iter().filter(|r| r.critical).map(|r| r.task).collect();
+    assert_eq!(crit_sim, crit_real, "criticality must be engine-independent");
+}
+
+// ---------------------------------------------------------------------------
+// Paper-claim pins (the figures' qualitative shapes, small configs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn claim_low_parallelism_speedup_on_tx2() {
+    // §5.1/Fig 7: clear speedup at parallelism 1 for every kernel.
+    let plat = Platform::tx2();
+    for class in [KernelClass::MatMul, KernelClass::Sort, KernelClass::Copy] {
+        let (dag, _) = generate(&DagParams::single(class, 600, 1.0, 17));
+        let perf = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+        let homo = run_dag_sim(
+            &dag,
+            &plat,
+            &xitao::coordinator::HomogeneousWs,
+            None,
+            &SimOpts::default(),
+        );
+        let speedup = homo.result.makespan / perf.result.makespan;
+        assert!(speedup > 1.5, "{class:?}: {speedup:.2}× (paper: 2.2–3.3×)");
+    }
+}
+
+#[test]
+fn claim_speedup_decays_with_parallelism() {
+    // Fig 7's monotone trend: par=1 speedup well above par=16 speedup.
+    let plat = Platform::tx2();
+    let sp = |par: f64| {
+        let (dag, _) = generate(&DagParams::mix(900, par, 23));
+        let perf = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+        let homo = run_dag_sim(
+            &dag,
+            &plat,
+            &xitao::coordinator::HomogeneousWs,
+            None,
+            &SimOpts::default(),
+        );
+        homo.result.makespan / perf.result.makespan
+    };
+    let s1 = sp(1.0);
+    let s16 = sp(16.0);
+    assert!(s1 > s16, "decay violated: {s1:.2} vs {s16:.2}");
+    assert!(s16 > 0.85, "perf-based should not lose badly at high par: {s16:.2}");
+}
+
+#[test]
+fn claim_interference_redirects_critical_tasks() {
+    // §5.3: during an interference episode, critical tasks leave the
+    // victim cores; non-critical tasks keep running there.
+    let victims = vec![0usize, 1];
+    let plat = Platform::haswell20().with_episodes(EpisodeSchedule::new(vec![
+        Episode::interference(victims.clone(), 0.02, 1e9, 0.3, 0.0),
+    ]));
+    let (dag, _) = generate(&DagParams::mix(2500, 16.0, 29));
+    let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+    let late_crit: Vec<_> = run
+        .result
+        .records
+        .iter()
+        .filter(|r| r.critical && r.t_start > 0.1 * run.result.makespan + 0.02)
+        .collect();
+    assert!(!late_crit.is_empty());
+    let on_victims = late_crit
+        .iter()
+        .filter(|r| r.partition.cores().any(|c| victims.contains(&c)))
+        .count();
+    let share = on_victims as f64 / late_crit.len() as f64;
+    assert!(share < 0.05, "critical tasks still on victims: {share:.2}");
+    // Non-critical tasks continue to use the victim cores (keeps the PTT
+    // fresh — the paper's point about recovery).
+    let noncrit_on_victims = run
+        .result
+        .records
+        .iter()
+        .filter(|r| !r.critical && r.partition.cores().any(|c| victims.contains(&c)))
+        .count();
+    assert!(noncrit_on_victims > 0);
+}
+
+#[test]
+fn claim_vgg_scales_and_uses_wide_taos() {
+    // Fig 9/10 in miniature: 8 threads beat 2 threads clearly, and the
+    // width histogram contains widths > 1.
+    let dag = build_vgg_dag(&VggConfig { input_hw: 224, block_len: 8, repeats: 1 }, None);
+    let t2 = run_dag_sim(&dag, &Platform::homogeneous(2), &PerformanceBased, None, &SimOpts::default());
+    let t8 = run_dag_sim(&dag, &Platform::homogeneous(8), &PerformanceBased, None, &SimOpts::default());
+    let speedup = t2.result.makespan / t8.result.makespan;
+    assert!(speedup > 2.0, "8 vs 2 threads: {speedup:.2}×");
+    let widths = t8.result.width_histogram();
+    assert!(widths.keys().any(|&w| w > 1), "no wide TAOs chosen: {widths:?}");
+}
+
+#[test]
+fn claim_dvfs_is_learned_without_being_told() {
+    // Dynamic heterogeneity of the DVFS kind (§1): the PTT discovers
+    // throttled cores purely from latency.
+    let plat = Platform::homogeneous(6).with_episodes(EpisodeSchedule::new(vec![
+        Episode::dvfs(vec![0, 1, 2], 0.0, 1e9, 0.3),
+    ]));
+    let (dag, _) = generate(&DagParams::single(KernelClass::MatMul, 800, 1.0, 31));
+    let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+    // Critical chain should converge to the un-throttled cores 3-5.
+    let late: Vec<_> = run
+        .result
+        .records
+        .iter()
+        .filter(|r| r.critical && r.t_start > 0.3 * run.result.makespan)
+        .collect();
+    let on_throttled = late.iter().filter(|r| r.partition.leader < 3).count();
+    assert!(
+        (on_throttled as f64) < 0.1 * late.len() as f64,
+        "{on_throttled}/{} critical tasks on throttled cores",
+        late.len()
+    );
+}
+
+#[test]
+fn figures_quick_mode_end_to_end() {
+    // Every figure regenerator runs and produces well-formed tables.
+    let opts = BenchOpts::quick();
+    assert_eq!(figures::fig5(&opts).len(), 3);
+    assert_eq!(figures::fig6(&opts).len(), 4);
+    assert_eq!(figures::fig7(&opts).len(), 1);
+    assert_eq!(figures::fig8(&opts).len(), 3);
+    assert_eq!(figures::fig9(&opts).len(), 1);
+    assert_eq!(figures::fig10(&opts).len(), 1);
+}
+
+#[test]
+fn baselines_are_competitive_but_not_better_overall() {
+    // Ablation sanity: on the TX2 mix at low parallelism, the performance
+    // policy should be at least as good as CATS-like and dHEFT-like
+    // (which lack elastic widths).
+    let plat = Platform::tx2();
+    let (dag, _) = generate(&DagParams::mix(900, 2.0, 37));
+    let mk = |name: &str| {
+        let p = policy_by_name(name, 6).unwrap();
+        run_dag_sim(&dag, &plat, p.as_ref(), None, &SimOpts::default()).result.makespan
+    };
+    let perf = mk("performance");
+    let cats = mk("cats");
+    let dheft = mk("dheft");
+    assert!(perf <= cats * 1.05, "perf {perf:.4} vs cats {cats:.4}");
+    assert!(perf <= dheft * 1.05, "perf {perf:.4} vs dheft {dheft:.4}");
+}

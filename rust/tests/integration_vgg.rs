@@ -1,0 +1,92 @@
+//! PJRT integration: the AOT artifacts under the Rust runtime.
+//!
+//! Requires `make artifacts` (tests no-op with a notice when the artifact
+//! directory is absent, so `cargo test` stays green on a fresh checkout).
+
+use std::path::Path;
+use std::sync::Arc;
+use xitao::coordinator::{PerformanceBased, RealEngineOpts, run_dag_real};
+use xitao::platform::Topology;
+use xitao::runtime::{PjrtService, VggWeights, build_real_dag, pipeline_infer, synthetic_image};
+
+fn service() -> Option<PjrtService> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping PJRT test: run `make artifacts`");
+        return None;
+    }
+    Some(PjrtService::start(Path::new("artifacts")).expect("service start"))
+}
+
+#[test]
+fn gemm_matches_cpu_reference_across_shapes() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    let mut rng = xitao::util::Pcg32::seeded(5);
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (13, 77, 5), (128, 128, 128), (200, 64, 33)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gen_f64() as f32 - 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gen_f64() as f32 - 0.5).collect();
+        let got = h.gemm(&a, &b, m, k, n).unwrap();
+        let mut want = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    want[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-2, "({m},{k},{n}): {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn whole_model_and_pipeline_agree() {
+    let Some(svc) = service() else { return };
+    let spec = svc.manifest().vgg.clone().expect("vgg artifact");
+    let hw = spec.input_hw;
+    let weights = Arc::new(VggWeights::synthetic(hw, 3));
+    let image = synthetic_image(hw, 4);
+    let h = svc.handle();
+    h.vgg_load(weights.flat()).unwrap();
+    let whole = h.vgg_infer(&image).unwrap();
+    let pipe = pipeline_infer(&weights, &image, &h).unwrap();
+    assert_eq!(whole.len(), 1000);
+    let scale = whole.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);
+    for (i, (a, b)) in whole.iter().zip(&pipe).enumerate() {
+        assert!(
+            (a - b).abs() / scale < 1e-3,
+            "logit {i}: whole {a} vs pipeline {b}"
+        );
+    }
+}
+
+#[test]
+fn tao_dag_inference_matches_pipeline() {
+    let Some(svc) = service() else { return };
+    let spec = svc.manifest().vgg.clone().expect("vgg artifact");
+    let hw = spec.input_hw;
+    let weights = Arc::new(VggWeights::synthetic(hw, 7));
+    let image = synthetic_image(hw, 8);
+    let h = svc.handle();
+    let pipe = pipeline_infer(&weights, &image, &h).unwrap();
+    let (dag, out) = build_real_dag(weights.clone(), image, h, 128);
+    let topo = Topology::homogeneous(2);
+    let res = run_dag_real(&dag, &topo, &PerformanceBased, None, &RealEngineOpts::default());
+    assert_eq!(res.n_tasks(), dag.len());
+    let logits = out.snapshot();
+    let scale = pipe.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);
+    for (i, (a, b)) in pipe.iter().zip(&logits).enumerate() {
+        assert!((a - b).abs() / scale < 1e-3, "logit {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn vgg_infer_rejects_bad_inputs() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    // Infer before load.
+    assert!(h.vgg_infer(&[0.0; 3]).is_err());
+    // Wrong parameter count.
+    assert!(h.vgg_load(vec![vec![0.0; 4]]).is_err());
+}

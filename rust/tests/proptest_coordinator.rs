@@ -1,0 +1,265 @@
+//! Property-based tests over coordinator invariants (the offline stand-in
+//! for proptest lives in `xitao::util::prop`).
+//!
+//! Each property generates random DAG shapes / parameters from a seeded
+//! PCG stream and checks an invariant that must hold for *every* input:
+//! criticality = longest path, exactly-once execution, placement validity,
+//! PTT value bounds, generator soundness.
+
+use xitao::coordinator::dag::TaoDag;
+use xitao::coordinator::ptt::Ptt;
+use xitao::coordinator::scheduler::policy_by_name;
+use xitao::dag_gen::{DagParams, generate};
+use xitao::platform::{KernelClass, Platform, Topology};
+use xitao::sim::{SimOpts, run_dag_sim};
+use xitao::util::prop::{Config, check};
+use xitao::util::rng::Pcg32;
+
+/// Build a random DAG directly (independent of dag_gen, so the two
+/// generators cross-check each other): `n` nodes, edges only forward.
+fn random_dag(rng: &mut Pcg32, n: usize) -> TaoDag {
+    let mut dag = TaoDag::new();
+    for _ in 0..n {
+        let class = *rng.choose(&KernelClass::ALL);
+        dag.add_task(class, class.index(), 1.0 + rng.gen_f64());
+    }
+    for to in 1..n {
+        let n_edges = rng.gen_usize(0, 3.min(to) + 1);
+        for _ in 0..n_edges {
+            let from = rng.gen_usize(0, to);
+            if from != to {
+                dag.add_edge(from, to);
+            }
+        }
+    }
+    dag.finalize().expect("forward edges are acyclic");
+    dag
+}
+
+/// Longest path via independent DP (forward direction).
+fn longest_path(dag: &TaoDag) -> u32 {
+    let order = dag.topo_order().unwrap();
+    let mut depth = vec![1u32; dag.len()];
+    for &u in &order {
+        for &v in &dag.nodes[u].succs {
+            depth[v] = depth[v].max(depth[u] + 1);
+        }
+    }
+    depth.into_iter().max().unwrap_or(0)
+}
+
+#[test]
+fn criticality_equals_longest_path() {
+    check(Config::cases(60), "max criticality == longest path",
+        |rng| rng.gen_usize(1, 60) as u64,
+        |&n| {
+            let mut rng = Pcg32::seeded(n * 31 + 7);
+            let dag = random_dag(&mut rng, n as usize);
+            let want = longest_path(&dag);
+            if dag.critical_path_len() == want {
+                Ok(())
+            } else {
+                Err(format!("crit {} vs dp {}", dag.critical_path_len(), want))
+            }
+        });
+}
+
+#[test]
+fn critical_path_walk_is_consistent() {
+    check(Config::cases(40), "critical_path() decrements by one each hop",
+        |rng| rng.gen_usize(2, 50) as u64,
+        |&n| {
+            let mut rng = Pcg32::seeded(n ^ 0xabc);
+            let dag = random_dag(&mut rng, n as usize);
+            let path = dag.critical_path();
+            if path.len() as u32 != dag.critical_path_len() {
+                return Err(format!("path len {} vs cp {}", path.len(), dag.critical_path_len()));
+            }
+            for w in path.windows(2) {
+                if dag.nodes[w[0]].criticality != dag.nodes[w[1]].criticality + 1 {
+                    return Err(format!("non-unit step {w:?}"));
+                }
+                if !dag.nodes[w[0]].succs.contains(&w[1]) {
+                    return Err(format!("{} → {} is not an edge", w[0], w[1]));
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn sim_executes_every_task_exactly_once() {
+    check(Config::cases(30), "sim trace covers each task once",
+        |rng| (rng.gen_usize(1, 120) as u64, rng.next_u64() % 4),
+        |&(n, plat_idx)| {
+            let mut rng = Pcg32::seeded(n.wrapping_mul(97) ^ plat_idx);
+            let dag = random_dag(&mut rng, n as usize);
+            let plat = match plat_idx {
+                0 => Platform::tx2(),
+                1 => Platform::haswell20(),
+                2 => Platform::homogeneous(3),
+                _ => Platform::homogeneous(8),
+            };
+            let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
+            let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default());
+            let mut seen = vec![0u32; dag.len()];
+            for r in &run.result.records {
+                seen[r.task] += 1;
+            }
+            if seen.iter().all(|&c| c == 1) {
+                Ok(())
+            } else {
+                Err(format!("execution counts {seen:?}"))
+            }
+        });
+}
+
+#[test]
+fn sim_placements_are_always_valid_partitions() {
+    check(Config::cases(30), "every placement is a valid partition",
+        |rng| (rng.gen_usize(1, 100) as u64, rng.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Pcg32::seeded(seed);
+            let dag = random_dag(&mut rng, n as usize);
+            let plat = Platform::tx2();
+            for policy_name in ["performance", "homogeneous", "cats", "dheft"] {
+                let policy = policy_by_name(policy_name, 6).unwrap();
+                let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts { seed, ..Default::default() });
+                for r in &run.result.records {
+                    if !plat.topo.is_valid_partition(r.partition) {
+                        return Err(format!("{policy_name}: invalid {:?}", r.partition));
+                    }
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn sim_respects_dependencies() {
+    check(Config::cases(30), "child never starts before parent ends",
+        |rng| rng.gen_usize(2, 80) as u64,
+        |&n| {
+            let mut rng = Pcg32::seeded(n * 13 + 1);
+            let dag = random_dag(&mut rng, n as usize);
+            let plat = Platform::tx2();
+            let policy = policy_by_name("performance", 6).unwrap();
+            let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default());
+            let mut end = vec![0.0f64; dag.len()];
+            let mut start = vec![0.0f64; dag.len()];
+            for r in &run.result.records {
+                end[r.task] = r.t_end;
+                start[r.task] = r.t_start;
+            }
+            for node in &dag.nodes {
+                for &s in &node.succs {
+                    if start[s] < end[node.id] - 1e-9 {
+                        return Err(format!("{} starts {} before parent {} ends {}", s, start[s], node.id, end[node.id]));
+                    }
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn makespan_at_least_critical_path_work() {
+    // Lower bound: the critical path's work at the fastest conceivable
+    // rate (fastest core × max width speedup with boost).
+    check(Config::cases(25), "makespan ≥ critical-path lower bound",
+        |rng| rng.gen_usize(2, 80) as u64,
+        |&n| {
+            let mut rng = Pcg32::seeded(n ^ 0x5151);
+            let dag = random_dag(&mut rng, n as usize);
+            let plat = Platform::homogeneous(4);
+            let policy = policy_by_name("performance", 4).unwrap();
+            let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default());
+            let path = dag.critical_path();
+            let mut bound = 0.0;
+            for &t in &path {
+                let node = &dag.nodes[t];
+                let tr = node.class.traits();
+                let best_speedup = node.class.width_speedup(4);
+                bound += tr.base_work * node.work_scale / best_speedup;
+            }
+            if run.result.makespan >= bound - 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("makespan {} < bound {}", run.result.makespan, bound))
+            }
+        });
+}
+
+#[test]
+fn ptt_values_bounded_by_observed_samples() {
+    check(Config::cases(100), "moving average stays within sample range",
+        |rng| {
+            let k = rng.gen_usize(1, 30);
+            (0..k).map(|_| rng.gen_f64_range(0.001, 10.0)).collect::<Vec<f64>>()
+        },
+        |samples| {
+            let topo = Topology::homogeneous(2);
+            let ptt = Ptt::new(1, &topo);
+            for &s in samples {
+                ptt.update(0, 0, 1, s);
+            }
+            let v = ptt.read(0, 0, 1);
+            let lo = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = samples.iter().cloned().fold(0.0f64, f64::max);
+            if v >= lo - 1e-12 && v <= hi + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("value {v} outside [{lo}, {hi}]"))
+            }
+        });
+}
+
+#[test]
+fn generator_respects_counts_and_acyclicity() {
+    check(Config::cases(25), "dag_gen sound for arbitrary params",
+        |rng| {
+            (
+                rng.gen_usize(3, 400) as u64,
+                rng.gen_usize(1, 20) as u64,
+                rng.next_u64(),
+            )
+        },
+        |&(total, par, seed)| {
+            let params = DagParams::mix(total as usize, par as f64, seed);
+            let (dag, stats) = generate(&params);
+            if dag.len() != total as usize {
+                return Err(format!("{} tasks vs requested {total}", dag.len()));
+            }
+            dag.topo_order().map_err(|e| e)?;
+            if stats.parallelism <= 0.0 {
+                return Err("non-positive parallelism".into());
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn enclosing_partition_always_contains_core() {
+    check(Config::cases(200), "enclosing partition contains its core",
+        |rng| (rng.gen_usize(0, 20) as u64, rng.gen_usize(1, 5) as u64),
+        |&(core_raw, w_exp)| {
+            let topo = Topology::from_clusters(
+                "mixed",
+                &[(4, "a", 1 << 20), (8, "b", 2 << 20), (2, "c", 1 << 20)],
+            );
+            let core = (core_raw as usize) % topo.n_cores();
+            let width = 1usize << (w_exp as usize % 4);
+            match topo.enclosing_partition(core, width) {
+                Some(p) => {
+                    if !p.contains(core) {
+                        return Err(format!("{p:?} misses core {core}"));
+                    }
+                    if !topo.is_valid_partition(p) {
+                        return Err(format!("{p:?} invalid"));
+                    }
+                    Ok(())
+                }
+                None => Ok(()), // width invalid for that cluster — fine
+            }
+        });
+}
