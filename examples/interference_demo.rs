@@ -13,8 +13,8 @@
 use xitao::bench::figures::{fig8_run, fig8_scenario};
 use xitao::coordinator::PerformanceBased;
 use xitao::dag_gen::{DagParams, generate};
+use xitao::exec::{ExecutionBackend, RunOpts, backend_by_name};
 use xitao::platform::{Episode, EpisodeSchedule, Platform};
-use xitao::sim::{SimOpts, run_dag_sim};
 
 fn main() {
     let scen = fig8_scenario();
@@ -82,7 +82,8 @@ fn main() {
         0.4,
     )]));
     let (dag, _) = generate(&DagParams::mix(2000, 8.0, 5));
-    let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+    let sim = backend_by_name("sim").expect("registered backend");
+    let run = sim.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default());
     let crit_on_throttled = run
         .result
         .records

@@ -11,18 +11,17 @@
 use std::sync::Arc;
 use xitao::coordinator::dag::TaoDag;
 use xitao::coordinator::ptt::Ptt;
-use xitao::coordinator::{PerformanceBased, RealEngineOpts, run_dag_real};
+use xitao::coordinator::PerformanceBased;
+use xitao::exec::{ExecutionBackend, RunOpts, backend_by_name};
 use xitao::kernels::{CopyTao, KernelSizes, MatMulTao, SortTao};
-use xitao::platform::{KernelClass, Topology};
+use xitao::platform::{KernelClass, scenarios};
 
 fn main() {
-    // The TX2 topology from the paper: 2 Denver-class cores + 4 A57-class
-    // cores, one shared L2 per cluster. (On this host the workers
-    // time-share whatever cores exist — functionality, not speed.)
-    let topo = Topology::from_clusters(
-        "tx2-shaped",
-        &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)],
-    );
+    // The TX2 platform from the scenario registry: 2 Denver-class cores +
+    // 4 A57-class cores, one shared L2 per cluster. (On this host the
+    // workers time-share whatever cores exist — functionality, not speed.)
+    let plat = scenarios::by_name("tx2").expect("registered scenario");
+    let topo = &plat.topo;
     let sizes = KernelSizes::small();
 
     // Figure 1: A→C→G→D→F critical path, B and E off-path.
@@ -45,8 +44,10 @@ fn main() {
     println!("Figure-1 DAG: {} tasks, critical path {}, parallelism {:.2}", dag.len(), dag.critical_path_len(), dag.parallelism());
     println!("criticalities: {:?}\n", dag.nodes.iter().map(|n| n.criticality).collect::<Vec<_>>());
 
-    let ptt = Ptt::new(dag.n_types(), &topo);
-    let result = run_dag_real(&dag, &topo, &PerformanceBased, Some(&ptt), &RealEngineOpts::default());
+    let ptt = Ptt::new(dag.n_types(), topo);
+    let backend = backend_by_name("real").expect("registered backend");
+    let result =
+        backend.run(&dag, &plat, &PerformanceBased, Some(&ptt), &RunOpts::default()).result;
 
     let names = ["A", "B", "C", "E", "G", "D", "F"];
     println!("execution trace (wall time):");
@@ -64,7 +65,7 @@ fn main() {
     }
     println!("\nmakespan: {:.4}s", result.makespan);
     println!("\nwhat the PTT learned (type 0 = matmul):");
-    for (core, width, val) in ptt.dump(0, &topo) {
+    for (core, width, val) in ptt.dump(0, topo) {
         if val > 0.0 {
             println!("  core {core} width {width}: {val:.6}s");
         }

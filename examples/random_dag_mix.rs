@@ -11,11 +11,11 @@
 //!
 //!     cargo run --release --example random_dag_mix -- [tasks] [parallelism]
 
-use xitao::coordinator::{HomogeneousWs, PerformanceBased, RealEngineOpts, run_dag_real};
+use xitao::coordinator::{HomogeneousWs, PerformanceBased};
 use xitao::dag_gen::{DagParams, generate};
+use xitao::exec::{ExecutionBackend, RunOpts, backend_by_name};
 use xitao::kernels::KernelSizes;
 use xitao::platform::Platform;
-use xitao::sim::{SimOpts, run_dag_sim};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,13 +31,14 @@ fn main() {
     );
     println!("data locations per kernel: {:?}\n", stats.data_locations);
 
-    let host = xitao::platform::detect::detect();
-    println!("real execution on host topology ({} cores):", host.n_cores());
+    let host = Platform::from_topology(xitao::platform::detect::detect());
+    let real = backend_by_name("real").expect("registered backend");
+    println!("real execution on host topology ({} cores):", host.topo.n_cores());
     for (name, policy) in [
         ("performance-based", &PerformanceBased as &dyn xitao::coordinator::Policy),
         ("homogeneous-ws", &HomogeneousWs),
     ] {
-        let res = run_dag_real(&dag, &host, policy, None, &RealEngineOpts::default());
+        let res = real.run(&dag, &host, policy, None, &RunOpts::default()).result;
         println!(
             "  {:18} makespan {:.3}s  throughput {:7.1} tasks/s  widths {:?}",
             name,
@@ -49,14 +50,15 @@ fn main() {
 
     // --- simulated TX2 (the paper's platform) -------------------------
     println!("\nsimulated Jetson TX2 (2× Denver2 + 4× A57):");
-    let plat = Platform::tx2();
+    let plat = xitao::platform::scenarios::by_name("tx2").expect("registered scenario");
+    let sim = backend_by_name("sim").expect("registered backend");
     let (sim_dag, _) = generate(&DagParams::mix(tasks, par, 0xbeef));
     let mut thr = Vec::new();
     for (name, policy) in [
         ("performance-based", &PerformanceBased as &dyn xitao::coordinator::Policy),
         ("homogeneous-ws", &HomogeneousWs),
     ] {
-        let run = run_dag_sim(&sim_dag, &plat, policy, None, &SimOpts::default());
+        let run = sim.run(&sim_dag, &plat, policy, None, &RunOpts::default());
         println!(
             "  {:18} makespan {:.4}s  throughput {:7.1} tasks/s  utilisation {:.2}  widths {:?}",
             name,

@@ -19,8 +19,9 @@
 
 use std::sync::Arc;
 use std::time::Instant;
-use xitao::coordinator::{PerformanceBased, RealEngineOpts, run_dag_real};
-use xitao::platform::Topology;
+use xitao::coordinator::PerformanceBased;
+use xitao::exec::{ExecutionBackend, RunOpts, backend_by_name};
+use xitao::platform::Platform;
 use xitao::runtime::{PjrtService, VggWeights, build_real_dag, pipeline_infer, synthetic_image};
 
 fn main() {
@@ -66,9 +67,10 @@ fn main() {
         dag.nodes.iter().filter(|n| n.class == xitao::platform::KernelClass::Gemm).count(),
         dag.critical_path_len()
     );
-    let topo = Topology::homogeneous(4);
+    let plat = Platform::homogeneous(4);
+    let backend = backend_by_name("real").expect("registered backend");
     let t = Instant::now();
-    let res = run_dag_real(&dag, &topo, &PerformanceBased, None, &RealEngineOpts::default());
+    let res = backend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default()).result;
     let t_dag = t.elapsed().as_secs_f64();
     let logits_dag = out.snapshot();
     println!(

@@ -12,30 +12,39 @@ use crate::coordinator::metrics::RunResult;
 use crate::coordinator::scheduler::{HomogeneousWs, PerformanceBased, Policy, policy_by_name};
 use crate::coordinator::ptt::Ptt;
 use crate::dag_gen::{DagParams, generate};
+use crate::exec::{ExecutionBackend, RunOpts, SimBackend, backend_by_name};
 use crate::platform::{Episode, EpisodeSchedule, KernelClass, Platform};
-use crate::sim::{SimOpts, run_dag_sim};
 use crate::util::stats;
 use crate::util::table::{Table, f2, f3};
 use crate::vgg::{VggConfig, build_dag as build_vgg_dag};
 
 /// Shared experiment knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct BenchOpts {
     /// Independent seeds averaged per cell.
     pub seeds: usize,
     /// Scale down task counts (CI smoke mode).
     pub quick: bool,
+    /// Execution backend by registry name (`"sim"` reproduces the paper's
+    /// modelled platforms; `"real"` measures the host).
+    pub backend: String,
 }
 
 impl Default for BenchOpts {
     fn default() -> Self {
-        BenchOpts { seeds: 3, quick: false }
+        BenchOpts { seeds: 3, quick: false, backend: "sim".to_string() }
     }
 }
 
 impl BenchOpts {
     pub fn quick() -> BenchOpts {
-        BenchOpts { seeds: 1, quick: true }
+        BenchOpts { seeds: 1, quick: true, backend: "sim".to_string() }
+    }
+
+    /// Resolve the configured execution backend.
+    pub fn exec_backend(&self) -> Box<dyn ExecutionBackend> {
+        backend_by_name(&self.backend)
+            .unwrap_or_else(|| panic!("unknown backend '{}'", self.backend))
     }
 
     fn scale(&self, n: usize) -> usize {
@@ -43,8 +52,17 @@ impl BenchOpts {
     }
 }
 
+/// Some figures are inherently virtual-time experiments and always run on
+/// [`SimBackend`]; tell the user when their `--backend` choice is ignored.
+fn warn_sim_pinned(opts: &BenchOpts, fig: &str, why: &str) {
+    if opts.backend != "sim" {
+        eprintln!("[{fig}] pinned to the simulated backend ({why}); ignoring backend '{}'", opts.backend);
+    }
+}
+
 /// Run one random-DAG config under one policy, mean throughput over seeds.
 fn mean_throughput(
+    backend: &dyn ExecutionBackend,
     plat: &Platform,
     make_params: impl Fn(u64) -> DagParams,
     policy: &dyn Policy,
@@ -53,8 +71,8 @@ fn mean_throughput(
     let tps: Vec<f64> = (0..seeds as u64)
         .map(|s| {
             let (dag, _) = generate(&make_params(1000 + s));
-            let opts = SimOpts { seed: 42 + s, ..Default::default() };
-            run_dag_sim(&dag, plat, policy, None, &opts).result.throughput()
+            let opts = RunOpts { seed: 42 + s, ..Default::default() };
+            backend.run(&dag, plat, policy, None, &opts).result.throughput()
         })
         .collect();
     stats::mean(&tps)
@@ -68,6 +86,7 @@ pub const PARALLELISMS: [usize; 5] = [1, 2, 4, 8, 16];
 /// grid (the paper's headline "up to 3.25×" lives in this grid's max).
 pub fn fig5(opts: &BenchOpts) -> Vec<Table> {
     let plat = Platform::tx2();
+    let backend = opts.exec_backend();
     let hdr: Vec<String> = std::iter::once("par\\tasks".to_string())
         .chain(FIG5_TASKS.iter().map(|t| t.to_string()))
         .collect();
@@ -83,8 +102,8 @@ pub fn fig5(opts: &BenchOpts) -> Vec<Table> {
         for &tasks in &FIG5_TASKS {
             let tasks = opts.scale(tasks);
             let mk = |seed| DagParams::mix(tasks, par as f64, seed);
-            let perf = mean_throughput(&plat, mk, &PerformanceBased, opts.seeds);
-            let homo = mean_throughput(&plat, mk, &HomogeneousWs, opts.seeds);
+            let perf = mean_throughput(backend.as_ref(), &plat, mk, &PerformanceBased, opts.seeds);
+            let homo = mean_throughput(backend.as_ref(), &plat, mk, &HomogeneousWs, opts.seeds);
             let sp = perf / homo;
             max_speedup = max_speedup.max(sp);
             row_p.push(f2(perf));
@@ -120,6 +139,7 @@ fn fig6_params(kind: Option<KernelClass>, tasks: usize, par: usize, seed: u64) -
 /// the TX2 model with 4000 tasks.
 pub fn fig6(opts: &BenchOpts) -> Vec<Table> {
     let plat = Platform::tx2();
+    let backend = opts.exec_backend();
     let tasks = opts.scale(4000);
     let mut out = Vec::new();
     for (name, kind) in fig6_workloads() {
@@ -129,8 +149,8 @@ pub fn fig6(opts: &BenchOpts) -> Vec<Table> {
         );
         for &par in &PARALLELISMS {
             let mk = |seed| fig6_params(kind, tasks, par, seed);
-            let perf = mean_throughput(&plat, mk, &PerformanceBased, opts.seeds);
-            let homo = mean_throughput(&plat, mk, &HomogeneousWs, opts.seeds);
+            let perf = mean_throughput(backend.as_ref(), &plat, mk, &PerformanceBased, opts.seeds);
+            let homo = mean_throughput(backend.as_ref(), &plat, mk, &HomogeneousWs, opts.seeds);
             t.row(vec![par.to_string(), f2(perf), f2(homo)]);
         }
         out.push(t);
@@ -143,6 +163,7 @@ pub fn fig6(opts: &BenchOpts) -> Vec<Table> {
 /// sort 2.5×, copy 2.2×, mix 2.7×).
 pub fn fig7(opts: &BenchOpts) -> Vec<Table> {
     let plat = Platform::tx2();
+    let backend = opts.exec_backend();
     let tasks = opts.scale(4000);
     let mut t = Table::new(
         "Fig 7: speedup perf-based / homogeneous",
@@ -152,8 +173,8 @@ pub fn fig7(opts: &BenchOpts) -> Vec<Table> {
     for (_, kind) in fig6_workloads() {
         for (pi, &par) in PARALLELISMS.iter().enumerate() {
             let mk = |seed| fig6_params(kind, tasks, par, seed);
-            let perf = mean_throughput(&plat, mk, &PerformanceBased, opts.seeds);
-            let homo = mean_throughput(&plat, mk, &HomogeneousWs, opts.seeds);
+            let perf = mean_throughput(backend.as_ref(), &plat, mk, &PerformanceBased, opts.seeds);
+            let homo = mean_throughput(backend.as_ref(), &plat, mk, &HomogeneousWs, opts.seeds);
             rows[pi].push(f3(perf / homo));
         }
     }
@@ -189,11 +210,14 @@ pub fn fig8_run(with_interference: bool, seed: u64) -> (RunResult, Vec<(f64, f64
     let scen = fig8_scenario();
     let plat = if with_interference { scen.platform } else { Platform::haswell20() };
     let (dag, _) = generate(&DagParams::mix(4000, 16.0, seed));
-    let opts = SimOpts {
+    // Interference episodes exist only in virtual time, so this experiment
+    // is pinned to the simulated backend.
+    let opts = RunOpts {
         seed,
         ptt_probe: Some((KernelClass::MatMul.index(), 1, 1)),
+        ..Default::default()
     };
-    let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &opts);
+    let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts);
     (run.result, run.ptt_samples)
 }
 
@@ -201,6 +225,7 @@ pub fn fig8_run(with_interference: bool, seed: u64) -> (RunResult, Vec<(f64, f64
 /// critical-task leaders before/during/after the episode, the PTT(1,1)
 /// probe trace, and the wall-time comparison with the clean run.
 pub fn fig8(opts: &BenchOpts) -> Vec<Table> {
+    warn_sim_pinned(opts, "fig8", "interference episodes and PTT probes are virtual-time only");
     let seed = if opts.quick { 7 } else { 11 };
     let scen = fig8_scenario();
     let (with_if, probe) = fig8_run(true, seed);
@@ -278,13 +303,14 @@ pub fn fig9_run(n_threads: usize, repeats: usize) -> RunResult {
     let warm = fig9_dag(2);
     let dag = fig9_dag(repeats);
     let ptt = Ptt::new(dag.n_types(), &plat.topo);
-    run_dag_sim(&warm, &plat, &PerformanceBased, Some(&ptt), &SimOpts::default());
-    run_dag_sim(&dag, &plat, &PerformanceBased, Some(&ptt), &SimOpts::default()).result
+    SimBackend.run(&warm, &plat, &PerformanceBased, Some(&ptt), &RunOpts::default());
+    SimBackend.run(&dag, &plat, &PerformanceBased, Some(&ptt), &RunOpts::default()).result
 }
 
 /// **Fig 9** — VGG-16 strong scaling (paper: ≈0.69 parallel efficiency,
 /// near-linear speedup).
 pub fn fig9(opts: &BenchOpts) -> Vec<Table> {
+    warn_sim_pinned(opts, "fig9", "the strong-scaling sweep varies the modelled thread count");
     let repeats = if opts.quick { 1 } else { 3 };
     let mut t = Table::new(
         "Fig 9: VGG-16 strong scaling (haswell-class homogeneous model)",
@@ -305,6 +331,7 @@ pub fn fig9(opts: &BenchOpts) -> Vec<Table> {
 /// **Fig 10** — percentage of TAOs scheduled at each width by the PTT
 /// (paper at 8 threads: ~67% width 1, ~30% width 8).
 pub fn fig10(opts: &BenchOpts) -> Vec<Table> {
+    warn_sim_pinned(opts, "fig10", "the width histogram sweeps modelled thread counts");
     let repeats = if opts.quick { 1 } else { 3 };
     let threads = if opts.quick { vec![4usize, 8] } else { vec![2usize, 4, 8, 16] };
     let all_widths: Vec<usize> = vec![1, 2, 4, 8, 16];
@@ -318,7 +345,7 @@ pub fn fig10(opts: &BenchOpts) -> Vec<Table> {
         // the bootstrap phase, whose exploration is mostly width 1.
         let plat = Platform::homogeneous(n);
         let dag = fig9_dag(repeats);
-        let res = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default()).result;
+        let res = SimBackend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default()).result;
         let pct = res.width_percentages();
         let mut row = vec![n.to_string()];
         for &w in &all_widths {
@@ -333,6 +360,7 @@ pub fn fig10(opts: &BenchOpts) -> Vec<Table> {
 /// of disabling the moving average entirely.
 pub fn ablation_ptt(opts: &BenchOpts) -> Vec<Table> {
     let plat = Platform::tx2();
+    let backend = opts.exec_backend();
     let tasks = opts.scale(2000);
     let mut t = Table::new(
         "Ablation: PTT history weight (paper uses 4 = 80%/20%)",
@@ -344,12 +372,12 @@ pub fn ablation_ptt(opts: &BenchOpts) -> Vec<Table> {
                 let (dag, _) = generate(&DagParams::mix(tasks, 4.0, 500 + s));
                 let ptt = Ptt::new(dag.n_types(), &plat.topo);
                 ptt.set_history_weight(weight);
-                let run = run_dag_sim(
+                let run = backend.run(
                     &dag,
                     &plat,
                     &PerformanceBased,
                     Some(&ptt),
-                    &SimOpts { seed: s, ..Default::default() },
+                    &RunOpts { seed: s, ..Default::default() },
                 );
                 run.result.makespan
             })
@@ -368,6 +396,7 @@ pub fn ablation_ptt(opts: &BenchOpts) -> Vec<Table> {
 /// **Ablation A2** — all four policies (§6 baselines) across parallelism.
 pub fn ablation_baselines(opts: &BenchOpts) -> Vec<Table> {
     let plat = Platform::tx2();
+    let backend = opts.exec_backend();
     let tasks = opts.scale(2000);
     let names = ["performance", "homogeneous", "cats", "dheft"];
     let hdr: Vec<String> = std::iter::once("parallelism".to_string())
@@ -383,7 +412,14 @@ pub fn ablation_baselines(opts: &BenchOpts) -> Vec<Table> {
                     .map(|s| {
                         let (dag, _) = generate(&DagParams::mix(tasks, par as f64, 900 + s));
                         let policy = policy_by_name(name, plat.topo.n_cores()).unwrap();
-                        run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts { seed: s, ..Default::default() })
+                        backend
+                            .run(
+                                &dag,
+                                &plat,
+                                policy.as_ref(),
+                                None,
+                                &RunOpts { seed: s, ..Default::default() },
+                            )
                             .result
                             .throughput()
                     })
@@ -402,6 +438,7 @@ pub fn ablation_baselines(opts: &BenchOpts) -> Vec<Table> {
 pub fn ablation_energy(opts: &BenchOpts) -> Vec<Table> {
     use crate::platform::run_energy;
     let plat = Platform::tx2();
+    let backend = opts.exec_backend();
     let tasks = opts.scale(2000);
     let mut t = Table::new(
         "Ablation: performance vs energy objective (mix, tx2)",
@@ -414,7 +451,14 @@ pub fn ablation_energy(opts: &BenchOpts) -> Vec<Table> {
             for s in 0..opts.seeds as u64 {
                 let (dag, _) = generate(&DagParams::mix(tasks, par as f64, 1300 + s));
                 let policy = policy_by_name(name, plat.topo.n_cores()).unwrap();
-                let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts { seed: s, ..Default::default() })
+                let run = backend
+                    .run(
+                        &dag,
+                        &plat,
+                        policy.as_ref(),
+                        None,
+                        &RunOpts { seed: s, ..Default::default() },
+                    )
                     .result;
                 tps.push(run.throughput());
                 ens.push(run_energy(&plat.topo, &run));

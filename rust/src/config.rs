@@ -5,8 +5,9 @@
 //!
 //! ```json
 //! {
-//!   "platform": "tx2",          // tx2 | haswell20 | hom<N>
-//!   "policy": "performance",    // performance | homogeneous | cats | dheft
+//!   "platform": "tx2",          // any registered scenario | hom<N>
+//!   "backend": "sim",           // sim | real
+//!   "policy": "performance",    // performance | homogeneous | cats | dheft | energy
 //!   "tasks": 1000,
 //!   "parallelism": 4.0,
 //!   "kernel": "mix",            // mix | matmul | sort | copy
@@ -15,15 +16,19 @@
 //!   "artifacts": "artifacts"
 //! }
 //! ```
+//!
+//! Platform names resolve through [`crate::platform::scenarios`]; backend
+//! names through [`crate::exec::backend_by_name`].
 
 use crate::cli::Args;
-use crate::platform::{KernelClass, Platform};
+use crate::platform::{KernelClass, Platform, scenarios};
 use crate::util::Json;
 use std::path::PathBuf;
 
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub platform: String,
+    pub backend: String,
     pub policy: String,
     pub tasks: usize,
     pub parallelism: f64,
@@ -37,6 +42,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             platform: "tx2".into(),
+            backend: "sim".into(),
             policy: "performance".into(),
             tasks: 1000,
             parallelism: 4.0,
@@ -57,6 +63,7 @@ impl RunConfig {
         for (k, v) in obj {
             match k.as_str() {
                 "platform" => cfg.platform = v.as_str().ok_or("platform: string")?.into(),
+                "backend" => cfg.backend = v.as_str().ok_or("backend: string")?.into(),
                 "policy" => cfg.policy = v.as_str().ok_or("policy: string")?.into(),
                 "tasks" => cfg.tasks = v.as_usize().ok_or("tasks: integer")?,
                 "parallelism" => cfg.parallelism = v.as_f64().ok_or("parallelism: number")?,
@@ -83,6 +90,13 @@ impl RunConfig {
         };
         if let Some(v) = args.flag("platform") {
             cfg.platform = v.into();
+        }
+        if let Some(v) = args.flag("backend") {
+            cfg.backend = v.into();
+        }
+        if args.switch("real") {
+            // Legacy spelling of `--backend real`.
+            cfg.backend = "real".into();
         }
         if let Some(v) = args.flag("policy") {
             cfg.policy = v.into();
@@ -111,6 +125,9 @@ impl RunConfig {
 
     fn validate(&self) -> Result<(), String> {
         self.make_platform()?;
+        if crate::exec::backend_by_name(&self.backend).is_none() {
+            return Err(format!("unknown backend '{}' (sim|real)", self.backend));
+        }
         if self.kernel != "mix" && KernelClass::from_name(&self.kernel).is_none() {
             return Err(format!("unknown kernel '{}'", self.kernel));
         }
@@ -123,24 +140,15 @@ impl RunConfig {
         Ok(())
     }
 
-    /// Resolve the platform name.
+    /// Resolve the platform name through the scenario registry.
     pub fn make_platform(&self) -> Result<Platform, String> {
-        match self.platform.as_str() {
-            "tx2" => Ok(Platform::tx2()),
-            "haswell20" => Ok(Platform::haswell20()),
-            other => {
-                if let Some(n) = other.strip_prefix("hom") {
-                    let n: usize =
-                        n.parse().map_err(|_| format!("bad platform '{other}'"))?;
-                    if n == 0 {
-                        return Err("hom platform needs ≥ 1 core".into());
-                    }
-                    Ok(Platform::homogeneous(n))
-                } else {
-                    Err(format!("unknown platform '{other}' (tx2|haswell20|hom<N>)"))
-                }
-            }
-        }
+        scenarios::by_name(&self.platform).ok_or_else(|| {
+            format!(
+                "unknown platform '{}' (one of {:?} or hom<N>)",
+                self.platform,
+                scenarios::names()
+            )
+        })
     }
 
     /// Kernel selection for the DAG generator (`None` = mix).
@@ -185,6 +193,28 @@ mod tests {
         let cfg = RunConfig::from_json(r#"{"platform": "hom8"}"#).unwrap();
         assert_eq!(cfg.make_platform().unwrap().topo.n_cores(), 8);
         assert!(RunConfig::from_json(r#"{"platform": "hom0"}"#).is_err());
+    }
+
+    #[test]
+    fn registered_scenarios_all_accepted() {
+        for name in crate::platform::scenarios::names() {
+            let cfg =
+                RunConfig::from_json(&format!(r#"{{"platform": "{name}"}}"#)).unwrap();
+            assert!(cfg.make_platform().is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn backend_parses_and_validates() {
+        let cfg = RunConfig::from_json(r#"{"backend": "real"}"#).unwrap();
+        assert_eq!(cfg.backend, "real");
+        assert!(RunConfig::from_json(r#"{"backend": "quantum"}"#).is_err());
+        // --real switch is a legacy alias for --backend real.
+        let args = Args::parse(["run", "--real"].iter().map(|s| s.to_string()));
+        assert_eq!(RunConfig::from_args(&args).unwrap().backend, "real");
+        // Explicit --backend flag wins over the config default.
+        let args = Args::parse(["run", "--backend", "sim"].iter().map(|s| s.to_string()));
+        assert_eq!(RunConfig::from_args(&args).unwrap().backend, "sim");
     }
 
     #[test]

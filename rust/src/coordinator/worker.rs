@@ -228,14 +228,13 @@ fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32) {
     }
 }
 
-/// Pin the calling thread to `cpu` (best effort; Linux only).
-fn pin_to_cpu(cpu: usize) {
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_SET(cpu, &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
-    }
-}
+/// Pin the calling thread to `cpu` (best effort).
+///
+/// Actual pinning needs `sched_setaffinity` via the `libc` crate, which the
+/// offline build intentionally avoids; this hook is kept (and plumbed
+/// through `RunOpts::pin_threads`) so multicore deployments have one place
+/// to wire OS affinity back in.
+fn pin_to_cpu(_cpu: usize) {}
 
 /// Execute `dag` with `policy` on `topo.n_cores()` worker threads.
 ///

@@ -1,0 +1,266 @@
+//! Unified execution backends: one seam over virtual-time simulation and
+//! real-thread execution.
+//!
+//! The paper's core claim — PTT-guided scheduling adapts to both static
+//! heterogeneity and dynamic interference — is only meaningful if the same
+//! scheduling code runs identically in virtual time (`crate::sim`) and on
+//! real threads (`crate::coordinator::worker`). This module is the seam
+//! that enforces it: both engines are reachable through one trait,
+//!
+//! ```text
+//! ExecutionBackend::run(dag, platform, policy, ptt, opts) -> BackendRun
+//! ```
+//!
+//! with one [`RunOpts`] (seed, trace, PTT probe, pinning), so the CLI, the
+//! figure harnesses and the conformance tests select a backend *by name*
+//! instead of branching on `--real`. Combined with the platform scenario
+//! registry ([`crate::platform::scenarios`]), any
+//! `(backend × policy × platform)` triple is one call: [`run_triple`].
+//!
+//! Semantics shared by both backends:
+//! - the DAG must be finalized and non-empty;
+//! - a fresh PTT is created when `ptt` is `None`; passing a warm table
+//!   chains runs (the VGG scalability study relies on this);
+//! - the returned trace has one record per executed TAO, sorted by start
+//!   time, with partitions valid on the given platform's topology.
+//!
+//! Differences that remain by design: the simulated backend interprets the
+//! platform's performance model and episode schedule in virtual time and
+//! is bit-for-bit deterministic under a fixed seed; the real backend runs
+//! `topo.n_cores()` worker threads on the host in wall time, so makespans
+//! are host-dependent (and `ptt_probe` sampling is sim-only).
+
+use crate::coordinator::dag::TaoDag;
+use crate::coordinator::metrics::RunResult;
+use crate::coordinator::ptt::Ptt;
+use crate::coordinator::scheduler::{Policy, policy_by_name};
+use crate::coordinator::worker::{RealEngineOpts, run_dag_real};
+use crate::platform::{Platform, scenarios};
+use crate::sim::{SimOpts, run_dag_sim};
+
+/// Options understood by every backend.
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    /// Seed for root distribution, steal-victim selection and sim jitter.
+    pub seed: u64,
+    /// Keep the per-task trace in the result. Disabling it clears
+    /// `RunResult::records` (makespan is still reported) — for huge DAGs
+    /// where only aggregate timing matters.
+    pub trace: bool,
+    /// Sample the PTT entry `(type_id, core, width)` after every event —
+    /// the Fig 8(a) value trace. Simulated backend only.
+    pub ptt_probe: Option<(usize, usize, usize)>,
+    /// Pin worker threads to host CPUs (real backend only). Currently a
+    /// documented no-op: the offline build omits the libc affinity call,
+    /// and this knob stays plumbed so multicore deployments can wire OS
+    /// pinning back in at `coordinator::worker::pin_to_cpu`.
+    pub pin_threads: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        // The seed matches the simulator's historical default so existing
+        // figure outputs are unchanged by the backend refactor.
+        RunOpts { seed: 0x51b, trace: true, ptt_probe: None, pin_threads: false }
+    }
+}
+
+/// Result of one backend run: the engine-independent [`RunResult`] plus
+/// probe samples (empty unless the sim backend ran with a probe).
+#[derive(Debug, Clone)]
+pub struct BackendRun {
+    pub result: RunResult,
+    /// `(time, PTT value)` samples if a probe was configured.
+    pub ptt_samples: Vec<(f64, f64)>,
+}
+
+/// An execution substrate for TAO-DAGs under a scheduling policy.
+pub trait ExecutionBackend: Send + Sync {
+    /// Canonical backend name (`"sim"` / `"real"`).
+    fn name(&self) -> &'static str;
+
+    /// Execute `dag` under `policy` on `plat`, observing `opts`.
+    fn run(
+        &self,
+        dag: &TaoDag,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+    ) -> BackendRun;
+}
+
+/// Discrete-event execution against the analytic platform model
+/// ([`run_dag_sim`]) — deterministic, virtual time.
+#[derive(Debug, Default)]
+pub struct SimBackend;
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn run(
+        &self,
+        dag: &TaoDag,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+    ) -> BackendRun {
+        let run = run_dag_sim(
+            dag,
+            plat,
+            policy,
+            ptt,
+            &SimOpts { seed: opts.seed, ptt_probe: opts.ptt_probe },
+        );
+        let mut result = run.result;
+        if !opts.trace {
+            result.records.clear();
+        }
+        BackendRun { result, ptt_samples: run.ptt_samples }
+    }
+}
+
+/// Real worker threads on the host ([`run_dag_real`]) — wall time. Uses
+/// only the platform's topology; the performance model and episodes are
+/// ignored (the host *is* the model).
+#[derive(Debug, Default)]
+pub struct RealBackend;
+
+impl ExecutionBackend for RealBackend {
+    fn name(&self) -> &'static str {
+        "real"
+    }
+
+    fn run(
+        &self,
+        dag: &TaoDag,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+    ) -> BackendRun {
+        let mut result = run_dag_real(
+            dag,
+            &plat.topo,
+            policy,
+            ptt,
+            &RealEngineOpts { pin_threads: opts.pin_threads, seed: opts.seed },
+        );
+        if !opts.trace {
+            result.records.clear();
+        }
+        BackendRun { result, ptt_samples: Vec::new() }
+    }
+}
+
+/// Canonical backend names, in registry order.
+pub const BACKEND_NAMES: [&str; 2] = ["sim", "real"];
+
+/// Construct a backend by CLI/config name (with common aliases).
+pub fn backend_by_name(name: &str) -> Option<Box<dyn ExecutionBackend>> {
+    match name {
+        "sim" | "simulated" | "virtual" => Some(Box::new(SimBackend)),
+        "real" | "threads" | "native" => Some(Box::new(RealBackend)),
+        _ => None,
+    }
+}
+
+/// Run any `(backend × scenario × policy)` triple in one call.
+///
+/// Resolves all three registries and executes `dag`; errors name the
+/// offending registry so CLI surfaces stay helpful.
+pub fn run_triple(
+    backend: &str,
+    scenario: &str,
+    policy: &str,
+    dag: &TaoDag,
+    opts: &RunOpts,
+) -> Result<BackendRun, String> {
+    let plat = scenarios::by_name(scenario)
+        .ok_or_else(|| format!("unknown platform scenario '{scenario}'"))?;
+    let policy = policy_by_name(policy, plat.topo.n_cores())
+        .ok_or_else(|| format!("unknown policy '{policy}'"))?;
+    let backend =
+        backend_by_name(backend).ok_or_else(|| format!("unknown backend '{backend}'"))?;
+    Ok(backend.run(dag, &plat, policy.as_ref(), None, opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PerformanceBased;
+    use crate::dag_gen::{DagParams, generate};
+
+    #[test]
+    fn backend_names_resolve_with_aliases() {
+        for n in ["sim", "simulated", "virtual"] {
+            assert_eq!(backend_by_name(n).unwrap().name(), "sim");
+        }
+        for n in ["real", "threads", "native"] {
+            assert_eq!(backend_by_name(n).unwrap().name(), "real");
+        }
+        assert!(backend_by_name("gpu").is_none());
+        for n in BACKEND_NAMES {
+            assert!(backend_by_name(n).is_some());
+        }
+    }
+
+    #[test]
+    fn sim_backend_is_equivalent_to_direct_sim_call() {
+        let (dag, _) = generate(&DagParams::mix(50, 4.0, 5));
+        let plat = scenarios::by_name("tx2").unwrap();
+        let via = SimBackend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default());
+        let direct = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+        assert_eq!(via.result.makespan.to_bits(), direct.result.makespan.to_bits());
+        assert_eq!(via.result.records.len(), direct.result.records.len());
+    }
+
+    #[test]
+    fn real_backend_completes_and_reports_name() {
+        let (dag, _) = generate(&DagParams::mix(30, 4.0, 9));
+        let plat = scenarios::by_name("hom2").unwrap();
+        let backend = RealBackend;
+        assert_eq!(backend.name(), "real");
+        let run = backend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default());
+        assert_eq!(run.result.n_tasks(), 30);
+        assert!(run.result.makespan > 0.0);
+        assert!(run.ptt_samples.is_empty());
+    }
+
+    #[test]
+    fn trace_off_drops_records_but_keeps_makespan() {
+        let (dag, _) = generate(&DagParams::mix(40, 4.0, 2));
+        let plat = scenarios::by_name("tx2").unwrap();
+        let opts = RunOpts { trace: false, ..Default::default() };
+        let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts);
+        assert!(run.result.records.is_empty());
+        assert!(run.result.makespan > 0.0);
+    }
+
+    #[test]
+    fn probe_flows_through_the_sim_backend() {
+        let (dag, _) = generate(&DagParams::single(
+            crate::platform::KernelClass::MatMul,
+            30,
+            2.0,
+            3,
+        ));
+        let plat = scenarios::by_name("tx2").unwrap();
+        let opts = RunOpts { ptt_probe: Some((0, 0, 1)), ..Default::default() };
+        let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts);
+        assert_eq!(run.ptt_samples.len(), 30);
+    }
+
+    #[test]
+    fn run_triple_resolves_all_registries() {
+        let (dag, _) = generate(&DagParams::mix(30, 2.0, 1));
+        let run = run_triple("sim", "tx2", "performance", &dag, &RunOpts::default()).unwrap();
+        assert_eq!(run.result.n_tasks(), 30);
+        assert!(run_triple("nope", "tx2", "performance", &dag, &RunOpts::default()).is_err());
+        assert!(run_triple("sim", "nope", "performance", &dag, &RunOpts::default()).is_err());
+        assert!(run_triple("sim", "tx2", "nope", &dag, &RunOpts::default()).is_err());
+    }
+}

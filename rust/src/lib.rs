@@ -8,11 +8,15 @@
 //! interference-free scheduling with no static platform knowledge.
 //!
 //! ## Layout
-//! - [`platform`] — topology, heterogeneity + contention model, episodes.
+//! - [`platform`] — topology, heterogeneity + contention model, episodes,
+//!   and the named scenario registry (`platform::scenarios`).
 //! - [`coordinator`] — the paper's contribution: TAOs, TAO-DAGs,
 //!   criticality, the PTT, scheduling policies, and the real-thread runtime.
 //! - [`sim`] — discrete-event execution of the same coordinator logic on
 //!   modelled platforms (TX2, Haswell) in virtual time.
+//! - [`exec`] — the `ExecutionBackend` seam unifying [`sim`] and the
+//!   real-thread engine behind one `run(dag, platform, policy, ptt, opts)`
+//!   call; backends are selected by name.
 //! - [`kernels`] — the paper's three benchmark kernels (matmul/sort/copy).
 //! - [`dag_gen`] — seeded random TAO-DAG generator (§4.2.2).
 //! - [`vgg`] — VGG-16 as a TAO-DAG of GEMM blocks (§4.3).
@@ -26,6 +30,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod dag_gen;
+pub mod exec;
 pub mod kernels;
 pub mod platform;
 pub mod runtime;

@@ -6,27 +6,29 @@
 //!
 //! Single experiments:
 //!   repro run-dag [--config f.json] [--platform tx2] [--policy performance]
-//!                 [--tasks 1000] [--parallelism 4] [--kernel mix] [--seed 42]
-//!                 [--real]            # real threads instead of the simulator
+//!                 [--backend sim|real] [--tasks 1000] [--parallelism 4]
+//!                 [--kernel mix] [--seed 42] [--quick]
 //!   repro vgg16 [--threads 8] [--repeats 3] [--block-len 64]
 //!   repro vgg16-infer [--mode pipeline|whole|dag] [--hw 64] [--block-len 64]
 //!   repro ptt-dump [--platform tx2] [--tasks 500] ...
+//!   repro scenarios                 # list registered platform scenarios
 //!
-//! The simulator reproduces the paper's platforms (see DESIGN.md); `--real`
-//! and `vgg16-infer` exercise the actual thread runtime and the PJRT
-//! artifacts end to end.
+//! Platforms resolve through the scenario registry
+//! (`platform::scenarios`), execution substrates through the
+//! `ExecutionBackend` registry (`exec`): the simulator reproduces the
+//! paper's platforms in virtual time (see DESIGN.md), `--backend real`
+//! runs the identical scheduling code on host threads.
 
 use xitao::bench::{self, BenchOpts};
 use xitao::cli::Args;
 use xitao::config::RunConfig;
-use xitao::coordinator::{RealEngineOpts, run_dag_real};
 use xitao::coordinator::ptt::Ptt;
 use xitao::coordinator::scheduler::policy_by_name;
 use xitao::dag_gen::{DagParams, generate};
+use xitao::exec::{ExecutionBackend, RunOpts, backend_by_name};
 use xitao::kernels::KernelSizes;
-use xitao::platform::Platform;
+use xitao::platform::{Platform, scenarios};
 use xitao::runtime::{PjrtService, VggWeights, build_real_dag, pipeline_infer, synthetic_image};
-use xitao::sim::{SimOpts, run_dag_sim};
 use xitao::vgg::{VggConfig, build_dag as build_vgg_dag};
 
 fn main() {
@@ -39,6 +41,7 @@ fn main() {
         "vgg16" => cmd_vgg16(&args),
         "vgg16-infer" => cmd_vgg16_infer(&args),
         "ptt-dump" => cmd_ptt_dump(&args),
+        "scenarios" => cmd_scenarios(),
         "help" | "--help" => {
             print!("{}", HELP);
             0
@@ -57,18 +60,44 @@ repro — XiTAO + Performance Trace Table reproduction
 figures:    fig5 fig6 fig7 fig8 fig9 fig10 ablation-ptt ablation-baselines
             ablation-energy all
             options: --quick --seeds N
-single run: run-dag [--config f.json] [--platform tx2|haswell20|hom<N>]
-                    [--policy performance|homogeneous|cats|dheft]
-                    [--tasks N] [--parallelism P] [--kernel mix|matmul|sort|copy]
-                    [--seed S] [--real]
+single run: run-dag [--config f.json] [--platform <scenario>|hom<N>]
+                    [--policy performance|homogeneous|cats|dheft|energy]
+                    [--backend sim|real] [--tasks N] [--parallelism P]
+                    [--kernel mix|matmul|sort|copy] [--seed S] [--quick]
+platforms:  run `repro scenarios` for the registered list; hom<N> for
+            any homogeneous core count
+
 vgg:        vgg16 [--threads N] [--repeats R] [--block-len B] [--policy ...]
             vgg16-infer [--mode pipeline|whole|dag|validate] [--hw 64]
 diag:       ptt-dump [--platform ...] [--tasks N]
 ";
 
+fn cmd_scenarios() -> i32 {
+    println!("registered platform scenarios (plus dynamic hom<N>):");
+    for s in scenarios::scenarios() {
+        let p = s.platform();
+        println!(
+            "  {:14} {:2} cores, {:1} cluster(s), {:2} episode(s) — {}",
+            s.name,
+            p.topo.n_cores(),
+            p.topo.clusters.len(),
+            p.episodes.episodes.len(),
+            s.description,
+        );
+    }
+    0
+}
+
 fn bench_opts(args: &Args) -> BenchOpts {
     let mut opts = if args.switch("quick") { BenchOpts::quick() } else { BenchOpts::default() };
     opts.seeds = args.get("seeds", opts.seeds);
+    if let Some(b) = args.flag("backend") {
+        if backend_by_name(b).is_none() {
+            eprintln!("unknown backend '{b}' (sim|real)");
+            std::process::exit(2);
+        }
+        opts.backend = b.to_string();
+    }
     opts
 }
 
@@ -103,14 +132,19 @@ fn cmd_figures(cmd: &str, args: &Args) -> i32 {
 }
 
 fn cmd_run_dag(args: &Args) -> i32 {
-    let cfg = match RunConfig::from_args(args) {
+    let mut cfg = match RunConfig::from_args(args) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("config error: {e}");
             return 2;
         }
     };
+    if args.switch("quick") {
+        // Smoke-test scale: enough tasks to exercise every queue path.
+        cfg.tasks = cfg.tasks.min(48);
+    }
     let plat = cfg.make_platform().expect("validated");
+    let backend = backend_by_name(&cfg.backend).expect("validated");
     let params = match cfg.kernel_class() {
         Some(class) => DagParams::single(class, cfg.tasks, cfg.parallelism, cfg.seed),
         None => DagParams::mix(cfg.tasks, cfg.parallelism, cfg.seed),
@@ -122,23 +156,24 @@ fn cmd_run_dag(args: &Args) -> i32 {
             return 2;
         }
     };
-    let result = if args.switch("real") {
-        let params = params.with_payloads(KernelSizes::small());
-        let (dag, stats) = generate(&params);
-        println!(
-            "generated DAG: {} tasks, {} levels, parallelism {:.2} (real threads)",
-            stats.tasks, stats.levels, stats.parallelism
-        );
-        run_dag_real(&dag, &plat.topo, policy.as_ref(), None, &RealEngineOpts::default())
+    // Real threads execute actual kernel payloads; the simulator drives the
+    // analytic model instead.
+    let params = if backend.name() == "real" {
+        params.with_payloads(KernelSizes::small())
     } else {
-        let (dag, stats) = generate(&params);
-        println!(
-            "generated DAG: {} tasks, {} levels, parallelism {:.2} (simulated on {})",
-            stats.tasks, stats.levels, stats.parallelism, plat.topo.name
-        );
-        run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts { seed: cfg.seed, ..Default::default() })
-            .result
+        params
     };
+    let (dag, stats) = generate(&params);
+    println!(
+        "generated DAG: {} tasks, {} levels, parallelism {:.2} ({} backend on {})",
+        stats.tasks,
+        stats.levels,
+        stats.parallelism,
+        backend.name(),
+        plat.topo.name
+    );
+    let opts = RunOpts { seed: cfg.seed, ..Default::default() };
+    let result = backend.run(&dag, &plat, policy.as_ref(), None, &opts).result;
     println!(
         "policy={} makespan={:.4}s throughput={:.1} tasks/s utilisation={:.2}",
         result.policy,
@@ -174,7 +209,8 @@ fn cmd_vgg16(args: &Args) -> i32 {
     };
     let dag = build_vgg_dag(&VggConfig { input_hw: 224, block_len, repeats }, None);
     println!("VGG-16 DAG: {} TAOs, critical path {}", dag.len(), dag.critical_path_len());
-    let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default());
+    let backend = backend_by_name("sim").expect("registered backend");
+    let run = backend.run(&dag, &plat, policy.as_ref(), None, &RunOpts::default());
     println!(
         "threads={} makespan={:.4}s throughput={:.1} TAO/s",
         threads,
@@ -223,15 +259,12 @@ fn cmd_vgg16_infer(args: &Args) -> i32 {
     };
     let run_dag = || {
         let (dag, out) = build_real_dag(weights.clone(), image.clone(), h.clone(), block_len);
-        let topo = xitao::platform::Topology::homogeneous(4);
+        let plat = Platform::homogeneous(4);
+        let backend = backend_by_name("real").expect("registered backend");
         let t = std::time::Instant::now();
-        let res = run_dag_real(
-            &dag,
-            &topo,
-            &xitao::coordinator::PerformanceBased,
-            None,
-            &RealEngineOpts::default(),
-        );
+        let res = backend
+            .run(&dag, &plat, &xitao::coordinator::PerformanceBased, None, &RunOpts::default())
+            .result;
         let dt = t.elapsed().as_secs_f64();
         println!(
             "DAG run: {} TAOs, makespan {:.2}s, width histogram {:?}",
@@ -301,12 +334,13 @@ fn cmd_ptt_dump(args: &Args) -> i32 {
     let params = DagParams::mix(cfg.tasks, cfg.parallelism, cfg.seed);
     let (dag, _) = generate(&params);
     let ptt = Ptt::new(dag.n_types(), &plat.topo);
-    run_dag_sim(
+    let backend = backend_by_name("sim").expect("registered backend");
+    backend.run(
         &dag,
         &plat,
         &xitao::coordinator::PerformanceBased,
         Some(&ptt),
-        &SimOpts { seed: cfg.seed, ..Default::default() },
+        &RunOpts { seed: cfg.seed, ..Default::default() },
     );
     for ty in 0..dag.n_types() {
         println!("== PTT type {ty} ==");

@@ -10,13 +10,9 @@ use std::fs;
 
 /// Number of online logical CPUs (fallback 1).
 pub fn online_cpus() -> usize {
-    // sysconf is the portable truth; /sys parsing is a cross-check.
-    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
-    if n > 0 {
-        n as usize
-    } else {
-        1
-    }
+    // std's portable query (sched_getaffinity/sysconf under the hood) —
+    // avoids a libc dependency in the offline build.
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// Read the last-level cache size (bytes) of cpu0, if exposed by sysfs.

@@ -11,6 +11,7 @@ pub mod detect;
 pub mod episodes;
 pub mod perf_model;
 pub mod power;
+pub mod scenarios;
 pub mod topology;
 
 pub use episodes::{Episode, EpisodeKind, EpisodeSchedule};

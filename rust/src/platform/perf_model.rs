@@ -248,6 +248,13 @@ impl Platform {
         }
     }
 
+    /// Wrap an existing topology (e.g. the detected host) with generic
+    /// memory-system defaults — what the real backend needs when no
+    /// modelled scenario applies.
+    pub fn from_topology(topo: Topology) -> Platform {
+        Platform { topo, dram_bw_gbps: 50.0, episodes: EpisodeSchedule::default() }
+    }
+
     pub fn with_episodes(mut self, eps: EpisodeSchedule) -> Platform {
         self.episodes = eps;
         self

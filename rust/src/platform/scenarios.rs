@@ -1,0 +1,185 @@
+//! Named platform scenarios — the registry behind `--platform`.
+//!
+//! A scenario is a reproducible [`Platform`] configuration: a topology plus
+//! the memory system and (optionally) a dynamic-heterogeneity episode
+//! schedule. The registry makes any `(backend × policy × platform)` triple
+//! a single lookup away (see [`crate::exec::run_triple`]), which is how the
+//! CLI, the figure regenerators and the conformance tests enumerate
+//! configurations without hard-coding constructors.
+//!
+//! Registered scenarios:
+//! - `tx2` — the paper's NVIDIA Jetson TX2 (2× Denver2 + 4× A57).
+//! - `haswell20` — the paper's dual-socket Xeon E5-2650v3 (2 NUMA × 10).
+//! - `biglittle44` — synthetic big.LITTLE: 4 fast + 4 slow cores, the
+//!   static-heterogeneity stress case with symmetric cluster widths.
+//! - `dvfs8` — 8 homogeneous cores with alternating DVFS throttle
+//!   episodes, the dynamic-heterogeneity case of §1.
+//! - `interference20` — `haswell20` plus a background process
+//!   time-sharing cores 0–1 mid-run (the §5.3 experiment).
+//!
+//! The dynamic `hom<N>` family (N homogeneous cores) is also resolved by
+//! [`by_name`] for arbitrary N ≥ 1. Episode schedules only influence the
+//! simulated backend; the real-thread backend executes on the host and sees
+//! whatever dynamic behaviour the host actually has.
+
+use super::episodes::{Episode, EpisodeSchedule};
+use super::perf_model::Platform;
+use super::topology::Topology;
+
+/// One registered platform scenario.
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    build: fn() -> Platform,
+}
+
+impl Scenario {
+    /// Materialise the scenario's platform (fresh instance per call).
+    pub fn platform(&self) -> Platform {
+        (self.build)()
+    }
+}
+
+fn biglittle44() -> Platform {
+    Platform {
+        topo: Topology::from_clusters(
+            "biglittle44",
+            &[(4, "denver2", 4 << 20), (4, "a57", 2 << 20)],
+        ),
+        dram_bw_gbps: 30.0,
+        episodes: EpisodeSchedule::default(),
+    }
+}
+
+fn dvfs8() -> Platform {
+    // Two alternating throttle windows: first one half of the machine drops
+    // to 40%, later the other half to 50% — the scheduler must migrate the
+    // critical chain twice, guided only by PTT observations.
+    Platform::homogeneous(8).with_episodes(EpisodeSchedule::new(vec![
+        Episode::dvfs(vec![0, 1, 2, 3], 0.05, 0.20, 0.4),
+        Episode::dvfs(vec![4, 5, 6, 7], 0.25, 0.40, 0.5),
+    ]))
+}
+
+fn interference20() -> Platform {
+    // The §5.3 setup: a same-priority background process keeps ~45% of
+    // cores 0–1 for itself during [0.05, 0.25) and adds memory traffic.
+    Platform::haswell20().with_episodes(EpisodeSchedule::new(vec![
+        Episode::interference(vec![0, 1], 0.05, 0.25, 0.45, 2.0),
+    ]))
+}
+
+/// The static scenario registry.
+pub fn scenarios() -> &'static [Scenario] {
+    static SCENARIOS: &[Scenario] = &[
+        Scenario {
+            name: "tx2",
+            description: "NVIDIA Jetson TX2: 2x Denver2 + 4x Cortex-A57 (paper §4.1)",
+            build: Platform::tx2,
+        },
+        Scenario {
+            name: "haswell20",
+            description: "dual-socket Xeon E5-2650v3: 2 NUMA x 10 cores (paper §4.1)",
+            build: Platform::haswell20,
+        },
+        Scenario {
+            name: "biglittle44",
+            description: "synthetic big.LITTLE: 4 fast + 4 slow cores, symmetric clusters",
+            build: biglittle44,
+        },
+        Scenario {
+            name: "dvfs8",
+            description: "8 homogeneous cores with alternating DVFS throttle episodes",
+            build: dvfs8,
+        },
+        Scenario {
+            name: "interference20",
+            description: "haswell20 with a background process on cores 0-1 (§5.3)",
+            build: interference20,
+        },
+    ];
+    SCENARIOS
+}
+
+/// Resolve a scenario by name. Understands every registered scenario plus
+/// the dynamic `hom<N>` family; returns `None` for unknown names.
+pub fn by_name(name: &str) -> Option<Platform> {
+    if let Some(s) = scenarios().iter().find(|s| s.name == name) {
+        return Some(s.platform());
+    }
+    if let Some(rest) = name.strip_prefix("hom") {
+        if let Ok(n) = rest.parse::<usize>() {
+            if n > 0 {
+                return Some(Platform::homogeneous(n));
+            }
+        }
+    }
+    None
+}
+
+/// Names of all registered (static) scenarios.
+pub fn names() -> Vec<&'static str> {
+    scenarios().iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{KernelClass, Partition};
+
+    #[test]
+    fn registry_contains_paper_platforms_and_synthetics() {
+        let names = names();
+        for expected in ["tx2", "haswell20", "biglittle44", "dvfs8", "interference20"] {
+            assert!(names.contains(&expected), "missing scenario {expected}");
+        }
+        assert!(names.len() >= 4);
+    }
+
+    #[test]
+    fn every_scenario_yields_a_sound_platform() {
+        for s in scenarios() {
+            let p = s.platform();
+            assert!(p.topo.n_cores() >= 1, "{}", s.name);
+            assert!(!p.topo.all_widths().is_empty(), "{}", s.name);
+            assert!(p.dram_bw_gbps > 0.0, "{}", s.name);
+            for part in p.topo.all_partitions() {
+                assert!(p.topo.is_valid_partition(part), "{}: {part:?}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_registered_and_hom_family() {
+        assert_eq!(by_name("tx2").unwrap().topo.n_cores(), 6);
+        assert_eq!(by_name("haswell20").unwrap().topo.n_cores(), 20);
+        assert_eq!(by_name("hom8").unwrap().topo.n_cores(), 8);
+        assert!(by_name("hom0").is_none());
+        assert!(by_name("homX").is_none());
+        assert!(by_name("riscv").is_none());
+    }
+
+    #[test]
+    fn biglittle_is_statically_heterogeneous() {
+        let p = by_name("biglittle44").unwrap();
+        let fast = p.ideal_exec_time(KernelClass::MatMul, Partition { leader: 0, width: 1 });
+        let slow = p.ideal_exec_time(KernelClass::MatMul, Partition { leader: 4, width: 1 });
+        assert!(fast < slow, "big cores must be faster: {fast} vs {slow}");
+    }
+
+    #[test]
+    fn dvfs_scenario_throttles_inside_windows_only() {
+        let p = by_name("dvfs8").unwrap();
+        assert!((p.episodes.speed_factor(0, 0.10) - 0.4).abs() < 1e-12);
+        assert_eq!(p.episodes.speed_factor(0, 0.30), 1.0);
+        assert!((p.episodes.speed_factor(4, 0.30) - 0.5).abs() < 1e-12);
+        assert_eq!(p.episodes.speed_factor(4, 0.10), 1.0);
+    }
+
+    #[test]
+    fn interference_scenario_adds_bandwidth_pressure() {
+        let p = by_name("interference20").unwrap();
+        assert!(p.episodes.extra_bw(0.10) > 0.0);
+        assert_eq!(p.episodes.extra_bw(0.30), 0.0);
+    }
+}

@@ -1,23 +1,30 @@
-//! The PJRT execution service.
+//! The GEMM execution service.
 //!
-//! The `xla` crate's PJRT types are not `Send`/`Sync` (raw C-API handles),
-//! so the runtime confines the client, the compiled executables and all
-//! literals to one dedicated **service thread**. Worker threads (TAO
-//! payloads) talk to it through an mpsc request channel and block on a
-//! reply channel — the PJRT engine is a tiny serving backend inside the
-//! process. Python is never involved: the service loads the HLO-text
-//! artifacts produced at build time and compiles them once.
+//! Two interchangeable implementations sit behind one thread-confined
+//! service API (workers talk to a dedicated service thread over an mpsc
+//! request channel and block on a reply channel):
+//!
+//! - **`pjrt` feature enabled** — the real thing: the `xla` crate's PJRT
+//!   CPU client loads the HLO-text artifacts produced by
+//!   `python/compile/aot.py` (JAX/Pallas, build-time only) and compiles
+//!   them once. The PJRT types are not `Send`/`Sync` (raw C-API handles),
+//!   which is why the service thread exists at all. Requires adding the
+//!   `xla` dependency to Cargo.toml — unavailable in the offline build.
+//! - **default (no `pjrt`)** — a pure-Rust fallback with the same API:
+//!   [`GemmHandle::gemm`] computes natively, so the tiled pipeline and the
+//!   real TAO-DAG still execute end to end; whole-model VGG inference
+//!   (which only exists as an XLA executable) reports an error. See
+//!   DESIGN.md §Substitutions.
 //!
 //! The hot operation is [`GemmHandle::gemm`]: an arbitrary-shape
-//! `C = A·B (+C₀)` decomposed into fixed-shape tile executions of the
-//! Pallas `gemm_acc` artifact (`c + a@b` over one tile). The tile loop
-//! keeps the running accumulator as an on-device literal across K steps,
+//! `C = A·B (+C₀)`. Under PJRT it is decomposed into fixed-shape tile
+//! executions of the Pallas `gemm_acc` artifact (`c + a@b` over one tile),
+//! keeping the running accumulator as an on-device literal across K steps —
 //! mirroring the kernel's K-innermost VMEM-resident schedule at the host
 //! level.
 
 use super::manifest::Manifest;
 use anyhow::{Context, Result, anyhow};
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc;
 
@@ -46,7 +53,7 @@ enum Request {
     Shutdown,
 }
 
-/// Handle to the PJRT service; clonable and `Send` — one per TAO payload.
+/// Handle to the GEMM service; clonable and `Send` — one per TAO payload.
 #[derive(Clone)]
 pub struct GemmHandle {
     tx: mpsc::Sender<Request>,
@@ -84,8 +91,8 @@ impl GemmHandle {
                 n,
                 reply: rtx,
             }))
-            .map_err(|_| anyhow!("PJRT service is down"))?;
-        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+            .map_err(|_| anyhow!("GEMM service is down"))?;
+        rrx.recv().map_err(|_| anyhow!("GEMM service dropped reply"))?
     }
 
     /// Install VGG parameters (flat, model order) for whole-model inference.
@@ -93,8 +100,8 @@ impl GemmHandle {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Request::VggLoad { params, reply: rtx })
-            .map_err(|_| anyhow!("PJRT service is down"))?;
-        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+            .map_err(|_| anyhow!("GEMM service is down"))?;
+        rrx.recv().map_err(|_| anyhow!("GEMM service dropped reply"))?
     }
 
     /// Whole-model inference: image `[3·hw·hw]` → logits.
@@ -102,8 +109,8 @@ impl GemmHandle {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Request::VggInfer(VggJob { image: image.to_vec(), reply: rtx }))
-            .map_err(|_| anyhow!("PJRT service is down"))?;
-        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+            .map_err(|_| anyhow!("GEMM service is down"))?;
+        rrx.recv().map_err(|_| anyhow!("GEMM service dropped reply"))?
     }
 }
 
@@ -114,18 +121,36 @@ pub struct PjrtService {
     manifest: Manifest,
 }
 
+/// With PJRT, the manifest is the contract — fail loudly when absent.
+#[cfg(feature = "pjrt")]
+fn load_manifest(dir: &Path) -> Result<Manifest> {
+    Manifest::load(dir)
+}
+
+/// The native fallback computes GEMMs without artifacts, so a missing or
+/// unreadable manifest degrades to an empty one (no VGG executable).
+#[cfg(not(feature = "pjrt"))]
+fn load_manifest(dir: &Path) -> Result<Manifest> {
+    Ok(Manifest::load(dir).unwrap_or(Manifest {
+        dir: dir.to_path_buf(),
+        gemm_tiles: Vec::new(),
+        vgg: None,
+    }))
+}
+
 impl PjrtService {
-    /// Start the service from an artifact directory (compiles all GEMM tile
-    /// executables up front; the VGG executable lazily at `vgg_load`).
+    /// Start the service from an artifact directory. Under PJRT this
+    /// compiles all GEMM tile executables up front (the VGG executable
+    /// lazily at `vgg_load`); the native fallback starts unconditionally.
     pub fn start(artifact_dir: &Path) -> Result<PjrtService> {
-        let manifest = Manifest::load(artifact_dir)?;
+        let manifest = load_manifest(artifact_dir)?;
         let (tx, rx) = mpsc::channel::<Request>();
         let m2 = manifest.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let join = std::thread::Builder::new()
-            .name("pjrt-service".into())
+            .name("gemm-service".into())
             .spawn(move || service_main(m2, rx, ready_tx))
-            .context("spawn pjrt service")?;
+            .context("spawn gemm service")?;
         ready_rx.recv().map_err(|_| anyhow!("service died during init"))??;
         Ok(PjrtService { tx, join: Some(join), manifest })
     }
@@ -152,17 +177,8 @@ impl Drop for PjrtService {
 // Service thread
 // ---------------------------------------------------------------------------
 
-struct ServiceState {
-    client: xla::PjRtClient,
-    /// block size → compiled gemm_acc executable.
-    tiles: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    manifest: Manifest,
-    vgg_exe: Option<xla::PjRtLoadedExecutable>,
-    vgg_params: Option<Vec<xla::Literal>>,
-}
-
 fn service_main(manifest: Manifest, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
-    let state = match init_state(&manifest) {
+    let state = match service::init_state(&manifest) {
         Ok(s) => {
             let _ = ready.send(Ok(()));
             s
@@ -177,49 +193,21 @@ fn service_main(manifest: Manifest, rx: mpsc::Receiver<Request>, ready: mpsc::Se
         match req {
             Request::Shutdown => break,
             Request::Gemm(job) => {
-                let result = tiled_gemm(&state, &job);
+                let result = service::tiled_gemm(&state, &job);
                 let _ = job.reply.send(result);
             }
             Request::VggLoad { params, reply } => {
-                let _ = reply.send(vgg_load(&mut state, params));
+                let _ = reply.send(service::vgg_load(&mut state, params));
             }
             Request::VggInfer(job) => {
-                let _ = job.reply.send(vgg_infer(&state, &job.image));
+                let _ = job.reply.send(service::vgg_infer(&state, &job.image));
             }
         }
     }
-}
-
-fn init_state(manifest: &Manifest) -> Result<ServiceState> {
-    let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-    let mut tiles = BTreeMap::new();
-    for tile in &manifest.gemm_tiles {
-        let proto = xla::HloModuleProto::from_text_file(&tile.path)
-            .with_context(|| format!("load {}", tile.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).with_context(|| format!("compile tile {}", tile.block))?;
-        tiles.insert(tile.block, exe);
-    }
-    Ok(ServiceState { client, tiles, manifest: manifest.clone(), vgg_exe: None, vgg_params: None })
-}
-
-/// Pick the largest tile not exceeding every padded dimension's "waste
-/// budget": the smallest dimension determines how much padding a large tile
-/// would add.
-fn pick_block(tiles: &BTreeMap<usize, xla::PjRtLoadedExecutable>, m: usize, k: usize, n: usize) -> usize {
-    let smallest_dim = m.min(k).min(n);
-    let mut best = *tiles.keys().next().expect("at least one tile");
-    for &b in tiles.keys() {
-        // Accept b if padding the smallest dim to b wastes < 2× its size,
-        // i.e. b ≤ 2 × smallest_dim, preferring the largest such b.
-        if b <= (2 * smallest_dim).max(best) {
-            best = b;
-        }
-    }
-    best
 }
 
 /// Extract the zero-padded tile `(ti, tj)` of the row-major `src` (r×c).
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))] // tile loop is PJRT-only; kept under test
 fn tile_of(src: &[f32], r: usize, c: usize, ti: usize, tj: usize, b: usize) -> Vec<f32> {
     let mut out = vec![0f32; b * b];
     let r0 = ti * b;
@@ -233,93 +221,206 @@ fn tile_of(src: &[f32], r: usize, c: usize, ti: usize, tj: usize, b: usize) -> V
     out
 }
 
-fn literal_2d(data: &[f32], r: usize, c: usize) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(data).reshape(&[r as i64, c as i64])?)
-}
+#[cfg(feature = "pjrt")]
+mod service {
+    //! The real PJRT backend: compiled HLO executables via the `xla` crate.
 
-/// The tiled GEMM: pads (m, k, n) to tile multiples and loops the
-/// single-tile `gemm_acc` executable, keeping the accumulator as a device
-/// literal across the K loop.
-fn tiled_gemm(state: &ServiceState, job: &GemmJob) -> Result<Vec<f32>> {
-    let (m, k, n) = (job.m, job.k, job.n);
-    let b = pick_block(&state.tiles, m, k, n);
-    let exe = &state.tiles[&b];
-    let (tm, tk, tn) = (m.div_ceil(b), k.div_ceil(b), n.div_ceil(b));
-    let mut out = vec![0f32; m * n];
-    let zeros = vec![0f32; b * b];
-    for ti in 0..tm {
-        for tj in 0..tn {
-            // Seed the accumulator with C₀'s tile (or zeros).
-            let seed = match &job.c0 {
-                Some(c0) => tile_of(c0, m, n, ti, tj, b),
-                None => zeros.clone(),
-            };
-            let mut acc = literal_2d(&seed, b, b)?;
-            for tkk in 0..tk {
-                let at = tile_of(&job.a, m, k, ti, tkk, b);
-                let bt = tile_of(&job.b, k, n, tkk, tj, b);
-                let al = literal_2d(&at, b, b)?;
-                let bl = literal_2d(&bt, b, b)?;
-                let result = exe.execute::<xla::Literal>(&[al, bl, acc])?[0][0]
-                    .to_literal_sync()?;
-                acc = result.to_tuple1()?;
-            }
-            let tile: Vec<f32> = acc.to_vec::<f32>()?;
-            // Scatter the valid region back.
-            let r0 = ti * b;
-            let c0 = tj * b;
-            let rows = b.min(m - r0);
-            let cols = b.min(n - c0);
-            for i in 0..rows {
-                let drow = (r0 + i) * n + c0;
-                out[drow..drow + cols].copy_from_slice(&tile[i * b..i * b + cols]);
+    use super::{GemmJob, tile_of};
+    use crate::runtime::manifest::Manifest;
+    use anyhow::{Context, Result, anyhow};
+    use std::collections::BTreeMap;
+
+    pub(super) struct ServiceState {
+        client: xla::PjRtClient,
+        /// block size → compiled gemm_acc executable.
+        tiles: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        manifest: Manifest,
+        vgg_exe: Option<xla::PjRtLoadedExecutable>,
+        vgg_params: Option<Vec<xla::Literal>>,
+    }
+
+    pub(super) fn init_state(manifest: &Manifest) -> Result<ServiceState> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut tiles = BTreeMap::new();
+        for tile in &manifest.gemm_tiles {
+            let proto = xla::HloModuleProto::from_text_file(&tile.path)
+                .with_context(|| format!("load {}", tile.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                client.compile(&comp).with_context(|| format!("compile tile {}", tile.block))?;
+            tiles.insert(tile.block, exe);
+        }
+        Ok(ServiceState {
+            client,
+            tiles,
+            manifest: manifest.clone(),
+            vgg_exe: None,
+            vgg_params: None,
+        })
+    }
+
+    /// Pick the largest tile not exceeding every padded dimension's "waste
+    /// budget": the smallest dimension determines how much padding a large
+    /// tile would add.
+    fn pick_block(
+        tiles: &BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> usize {
+        let smallest_dim = m.min(k).min(n);
+        let mut best = *tiles.keys().next().expect("at least one tile");
+        for &b in tiles.keys() {
+            // Accept b if padding the smallest dim to b wastes < 2× its size,
+            // i.e. b ≤ 2 × smallest_dim, preferring the largest such b.
+            if b <= (2 * smallest_dim).max(best) {
+                best = b;
             }
         }
+        best
     }
-    Ok(out)
+
+    fn literal_2d(data: &[f32], r: usize, c: usize) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(&[r as i64, c as i64])?)
+    }
+
+    /// The tiled GEMM: pads (m, k, n) to tile multiples and loops the
+    /// single-tile `gemm_acc` executable, keeping the accumulator as a
+    /// device literal across the K loop.
+    pub(super) fn tiled_gemm(state: &ServiceState, job: &GemmJob) -> Result<Vec<f32>> {
+        let (m, k, n) = (job.m, job.k, job.n);
+        let b = pick_block(&state.tiles, m, k, n);
+        let exe = &state.tiles[&b];
+        let (tm, tk, tn) = (m.div_ceil(b), k.div_ceil(b), n.div_ceil(b));
+        let mut out = vec![0f32; m * n];
+        let zeros = vec![0f32; b * b];
+        for ti in 0..tm {
+            for tj in 0..tn {
+                // Seed the accumulator with C₀'s tile (or zeros).
+                let seed = match &job.c0 {
+                    Some(c0) => tile_of(c0, m, n, ti, tj, b),
+                    None => zeros.clone(),
+                };
+                let mut acc = literal_2d(&seed, b, b)?;
+                for tkk in 0..tk {
+                    let at = tile_of(&job.a, m, k, ti, tkk, b);
+                    let bt = tile_of(&job.b, k, n, tkk, tj, b);
+                    let al = literal_2d(&at, b, b)?;
+                    let bl = literal_2d(&bt, b, b)?;
+                    let result =
+                        exe.execute::<xla::Literal>(&[al, bl, acc])?[0][0].to_literal_sync()?;
+                    acc = result.to_tuple1()?;
+                }
+                let tile: Vec<f32> = acc.to_vec::<f32>()?;
+                // Scatter the valid region back.
+                let r0 = ti * b;
+                let c0 = tj * b;
+                let rows = b.min(m - r0);
+                let cols = b.min(n - c0);
+                for i in 0..rows {
+                    let drow = (r0 + i) * n + c0;
+                    out[drow..drow + cols].copy_from_slice(&tile[i * b..i * b + cols]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub(super) fn vgg_load(state: &mut ServiceState, params: Vec<Vec<f32>>) -> Result<()> {
+        let spec = state
+            .manifest
+            .vgg
+            .clone()
+            .ok_or_else(|| anyhow!("manifest has no VGG artifact"))?;
+        anyhow::ensure!(
+            params.len() == spec.param_shapes.len(),
+            "expected {} params, got {}",
+            spec.param_shapes.len(),
+            params.len()
+        );
+        if state.vgg_exe.is_none() {
+            let proto = xla::HloModuleProto::from_text_file(&spec.path)
+                .with_context(|| format!("load {}", spec.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            state.vgg_exe = Some(state.client.compile(&comp).context("compile VGG model")?);
+        }
+        let mut lits = Vec::with_capacity(params.len());
+        for (p, shape) in params.iter().zip(&spec.param_shapes) {
+            let numel: usize = shape.iter().product();
+            anyhow::ensure!(p.len() == numel, "param shape mismatch: {} vs {shape:?}", p.len());
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lits.push(xla::Literal::vec1(p).reshape(&dims)?);
+        }
+        state.vgg_params = Some(lits);
+        Ok(())
+    }
+
+    pub(super) fn vgg_infer(state: &ServiceState, image: &[f32]) -> Result<Vec<f32>> {
+        let spec = state.manifest.vgg.as_ref().ok_or_else(|| anyhow!("no VGG artifact"))?;
+        let exe = state.vgg_exe.as_ref().ok_or_else(|| anyhow!("vgg_load first"))?;
+        let params = state.vgg_params.as_ref().ok_or_else(|| anyhow!("vgg_load first"))?;
+        let hw = spec.input_hw;
+        anyhow::ensure!(image.len() == 3 * hw * hw, "image must be 3×{hw}×{hw}");
+        let img = xla::Literal::vec1(image).reshape(&[3, hw as i64, hw as i64])?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&img);
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
 }
 
-fn vgg_load(state: &mut ServiceState, params: Vec<Vec<f32>>) -> Result<()> {
-    let spec = state
-        .manifest
-        .vgg
-        .clone()
-        .ok_or_else(|| anyhow!("manifest has no VGG artifact"))?;
-    anyhow::ensure!(
-        params.len() == spec.param_shapes.len(),
-        "expected {} params, got {}",
-        spec.param_shapes.len(),
-        params.len()
-    );
-    if state.vgg_exe.is_none() {
-        let proto = xla::HloModuleProto::from_text_file(&spec.path)
-            .with_context(|| format!("load {}", spec.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        state.vgg_exe = Some(state.client.compile(&comp).context("compile VGG model")?);
-    }
-    let mut lits = Vec::with_capacity(params.len());
-    for (p, shape) in params.iter().zip(&spec.param_shapes) {
-        let numel: usize = shape.iter().product();
-        anyhow::ensure!(p.len() == numel, "param shape mismatch: {} vs {shape:?}", p.len());
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        lits.push(xla::Literal::vec1(p).reshape(&dims)?);
-    }
-    state.vgg_params = Some(lits);
-    Ok(())
-}
+#[cfg(not(feature = "pjrt"))]
+mod service {
+    //! Native fallback: reference GEMM on the service thread, no artifacts
+    //! required. Keeps the pipeline and TAO-DAG paths runnable (and the
+    //! scheduler exercisable end to end) on hosts without XLA bindings.
 
-fn vgg_infer(state: &ServiceState, image: &[f32]) -> Result<Vec<f32>> {
-    let spec = state.manifest.vgg.as_ref().ok_or_else(|| anyhow!("no VGG artifact"))?;
-    let exe = state.vgg_exe.as_ref().ok_or_else(|| anyhow!("vgg_load first"))?;
-    let params = state.vgg_params.as_ref().ok_or_else(|| anyhow!("vgg_load first"))?;
-    let hw = spec.input_hw;
-    anyhow::ensure!(image.len() == 3 * hw * hw, "image must be 3×{hw}×{hw}");
-    let img = xla::Literal::vec1(image).reshape(&[3, hw as i64, hw as i64])?;
-    let mut args: Vec<&xla::Literal> = params.iter().collect();
-    args.push(&img);
-    let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-    let logits = result.to_tuple1()?;
-    Ok(logits.to_vec::<f32>()?)
+    use super::GemmJob;
+    use crate::runtime::manifest::Manifest;
+    use anyhow::{Result, anyhow};
+
+    pub(super) struct ServiceState {
+        manifest: Manifest,
+    }
+
+    pub(super) fn init_state(manifest: &Manifest) -> Result<ServiceState> {
+        Ok(ServiceState { manifest: manifest.clone() })
+    }
+
+    pub(super) fn tiled_gemm(_state: &ServiceState, job: &GemmJob) -> Result<Vec<f32>> {
+        let (m, k, n) = (job.m, job.k, job.n);
+        let mut out = match &job.c0 {
+            Some(c0) => c0.clone(),
+            None => vec![0f32; m * n],
+        };
+        for i in 0..m {
+            let crow = &mut out[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let aik = job.a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &job.b[kk * n..(kk + 1) * n];
+                for (c, bv) in crow.iter_mut().zip(brow) {
+                    *c += aik * bv;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub(super) fn vgg_load(state: &mut ServiceState, _params: Vec<Vec<f32>>) -> Result<()> {
+        if state.manifest.vgg.is_none() {
+            return Err(anyhow!("manifest has no VGG artifact"));
+        }
+        Err(anyhow!("whole-model VGG inference requires the `pjrt` feature (xla bindings)"))
+    }
+
+    pub(super) fn vgg_infer(state: &ServiceState, _image: &[f32]) -> Result<Vec<f32>> {
+        let _ = &state.manifest;
+        Err(anyhow!("whole-model VGG inference requires the `pjrt` feature (xla bindings)"))
+    }
 }
 
 #[cfg(test)]
@@ -373,13 +474,21 @@ mod tests {
         assert_eq!(t, vec![10.0, 11.0, 14.0, 15.0]);
     }
 
+    // The service tests below run against whichever backend is compiled in:
+    // the PJRT path needs `make artifacts` (and skips without it); the
+    // native fallback needs nothing and validates the same contract.
+
+    fn start_service() -> Option<PjrtService> {
+        if cfg!(feature = "pjrt") && !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(PjrtService::start(Path::new("artifacts")).unwrap())
+    }
+
     #[test]
     fn service_gemm_exact_tile() {
-        if !artifacts_available() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+        let Some(svc) = start_service() else { return };
         let h = svc.handle();
         let (m, k, n) = (32, 32, 32);
         let a = rand_vec(m * k, 1);
@@ -390,10 +499,7 @@ mod tests {
 
     #[test]
     fn service_gemm_ragged_shapes() {
-        if !artifacts_available() {
-            return;
-        }
-        let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+        let Some(svc) = start_service() else { return };
         let h = svc.handle();
         for &(m, k, n) in &[(5usize, 7usize, 3usize), (70, 33, 100), (64, 576, 50), (1, 100, 1)] {
             let a = rand_vec(m * k, m as u64);
@@ -405,10 +511,7 @@ mod tests {
 
     #[test]
     fn service_gemm_acc_seeds_accumulator() {
-        if !artifacts_available() {
-            return;
-        }
-        let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+        let Some(svc) = start_service() else { return };
         let h = svc.handle();
         let (m, k, n) = (16, 16, 16);
         let a = rand_vec(m * k, 3);
@@ -424,10 +527,7 @@ mod tests {
 
     #[test]
     fn handles_are_cloneable_across_threads() {
-        if !artifacts_available() {
-            return;
-        }
-        let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+        let Some(svc) = start_service() else { return };
         let handles: Vec<_> = (0..4)
             .map(|i| {
                 let h = svc.handle();
@@ -442,6 +542,15 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn native_fallback_rejects_whole_model_inference() {
+        let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+        let h = svc.handle();
+        assert!(h.vgg_infer(&[0.0; 3]).is_err());
+        assert!(h.vgg_load(vec![vec![0.0; 4]]).is_err());
     }
 
     // `pick_block` needs real executables to construct the map; its choice

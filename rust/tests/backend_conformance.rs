@@ -1,0 +1,139 @@
+//! Cross-backend conformance: the same scheduling code must behave
+//! identically — task accounting, placement validity, criticality — whether
+//! it runs in virtual time (`sim`) or on real threads (`real`).
+//!
+//! This is the acceptance gate for the `ExecutionBackend` seam: for a fixed
+//! seed and a deterministic DAG, every registered policy completes the same
+//! DAG on both backends with identical task-execution counts and only valid
+//! placements, across ≥ 3 registered platform scenarios.
+
+use xitao::coordinator::scheduler::policy_by_name;
+use xitao::dag_gen::{DagParams, generate};
+use xitao::exec::{BACKEND_NAMES, ExecutionBackend, RunOpts, backend_by_name, run_triple};
+use xitao::platform::scenarios;
+
+const POLICIES: [&str; 5] = ["performance", "homogeneous", "cats", "dheft", "energy"];
+const SCENARIOS: [&str; 4] = ["tx2", "haswell20", "biglittle44", "dvfs8"];
+
+#[test]
+fn every_policy_completes_the_same_dag_on_both_backends() {
+    for scen in SCENARIOS {
+        let plat = scenarios::by_name(scen).expect("registered scenario");
+        let (dag, _) = generate(&DagParams::mix(60, 4.0, 0xC0FFEE));
+        for pol in POLICIES {
+            let mut per_backend = Vec::new();
+            for be in BACKEND_NAMES {
+                let backend = backend_by_name(be).expect("registered backend");
+                let policy =
+                    policy_by_name(pol, plat.topo.n_cores()).expect("registered policy");
+                let run = backend.run(
+                    &dag,
+                    &plat,
+                    policy.as_ref(),
+                    None,
+                    &RunOpts { seed: 7, ..Default::default() },
+                );
+                // Every task executed exactly once, every placement valid.
+                let mut seen = vec![0u32; dag.len()];
+                for r in &run.result.records {
+                    seen[r.task] += 1;
+                    assert!(
+                        plat.topo.is_valid_partition(r.partition),
+                        "{scen}/{pol}/{be}: invalid placement {:?}",
+                        r.partition
+                    );
+                }
+                assert!(
+                    seen.iter().all(|&c| c == 1),
+                    "{scen}/{pol}/{be}: execution counts {seen:?}"
+                );
+                assert!(run.result.makespan > 0.0, "{scen}/{pol}/{be}");
+                per_backend.push(run.result.n_tasks());
+            }
+            assert_eq!(
+                per_backend[0], per_backend[1],
+                "{scen}/{pol}: task counts differ across backends"
+            );
+        }
+    }
+}
+
+#[test]
+fn criticality_tagging_is_backend_independent() {
+    // Criticality is a DAG property resolved at wake-up time; the set of
+    // critical task ids must not depend on the execution substrate.
+    let plat = scenarios::by_name("tx2").unwrap();
+    let (dag, _) = generate(&DagParams::mix(80, 2.0, 31));
+    let crit_ids = |be: &str| -> std::collections::BTreeSet<usize> {
+        let backend = backend_by_name(be).unwrap();
+        let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
+        backend
+            .run(&dag, &plat, policy.as_ref(), None, &RunOpts::default())
+            .result
+            .records
+            .iter()
+            .filter(|r| r.critical)
+            .map(|r| r.task)
+            .collect()
+    };
+    assert_eq!(crit_ids("sim"), crit_ids("real"));
+}
+
+#[test]
+fn run_triple_covers_the_full_registry_product() {
+    // (backend × policy × scenario) as one call each; a coarse but complete
+    // sweep that any future backend/scenario/policy must keep passing.
+    let (dag, _) = generate(&DagParams::mix(24, 4.0, 5));
+    for be in BACKEND_NAMES {
+        for scen in SCENARIOS {
+            for pol in POLICIES {
+                let run = run_triple(be, scen, pol, &dag, &RunOpts::default())
+                    .unwrap_or_else(|e| panic!("{be}/{scen}/{pol}: {e}"));
+                assert_eq!(run.result.n_tasks(), 24, "{be}/{scen}/{pol}");
+            }
+        }
+    }
+}
+
+#[test]
+fn payload_execution_counts_match_across_backends() {
+    // With real payloads attached, the real backend must still execute each
+    // TAO exactly once (counted via rank-0 hits), matching the sim trace.
+    use std::sync::Arc;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use xitao::coordinator::payload_fn;
+    use xitao::coordinator::TaoDag;
+    use xitao::platform::KernelClass;
+
+    let plat = scenarios::by_name("biglittle44").unwrap();
+    let hits = Arc::new(AtomicUsize::new(0));
+    let mut dag = TaoDag::new();
+    let mut prev: Option<usize> = None;
+    for _ in 0..30 {
+        let h = hits.clone();
+        let id = dag.add_task_payload(
+            KernelClass::MatMul,
+            0,
+            1.0,
+            Some(payload_fn(KernelClass::MatMul, move |rank, _w| {
+                if rank == 0 {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }
+            })),
+        );
+        if let Some(p) = prev {
+            dag.add_edge(p, id);
+        }
+        prev = Some(id);
+    }
+    dag.finalize().unwrap();
+
+    let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
+    let sim = backend_by_name("sim").unwrap();
+    let sim_run = sim.run(&dag, &plat, policy.as_ref(), None, &RunOpts::default());
+    let real = backend_by_name("real").unwrap();
+    let real_run = real.run(&dag, &plat, policy.as_ref(), None, &RunOpts::default());
+
+    assert_eq!(sim_run.result.n_tasks(), real_run.result.n_tasks());
+    assert_eq!(hits.load(Ordering::SeqCst), 30, "each TAO ran exactly once for real");
+}

@@ -1,0 +1,74 @@
+//! CLI smoke tests: the `repro` binary must exit 0 on `help`, on
+//! `scenarios`, and on `run-dag --quick` for every registered platform
+//! scenario (plus the dynamic `hom<N>` family and the real backend).
+
+use std::process::Command;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+#[test]
+fn help_exits_zero_and_mentions_backends() {
+    let out = repro().arg("help").output().expect("spawn repro");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("run-dag"), "{text}");
+    assert!(text.contains("--backend"), "{text}");
+}
+
+#[test]
+fn scenarios_command_lists_the_registry() {
+    let out = repro().arg("scenarios").output().expect("spawn repro");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in xitao::platform::scenarios::names() {
+        assert!(text.contains(name), "missing {name} in:\n{text}");
+    }
+}
+
+#[test]
+fn run_dag_quick_exits_zero_on_every_registered_scenario() {
+    for name in xitao::platform::scenarios::names() {
+        let out = repro()
+            .args(["run-dag", "--quick", "--platform", name, "--seed", "3"])
+            .output()
+            .expect("spawn repro");
+        assert!(
+            out.status.success(),
+            "scenario {name} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
+
+#[test]
+fn run_dag_quick_works_on_hom_family_and_real_backend() {
+    let out = repro()
+        .args(["run-dag", "--quick", "--platform", "hom4", "--backend", "real"])
+        .output()
+        .expect("spawn repro");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("real backend"), "{text}");
+}
+
+#[test]
+fn run_dag_rejects_unknown_backend_and_platform() {
+    let st = repro()
+        .args(["run-dag", "--quick", "--backend", "quantum"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+    let st = repro()
+        .args(["run-dag", "--quick", "--platform", "riscv"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+}
+
+#[test]
+fn unknown_command_exits_with_usage_error() {
+    let st = repro().arg("frobnicate").status().expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+}
