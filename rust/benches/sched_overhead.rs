@@ -77,8 +77,15 @@ fn main() {
         let policy = policy_by_name(name, topo.n_cores()).unwrap();
         for critical in [true, false] {
             let ns = time_ns(iters, || {
-                let ctx =
-                    PlaceCtx { core: 3, type_id: 0, critical, ptt: &ptt, topo: &topo, now: 0.0 };
+                let ctx = PlaceCtx {
+                    core: 3,
+                    type_id: 0,
+                    critical,
+                    app_id: 0,
+                    ptt: &ptt,
+                    topo: &topo,
+                    now: 0.0,
+                };
                 std::hint::black_box(policy.place(&ctx));
             });
             println!("[place] {name:12} critical={critical:5}: {ns:7.1} ns");

@@ -1,0 +1,14 @@
+//! `cargo bench --bench stream_interference` — the paper's §5.3 Haswell
+//! interference experiment grown to multi-tenant form: two applications
+//! co-run while a background process squeezes cores 0–1; reports per-app
+//! slowdown vs. isolated runs, Jain fairness, and critical-task placement
+//! around the episode. See bench::figures::stream_interference.
+use xitao::bench::{self, BenchOpts};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() };
+    let t = std::time::Instant::now();
+    bench::emit("stream_interference", &bench::stream_interference(&opts));
+    eprintln!("[stream_interference] regenerated in {:.1}s", t.elapsed().as_secs_f64());
+}

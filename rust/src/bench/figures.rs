@@ -477,6 +477,103 @@ pub fn ablation_energy(opts: &BenchOpts) -> Vec<Table> {
     vec![t]
 }
 
+/// **Stream interference** — the §5.3 Haswell experiment grown to
+/// multi-tenant form: two applications co-run on `bg-interferer-haswell20`
+/// while a background process squeezes cores 0–1. For each policy we
+/// report per-app slowdown against an isolated run and the Jain fairness
+/// index, plus (for the PTT scheduler) the share of critical tasks placed
+/// on the victim cores before/during/after the episode. The paper's shape
+/// under test: the performance-based scheduler detects the interference
+/// through the PTT alone and steers critical work off the victims, keeping
+/// per-app slowdowns tighter than the PTT-blind baselines.
+pub fn stream_interference(opts: &BenchOpts) -> Vec<Table> {
+    use crate::exec::run_stream_triple;
+    use crate::workload::scenarios::stream_by_name;
+    warn_sim_pinned(opts, "stream-interference", "interference episodes are virtual-time only");
+    let scen = stream_by_name("bg-interferer-haswell20").expect("registered stream");
+    let victims = crate::platform::scenarios::BG_INTERFERER_VICTIMS;
+    let (win_a, win_b) = crate::platform::scenarios::BG_INTERFERER_WINDOW;
+
+    let mut t_fair = Table::new(
+        "Stream interference: per-app slowdown and fairness, bg-interferer-haswell20",
+        &["policy", "slowdown fg", "slowdown tenant", "worst", "Jain index"],
+    );
+    let mut t_victim = Table::new(
+        "Stream interference: critical TAOs on victim cores 0-1 (performance-based)",
+        &["phase", "window [s]", "crit TAOs", "on victims", "share [%]"],
+    );
+    for policy in ["performance", "homogeneous", "cats", "dheft"] {
+        // Sized from the stream's actual app count, so editing the
+        // registered scenario (more tenants, periodic copies) cannot
+        // silently break the bench.
+        let mut sd: Vec<Vec<f64>> = Vec::new();
+        let mut jain = Vec::new();
+        for s in 0..opts.seeds as u64 {
+            let stream = scen.stream(17 + s, opts.quick);
+            let run = run_stream_triple(
+                "sim",
+                scen.platform,
+                policy,
+                &stream,
+                &RunOpts { seed: 17 + s, ..Default::default() },
+                true,
+            )
+            .expect("registered triple");
+            if sd.len() < run.apps.len() {
+                sd.resize(run.apps.len(), Vec::new());
+            }
+            for (i, app) in run.apps.iter().enumerate() {
+                sd[i].push(app.slowdown.expect("baseline attached"));
+            }
+            jain.push(run.jain_fairness());
+            if policy == "performance" && s == 0 {
+                // Phase table from the first seed's trace.
+                let end = run.result.makespan;
+                for (name, a, b) in [
+                    ("before", 0.0, win_a),
+                    ("during", win_a, win_b.min(end)),
+                    ("after", win_b.min(end), end),
+                ] {
+                    let crit: Vec<_> = run
+                        .result
+                        .records
+                        .iter()
+                        .filter(|r| r.critical && r.t_start >= a && r.t_start < b)
+                        .collect();
+                    let on_victims = crit
+                        .iter()
+                        .filter(|r| r.partition.cores().any(|c| victims.contains(&c)))
+                        .count();
+                    let share = if crit.is_empty() {
+                        0.0
+                    } else {
+                        100.0 * on_victims as f64 / crit.len() as f64
+                    };
+                    t_victim.row(vec![
+                        name.to_string(),
+                        format!("{a:.2}-{b:.2}"),
+                        crit.len().to_string(),
+                        on_victims.to_string(),
+                        f2(share),
+                    ]);
+                }
+            }
+        }
+        let means: Vec<f64> = sd.iter().map(|v| stats::mean(v)).collect();
+        let m0 = means.first().copied().unwrap_or(f64::NAN);
+        let m1 = means.get(1).copied().unwrap_or(m0);
+        let worst = means.iter().copied().fold(f64::NAN, f64::max);
+        t_fair.row(vec![
+            policy.to_string(),
+            f3(m0),
+            f3(m1),
+            f3(worst),
+            f3(stats::mean(&jain)),
+        ]);
+    }
+    vec![t_fair, t_victim]
+}
+
 /// Print tables and write CSVs under `bench_out/<prefix>_<i>.csv`.
 pub fn emit(prefix: &str, tables: &[Table]) {
     for (i, t) in tables.iter().enumerate() {
@@ -547,6 +644,24 @@ mod tests {
             let sum: f64 = row[1..].iter().map(|c| c.parse::<f64>().unwrap()).sum();
             assert!((sum - 100.0).abs() < 1.0, "row sums to {sum}");
         }
+    }
+
+    #[test]
+    fn stream_interference_reports_all_policies_and_phases() {
+        let tables = stream_interference(&BenchOpts::quick());
+        assert_eq!(tables.len(), 2);
+        // One fairness row per policy, each with a valid Jain index.
+        assert_eq!(tables[0].rows.len(), 4);
+        for row in &tables[0].rows {
+            let jain: f64 = row[4].parse().unwrap();
+            assert!(jain > 0.0 && jain <= 1.0 + 1e-9, "{row:?}");
+            for cell in &row[1..4] {
+                let sd: f64 = cell.parse().unwrap();
+                assert!(sd > 0.0 && sd.is_finite(), "{row:?}");
+            }
+        }
+        // before/during/after phase rows for the PTT scheduler.
+        assert_eq!(tables[1].rows.len(), 3);
     }
 
     #[test]

@@ -5,5 +5,6 @@
 pub mod figures;
 
 pub use figures::{
-    BenchOpts, ablation_baselines, ablation_energy, ablation_ptt, emit, fig5, fig6, fig7, fig8, fig9, fig10,
+    BenchOpts, ablation_baselines, ablation_energy, ablation_ptt, emit, fig5, fig6, fig7, fig8,
+    fig9, fig10, stream_interference,
 };

@@ -227,6 +227,59 @@ impl TaoDag {
         path
     }
 
+    /// Seed critical-path membership for execution: per application, the
+    /// roots of maximal criticality start that app's critical path
+    /// (§3.3: initial tasks are *placed* as non-critical but still hand
+    /// the path to their children). `app_of[task]` maps tasks to
+    /// applications; an empty slice treats the whole DAG as one app, in
+    /// which case this is exactly "roots of global max criticality". Both
+    /// engines consume this one implementation, so sim/real criticality
+    /// parity cannot drift.
+    pub fn cp_root_seeds(&self, app_of: &[usize]) -> Vec<bool> {
+        assert!(self.finalized, "finalize() first");
+        let n_apps = app_of.iter().copied().max().map_or(1, |m| m + 1);
+        let mut max_crit = vec![0u32; n_apps];
+        for node in &self.nodes {
+            let app = app_of.get(node.id).copied().unwrap_or(0);
+            max_crit[app] = max_crit[app].max(node.criticality);
+        }
+        self.nodes
+            .iter()
+            .map(|n| {
+                let app = app_of.get(n.id).copied().unwrap_or(0);
+                n.preds.is_empty() && n.criticality == max_crit[app]
+            })
+            .collect()
+    }
+
+    /// Validate a workload-stream admission schedule against this DAG —
+    /// the shared precondition check of both stream engines
+    /// (`sim::run_stream_sim`, `coordinator::run_stream_real`), kept in
+    /// one place so the backends cannot drift. Panics on: an unfinalized
+    /// or empty DAG, an empty schedule, an `app_of` map of the wrong
+    /// length, unsorted or negative arrival times, and an admission set
+    /// that does not cover every root exactly once — a miss would
+    /// deadlock the sim and hang the real worker pool forever, so this
+    /// last check is a hard assert (O(n log n) once per run) rather than
+    /// a debug-only one.
+    pub fn validate_admissions(&self, app_of: &[usize], admissions: &[(f64, Vec<TaskId>)]) {
+        assert!(self.finalized, "finalize() the DAG first");
+        assert!(!self.is_empty(), "empty DAG");
+        assert!(!admissions.is_empty(), "a stream needs at least one admission");
+        assert!(
+            app_of.is_empty() || app_of.len() == self.len(),
+            "app_of must be empty or cover every task"
+        );
+        for w in admissions.windows(2) {
+            assert!(w[0].0 <= w[1].0, "admissions must be sorted by arrival time");
+        }
+        assert!(admissions[0].0 >= 0.0, "arrival times must be non-negative");
+        let mut adm: Vec<TaskId> =
+            admissions.iter().flat_map(|(_, r)| r.iter().copied()).collect();
+        adm.sort_unstable();
+        assert_eq!(adm, self.roots(), "admissions must cover every root exactly once");
+    }
+
     /// Count of distinct TAO types referenced (PTT sizing).
     pub fn n_types(&self) -> usize {
         self.nodes.iter().map(|n| n.type_id).max().map_or(0, |m| m + 1)
@@ -346,6 +399,57 @@ mod tests {
         let mut d = TaoDag::new();
         let x = d.add_task(KernelClass::MatMul, 0, 1.0);
         d.add_edge(x, x);
+    }
+
+    #[test]
+    fn cp_root_seeds_single_app_matches_global_rule() {
+        let (d, [a, b, ..]) = paper_figure1_dag();
+        let seeds = d.cp_root_seeds(&[]);
+        for (id, &seeded) in seeds.iter().enumerate() {
+            assert_eq!(seeded, d.is_cp_root(id), "task {id}");
+        }
+        assert!(seeds[a]); // A starts the length-5 critical path
+        assert!(!seeds[b]); // B is a root but criticality 4 < 5
+    }
+
+    #[test]
+    fn cp_root_seeds_are_per_application() {
+        // Two independent components: a 3-chain (app 0) and a single task
+        // (app 1). A global max would deny the short app a critical path;
+        // per-app seeding marks both components' top roots.
+        let mut d = TaoDag::new();
+        let c0 = d.add_task(KernelClass::MatMul, 0, 1.0);
+        let c1 = d.add_task(KernelClass::MatMul, 0, 1.0);
+        let c2 = d.add_task(KernelClass::MatMul, 0, 1.0);
+        d.add_edge(c0, c1);
+        d.add_edge(c1, c2);
+        let _solo = d.add_task(KernelClass::Sort, 1, 1.0);
+        d.finalize().unwrap();
+        let seeds = d.cp_root_seeds(&[0, 0, 0, 1]);
+        assert_eq!(seeds, vec![true, false, false, true]);
+        // The app-blind view seeds only the long chain's root.
+        assert_eq!(d.cp_root_seeds(&[]), vec![true, false, false, false]);
+    }
+
+    #[test]
+    fn validate_admissions_accepts_a_sound_schedule() {
+        let (d, _) = paper_figure1_dag();
+        // A and B are the two roots, split across two admissions.
+        d.validate_admissions(&[], &[(0.0, vec![0]), (0.5, vec![1])]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted by arrival")]
+    fn validate_admissions_rejects_unsorted_arrivals() {
+        let (d, _) = paper_figure1_dag();
+        d.validate_admissions(&[], &[(0.5, vec![0]), (0.0, vec![1])]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn validate_admissions_rejects_negative_arrivals() {
+        let (d, _) = paper_figure1_dag();
+        d.validate_admissions(&[], &[(-0.1, vec![0, 1])]);
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! harnesses derive everything from these records: throughput (Fig 5/6),
 //! speedups (Fig 7), per-core scheduling timelines (Fig 8), scaling
 //! (Fig 9) and width histograms (Fig 10).
+//!
+//! Multi-application runs (see [`crate::workload`]) tag every record with
+//! the submitting application's `app_id`; the per-app accounting —
+//! [`AppMetrics`], [`per_app_metrics`], [`jain_fairness_index`] — lives
+//! here so both backends and the bench harnesses share one definition of
+//! per-app makespan, slowdown and fairness.
 
 use crate::platform::{KernelClass, Partition};
 use std::collections::BTreeMap;
@@ -13,6 +19,8 @@ use std::sync::Mutex;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceRecord {
     pub task: usize,
+    /// Submitting application (0 for single-DAG runs).
+    pub app_id: usize,
     pub class: KernelClass,
     pub type_id: usize,
     pub critical: bool,
@@ -137,6 +145,140 @@ impl RunResult {
         }
         self.core_busy_time(n_cores).iter().sum::<f64>() / (n_cores as f64 * self.makespan)
     }
+
+    // --- per-application views (multi-app workload streams) ---------------
+
+    /// Distinct application ids present in the trace, ascending. A
+    /// single-DAG run yields `[0]` (every record carries `app_id` 0).
+    pub fn app_ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.records.iter().map(|r| r.app_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Records belonging to one application, in trace order.
+    pub fn records_for_app(&self, app_id: usize) -> Vec<&TraceRecord> {
+        self.records.iter().filter(|r| r.app_id == app_id).collect()
+    }
+
+    /// Number of executed TAOs attributed to `app_id`.
+    pub fn app_task_count(&self, app_id: usize) -> usize {
+        self.records.iter().filter(|r| r.app_id == app_id).count()
+    }
+
+    /// Completion time of one application: the latest `t_end` among its
+    /// records (0.0 if the app has no records).
+    pub fn app_completion(&self, app_id: usize) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.app_id == app_id)
+            .map(|r| r.t_end)
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-app throughput: the app's task count over its response time
+    /// (completion − arrival). 0.0 when the app completed no tasks.
+    pub fn app_throughput(&self, app_id: usize, arrival: f64) -> f64 {
+        let n = self.app_task_count(app_id);
+        let span = self.app_completion(app_id) - arrival;
+        if n == 0 || span <= 0.0 {
+            return 0.0;
+        }
+        n as f64 / span
+    }
+
+    /// Critical records of one application (the app-aware counterpart of
+    /// [`RunResult::critical_records`], which spans all apps).
+    pub fn critical_records_for_app(&self, app_id: usize) -> Vec<&TraceRecord> {
+        self.records.iter().filter(|r| r.critical && r.app_id == app_id).collect()
+    }
+}
+
+/// Per-application accounting for one multi-app run.
+///
+/// `makespan()` is the app's *response time* — last task completion minus
+/// the arrival (admission) time, the quantity the co-scheduling literature
+/// compares against an isolated run to obtain slowdown.
+#[derive(Debug, Clone)]
+pub struct AppMetrics {
+    pub app_id: usize,
+    pub name: String,
+    /// Admission time of the app's root tasks (virtual or wall seconds).
+    pub arrival: f64,
+    pub n_tasks: usize,
+    /// Earliest `t_start` among the app's records (= arrival when a root
+    /// starts immediately).
+    pub first_start: f64,
+    /// Latest `t_end` among the app's records.
+    pub completion: f64,
+    /// Makespan of the same app run alone (same backend/platform/policy,
+    /// fresh PTT); filled by baseline-aware drivers, `None` otherwise.
+    pub isolated_makespan: Option<f64>,
+    /// `makespan() / isolated_makespan` — ≥ 1 under contention (up to
+    /// scheduler noise). `None` until a baseline run is attached.
+    pub slowdown: Option<f64>,
+}
+
+impl AppMetrics {
+    /// Response time: completion − arrival, clamped at 0.
+    pub fn makespan(&self) -> f64 {
+        (self.completion - self.arrival).max(0.0)
+    }
+
+    /// Attach an isolated-run baseline and derive the slowdown.
+    pub fn with_isolated(mut self, isolated_makespan: f64) -> AppMetrics {
+        self.isolated_makespan = Some(isolated_makespan);
+        self.slowdown = if isolated_makespan > 0.0 {
+            Some(self.makespan() / isolated_makespan)
+        } else {
+            None
+        };
+        self
+    }
+}
+
+/// Derive [`AppMetrics`] for every `(app_id, name, arrival)` triple from a
+/// tagged trace. Apps with no records report zero tasks and a zero-length
+/// makespan (completion = arrival), which keeps aggregate fairness math
+/// well-defined mid-stream.
+pub fn per_app_metrics(result: &RunResult, apps: &[(usize, String, f64)]) -> Vec<AppMetrics> {
+    apps.iter()
+        .map(|(app_id, name, arrival)| {
+            let recs = result.records_for_app(*app_id);
+            let first_start =
+                recs.iter().map(|r| r.t_start).fold(f64::INFINITY, f64::min);
+            let completion = recs.iter().map(|r| r.t_end).fold(*arrival, f64::max);
+            AppMetrics {
+                app_id: *app_id,
+                name: name.clone(),
+                arrival: *arrival,
+                n_tasks: recs.len(),
+                first_start: if recs.is_empty() { *arrival } else { first_start },
+                completion,
+                isolated_makespan: None,
+                slowdown: None,
+            }
+        })
+        .collect()
+}
+
+/// Jain's fairness index over positive allocations:
+/// `J = (Σx)² / (n · Σx²)`, in `(0, 1]`; 1 iff all allocations are equal,
+/// approaching `1/n` as one app dominates. Returns 1.0 for an empty slice
+/// (a degenerate stream is trivially fair). Non-positive entries are
+/// rejected — fairness over "negative progress" has no meaning here.
+pub fn jain_fairness_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    assert!(
+        xs.iter().all(|&x| x > 0.0 && x.is_finite()),
+        "Jain index needs positive finite allocations, got {xs:?}"
+    );
+    let sum: f64 = xs.iter().sum();
+    let sum_sq: f64 = xs.iter().map(|&x| x * x).sum();
+    (sum * sum) / (xs.len() as f64 * sum_sq)
 }
 
 #[cfg(test)]
@@ -146,6 +288,7 @@ mod tests {
     fn rec(task: usize, critical: bool, leader: usize, width: usize, t0: f64, t1: f64) -> TraceRecord {
         TraceRecord {
             task,
+            app_id: 0,
             class: KernelClass::MatMul,
             type_id: 0,
             critical,
@@ -153,6 +296,10 @@ mod tests {
             t_start: t0,
             t_end: t1,
         }
+    }
+
+    fn rec_app(task: usize, app_id: usize, critical: bool, t0: f64, t1: f64) -> TraceRecord {
+        TraceRecord { app_id, ..rec(task, critical, 0, 1, t0, t1) }
     }
 
     fn result(records: Vec<TraceRecord>, makespan: f64) -> RunResult {
@@ -203,6 +350,95 @@ mod tests {
         let busy = r.core_busy_time(4);
         assert_eq!(busy, vec![3.0, 3.0, 0.0, 0.0]);
         assert!((r.utilisation(4) - 0.5).abs() < 1e-12);
+    }
+
+    // Single-DAG behavior pins: adding the app dimension must not change
+    // what the old helpers report for an untagged (all-app-0) trace.
+    #[test]
+    fn single_dag_helpers_unchanged_by_app_dimension() {
+        let r = result(
+            vec![
+                rec(0, true, 0, 1, 0.0, 1.0),
+                rec(1, false, 1, 1, 0.5, 2.0),
+                rec(2, false, 2, 1, 1.0, 4.0),
+            ],
+            4.0,
+        );
+        // throughput() still counts ALL records over the global makespan.
+        assert_eq!(r.throughput(), 0.75);
+        // critical_records() still spans every app.
+        assert_eq!(r.critical_records().len(), 1);
+        assert_eq!(r.n_tasks(), 3);
+        // The whole trace is app 0.
+        assert_eq!(r.app_ids(), vec![0]);
+        assert_eq!(r.app_task_count(0), 3);
+        assert_eq!(r.app_completion(0), 4.0);
+    }
+
+    #[test]
+    fn app_views_partition_the_trace() {
+        let r = result(
+            vec![
+                rec_app(0, 0, true, 0.0, 1.0),
+                rec_app(1, 1, false, 0.5, 2.0),
+                rec_app(2, 0, false, 1.0, 3.0),
+                rec_app(3, 1, true, 2.0, 5.0),
+            ],
+            5.0,
+        );
+        assert_eq!(r.app_ids(), vec![0, 1]);
+        assert_eq!(r.app_task_count(0), 2);
+        assert_eq!(r.app_task_count(1), 2);
+        assert_eq!(r.app_task_count(7), 0);
+        assert_eq!(r.app_completion(0), 3.0);
+        assert_eq!(r.app_completion(1), 5.0);
+        assert_eq!(r.critical_records_for_app(0).len(), 1);
+        assert_eq!(r.critical_records_for_app(1).len(), 1);
+        // Per-app counts sum to the trace length.
+        let total: usize = r.app_ids().iter().map(|&a| r.app_task_count(a)).sum();
+        assert_eq!(total, r.records.len());
+        // App 1 arrived at 0.5: 2 tasks over 4.5 s.
+        assert!((r.app_throughput(1, 0.5) - 2.0 / 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_app_metrics_and_slowdown() {
+        let r = result(
+            vec![rec_app(0, 0, false, 0.0, 2.0), rec_app(1, 1, false, 1.0, 4.0)],
+            4.0,
+        );
+        let apps =
+            vec![(0usize, "a".to_string(), 0.0), (1usize, "b".to_string(), 1.0)];
+        let m = per_app_metrics(&r, &apps);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].n_tasks, 1);
+        assert_eq!(m[0].makespan(), 2.0);
+        assert_eq!(m[1].makespan(), 3.0); // 4.0 end − 1.0 arrival
+        assert_eq!(m[1].first_start, 1.0);
+        let with_base = m[1].clone().with_isolated(1.5);
+        assert_eq!(with_base.slowdown, Some(2.0));
+        // An app with no records yet: zero tasks, zero-length makespan.
+        let empty = per_app_metrics(&r, &[(9usize, "late".to_string(), 3.0)]);
+        assert_eq!(empty[0].n_tasks, 0);
+        assert_eq!(empty[0].makespan(), 0.0);
+    }
+
+    #[test]
+    fn jain_index_bounds_and_extremes() {
+        assert_eq!(jain_fairness_index(&[]), 1.0);
+        assert_eq!(jain_fairness_index(&[3.7]), 1.0);
+        assert!((jain_fairness_index(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+        // One app hogging everything: J → 1/n.
+        let j = jain_fairness_index(&[100.0, 1e-9, 1e-9, 1e-9]);
+        assert!(j > 0.0 && j < 0.2601, "{j}");
+        let j2 = jain_fairness_index(&[1.0, 3.0]);
+        assert!(j2 > 0.0 && j2 < 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn jain_index_rejects_nonpositive() {
+        jain_fairness_index(&[1.0, 0.0]);
     }
 
     #[test]

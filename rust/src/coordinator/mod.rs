@@ -24,11 +24,11 @@ pub mod worker;
 pub mod wsq;
 
 pub use dag::{TaoDag, TaoNode, TaskId};
-pub use metrics::{RunResult, Trace, TraceRecord};
+pub use metrics::{AppMetrics, RunResult, Trace, TraceRecord, jain_fairness_index, per_app_metrics};
 pub use ptt::Ptt;
 pub use scheduler::{
     CatsLike, DheftLike, EnergyMinimizing, HomogeneousWs, PerformanceBased, PlaceCtx, Policy,
     policy_by_name,
 };
 pub use tao::{NopPayload, TaoPayload, payload_fn};
-pub use worker::{RealEngineOpts, run_dag_real};
+pub use worker::{RealEngineOpts, run_dag_real, run_stream_real};

@@ -33,6 +33,11 @@ pub struct PlaceCtx<'a> {
     /// Criticality as determined at wake-up time (§3.3; initial tasks are
     /// non-critical).
     pub critical: bool,
+    /// Submitting application (0 for single-DAG runs). Policies may use
+    /// the app dimension to reason about co-running workloads — e.g. to
+    /// compare how [`PerformanceBased`] isolates a foreground app from an
+    /// interfering stream versus the app-blind baselines.
+    pub app_id: usize,
     pub ptt: &'a Ptt,
     pub topo: &'a Topology,
     /// Engine time in seconds (virtual in sim, wall in real mode).
@@ -281,7 +286,7 @@ mod tests {
         ptt: &'a Ptt,
         topo: &'a Topology,
     ) -> PlaceCtx<'a> {
-        PlaceCtx { core, type_id: 0, critical, ptt, topo, now: 0.0 }
+        PlaceCtx { core, type_id: 0, critical, app_id: 0, ptt, topo, now: 0.0 }
     }
 
     #[test]

@@ -23,6 +23,17 @@
 //! On the single-core build host this engine validates *functionality*
 //! (the perf figures come from `crate::sim`); on a real multicore it is a
 //! faithful runtime, including optional thread pinning.
+//!
+//! ## Multi-application admission
+//!
+//! [`run_stream_real`] executes a workload stream: a dedicated *submitter*
+//! thread sleeps until each application's wall-clock arrival time and then
+//! injects that app's root tasks into the live worker pool's work-stealing
+//! queues (round-robin, like the initial root distribution). Workers never
+//! notice the difference between bootstrap roots and admitted roots —
+//! admission is just more pushes into the same queues, so the engine's
+//! deadlock-freedom argument is unchanged. [`run_dag_real`] is the
+//! degenerate stream (one app, arrival 0).
 
 use super::aq::AssemblyQueue;
 use super::dag::{TaoDag, TaskId};
@@ -67,6 +78,8 @@ struct TaoInstance {
 
 struct Shared<'a> {
     dag: &'a TaoDag,
+    /// Task → application id; empty slice means "everything is app 0".
+    app_of: &'a [usize],
     topo: &'a Topology,
     policy: &'a dyn Policy,
     ptt: &'a Ptt,
@@ -89,6 +102,10 @@ impl<'a> Shared<'a> {
         self.t0.elapsed().as_secs_f64()
     }
 
+    fn app_of(&self, task: TaskId) -> usize {
+        self.app_of.get(task).copied().unwrap_or(0)
+    }
+
     /// Insert a placed TAO into all member AQs. No cross-queue ordering
     /// lock is needed: members execute their share immediately on arrival
     /// (asynchronous entry, no barrier), so inconsistent interleavings
@@ -107,6 +124,7 @@ impl<'a> Shared<'a> {
             core,
             type_id: node.type_id,
             critical,
+            app_id: self.app_of(task),
             ptt: self.ptt,
             topo: self.topo,
             now: self.now(),
@@ -161,6 +179,7 @@ impl<'a> Shared<'a> {
         };
         self.trace.push(TraceRecord {
             task: inst.task,
+            app_id: self.app_of(inst.task),
             class: node.class,
             type_id: node.type_id,
             critical: inst.critical,
@@ -240,6 +259,9 @@ fn pin_to_cpu(_cpu: usize) {}
 ///
 /// The PTT is created fresh unless `ptt` is provided (warm-started PTTs let
 /// callers chain DAGs, as the paper's VGG port does between layers).
+///
+/// This is the degenerate workload stream: one application whose roots are
+/// admitted before the workers start (see [`run_stream_real`]).
 pub fn run_dag_real(
     dag: &TaoDag,
     topo: &Topology,
@@ -247,8 +269,30 @@ pub fn run_dag_real(
     ptt: Option<&Ptt>,
     opts: &RealEngineOpts,
 ) -> RunResult {
-    assert!(dag.is_finalized(), "finalize() the DAG first");
-    assert!(dag.len() > 0, "empty DAG");
+    run_stream_real(dag, &[], &[(0.0, dag.roots())], topo, policy, ptt, opts)
+}
+
+/// Execute a multi-application workload stream on real worker threads.
+///
+/// `dag` is the combined DAG over all applications (independent
+/// components); `app_of[task]` maps tasks to applications (empty = all
+/// app 0); `admissions` lists `(arrival_seconds, roots)` sorted by arrival.
+/// Apps arriving at `t ≤ 0` are admitted before the workers start (so the
+/// single-app path is byte-identical to the historical bootstrap); later
+/// apps are injected by a submitter thread that sleeps until each wall-
+/// clock arrival and pushes the roots into the live WSQs. Workers cannot
+/// distinguish admitted roots from bootstrap roots, and the run ends only
+/// when every task of every app has committed.
+pub fn run_stream_real(
+    dag: &TaoDag,
+    app_of: &[usize],
+    admissions: &[(f64, Vec<TaskId>)],
+    topo: &Topology,
+    policy: &dyn Policy,
+    ptt: Option<&Ptt>,
+    opts: &RealEngineOpts,
+) -> RunResult {
+    dag.validate_admissions(app_of, admissions);
     let fresh;
     let ptt = match ptt {
         Some(p) => p,
@@ -259,6 +303,7 @@ pub fn run_dag_real(
     };
     let shared = Shared {
         dag,
+        app_of,
         topo,
         policy,
         ptt,
@@ -266,25 +311,26 @@ pub fn run_dag_real(
         aqs: (0..topo.n_cores()).map(|_| AssemblyQueue::new()).collect(),
         pending: dag.nodes.iter().map(|x| AtomicUsize::new(x.preds.len())).collect(),
         critical: dag.nodes.iter().map(|_| AtomicBool::new(false)).collect(),
-        on_cp: {
-            // Seed critical-path roots; hoist the max-criticality scan out
-            // of the per-task test (is_cp_root per task would be O(n²)).
-            let max_crit = dag.critical_path_len();
-            dag.nodes
-                .iter()
-                .map(|n| AtomicBool::new(n.preds.is_empty() && n.criticality == max_crit))
-                .collect()
-        },
+        // Per-app critical-path seeding shared with the sim engine
+        // (TaoDag::cp_root_seeds), so parity cannot drift.
+        on_cp: dag.cp_root_seeds(app_of).into_iter().map(AtomicBool::new).collect(),
         completed: AtomicUsize::new(0),
         done: AtomicBool::new(false),
         trace: Trace::new(),
         t0: Instant::now(),
     };
-    // Distribute roots round-robin (§3.3's "default policy"); initial tasks
-    // are non-critical by definition (their criticality cannot be checked).
-    for (i, root) in dag.roots().into_iter().enumerate() {
-        shared.wsqs[i % topo.n_cores()].push(root);
+    // Admit everything due at the start (arrival ≤ 0) before the workers
+    // spawn — round-robin root distribution (§3.3's "default policy");
+    // initial tasks are non-critical by definition.
+    let n_cores = topo.n_cores();
+    let mut first_future = 0usize;
+    while first_future < admissions.len() && admissions[first_future].0 <= 0.0 {
+        for (i, &root) in admissions[first_future].1.iter().enumerate() {
+            shared.wsqs[i % n_cores].push(root);
+        }
+        first_future += 1;
     }
+    let future = &admissions[first_future..];
 
     let mut root_rng = Pcg32::seeded(opts.seed);
     let online = crate::platform::detect::online_cpus();
@@ -298,6 +344,28 @@ pub fn run_dag_real(
                     pin_to_cpu(core % online);
                 }
                 worker_loop(shared, core, rng);
+            });
+        }
+        if !future.is_empty() {
+            let shared = &shared;
+            s.spawn(move || {
+                // The submitter: sleep until each arrival, then inject the
+                // app's roots. Short bounded naps keep the arrival error in
+                // the low milliseconds without burning a core.
+                for (arrival, roots) in future {
+                    loop {
+                        let behind = *arrival - shared.now();
+                        if behind <= 0.0 {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            behind.min(0.002),
+                        ));
+                    }
+                    for (i, &root) in roots.iter().enumerate() {
+                        shared.wsqs[i % n_cores].push(root);
+                    }
+                }
             });
         }
     });

@@ -81,6 +81,13 @@ impl DagParams {
         self.payload_sizes = Some(sizes);
         self
     }
+
+    /// Rebind the reproducibility seed (workload streams derive one DAG
+    /// per application from a shared parameter template).
+    pub fn with_seed(mut self, seed: u64) -> DagParams {
+        self.seed = seed;
+        self
+    }
 }
 
 /// Statistics of a generated DAG (exposed for tests and bench logs).

@@ -17,6 +17,14 @@
 //! registry ([`crate::platform::scenarios`]), any
 //! `(backend × policy × platform)` triple is one call: [`run_triple`].
 //!
+//! Multi-application workload streams go through the same seam:
+//! `ExecutionBackend::run_stream(stream, ...)` admits each app's DAG at
+//! its arrival time and returns per-app metrics ([`StreamRun`]);
+//! [`run_stream_triple`] is the by-name variant, optionally attaching
+//! isolated-run baselines for slowdown/fairness. `run` is the one-app,
+//! arrival-0 special case of `run_stream` — a parity the multi-app test
+//! suite pins bit-for-bit on the sim backend.
+//!
 //! Semantics shared by both backends:
 //! - the DAG must be finalized and non-empty;
 //! - a fresh PTT is created when `ptt` is `None`; passing a warm table
@@ -31,12 +39,13 @@
 //! are host-dependent (and `ptt_probe` sampling is sim-only).
 
 use crate::coordinator::dag::TaoDag;
-use crate::coordinator::metrics::RunResult;
+use crate::coordinator::metrics::{AppMetrics, RunResult, jain_fairness_index, per_app_metrics};
 use crate::coordinator::ptt::Ptt;
 use crate::coordinator::scheduler::{Policy, policy_by_name};
-use crate::coordinator::worker::{RealEngineOpts, run_dag_real};
+use crate::coordinator::worker::{RealEngineOpts, run_dag_real, run_stream_real};
 use crate::platform::{Platform, scenarios};
-use crate::sim::{SimOpts, run_dag_sim};
+use crate::sim::{SimOpts, run_dag_sim, run_stream_sim};
+use crate::workload::{MultiDag, WorkloadStream};
 
 /// Options understood by every backend.
 #[derive(Debug, Clone)]
@@ -74,6 +83,47 @@ pub struct BackendRun {
     pub ptt_samples: Vec<(f64, f64)>,
 }
 
+/// Result of one workload-stream run: the combined trace plus the per-app
+/// accounting derived from it (slowdowns are filled only by baseline-aware
+/// drivers such as [`run_stream_triple`]).
+#[derive(Debug, Clone)]
+pub struct StreamRun {
+    pub result: RunResult,
+    pub apps: Vec<AppMetrics>,
+    /// `(time, PTT value)` samples if a probe was configured (sim only).
+    pub ptt_samples: Vec<(f64, f64)>,
+}
+
+impl StreamRun {
+    /// Jain fairness index across applications: over `1/slowdown` when
+    /// every app carries an isolated baseline (the literature's metric),
+    /// otherwise over per-app throughput (tasks per response-time second).
+    /// 1.0 = perfectly fair; → `1/n` as one app monopolises the machine.
+    pub fn jain_fairness(&self) -> f64 {
+        if self.apps.is_empty() {
+            return 1.0;
+        }
+        let xs: Vec<f64> = if self.apps.iter().all(|a| a.slowdown.is_some()) {
+            self.apps.iter().map(|a| 1.0 / a.slowdown.unwrap().max(1e-12)).collect()
+        } else {
+            self.apps
+                .iter()
+                .map(|a| {
+                    if a.n_tasks == 0 {
+                        // Zero progress is the *worst* allocation, not the
+                        // best — score it near-zero so starvation drags the
+                        // index down instead of masquerading as dominance.
+                        1e-12
+                    } else {
+                        a.n_tasks as f64 / a.makespan().max(1e-12)
+                    }
+                })
+                .collect()
+        };
+        jain_fairness_index(&xs)
+    }
+}
+
 /// An execution substrate for TAO-DAGs under a scheduling policy.
 pub trait ExecutionBackend: Send + Sync {
     /// Canonical backend name (`"sim"` / `"real"`).
@@ -88,6 +138,43 @@ pub trait ExecutionBackend: Send + Sync {
         ptt: Option<&Ptt>,
         opts: &RunOpts,
     ) -> BackendRun;
+
+    /// Execute a materialised multi-app stream ([`MultiDag`]): every app's
+    /// roots are admitted at their arrival time, records are tagged with
+    /// `app_id`. The single-DAG [`ExecutionBackend::run`] is the
+    /// one-app/arrival-0 special case of this entry point.
+    fn run_multi(
+        &self,
+        multi: &MultiDag,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+    ) -> BackendRun;
+
+    /// Execute a workload stream end-to-end: materialise it, run it, and
+    /// derive the per-app metrics (no isolated baselines — see
+    /// [`run_stream_triple`] for slowdown-aware runs).
+    fn run_stream(
+        &self,
+        stream: &WorkloadStream,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+    ) -> StreamRun {
+        let multi = stream.build();
+        // Per-app accounting needs the tagged records even when the caller
+        // wants a trace-free result, so honour `trace: false` only after
+        // the metrics are derived.
+        let traced = RunOpts { trace: true, ..opts.clone() };
+        let mut run = self.run_multi(&multi, plat, policy, ptt, &traced);
+        let apps = per_app_metrics(&run.result, &multi.app_index());
+        if !opts.trace {
+            run.result.records.clear();
+        }
+        StreamRun { result: run.result, apps, ptt_samples: run.ptt_samples }
+    }
 }
 
 /// Discrete-event execution against the analytic platform model
@@ -110,6 +197,30 @@ impl ExecutionBackend for SimBackend {
     ) -> BackendRun {
         let run = run_dag_sim(
             dag,
+            plat,
+            policy,
+            ptt,
+            &SimOpts { seed: opts.seed, ptt_probe: opts.ptt_probe },
+        );
+        let mut result = run.result;
+        if !opts.trace {
+            result.records.clear();
+        }
+        BackendRun { result, ptt_samples: run.ptt_samples }
+    }
+
+    fn run_multi(
+        &self,
+        multi: &MultiDag,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+    ) -> BackendRun {
+        let run = run_stream_sim(
+            &multi.dag,
+            &multi.app_of,
+            &multi.admissions(),
             plat,
             policy,
             ptt,
@@ -154,6 +265,29 @@ impl ExecutionBackend for RealBackend {
         }
         BackendRun { result, ptt_samples: Vec::new() }
     }
+
+    fn run_multi(
+        &self,
+        multi: &MultiDag,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+    ) -> BackendRun {
+        let mut result = run_stream_real(
+            &multi.dag,
+            &multi.app_of,
+            &multi.admissions(),
+            &plat.topo,
+            policy,
+            ptt,
+            &RealEngineOpts { pin_threads: opts.pin_threads, seed: opts.seed },
+        );
+        if !opts.trace {
+            result.records.clear();
+        }
+        BackendRun { result, ptt_samples: Vec::new() }
+    }
 }
 
 /// Canonical backend names, in registry order.
@@ -186,6 +320,52 @@ pub fn run_triple(
     let backend =
         backend_by_name(backend).ok_or_else(|| format!("unknown backend '{backend}'"))?;
     Ok(backend.run(dag, &plat, policy.as_ref(), None, opts))
+}
+
+/// Run any `(backend × scenario × policy)` triple over a workload stream.
+///
+/// With `with_baseline`, every admitted app is additionally run *alone* —
+/// same backend, platform and policy name, but a fresh policy instance and
+/// a fresh PTT — and the per-app slowdown (co-run makespan / isolated
+/// makespan) is attached; [`StreamRun::jain_fairness`] then ranks
+/// schedulers by how evenly they spread the contention. Baselines
+/// regenerate each app's DAG from its recorded [`crate::workload::AdmittedApp::params`],
+/// so periodic copies are compared against their own instance.
+pub fn run_stream_triple(
+    backend: &str,
+    scenario: &str,
+    policy: &str,
+    stream: &WorkloadStream,
+    opts: &RunOpts,
+    with_baseline: bool,
+) -> Result<StreamRun, String> {
+    let plat = scenarios::by_name(scenario)
+        .ok_or_else(|| format!("unknown platform scenario '{scenario}'"))?;
+    let policy_name = policy;
+    let policy = policy_by_name(policy_name, plat.topo.n_cores())
+        .ok_or_else(|| format!("unknown policy '{policy_name}'"))?;
+    let backend =
+        backend_by_name(backend).ok_or_else(|| format!("unknown backend '{backend}'"))?;
+    let multi = stream.build();
+    let traced = RunOpts { trace: true, ..opts.clone() };
+    let mut run = backend.run_multi(&multi, &plat, policy.as_ref(), None, &traced);
+    let mut apps = per_app_metrics(&run.result, &multi.app_index());
+    if with_baseline {
+        for (metrics, app) in apps.iter_mut().zip(&multi.apps) {
+            // Fresh policy instance per baseline: stateful baselines
+            // (dHEFT's availability clocks) must not leak between runs.
+            let iso_policy = policy_by_name(policy_name, plat.topo.n_cores())
+                .expect("policy resolved above");
+            let (dag, _) = crate::dag_gen::generate(&app.params);
+            let iso_opts = RunOpts { trace: false, ptt_probe: None, ..opts.clone() };
+            let iso = backend.run(&dag, &plat, iso_policy.as_ref(), None, &iso_opts);
+            *metrics = metrics.clone().with_isolated(iso.result.makespan);
+        }
+    }
+    if !opts.trace {
+        run.result.records.clear();
+    }
+    Ok(StreamRun { result: run.result, apps, ptt_samples: run.ptt_samples })
 }
 
 #[cfg(test)]
@@ -252,6 +432,106 @@ mod tests {
         let opts = RunOpts { ptt_probe: Some((0, 0, 1)), ..Default::default() };
         let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts);
         assert_eq!(run.ptt_samples.len(), 30);
+    }
+
+    #[test]
+    fn single_app_stream_matches_single_dag_run_bit_for_bit() {
+        // Acceptance criterion: `run_stream` with one app arriving at 0 is
+        // a strict generalization of `run` — identical makespan bits and
+        // identical records (modulo the new app tag) on the sim backend.
+        use crate::workload::{AppSpec, WorkloadStream};
+        let params = DagParams::mix(60, 4.0, 0xA11CE);
+        let stream =
+            WorkloadStream::fixed(vec![AppSpec::new("solo", params.clone(), 0.0)], 0);
+        let plat = scenarios::by_name("tx2").unwrap();
+        let opts = RunOpts { seed: 99, ..Default::default() };
+        let via_stream =
+            SimBackend.run_stream(&stream, &plat, &PerformanceBased, None, &opts);
+        let (dag, _) = generate(&params);
+        let direct = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts);
+        assert_eq!(
+            via_stream.result.makespan.to_bits(),
+            direct.result.makespan.to_bits()
+        );
+        assert_eq!(via_stream.result.records.len(), direct.result.records.len());
+        for (a, b) in via_stream.result.records.iter().zip(&direct.result.records) {
+            assert_eq!(a.task, b.task);
+            assert_eq!(a.partition, b.partition);
+            assert_eq!(a.critical, b.critical);
+            assert_eq!(a.t_start.to_bits(), b.t_start.to_bits());
+            assert_eq!(a.t_end.to_bits(), b.t_end.to_bits());
+            assert_eq!(a.app_id, 0);
+            assert_eq!(b.app_id, 0);
+        }
+        // Per-app metrics collapse to the single-DAG aggregates.
+        assert_eq!(via_stream.apps.len(), 1);
+        assert_eq!(via_stream.apps[0].n_tasks, 60);
+        assert_eq!(
+            via_stream.apps[0].makespan().to_bits(),
+            via_stream.apps[0].completion.to_bits()
+        );
+    }
+
+    #[test]
+    fn stream_run_tags_apps_and_reports_fairness() {
+        use crate::workload::{AppSpec, WorkloadStream};
+        let stream = WorkloadStream::fixed(
+            vec![
+                AppSpec::new("a", DagParams::mix(40, 4.0, 1), 0.0),
+                AppSpec::new("b", DagParams::mix(40, 4.0, 2), 0.01),
+            ],
+            3,
+        );
+        let plat = scenarios::by_name("hom4").unwrap();
+        let run =
+            SimBackend.run_stream(&stream, &plat, &PerformanceBased, None, &RunOpts::default());
+        assert_eq!(run.result.records.len(), 80);
+        assert_eq!(run.result.app_ids(), vec![0, 1]);
+        assert_eq!(run.apps.len(), 2);
+        for app in &run.apps {
+            assert_eq!(app.n_tasks, 40);
+            assert!(app.makespan() > 0.0 && app.makespan().is_finite());
+        }
+        let j = run.jain_fairness();
+        assert!(j > 0.0 && j <= 1.0, "{j}");
+    }
+
+    #[test]
+    fn run_stream_triple_attaches_isolated_baselines() {
+        use crate::workload::scenarios::stream_by_name;
+        let stream = stream_by_name("stream-pois8").unwrap().stream(5, true);
+        let run = run_stream_triple(
+            "sim",
+            "stream-pois8",
+            "performance",
+            &stream,
+            &RunOpts::default(),
+            true,
+        )
+        .unwrap();
+        assert_eq!(run.apps.len(), 8);
+        for app in &run.apps {
+            let iso = app.isolated_makespan.expect("baseline attached");
+            assert!(iso > 0.0);
+            let sd = app.slowdown.expect("slowdown derived");
+            // Co-running can only slow an app down (up to scheduler noise).
+            assert!(sd > 0.5, "{sd}");
+        }
+        let j = run.jain_fairness();
+        assert!(j > 0.0 && j <= 1.0, "{j}");
+        // Unknown names surface the offending registry.
+        assert!(
+            run_stream_triple("nope", "stream-pois8", "performance", &stream, &RunOpts::default(), false)
+                .is_err()
+        );
+        assert!(
+            run_stream_triple("sim", "nope", "performance", &stream, &RunOpts::default(), false)
+                .is_err()
+        );
+        assert!(
+            run_stream_triple("sim", "stream-pois8", "nope", &stream, &RunOpts::default(), false)
+                .is_err()
+        );
     }
 
     #[test]

@@ -19,6 +19,8 @@
 //!   call; backends are selected by name.
 //! - [`kernels`] — the paper's three benchmark kernels (matmul/sort/copy).
 //! - [`dag_gen`] — seeded random TAO-DAG generator (§4.2.2).
+//! - [`workload`] — multi-application workload streams: arrival processes,
+//!   concurrent DAG admission, per-app accounting (`workload::scenarios`).
 //! - [`vgg`] — VGG-16 as a TAO-DAG of GEMM blocks (§4.3).
 //! - [`runtime`] — PJRT engine loading the JAX/Pallas AOT artifacts.
 //! - [`bench`] — regenerators for every figure in the paper's evaluation.
@@ -37,3 +39,4 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 pub mod vgg;
+pub mod workload;

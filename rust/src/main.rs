@@ -2,16 +2,20 @@
 //!
 //! Figure regeneration:
 //!   repro fig5|fig6|fig7|fig8|fig9|fig10 [--quick] [--seeds N]
-//!   repro ablation-ptt | ablation-baselines | all
+//!   repro ablation-ptt | ablation-baselines | stream-interference | all
 //!
 //! Single experiments:
 //!   repro run-dag [--config f.json] [--platform tx2] [--policy performance]
 //!                 [--backend sim|real] [--tasks 1000] [--parallelism 4]
 //!                 [--kernel mix] [--seed 42] [--quick]
+//!   repro stream  [--scenario stream-pois8] [--policy performance]
+//!                 [--backend sim|real] [--seed 42] [--baseline] [--quick]
+//!                 (custom: --scenario custom --platform hom8 --apps 4
+//!                  --tasks 200 --parallelism 4 --mean-gap 0.02)
 //!   repro vgg16 [--threads 8] [--repeats 3] [--block-len 64]
 //!   repro vgg16-infer [--mode pipeline|whole|dag] [--hw 64] [--block-len 64]
 //!   repro ptt-dump [--platform tx2] [--tasks 500] ...
-//!   repro scenarios                 # list registered platform scenarios
+//!   repro scenarios                 # list platform + stream scenarios
 //!
 //! Platforms resolve through the scenario registry
 //! (`platform::scenarios`), execution substrates through the
@@ -30,14 +34,19 @@ use xitao::kernels::KernelSizes;
 use xitao::platform::{Platform, scenarios};
 use xitao::runtime::{PjrtService, VggWeights, build_real_dag, pipeline_infer, synthetic_image};
 use xitao::vgg::{VggConfig, build_dag as build_vgg_dag};
+use xitao::workload::scenarios::{stream_by_name, stream_scenarios};
+use xitao::workload::WorkloadStream;
 
 fn main() {
     let args = Args::from_env();
     let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
     let code = match cmd.as_str() {
         "fig5" | "fig6" | "fig7" | "fig8" | "fig9" | "fig10" | "ablation-ptt"
-        | "ablation-baselines" | "ablation-energy" | "all" => cmd_figures(&cmd, &args),
+        | "ablation-baselines" | "ablation-energy" | "stream-interference" | "all" => {
+            cmd_figures(&cmd, &args)
+        }
         "run-dag" => cmd_run_dag(&args),
+        "stream" => cmd_stream(&args),
         "vgg16" => cmd_vgg16(&args),
         "vgg16-infer" => cmd_vgg16_infer(&args),
         "ptt-dump" => cmd_ptt_dump(&args),
@@ -58,12 +67,17 @@ const HELP: &str = "\
 repro — XiTAO + Performance Trace Table reproduction
 
 figures:    fig5 fig6 fig7 fig8 fig9 fig10 ablation-ptt ablation-baselines
-            ablation-energy all
+            ablation-energy stream-interference all
             options: --quick --seeds N
 single run: run-dag [--config f.json] [--platform <scenario>|hom<N>]
                     [--policy performance|homogeneous|cats|dheft|energy]
                     [--backend sim|real] [--tasks N] [--parallelism P]
                     [--kernel mix|matmul|sort|copy] [--seed S] [--quick]
+streams:    stream [--scenario stream-pois8|duet-tx2|bg-interferer-haswell20]
+                   [--policy ...] [--backend sim|real] [--seed S]
+                   [--baseline] [--quick]
+            stream --scenario custom --platform hom8 --apps 4 --tasks 200
+                   --parallelism 4 --mean-gap 0.02
 platforms:  run `repro scenarios` for the registered list; hom<N> for
             any homogeneous core count
 
@@ -77,11 +91,22 @@ fn cmd_scenarios() -> i32 {
     for s in scenarios::scenarios() {
         let p = s.platform();
         println!(
-            "  {:14} {:2} cores, {:1} cluster(s), {:2} episode(s) — {}",
+            "  {:24} {:2} cores, {:1} cluster(s), {:2} episode(s) — {}",
             s.name,
             p.topo.n_cores(),
             p.topo.clusters.len(),
             p.episodes.episodes.len(),
+            s.description,
+        );
+    }
+    println!("\nregistered workload streams (repro stream --scenario <name>):");
+    for s in stream_scenarios() {
+        let stream = s.stream(0, true);
+        println!(
+            "  {:24} {:2} app(s) on {:20} — {}",
+            s.name,
+            stream.n_submissions(),
+            s.platform,
             s.description,
         );
     }
@@ -114,6 +139,7 @@ fn cmd_figures(cmd: &str, args: &Args) -> i32 {
             "ablation-ptt" => bench::ablation_ptt(&opts),
             "ablation-energy" => bench::ablation_energy(&opts),
             "ablation-baselines" => bench::ablation_baselines(&opts),
+            "stream-interference" => bench::stream_interference(&opts),
             _ => unreachable!(),
         };
         bench::emit(name, &tables);
@@ -121,7 +147,7 @@ fn cmd_figures(cmd: &str, args: &Args) -> i32 {
     if cmd == "all" {
         for name in [
             "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "ablation-ptt",
-            "ablation-baselines", "ablation-energy",
+            "ablation-baselines", "ablation-energy", "stream-interference",
         ] {
             run(name);
         }
@@ -191,6 +217,113 @@ fn cmd_run_dag(args: &Args) -> i32 {
     );
     let busy = result.core_busy_time(plat.topo.n_cores());
     println!("per-core busy [s]: {:?}", busy.iter().map(|b| (b * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    0
+}
+
+fn cmd_stream(args: &Args) -> i32 {
+    let scenario = args.get_str("scenario", "stream-pois8");
+    let policy = args.get_str("policy", "performance");
+    let backend = args.get_str("backend", "sim");
+    let seed: u64 = args.get("seed", 42);
+    let quick = args.switch("quick");
+    let baseline = args.switch("baseline");
+
+    let (mut stream, platform) = if scenario == "custom" {
+        let platform = args.get_str("platform", "hom8");
+        let apps: usize = args.get("apps", 4);
+        let tasks: usize = args.get("tasks", 200);
+        let parallelism: f64 = args.get("parallelism", 4.0);
+        let mean_gap: f64 = args.get("mean-gap", 0.02);
+        if apps == 0 || tasks == 0 || parallelism < 1.0 || mean_gap <= 0.0 {
+            eprintln!("custom stream needs --apps ≥ 1, --tasks ≥ 1, --parallelism ≥ 1, --mean-gap > 0");
+            return 2;
+        }
+        let tasks = if quick { tasks.min(48) } else { tasks };
+        let template = DagParams::mix(tasks, parallelism, seed);
+        let stream = WorkloadStream::poisson(apps, mean_gap, seed, move |_i, s| {
+            template.clone().with_seed(s)
+        });
+        (stream, platform)
+    } else {
+        // Custom-shape flags only apply with --scenario custom; ignoring
+        // them silently would mislabel the experiment.
+        for flag in ["platform", "apps", "tasks", "parallelism", "mean-gap"] {
+            if args.flag(flag).is_some() {
+                eprintln!(
+                    "warning: --{flag} is ignored for the named scenario '{scenario}' \
+                     (use --scenario custom to shape the stream)"
+                );
+            }
+        }
+        match stream_by_name(&scenario) {
+            Some(s) => (s.stream(seed, quick), s.platform.to_string()),
+            None => {
+                eprintln!(
+                    "unknown stream scenario '{scenario}' (one of {:?} or 'custom')",
+                    xitao::workload::scenarios::stream_names()
+                );
+                return 2;
+            }
+        }
+    };
+    let resolved = match backend_by_name(&backend) {
+        Some(b) => b,
+        None => {
+            eprintln!("unknown backend '{backend}' (sim|real)");
+            return 2;
+        }
+    };
+    // Real threads execute actual kernel payloads, as in run-dag.
+    if resolved.name() == "real" {
+        for app in &mut stream.apps {
+            app.params = app.params.clone().with_payloads(KernelSizes::small());
+        }
+    }
+
+    let run = match xitao::exec::run_stream_triple(
+        &backend,
+        &platform,
+        &policy,
+        &stream,
+        &RunOpts { seed, ..Default::default() },
+        baseline,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("stream error: {e}");
+            return 2;
+        }
+    };
+
+    println!(
+        "stream '{scenario}' ({} apps) on {platform} — {backend} backend, policy {}",
+        run.apps.len(),
+        run.result.policy
+    );
+    println!(
+        "{:>4} {:20} {:>9} {:>7} {:>11} {:>11} {:>9}",
+        "app", "name", "arrival", "tasks", "makespan", "isolated", "slowdown"
+    );
+    for a in &run.apps {
+        println!(
+            "{:>4} {:20} {:>9.4} {:>7} {:>11.4} {:>11} {:>9}",
+            a.app_id,
+            a.name,
+            a.arrival,
+            a.n_tasks,
+            a.makespan(),
+            a.isolated_makespan.map_or("-".into(), |v| format!("{v:.4}")),
+            a.slowdown.map_or("-".into(), |v| format!("{v:.3}")),
+        );
+    }
+    let total_tasks: usize = run.apps.iter().map(|a| a.n_tasks).sum();
+    println!(
+        "aggregate: makespan={:.4}s tasks={} throughput={:.1} tasks/s",
+        run.result.makespan,
+        total_tasks,
+        run.result.throughput()
+    );
+    println!("Jain fairness index: {:.4}", run.jain_fairness());
     0
 }
 

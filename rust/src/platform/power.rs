@@ -95,6 +95,7 @@ mod tests {
             makespan: 10.0,
             records: vec![TraceRecord {
                 task: 0,
+                app_id: 0,
                 class: KernelClass::MatMul,
                 type_id: 0,
                 critical: false,

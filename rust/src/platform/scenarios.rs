@@ -16,6 +16,10 @@
 //!   episodes, the dynamic-heterogeneity case of §1.
 //! - `interference20` — `haswell20` plus a background process
 //!   time-sharing cores 0–1 mid-run (the §5.3 experiment).
+//! - `stream-pois8` / `duet-tx2` / `bg-interferer-haswell20` — the
+//!   platform substrates of the multi-application workload streams
+//!   registered under the same names in [`crate::workload::scenarios`]
+//!   (the last one adds a heavy 0.05–0.45 s squeeze of cores 0–1).
 //!
 //! The dynamic `hom<N>` family (N homogeneous cores) is also resolved by
 //! [`by_name`] for arbitrary N ≥ 1. Episode schedules only influence the
@@ -69,6 +73,34 @@ fn interference20() -> Platform {
     ]))
 }
 
+fn stream_pois8() -> Platform {
+    // Substrate of the `stream-pois8` workload stream (workload::scenarios):
+    // 8 homogeneous cores, no episodes — all interference is DAG-on-DAG.
+    Platform::homogeneous(8)
+}
+
+/// Victim cores of the `bg-interferer-haswell20` scenario. Exported so the
+/// interference bench and the PTT regression test measure exactly the
+/// episode the scenario schedules (no silently drifting copies).
+pub const BG_INTERFERER_VICTIMS: [usize; 2] = [0, 1];
+/// `[start, end)` of the background squeeze in `bg-interferer-haswell20`.
+pub const BG_INTERFERER_WINDOW: (f64, f64) = (0.05, 0.45);
+
+fn bg_interferer_haswell20() -> Platform {
+    // Substrate of the `bg-interferer-haswell20` stream: haswell20 with a
+    // heavier, longer background squeeze than `interference20` — the
+    // runtime keeps only ~30% of the victim cores inside the window, so
+    // the PTT's interference response is unmistakable even while a second
+    // tenant is churning the queues.
+    Platform::haswell20().with_episodes(EpisodeSchedule::new(vec![Episode::interference(
+        BG_INTERFERER_VICTIMS.to_vec(),
+        BG_INTERFERER_WINDOW.0,
+        BG_INTERFERER_WINDOW.1,
+        0.30,
+        2.0,
+    )]))
+}
+
 /// The static scenario registry.
 pub fn scenarios() -> &'static [Scenario] {
     static SCENARIOS: &[Scenario] = &[
@@ -96,6 +128,21 @@ pub fn scenarios() -> &'static [Scenario] {
             name: "interference20",
             description: "haswell20 with a background process on cores 0-1 (§5.3)",
             build: interference20,
+        },
+        Scenario {
+            name: "stream-pois8",
+            description: "8 homogeneous cores backing the Poisson multi-app stream",
+            build: stream_pois8,
+        },
+        Scenario {
+            name: "duet-tx2",
+            description: "TX2 model backing the chain+burst duet stream",
+            build: Platform::tx2,
+        },
+        Scenario {
+            name: "bg-interferer-haswell20",
+            description: "haswell20 with a heavy background process on cores 0-1 (multi-app §5.3)",
+            build: bg_interferer_haswell20,
         },
     ];
     SCENARIOS
@@ -130,10 +177,19 @@ mod tests {
     #[test]
     fn registry_contains_paper_platforms_and_synthetics() {
         let names = names();
-        for expected in ["tx2", "haswell20", "biglittle44", "dvfs8", "interference20"] {
+        for expected in [
+            "tx2",
+            "haswell20",
+            "biglittle44",
+            "dvfs8",
+            "interference20",
+            "stream-pois8",
+            "duet-tx2",
+            "bg-interferer-haswell20",
+        ] {
             assert!(names.contains(&expected), "missing scenario {expected}");
         }
-        assert!(names.len() >= 4);
+        assert!(names.len() >= 8);
     }
 
     #[test]

@@ -23,6 +23,17 @@
 //! Deadlock-freedom: placements insert into all member AQs atomically, so
 //! any two TAOs appear in the same relative order in every AQ that holds
 //! both; FIFO fetch therefore cannot produce a circular wait.
+//!
+//! ## Multi-application admission
+//!
+//! [`run_stream_sim`] executes a *stream* of applications: one combined
+//! DAG whose per-app root tasks are admitted at their arrival times.
+//! Arrivals are ordinary simulation events — `advance` treats the next
+//! arrival like an episode boundary (re-rating running TAOs there), and
+//! when every admitted task has drained before the next arrival, virtual
+//! time jumps directly to it. [`run_dag_sim`] is the degenerate stream
+//! (one app, arrival 0), so the single-DAG path and the stream path are
+//! the same code — the parity the multi-app tests pin bit-for-bit.
 
 use crate::coordinator::dag::{TaoDag, TaskId};
 use crate::coordinator::metrics::{RunResult, TraceRecord};
@@ -79,6 +90,9 @@ struct Inst {
 
 struct Sim<'a> {
     dag: &'a TaoDag,
+    /// Task → application id; empty slice means "everything is app 0"
+    /// (the single-DAG path pays no lookup cost for the app dimension).
+    app_of: &'a [usize],
     plat: &'a Platform,
     policy: &'a dyn Policy,
     ptt: &'a Ptt,
@@ -114,6 +128,10 @@ impl<'a> Sim<'a> {
         }
     }
 
+    fn app_of(&self, task: TaskId) -> usize {
+        self.app_of.get(task).copied().unwrap_or(0)
+    }
+
     /// Place `task` from the perspective of `core`, inserting the new
     /// instance into every member AQ (atomic w.r.t. other placements —
     /// we're single-threaded here, so trivially so).
@@ -123,6 +141,7 @@ impl<'a> Sim<'a> {
             core,
             type_id: node.type_id,
             critical: self.critical[task],
+            app_id: self.app_of(task),
             ptt: self.ptt,
             topo: &self.plat.topo,
             now: self.t,
@@ -228,8 +247,11 @@ impl<'a> Sim<'a> {
         }
     }
 
-    /// Advance virtual time to the next completion or episode boundary.
-    fn advance(&mut self) {
+    /// Advance virtual time to the next completion, episode boundary, or
+    /// application arrival (arrivals re-rate running TAOs like episode
+    /// boundaries do — admission changes nothing mid-flight, but the
+    /// admitted roots must be placed at exactly their arrival time).
+    fn advance(&mut self, next_arrival: Option<f64>) {
         assert!(
             !self.running.is_empty(),
             "no running tasks but {} of {} incomplete — scheduler deadlock",
@@ -241,10 +263,18 @@ impl<'a> Sim<'a> {
             .iter()
             .map(|&i| self.insts[i].remaining_work / self.insts[i].rate)
             .fold(f64::INFINITY, f64::min);
-        let dt = match self.plat.episodes.next_boundary_after(self.t) {
-            Some(b) if b - self.t < dt_complete => b - self.t,
-            _ => dt_complete,
-        };
+        let mut dt = dt_complete;
+        if let Some(b) = self.plat.episodes.next_boundary_after(self.t) {
+            if b - self.t < dt {
+                dt = b - self.t;
+            }
+        }
+        if let Some(a) = next_arrival {
+            debug_assert!(a > self.t, "arrivals at or before now are admitted eagerly");
+            if a - self.t < dt {
+                dt = a - self.t;
+            }
+        }
         self.t += dt;
         for &i in &self.running {
             let inst = &mut self.insts[i];
@@ -278,8 +308,10 @@ impl<'a> Sim<'a> {
             self.ptt.update(node.type_id, partition.leader, partition.width, exec * noise);
         }
         self.policy.on_complete(partition.leader, partition.width, exec, self.t);
+        let app_id = self.app_of(task);
         self.records.push(TraceRecord {
             task,
+            app_id,
             class: node.class,
             type_id: node.type_id,
             critical,
@@ -315,6 +347,9 @@ impl<'a> Sim<'a> {
 
 /// Simulate `dag` under `policy` on `plat`, returning the trace in virtual
 /// time. Pass a warm `ptt` to chain runs (otherwise a fresh table is used).
+///
+/// This is the degenerate workload stream: one application whose roots are
+/// admitted at `t = 0` (see [`run_stream_sim`]).
 pub fn run_dag_sim(
     dag: &TaoDag,
     plat: &Platform,
@@ -322,8 +357,31 @@ pub fn run_dag_sim(
     ptt: Option<&Ptt>,
     opts: &SimOpts,
 ) -> SimRun {
-    assert!(dag.is_finalized(), "finalize() the DAG first");
-    assert!(!dag.is_empty(), "empty DAG");
+    run_stream_sim(dag, &[], &[(0.0, dag.roots())], plat, policy, ptt, opts)
+}
+
+/// Simulate a multi-application workload stream in virtual time.
+///
+/// `dag` is the combined DAG over all applications (independent components,
+/// typically built by [`crate::workload::WorkloadStream::build`]);
+/// `app_of[task]` maps each task to its application (an empty slice tags
+/// everything app 0); `admissions` lists `(arrival, roots)` pairs sorted by
+/// arrival — each application's root tasks enter the work-stealing queues
+/// (round-robin, like §3.3's default root distribution) exactly at its
+/// arrival time. Tasks of not-yet-arrived apps are invisible to the
+/// scheduler: criticality, the PTT and all queues only ever see admitted
+/// work, so inter-app interference emerges solely from contention —
+/// exactly the situation the paper's PTT claims to detect.
+pub fn run_stream_sim(
+    dag: &TaoDag,
+    app_of: &[usize],
+    admissions: &[(f64, Vec<TaskId>)],
+    plat: &Platform,
+    policy: &dyn Policy,
+    ptt: Option<&Ptt>,
+    opts: &SimOpts,
+) -> SimRun {
+    dag.validate_admissions(app_of, admissions);
     let fresh;
     let ptt = match ptt {
         Some(p) => p,
@@ -335,6 +393,7 @@ pub fn run_dag_sim(
     let n = plat.topo.n_cores();
     let mut sim = Sim {
         dag,
+        app_of,
         plat,
         policy,
         ptt,
@@ -346,10 +405,7 @@ pub fn run_dag_sim(
         running: Vec::new(),
         pending: dag.nodes.iter().map(|x| x.preds.len()).collect(),
         critical: vec![false; dag.len()],
-        on_cp: {
-            let max_crit = dag.critical_path_len(); // hoisted: O(n), not O(n²)
-            dag.nodes.iter().map(|n| n.preds.is_empty() && n.criticality == max_crit).collect()
-        },
+        on_cp: dag.cp_root_seeds(app_of),
         completed: 0,
         records: Vec::with_capacity(dag.len()),
         rng: Pcg32::seeded(opts.seed),
@@ -358,17 +414,34 @@ pub fn run_dag_sim(
         snapshot_buf: Vec::with_capacity(n),
         done_buf: Vec::with_capacity(n),
     };
-    // Roots distributed round-robin; initial tasks are non-critical (§3.3).
-    for (i, root) in dag.roots().into_iter().enumerate() {
-        sim.wsqs[i % n].push_back(root);
-    }
+    let mut next_adm = 0usize;
     while sim.completed < dag.len() {
+        // Admit every application whose arrival time has been reached.
+        // Roots are distributed round-robin per app; initial tasks are
+        // non-critical (§3.3).
+        while next_adm < admissions.len() && admissions[next_adm].0 <= sim.t {
+            for (i, &root) in admissions[next_adm].1.iter().enumerate() {
+                sim.wsqs[i % n].push_back(root);
+            }
+            next_adm += 1;
+        }
         sim.acquire_fixpoint();
         if sim.completed == dag.len() {
             break;
         }
+        if sim.running.is_empty() {
+            // Everything admitted has drained; jump to the next arrival.
+            assert!(
+                next_adm < admissions.len(),
+                "no running tasks, no pending arrivals, but {} of {} incomplete — scheduler deadlock",
+                dag.len() - sim.completed,
+                dag.len()
+            );
+            sim.t = admissions[next_adm].0;
+            continue;
+        }
         sim.rerate();
-        sim.advance();
+        sim.advance(admissions.get(next_adm).map(|a| a.0));
     }
     let mut records = sim.records;
     records.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());

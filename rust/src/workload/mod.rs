@@ -1,0 +1,360 @@
+//! Multi-application workload streams (the paper's multi-tenant story).
+//!
+//! The paper's central claim is that the PTT detects not just per-task
+//! latency but *inter-application interference*. Exercising that claim
+//! needs more than one DAG per run: this module defines
+//!
+//! - [`AppSpec`] — one application: DAG generator parameters, an arrival
+//!   time, and optional periodic re-submission;
+//! - [`WorkloadStream`] — a seeded arrival process over N applications
+//!   (fixed arrivals or a Poisson process);
+//! - [`MultiDag`] — the materialised stream: one combined TAO-DAG whose
+//!   independent components are the applications, plus the task→app map
+//!   and the per-app admission schedule both engines consume
+//!   ([`crate::sim::run_stream_sim`],
+//!   [`crate::coordinator::run_stream_real`]).
+//!
+//! Admission semantics: an application is invisible to the scheduler until
+//! its arrival time — its tasks hold no queue slots, train no PTT rows and
+//! carry no criticality until the roots are admitted. Apps share the
+//! worker pool, the PTT and (in simulation) the platform's bandwidth
+//! model, so all inter-app interference emerges from contention, exactly
+//! the situation the PTT is claimed to detect. See DESIGN.md §Workload
+//! streams for what differs between the backends.
+//!
+//! The named stream registry lives in [`scenarios`].
+
+pub mod scenarios;
+
+use crate::coordinator::dag::{TaoDag, TaskId};
+use crate::dag_gen::{DagParams, generate};
+use crate::util::Pcg32;
+
+/// One application in a workload stream.
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    /// Human-readable label (per-app metric rows are keyed by it).
+    pub name: String,
+    /// Generator parameters of the app's TAO-DAG (the spec's `seed` keeps
+    /// the app reproducible independent of the stream seed).
+    pub params: DagParams,
+    /// Arrival (admission) time of the first submission, seconds —
+    /// virtual time on the sim backend, wall time on the real backend.
+    pub arrival: f64,
+    /// Re-submission period for periodic apps (`None` = submit once).
+    pub period: Option<f64>,
+    /// Total number of submissions (≥ 1; ignored unless `period` is set).
+    pub copies: usize,
+}
+
+impl AppSpec {
+    pub fn new(name: impl Into<String>, params: DagParams, arrival: f64) -> AppSpec {
+        assert!(arrival >= 0.0, "arrival times must be non-negative");
+        AppSpec { name: name.into(), params, arrival, period: None, copies: 1 }
+    }
+
+    /// Make the app periodic: `copies` submissions spaced `period` apart,
+    /// each a fresh DAG instance (distinct generator seed per copy).
+    pub fn periodic(mut self, period: f64, copies: usize) -> AppSpec {
+        assert!(period > 0.0, "period must be positive");
+        assert!(copies >= 1, "at least one submission");
+        self.period = Some(period);
+        self.copies = copies;
+        self
+    }
+
+    /// Number of submissions this spec expands to.
+    fn submissions(&self) -> usize {
+        if self.period.is_some() { self.copies.max(1) } else { 1 }
+    }
+}
+
+/// A seeded stream of applications over a shared platform.
+#[derive(Debug, Clone)]
+pub struct WorkloadStream {
+    pub apps: Vec<AppSpec>,
+    /// Stream seed (reserved for stream-level randomness; the arrival
+    /// draws of [`WorkloadStream::poisson`] already consumed it).
+    pub seed: u64,
+}
+
+impl WorkloadStream {
+    /// A stream with explicitly specified applications.
+    pub fn fixed(apps: Vec<AppSpec>, seed: u64) -> WorkloadStream {
+        assert!(!apps.is_empty(), "a stream needs at least one application");
+        WorkloadStream { apps, seed }
+    }
+
+    /// A Poisson arrival process: `n_apps` applications, exponential
+    /// inter-arrival gaps with the given mean, first app at `t = 0`.
+    /// `mk(i, seed_i)` builds the i-th app's DAG parameters from a
+    /// per-app seed derived from the stream seed.
+    pub fn poisson(
+        n_apps: usize,
+        mean_gap: f64,
+        seed: u64,
+        mk: impl Fn(usize, u64) -> DagParams,
+    ) -> WorkloadStream {
+        assert!(n_apps >= 1, "a stream needs at least one application");
+        assert!(mean_gap > 0.0, "mean inter-arrival gap must be positive");
+        let mut rng = Pcg32::new(seed, 0x57ea);
+        let mut t = 0.0f64;
+        let mut apps = Vec::with_capacity(n_apps);
+        for i in 0..n_apps {
+            if i > 0 {
+                // Inverse-CDF exponential draw; gen_f64() < 1 so ln(1-u)
+                // is finite and the gap is non-negative.
+                t += -mean_gap * (1.0 - rng.gen_f64()).ln();
+            }
+            let app_seed = rng.next_u64();
+            apps.push(AppSpec::new(format!("app{i}"), mk(i, app_seed), t));
+        }
+        WorkloadStream { apps, seed }
+    }
+
+    /// Total number of DAG submissions (periodic specs expand).
+    pub fn n_submissions(&self) -> usize {
+        self.apps.iter().map(|a| a.submissions()).sum()
+    }
+
+    /// Arrival times of every submission, sorted ascending.
+    pub fn arrivals(&self) -> Vec<f64> {
+        let mut out: Vec<f64> = self
+            .apps
+            .iter()
+            .flat_map(|a| {
+                let period = a.period.unwrap_or(0.0);
+                (0..a.submissions()).map(move |k| a.arrival + period * k as f64)
+            })
+            .collect();
+        out.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        out
+    }
+
+    /// Materialise the stream into one combined DAG plus the admission
+    /// schedule. Deterministic: the same stream builds the same
+    /// [`MultiDag`] every time, which is what makes same-seed stream runs
+    /// reproducible on the sim backend.
+    pub fn build(&self) -> MultiDag {
+        assert!(!self.apps.is_empty(), "a stream needs at least one application");
+        // Expand periodic specs into (arrival, spec, copy#) submissions,
+        // sorted by arrival (stable: ties keep spec order).
+        let mut subs: Vec<(f64, &AppSpec, usize)> = Vec::with_capacity(self.n_submissions());
+        for spec in &self.apps {
+            let period = spec.period.unwrap_or(0.0);
+            for k in 0..spec.submissions() {
+                subs.push((spec.arrival + period * k as f64, spec, k));
+            }
+        }
+        subs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let mut dag = TaoDag::new();
+        let mut app_of: Vec<usize> = Vec::new();
+        let mut apps: Vec<AdmittedApp> = Vec::with_capacity(subs.len());
+        for (app_id, (arrival, spec, copy)) in subs.into_iter().enumerate() {
+            let mut params = spec.params.clone();
+            // Copy 0 keeps the spec's own seed so a single-submission app
+            // is bit-identical to `generate(&spec.params)` — the parity
+            // anchor of the stream path. Later copies derive fresh seeds.
+            params.seed ^= (copy as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let (sub, _) = generate(&params);
+            let offset = dag.len();
+            for node in &sub.nodes {
+                let id = dag.add_task_payload(
+                    node.class,
+                    node.type_id,
+                    node.work_scale,
+                    node.payload.clone(),
+                );
+                debug_assert_eq!(id, offset + node.id);
+                app_of.push(app_id);
+            }
+            // Node-major edge replay preserves each node's successor order,
+            // which criticality hand-off (cp_child) depends on.
+            for node in &sub.nodes {
+                for &succ in &node.succs {
+                    dag.add_edge(offset + node.id, offset + succ);
+                }
+            }
+            let name = if copy == 0 {
+                spec.name.clone()
+            } else {
+                format!("{}#{copy}", spec.name)
+            };
+            apps.push(AdmittedApp {
+                app_id,
+                name,
+                arrival,
+                params,
+                task_range: (offset, offset + sub.len()),
+                roots: sub.roots().into_iter().map(|r| offset + r).collect(),
+            });
+        }
+        dag.finalize().expect("independent app components are acyclic");
+        MultiDag { dag, app_of, apps }
+    }
+}
+
+/// One admitted DAG submission inside a [`MultiDag`].
+#[derive(Debug, Clone)]
+pub struct AdmittedApp {
+    /// Dense submission index — the `app_id` tagged onto trace records.
+    pub app_id: usize,
+    pub name: String,
+    pub arrival: f64,
+    /// The exact generator parameters of this submission (periodic copies
+    /// differ in seed) — enough to regenerate the app's DAG for an
+    /// isolated baseline run.
+    pub params: DagParams,
+    /// Global task-id range `[lo, hi)` of this app inside the combined DAG.
+    pub task_range: (usize, usize),
+    /// Global ids of the app's root tasks (admitted at `arrival`).
+    pub roots: Vec<TaskId>,
+}
+
+impl AdmittedApp {
+    pub fn n_tasks(&self) -> usize {
+        self.task_range.1 - self.task_range.0
+    }
+}
+
+/// A materialised workload stream: one combined DAG, the task→app map, and
+/// the admission schedule, in the exact shape the engines consume.
+#[derive(Debug)]
+pub struct MultiDag {
+    pub dag: TaoDag,
+    /// `app_of[task]` = submission index owning that task.
+    pub app_of: Vec<usize>,
+    /// Submissions sorted by arrival time.
+    pub apps: Vec<AdmittedApp>,
+}
+
+impl MultiDag {
+    /// Admission schedule in engine form: `(arrival, roots)` per app,
+    /// sorted by arrival.
+    pub fn admissions(&self) -> Vec<(f64, Vec<TaskId>)> {
+        self.apps.iter().map(|a| (a.arrival, a.roots.clone())).collect()
+    }
+
+    /// `(app_id, name, arrival)` triples for per-app metric assembly.
+    pub fn app_index(&self) -> Vec<(usize, String, f64)> {
+        self.apps.iter().map(|a| (a.app_id, a.name.clone(), a.arrival)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::KernelClass;
+
+    #[test]
+    fn fixed_stream_builds_combined_dag() {
+        let stream = WorkloadStream::fixed(
+            vec![
+                AppSpec::new("a", DagParams::mix(30, 2.0, 1), 0.0),
+                AppSpec::new("b", DagParams::mix(21, 4.0, 2), 0.5),
+            ],
+            7,
+        );
+        let multi = stream.build();
+        assert_eq!(multi.dag.len(), 51);
+        assert_eq!(multi.app_of.len(), 51);
+        assert_eq!(multi.apps.len(), 2);
+        assert_eq!(multi.apps[0].task_range, (0, 30));
+        assert_eq!(multi.apps[1].task_range, (30, 51));
+        // Every root belongs to the right range and the app map agrees.
+        for app in &multi.apps {
+            for &r in &app.roots {
+                assert!(r >= app.task_range.0 && r < app.task_range.1);
+                assert_eq!(multi.app_of[r], app.app_id);
+            }
+        }
+        // Combined roots = union of per-app roots.
+        assert_eq!(
+            multi.dag.roots().len(),
+            multi.apps.iter().map(|a| a.roots.len()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn single_app_component_matches_standalone_generate() {
+        // The parity anchor: app 0's component must be structurally
+        // identical to generating the DAG directly.
+        let params = DagParams::mix(40, 4.0, 99);
+        let stream =
+            WorkloadStream::fixed(vec![AppSpec::new("solo", params.clone(), 0.0)], 0);
+        let multi = stream.build();
+        let (direct, _) = generate(&params);
+        assert_eq!(multi.dag.len(), direct.len());
+        for (a, b) in multi.dag.nodes.iter().zip(&direct.nodes) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.type_id, b.type_id);
+            assert_eq!(a.succs, b.succs);
+            assert_eq!(a.criticality, b.criticality);
+            assert_eq!(a.cp_child, b.cp_child);
+        }
+        assert_eq!(multi.dag.roots(), direct.roots());
+    }
+
+    #[test]
+    fn poisson_arrivals_are_monotone_and_seeded() {
+        let mk = |_i: usize, s: u64| DagParams::mix(10, 2.0, s);
+        let s1 = WorkloadStream::poisson(6, 0.05, 42, mk);
+        let s2 = WorkloadStream::poisson(6, 0.05, 42, mk);
+        let a1 = s1.arrivals();
+        assert_eq!(a1.len(), 6);
+        assert_eq!(a1[0], 0.0);
+        for w in a1.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert_eq!(a1, s2.arrivals(), "same seed, same arrivals");
+        let s3 = WorkloadStream::poisson(6, 0.05, 43, mk);
+        assert_ne!(a1, s3.arrivals(), "different seed, different arrivals");
+    }
+
+    #[test]
+    fn periodic_spec_expands_into_copies_with_distinct_seeds() {
+        let spec = AppSpec::new(
+            "tick",
+            DagParams::single(KernelClass::Sort, 8, 1.0, 5),
+            0.1,
+        )
+        .periodic(0.2, 3);
+        let stream = WorkloadStream::fixed(vec![spec], 0);
+        assert_eq!(stream.n_submissions(), 3);
+        let multi = stream.build();
+        assert_eq!(multi.apps.len(), 3);
+        assert_eq!(multi.dag.len(), 24);
+        let arr: Vec<f64> = multi.apps.iter().map(|a| a.arrival).collect();
+        for (got, want) in arr.iter().zip([0.1, 0.3, 0.5]) {
+            assert!((got - want).abs() < 1e-12, "{arr:?}");
+        }
+        assert_eq!(multi.apps[0].name, "tick");
+        assert_eq!(multi.apps[1].name, "tick#1");
+        // Copies carry distinct generator seeds.
+        assert_ne!(multi.apps[0].params.seed, multi.apps[1].params.seed);
+        assert_ne!(multi.apps[1].params.seed, multi.apps[2].params.seed);
+    }
+
+    #[test]
+    fn admissions_sorted_even_when_specs_are_not() {
+        let stream = WorkloadStream::fixed(
+            vec![
+                AppSpec::new("late", DagParams::mix(10, 2.0, 1), 0.9),
+                AppSpec::new("early", DagParams::mix(10, 2.0, 2), 0.1),
+            ],
+            0,
+        );
+        let multi = stream.build();
+        assert_eq!(multi.apps[0].name, "early");
+        assert_eq!(multi.apps[1].name, "late");
+        let adm = multi.admissions();
+        assert!(adm[0].0 <= adm[1].0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_arrival_rejected() {
+        AppSpec::new("x", DagParams::mix(10, 2.0, 1), -1.0);
+    }
+}

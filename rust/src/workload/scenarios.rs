@@ -1,0 +1,177 @@
+//! Named multi-application stream scenarios — the registry behind the
+//! `stream` CLI subcommand and the interference bench.
+//!
+//! A stream scenario pairs a platform scenario name (resolved through
+//! [`crate::platform::scenarios`]) with a seeded [`WorkloadStream`]
+//! builder, so any `(backend × policy × stream-scenario)` triple is one
+//! call away ([`crate::exec::run_stream_triple`]). The underlying
+//! platforms are registered in the platform registry under the same
+//! names, so `--platform duet-tx2` also works for single-DAG runs.
+//!
+//! Registered streams:
+//! - `stream-pois8` — 8 small mixed-kernel apps arriving as a Poisson
+//!   process on 8 homogeneous cores: the throughput/fairness smoke case.
+//! - `duet-tx2` — a latency-critical serial chain co-running with a
+//!   bursty high-parallelism app on the TX2 model: static heterogeneity
+//!   plus co-scheduling.
+//! - `bg-interferer-haswell20` — a foreground app plus a late-arriving
+//!   second app on `haswell20` *with* a background-process interference
+//!   episode on cores 0–1 (the paper's §5.3 Haswell experiment, grown to
+//!   multi-tenant form: the scheduler sees DAG-level contention and
+//!   episode-level interference at once).
+
+use super::{AppSpec, WorkloadStream};
+use crate::dag_gen::DagParams;
+use crate::platform::KernelClass;
+
+/// One registered stream scenario.
+pub struct StreamScenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Platform scenario name this stream is designed for (resolvable via
+    /// [`crate::platform::scenarios::by_name`]).
+    pub platform: &'static str,
+    build: fn(u64, bool) -> WorkloadStream,
+}
+
+impl StreamScenario {
+    /// Materialise the stream for a seed; `quick` shrinks the apps to
+    /// smoke-test scale (CI).
+    pub fn stream(&self, seed: u64, quick: bool) -> WorkloadStream {
+        (self.build)(seed, quick)
+    }
+}
+
+fn scale(tasks: usize, quick: bool) -> usize {
+    if quick { (tasks / 4).max(12) } else { tasks }
+}
+
+fn stream_pois8(seed: u64, quick: bool) -> WorkloadStream {
+    let tasks = scale(120, quick);
+    WorkloadStream::poisson(8, 0.02, seed, move |_i, s| DagParams::mix(tasks, 4.0, s))
+}
+
+fn duet_tx2(seed: u64, quick: bool) -> WorkloadStream {
+    // App A: a serial MatMul chain — every task on the critical path, the
+    // shape the PTT scheduler wins on. App B: a wide mixed burst arriving
+    // shortly after, stealing cores and PTT attention.
+    WorkloadStream::fixed(
+        vec![
+            AppSpec::new(
+                "chain",
+                DagParams::single(KernelClass::MatMul, scale(120, quick), 1.0, seed),
+                0.0,
+            ),
+            AppSpec::new(
+                "burst",
+                DagParams::mix(scale(240, quick), 8.0, seed ^ 0xb0b),
+                0.02,
+            ),
+        ],
+        seed,
+    )
+}
+
+fn bg_interferer_haswell20(seed: u64, quick: bool) -> WorkloadStream {
+    // Foreground app from t = 0; a second tenant arrives as the platform's
+    // background-process episode starts squeezing cores 0–1 (see the
+    // matching platform scenario) — DAG-level and episode-level
+    // interference hit the PTT at the same time.
+    WorkloadStream::fixed(
+        vec![
+            AppSpec::new(
+                "foreground",
+                DagParams::mix(scale(600, quick), 8.0, seed),
+                0.0,
+            ),
+            AppSpec::new(
+                "tenant",
+                DagParams::mix(scale(300, quick), 16.0, seed ^ 0x7e4a47),
+                0.05,
+            ),
+        ],
+        seed,
+    )
+}
+
+/// The static stream-scenario registry.
+pub fn stream_scenarios() -> &'static [StreamScenario] {
+    static SCENARIOS: &[StreamScenario] = &[
+        StreamScenario {
+            name: "stream-pois8",
+            description: "8 mixed apps, Poisson arrivals (mean gap 20 ms) on 8 homogeneous cores",
+            platform: "stream-pois8",
+            build: stream_pois8,
+        },
+        StreamScenario {
+            name: "duet-tx2",
+            description: "latency-critical chain + bursty wide app co-running on the TX2 model",
+            platform: "duet-tx2",
+            build: duet_tx2,
+        },
+        StreamScenario {
+            name: "bg-interferer-haswell20",
+            description: "two tenants on haswell20 while a background process squeezes cores 0-1",
+            platform: "bg-interferer-haswell20",
+            build: bg_interferer_haswell20,
+        },
+    ];
+    SCENARIOS
+}
+
+/// Resolve a stream scenario by name.
+pub fn stream_by_name(name: &str) -> Option<&'static StreamScenario> {
+    stream_scenarios().iter().find(|s| s.name == name)
+}
+
+/// Names of all registered stream scenarios.
+pub fn stream_names() -> Vec<&'static str> {
+    stream_scenarios().iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::scenarios as plat_scenarios;
+
+    #[test]
+    fn registry_is_resolvable_and_platform_backed() {
+        assert!(stream_names().len() >= 3);
+        for s in stream_scenarios() {
+            assert!(stream_by_name(s.name).is_some());
+            // Every stream's platform must resolve in the platform registry.
+            let plat = plat_scenarios::by_name(s.platform)
+                .unwrap_or_else(|| panic!("{}: platform '{}' unregistered", s.name, s.platform));
+            assert!(plat.topo.n_cores() >= 2, "{}", s.name);
+        }
+        assert!(stream_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn streams_build_and_quick_mode_shrinks() {
+        for s in stream_scenarios() {
+            let full = s.stream(7, false).build();
+            let quick = s.stream(7, true).build();
+            assert!(full.dag.len() > quick.dag.len(), "{}", s.name);
+            assert!(quick.apps.len() >= 2, "{}: co-running needs ≥ 2 apps", s.name);
+            // Admissions sorted, first at t = 0 (work starts immediately).
+            let adm = quick.admissions();
+            assert_eq!(adm[0].0, 0.0, "{}", s.name);
+            for w in adm.windows(2) {
+                assert!(w[0].0 <= w[1].0, "{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_builds_are_deterministic_per_seed() {
+        let s = stream_by_name("stream-pois8").unwrap();
+        let a = s.stream(11, true).build();
+        let b = s.stream(11, true).build();
+        assert_eq!(a.dag.len(), b.dag.len());
+        assert_eq!(a.app_of, b.app_of);
+        let aa: Vec<f64> = a.apps.iter().map(|x| x.arrival).collect();
+        let bb: Vec<f64> = b.apps.iter().map(|x| x.arrival).collect();
+        assert_eq!(aa, bb);
+    }
+}

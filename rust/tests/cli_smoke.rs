@@ -72,3 +72,60 @@ fn unknown_command_exits_with_usage_error() {
     let st = repro().arg("frobnicate").status().expect("spawn repro");
     assert_eq!(st.code(), Some(2));
 }
+
+#[test]
+fn scenarios_command_lists_workload_streams() {
+    let out = repro().arg("scenarios").output().expect("spawn repro");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in xitao::workload::scenarios::stream_names() {
+        assert!(text.contains(name), "missing stream {name} in:\n{text}");
+    }
+}
+
+#[test]
+fn stream_quick_exits_zero_on_every_registered_stream_scenario() {
+    for name in xitao::workload::scenarios::stream_names() {
+        let out = repro()
+            .args(["stream", "--quick", "--scenario", name, "--seed", "3"])
+            .output()
+            .expect("spawn repro");
+        assert!(
+            out.status.success(),
+            "stream scenario {name} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("Jain fairness index"), "{text}");
+    }
+}
+
+#[test]
+fn stream_custom_works_on_real_backend_with_baseline() {
+    let out = repro()
+        .args([
+            "stream", "--quick", "--scenario", "custom", "--platform", "hom2",
+            "--apps", "2", "--tasks", "24", "--mean-gap", "0.005",
+            "--backend", "real", "--baseline",
+        ])
+        .output()
+        .expect("spawn repro");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("real backend"), "{text}");
+    assert!(text.contains("slowdown"), "{text}");
+}
+
+#[test]
+fn stream_rejects_unknown_scenario_and_backend() {
+    let st = repro()
+        .args(["stream", "--scenario", "nope"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+    let st = repro()
+        .args(["stream", "--backend", "quantum"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+}

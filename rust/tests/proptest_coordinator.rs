@@ -7,13 +7,15 @@
 //! PTT value bounds, generator soundness.
 
 use xitao::coordinator::dag::TaoDag;
+use xitao::coordinator::metrics::jain_fairness_index;
 use xitao::coordinator::ptt::Ptt;
 use xitao::coordinator::scheduler::policy_by_name;
 use xitao::dag_gen::{DagParams, generate};
 use xitao::platform::{KernelClass, Platform, Topology};
-use xitao::sim::{SimOpts, run_dag_sim};
+use xitao::sim::{SimOpts, run_dag_sim, run_stream_sim};
 use xitao::util::prop::{Config, check};
 use xitao::util::rng::Pcg32;
+use xitao::workload::{AppSpec, WorkloadStream};
 
 /// Build a random DAG directly (independent of dag_gen, so the two
 /// generators cross-check each other): `n` nodes, edges only forward.
@@ -233,6 +235,140 @@ fn generator_respects_counts_and_acyclicity() {
             dag.topo_order().map_err(|e| e)?;
             if stats.parallelism <= 0.0 {
                 return Err("non-positive parallelism".into());
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn random_workload_streams_never_deadlock() {
+    // Arbitrary app counts, sizes, shapes and (possibly coinciding)
+    // arrival times: the stream engine must always run every task of
+    // every app exactly once — the sim panics on deadlock, so completion
+    // of the call plus full coverage *is* the property.
+    check(Config::cases(20), "stream sim completes every app",
+        |rng| {
+            let n_apps = rng.gen_usize(1, 5);
+            (0..n_apps)
+                .map(|_| {
+                    (
+                        (rng.gen_usize(3, 40) as u64, rng.gen_usize(1, 8) as u64),
+                        (rng.next_u64() % 1000, rng.next_u64()), // (arrival ms, seed)
+                    )
+                })
+                .collect::<Vec<((u64, u64), (u64, u64))>>()
+        },
+        |specs| {
+            if specs.is_empty() {
+                return Ok(()); // shrinking may empty the stream; vacuously fine
+            }
+            let apps: Vec<AppSpec> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, &((tasks, par), (arrival_ms, seed)))| {
+                    AppSpec::new(
+                        format!("p{i}"),
+                        DagParams::mix(tasks.max(1) as usize, par.max(1) as f64, seed),
+                        arrival_ms as f64 * 1e-3,
+                    )
+                })
+                .collect();
+            let total: usize =
+                specs.iter().map(|&((t, _), _)| t.max(1) as usize).sum();
+            let multi = WorkloadStream::fixed(apps, 1).build();
+            let plat = Platform::homogeneous(4);
+            let policy = policy_by_name("performance", 4).unwrap();
+            let run = run_stream_sim(
+                &multi.dag,
+                &multi.app_of,
+                &multi.admissions(),
+                &plat,
+                policy.as_ref(),
+                None,
+                &SimOpts::default(),
+            );
+            if run.result.records.len() != total {
+                return Err(format!(
+                    "executed {} of {total} tasks",
+                    run.result.records.len()
+                ));
+            }
+            // Per-app coverage: every app's count matches its DAG size.
+            for app in &multi.apps {
+                let got = run.result.app_task_count(app.app_id);
+                if got != app.n_tasks() {
+                    return Err(format!(
+                        "app {} executed {got} of {} tasks",
+                        app.name,
+                        app.n_tasks()
+                    ));
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn poisson_stream_arrivals_are_monotone_for_every_seed() {
+    check(Config::cases(60), "arrival times monotone per stream seed",
+        |rng| (rng.gen_usize(1, 12) as u64, rng.next_u64()),
+        |&(n_apps, seed)| {
+            if n_apps == 0 {
+                return Ok(()); // shrink may zero the app count
+            }
+            let stream = WorkloadStream::poisson(n_apps as usize, 0.01, seed, |_i, s| {
+                DagParams::mix(5, 2.0, s)
+            });
+            let arrivals = stream.arrivals();
+            if arrivals.len() != n_apps as usize {
+                return Err(format!("{} arrivals for {n_apps} apps", arrivals.len()));
+            }
+            if arrivals[0] != 0.0 {
+                return Err(format!("first arrival {} ≠ 0", arrivals[0]));
+            }
+            for w in arrivals.windows(2) {
+                if w[1] < w[0] {
+                    return Err(format!("non-monotone: {} then {}", w[0], w[1]));
+                }
+                if !w[1].is_finite() {
+                    return Err(format!("non-finite arrival {}", w[1]));
+                }
+            }
+            // The same seed must reproduce the same schedule.
+            let again = WorkloadStream::poisson(n_apps as usize, 0.01, seed, |_i, s| {
+                DagParams::mix(5, 2.0, s)
+            });
+            if again.arrivals() != arrivals {
+                return Err("same seed produced different arrivals".into());
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn jain_index_always_in_unit_interval() {
+    check(Config::cases(120), "Jain fairness index in (0, 1]",
+        |rng| {
+            let k = rng.gen_usize(1, 20);
+            (0..k).map(|_| rng.gen_f64_range(1e-6, 1e6)).collect::<Vec<f64>>()
+        },
+        |xs| {
+            if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+                return Ok(()); // shrunk out of the index's positive domain
+            }
+            let j = jain_fairness_index(xs);
+            if !(j > 0.0 && j <= 1.0 + 1e-12) {
+                return Err(format!("J = {j} for {xs:?}"));
+            }
+            // Lower bound: J ≥ 1/n, achieved as one allocation dominates.
+            if j < 1.0 / xs.len() as f64 - 1e-12 {
+                return Err(format!("J = {j} below 1/n for {xs:?}"));
+            }
+            // Equal allocations are perfectly fair.
+            let equal = vec![xs[0]; xs.len()];
+            let je = jain_fairness_index(&equal);
+            if (je - 1.0).abs() > 1e-9 {
+                return Err(format!("equal allocations scored {je}"));
             }
             Ok(())
         });
