@@ -6,13 +6,16 @@
 //!
 //!   - PTT read / update / global search / local width search
 //!   - policy placement decisions (all four policies)
-//!   - WSQ push/pop/steal and AQ push/pop
+//!   - lock-free WSQ push/pop/steal and AQ push/pop
 //!   - end-to-end real-engine scheduling overhead per TAO (nop payloads)
 //!   - simulator event rate (simulated TAOs per wall second)
+//!   - the full mutex-vs-lockfree overhead harness
+//!     (`xitao::bench::overhead`, same code as `repro bench-overhead`)
 //!
-//! Results feed EXPERIMENTS.md §Perf.
+//! Results feed EXPERIMENTS.md §Perf and `BENCH_sched_overhead.json`.
 
 use std::time::Instant;
+use xitao::bench::overhead::time_ns;
 use xitao::coordinator::aq::AssemblyQueue;
 use xitao::coordinator::dag::TaoDag;
 use xitao::coordinator::ptt::Ptt;
@@ -22,18 +25,6 @@ use xitao::coordinator::{NopPayload, RealEngineOpts, run_dag_real};
 use xitao::dag_gen::{DagParams, generate};
 use xitao::platform::{KernelClass, Platform, Topology};
 use xitao::sim::{SimOpts, run_dag_sim};
-
-/// Time `f` over `iters` iterations, returning ns/op.
-fn time_ns<F: FnMut()>(iters: usize, mut f: F) -> f64 {
-    for _ in 0..iters / 10 + 1 {
-        f(); // warmup
-    }
-    let t = Instant::now();
-    for _ in 0..iters {
-        f();
-    }
-    t.elapsed().as_nanos() as f64 / iters as f64
-}
 
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
@@ -144,4 +135,14 @@ fn main() {
         run.result.n_tasks() as f64 / dt,
         run.result.n_tasks()
     );
+
+    // --- mutex-vs-lockfree overhead harness --------------------------------
+    // Same code as `repro bench-overhead --compare`; prints the comparison
+    // tables (steal-heavy throughput, steal latency, speedup).
+    println!();
+    xitao::bench::emit_overhead(&xitao::bench::OverheadOpts {
+        quick,
+        compare: true,
+        json: false,
+    });
 }

@@ -1,10 +1,13 @@
 //! Benchmark/figure harness: one regenerator per table and figure in the
 //! paper's evaluation (§5), plus the design ablations called out in
-//! DESIGN.md. Used by the `repro` CLI and the `cargo bench` targets.
+//! DESIGN.md and the scheduler-overhead perf harness ([`overhead`]).
+//! Used by the `repro` CLI and the `cargo bench` targets.
 
 pub mod figures;
+pub mod overhead;
 
 pub use figures::{
     BenchOpts, ablation_baselines, ablation_energy, ablation_ptt, emit, fig5, fig6, fig7, fig8,
     fig9, fig10, stream_interference,
 };
+pub use overhead::{OverheadOpts, emit_overhead, run_overhead};

@@ -1,0 +1,477 @@
+//! Scheduler-overhead harness (`repro bench-overhead`) — the first point
+//! of this repository's recorded perf trajectory.
+//!
+//! Measures the hot path that PR 3 made lock-free:
+//!
+//! 1. **Steal-heavy queue benchmark**: one owner pushes/pops while
+//!    thieves steal concurrently — the Chase–Lev [`WsQueue`] against the
+//!    retired mutex baseline ([`MutexWsQueue`]), reporting throughput,
+//!    mean steal latency and the lock-free/mutex speedup.
+//! 2. **Single-thread queue micro-ops**: uncontended push+pop cost of the
+//!    lock-free and mutex WSQ/AQ variants.
+//! 3. **End-to-end engine overhead**: tasks/sec of the real-thread engine
+//!    on nop payloads (pure runtime overhead, no kernel work) across the
+//!    `hom4` / `hom20` / `biglittle44` scenarios.
+//! 4. **Simulator event rate**: simulated TAOs per wall second (tracks the
+//!    O(n²)→O(n) bookkeeping fix in `sim::engine`).
+//!
+//! `--json` writes the machine-readable result to
+//! `BENCH_sched_overhead.json` at the repository root; `--compare` prints
+//! the focused mutex-vs-lockfree table. Numbers are host-dependent; the
+//! *shape* under test is "the lock-free path is no slower, and faster
+//! under steal contention".
+
+use crate::coordinator::aq::AssemblyQueue;
+use crate::coordinator::dag::TaoDag;
+use crate::coordinator::mutex_queues::{MutexAssemblyQueue, MutexWsQueue};
+use crate::coordinator::scheduler::policy_by_name;
+use crate::coordinator::wsq::WsQueue;
+use crate::coordinator::{NopPayload, RealEngineOpts, run_dag_real};
+use crate::dag_gen::{DagParams, generate};
+use crate::platform::{KernelClass, scenarios};
+use crate::sim::{SimOpts, run_dag_sim};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Harness options (all off = print the lock-free numbers only).
+#[derive(Debug, Clone, Default)]
+pub struct OverheadOpts {
+    /// CI smoke scale (small iteration counts).
+    pub quick: bool,
+    /// Run and print the mutex-vs-lockfree comparison.
+    pub compare: bool,
+    /// Write `BENCH_sched_overhead.json` at the repository root.
+    pub json: bool,
+}
+
+/// Scenarios the end-to-end overhead is measured on.
+pub const OVERHEAD_SCENARIOS: [&str; 3] = ["hom4", "hom20", "biglittle44"];
+
+/// Where the machine-readable result lands: the nearest ancestor of the
+/// current directory whose `Cargo.toml` declares a `[workspace]` (this
+/// repository's root manifest). Walking up and stopping at the *first*
+/// workspace root means a checkout nested inside some other Cargo project
+/// is never escaped. Falls back to the build-time manifest location for
+/// artifacts executed outside any checkout.
+pub fn bench_json_path() -> std::path::PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    for dir in cwd.ancestors() {
+        if let Ok(text) = std::fs::read_to_string(dir.join("Cargo.toml")) {
+            if text.contains("[workspace]") {
+                return dir.join("BENCH_sched_overhead.json");
+            }
+        }
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sched_overhead.json")
+}
+
+/// Time `f` over `iters` iterations, returning ns/op. Shared with the
+/// `sched_overhead` cargo-bench harness so the two measurement paths
+/// cannot drift.
+pub fn time_ns<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    for _ in 0..iters / 10 + 1 {
+        f(); // warmup
+    }
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// The queue surface both WSQ implementations expose; lets the steal
+/// benchmark drive lock-free and mutex variants through one code path.
+trait StealQueue<T>: Sync {
+    fn push(&self, v: T);
+    fn pop(&self) -> Option<T>;
+    fn steal(&self) -> Option<T>;
+}
+
+impl<T: Copy + Send> StealQueue<T> for WsQueue<T> {
+    fn push(&self, v: T) {
+        WsQueue::push(self, v)
+    }
+    fn pop(&self) -> Option<T> {
+        WsQueue::pop(self)
+    }
+    fn steal(&self) -> Option<T> {
+        WsQueue::steal(self)
+    }
+}
+
+impl<T: Send> StealQueue<T> for MutexWsQueue<T> {
+    fn push(&self, v: T) {
+        MutexWsQueue::push(self, v)
+    }
+    fn pop(&self) -> Option<T> {
+        MutexWsQueue::pop(self)
+    }
+    fn steal(&self) -> Option<T> {
+        MutexWsQueue::steal(self)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct StealStats {
+    ops_per_sec: f64,
+    /// Mean latency of a *successful* steal, ns.
+    steal_ns: f64,
+    /// Items actually taken by thieves (vs the owner).
+    stolen: usize,
+}
+
+/// Steal-heavy workload: the owner pushes `items` in DAG-commit-sized
+/// batches and pops a quarter back (the LIFO half of the hot path) while
+/// `n_thieves` thieves drain the rest. Every item is consumed exactly once
+/// — the consumed counter doubles as a correctness check (the run would
+/// hang on a lost item).
+fn run_steal_bench<Q: StealQueue<usize>>(q: &Q, items: usize, n_thieves: usize) -> StealStats {
+    let consumed = AtomicUsize::new(0);
+    let stolen = AtomicUsize::new(0);
+    let steal_ns_total = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..n_thieves {
+            let (consumed, stolen, steal_ns_total) = (&consumed, &stolen, &steal_ns_total);
+            s.spawn(move || {
+                let mut local_ns = 0u64;
+                let mut local_stolen = 0usize;
+                while consumed.load(Ordering::Relaxed) < items {
+                    let t = Instant::now();
+                    if q.steal().is_some() {
+                        local_ns += t.elapsed().as_nanos() as u64;
+                        local_stolen += 1;
+                        consumed.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+                steal_ns_total.fetch_add(local_ns, Ordering::Relaxed);
+                stolen.fetch_add(local_stolen, Ordering::Relaxed);
+            });
+        }
+        // Owner (this thread): push batches, pop a share.
+        let mut pushed = 0usize;
+        while pushed < items {
+            let batch = 64.min(items - pushed);
+            for _ in 0..batch {
+                q.push(pushed);
+                pushed += 1;
+            }
+            for _ in 0..batch / 4 {
+                if q.pop().is_some() {
+                    consumed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        // Drain whatever the thieves leave behind.
+        while consumed.load(Ordering::Relaxed) < items {
+            if q.pop().is_some() {
+                consumed.fetch_add(1, Ordering::Relaxed);
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let n_stolen = stolen.load(Ordering::Relaxed);
+    StealStats {
+        ops_per_sec: items as f64 / secs.max(1e-9),
+        steal_ns: if n_stolen == 0 {
+            0.0
+        } else {
+            steal_ns_total.load(Ordering::Relaxed) as f64 / n_stolen as f64
+        },
+        stolen: n_stolen,
+    }
+}
+
+/// An all-independent nop-payload DAG: every placement is a fresh
+/// pop-or-steal + placement decision + AQ round trip — maximally
+/// steal-heavy, zero kernel work, so elapsed time is pure scheduler
+/// overhead.
+fn nop_dag(n_tasks: usize) -> TaoDag {
+    let mut dag = TaoDag::new();
+    let payload: Arc<dyn crate::coordinator::TaoPayload> =
+        Arc::new(NopPayload(KernelClass::MatMul));
+    for _ in 0..n_tasks {
+        dag.add_task_payload(KernelClass::MatMul, 0, 1.0, Some(payload.clone()));
+    }
+    dag.finalize().unwrap();
+    dag
+}
+
+/// Run the full harness; returns the machine-readable result. Prints
+/// nothing — see [`emit_overhead`] for the CLI entry point.
+pub fn run_overhead(opts: &OverheadOpts) -> Json {
+    let micro_iters = if opts.quick { 20_000 } else { 200_000 };
+    let steal_items = if opts.quick { 50_000 } else { 400_000 };
+    let engine_tasks = if opts.quick { 1_000 } else { 20_000 };
+    let sim_tasks = if opts.quick { 2_000 } else { 20_000 };
+    let host_cores = crate::platform::detect::online_cpus();
+    let n_thieves = host_cores.saturating_sub(1).clamp(1, 3);
+    let with_compare = opts.compare || opts.json;
+
+    // --- 1. steal-heavy queue benchmark ---------------------------------
+    let lf = {
+        let q: WsQueue<usize> = WsQueue::new();
+        run_steal_bench(&q, steal_items, n_thieves)
+    };
+    let mx = with_compare.then(|| {
+        let q: MutexWsQueue<usize> = MutexWsQueue::new();
+        run_steal_bench(&q, steal_items, n_thieves)
+    });
+
+    // --- 2. uncontended micro-ops ----------------------------------------
+    let wsq: WsQueue<usize> = WsQueue::new();
+    let wsq_pp = time_ns(micro_iters, || {
+        wsq.push(1);
+        std::hint::black_box(wsq.pop());
+    });
+    let aq: AssemblyQueue<usize> = AssemblyQueue::new();
+    let aq_pp = time_ns(micro_iters, || {
+        aq.push(1);
+        std::hint::black_box(aq.pop());
+    });
+    let (mwsq_pp, maq_pp) = if with_compare {
+        let mwsq: MutexWsQueue<usize> = MutexWsQueue::new();
+        let p1 = time_ns(micro_iters, || {
+            mwsq.push(1);
+            std::hint::black_box(mwsq.pop());
+        });
+        let maq: MutexAssemblyQueue<usize> = MutexAssemblyQueue::new();
+        let p2 = time_ns(micro_iters, || {
+            maq.push(1);
+            std::hint::black_box(maq.pop());
+        });
+        (Some(p1), Some(p2))
+    } else {
+        (None, None)
+    };
+
+    // --- 3. end-to-end engine overhead per scenario ----------------------
+    let dag = nop_dag(engine_tasks);
+    let mut scen_objs: Vec<(&str, Json)> = Vec::new();
+    for name in OVERHEAD_SCENARIOS {
+        let plat = scenarios::by_name(name).expect("registered overhead scenario");
+        let policy = policy_by_name("performance", plat.topo.n_cores()).expect("policy");
+        let t = Instant::now();
+        let res = run_dag_real(&dag, &plat.topo, policy.as_ref(), None, &RealEngineOpts::default());
+        let secs = t.elapsed().as_secs_f64();
+        let tps = res.n_tasks() as f64 / secs.max(1e-9);
+        scen_objs.push((
+            name,
+            Json::obj(vec![
+                ("workers", Json::Num(plat.topo.n_cores() as f64)),
+                ("tasks", Json::Num(res.n_tasks() as f64)),
+                ("tasks_per_sec", Json::Num(tps)),
+                ("ns_per_tao", Json::Num(1e9 * secs / res.n_tasks() as f64)),
+            ]),
+        ));
+    }
+
+    // --- 4. simulator event rate -----------------------------------------
+    let (sim_dag, _) = generate(&DagParams::mix(sim_tasks, 8.0, 3));
+    let plat = scenarios::by_name("tx2").unwrap();
+    let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
+    let t = Instant::now();
+    let run = run_dag_sim(&sim_dag, &plat, policy.as_ref(), None, &SimOpts::default());
+    let sim_secs = t.elapsed().as_secs_f64();
+    let sim_tps = run.result.n_tasks() as f64 / sim_secs.max(1e-9);
+
+    // --- assemble ---------------------------------------------------------
+    let mut steal_pairs = vec![
+        ("threads", Json::Num((n_thieves + 1) as f64)),
+        ("items", Json::Num(steal_items as f64)),
+        ("lockfree_ops_per_sec", Json::Num(lf.ops_per_sec)),
+        ("lockfree_steal_ns", Json::Num(lf.steal_ns)),
+        ("lockfree_stolen", Json::Num(lf.stolen as f64)),
+    ];
+    if let Some(mx) = mx {
+        steal_pairs.push(("mutex_ops_per_sec", Json::Num(mx.ops_per_sec)));
+        steal_pairs.push(("mutex_steal_ns", Json::Num(mx.steal_ns)));
+        steal_pairs.push((
+            "speedup_lockfree_over_mutex",
+            Json::Num(lf.ops_per_sec / mx.ops_per_sec.max(1e-9)),
+        ));
+    }
+    let mut queue_pairs = vec![
+        ("wsq_push_pop_ns", Json::Num(wsq_pp)),
+        ("aq_push_pop_ns", Json::Num(aq_pp)),
+    ];
+    if let (Some(a), Some(b)) = (mwsq_pp, maq_pp) {
+        queue_pairs.push(("mutex_wsq_push_pop_ns", Json::Num(a)));
+        queue_pairs.push(("mutex_aq_push_pop_ns", Json::Num(b)));
+    }
+    Json::obj(vec![
+        ("bench", Json::Str("sched_overhead".into())),
+        ("schema", Json::Num(1.0)),
+        ("provenance", Json::Str("measured".into())),
+        ("quick", Json::Bool(opts.quick)),
+        ("host_cores", Json::Num(host_cores as f64)),
+        ("scenarios", Json::obj(scen_objs)),
+        ("steal", Json::obj(steal_pairs)),
+        ("queues", Json::obj(queue_pairs)),
+        (
+            "sim",
+            Json::obj(vec![
+                ("tasks", Json::Num(sim_tasks as f64)),
+                ("sim_tao_per_sec", Json::Num(sim_tps)),
+            ]),
+        ),
+    ])
+}
+
+fn get_f64(j: &Json, path: &[&str]) -> Option<f64> {
+    let mut cur = j;
+    for p in path {
+        cur = cur.get(p)?;
+    }
+    cur.as_f64()
+}
+
+/// Render the result as tables (the CLI's human-readable half).
+pub fn render_tables(result: &Json, opts: &OverheadOpts) -> Vec<Table> {
+    let mut out = Vec::new();
+
+    let mut t = Table::new(
+        "Scheduler overhead: real engine, nop payloads (pure runtime cost)",
+        &["scenario", "workers", "tasks/s", "ns/TAO"],
+    );
+    for name in OVERHEAD_SCENARIOS {
+        let base = ["scenarios", name];
+        let row = |field: &str| get_f64(result, &[base[0], base[1], field]).unwrap_or(f64::NAN);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.0}", row("workers")),
+            format!("{:.0}", row("tasks_per_sec")),
+            format!("{:.0}", row("ns_per_tao")),
+        ]);
+    }
+    out.push(t);
+
+    let mut t = Table::new(
+        "Steal-heavy queue benchmark (1 owner + thieves, every item once)",
+        &["impl", "ops/s", "steal ns", "stolen"],
+    );
+    t.row(vec![
+        "chase-lev".into(),
+        format!("{:.0}", get_f64(result, &["steal", "lockfree_ops_per_sec"]).unwrap_or(0.0)),
+        format!("{:.1}", get_f64(result, &["steal", "lockfree_steal_ns"]).unwrap_or(0.0)),
+        format!("{:.0}", get_f64(result, &["steal", "lockfree_stolen"]).unwrap_or(0.0)),
+    ]);
+    if let Some(mx_ops) = get_f64(result, &["steal", "mutex_ops_per_sec"]) {
+        t.row(vec![
+            "mutex".into(),
+            format!("{mx_ops:.0}"),
+            format!("{:.1}", get_f64(result, &["steal", "mutex_steal_ns"]).unwrap_or(0.0)),
+            "-".into(),
+        ]);
+    }
+    out.push(t);
+
+    if opts.compare {
+        if let Some(speedup) = get_f64(result, &["steal", "speedup_lockfree_over_mutex"]) {
+            let mut t = Table::new(
+                "Mutex vs lock-free (steal-heavy): speedup of the Chase-Lev path",
+                &["metric", "lock-free", "mutex", "speedup"],
+            );
+            let lf_ops = get_f64(result, &["steal", "lockfree_ops_per_sec"]).unwrap_or(0.0);
+            let mx_ops = get_f64(result, &["steal", "mutex_ops_per_sec"]).unwrap_or(0.0);
+            t.row(vec![
+                "queue ops/s".into(),
+                format!("{lf_ops:.0}"),
+                format!("{mx_ops:.0}"),
+                format!("{speedup:.2}x"),
+            ]);
+            if let (Some(a), Some(b)) = (
+                get_f64(result, &["queues", "wsq_push_pop_ns"]),
+                get_f64(result, &["queues", "mutex_wsq_push_pop_ns"]),
+            ) {
+                t.row(vec![
+                    "wsq push+pop ns".into(),
+                    format!("{a:.1}"),
+                    format!("{b:.1}"),
+                    format!("{:.2}x", b / a.max(1e-9)),
+                ]);
+            }
+            if let (Some(a), Some(b)) = (
+                get_f64(result, &["queues", "aq_push_pop_ns"]),
+                get_f64(result, &["queues", "mutex_aq_push_pop_ns"]),
+            ) {
+                t.row(vec![
+                    "aq push+pop ns".into(),
+                    format!("{a:.1}"),
+                    format!("{b:.1}"),
+                    format!("{:.2}x", b / a.max(1e-9)),
+                ]);
+            }
+            out.push(t);
+        }
+    }
+
+    let mut t = Table::new("Simulator event rate", &["metric", "value"]);
+    t.row(vec![
+        "simulated TAO/s (wall)".into(),
+        format!("{:.0}", get_f64(result, &["sim", "sim_tao_per_sec"]).unwrap_or(0.0)),
+    ]);
+    out.push(t);
+    out
+}
+
+/// CLI entry point: run, print tables, optionally write the JSON file.
+/// Returns the result so callers (tests, benches) can assert on it.
+pub fn emit_overhead(opts: &OverheadOpts) -> Json {
+    let result = run_overhead(opts);
+    for t in render_tables(&result, opts) {
+        println!("{}", t.render());
+    }
+    if opts.json {
+        let path = bench_json_path();
+        match std::fs::write(&path, result.to_pretty()) {
+            Ok(()) => println!("[json] {}", path.display()),
+            Err(e) => eprintln!("[json] write failed ({}): {e}", path.display()),
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_overhead_run_is_well_formed() {
+        let opts = OverheadOpts { quick: true, compare: true, json: false };
+        let j = run_overhead(&opts);
+        // ≥ 3 scenarios, each with a positive tasks/sec.
+        for name in OVERHEAD_SCENARIOS {
+            let tps = get_f64(&j, &["scenarios", name, "tasks_per_sec"]).unwrap();
+            assert!(tps > 0.0 && tps.is_finite(), "{name}: {tps}");
+        }
+        // The steal comparison is present and sane. The ≥1.5× win is only
+        // expected on a multicore host under release optimizations, but a
+        // *catastrophic inversion* (lock-free half the mutex throughput)
+        // is a regression signal even in a noisy debug-mode test run — an
+        // accidental contended RMW or lock on the fast path shows up far
+        // below this floor.
+        let sp = get_f64(&j, &["steal", "speedup_lockfree_over_mutex"]).unwrap();
+        assert!(sp > 0.0 && sp.is_finite(), "speedup {sp}");
+        let host_cores = get_f64(&j, &["host_cores"]).unwrap();
+        if host_cores > 1.0 {
+            assert!(sp >= 0.5, "lock-free path regressed to {sp:.2}x of the mutex baseline");
+        }
+        let lf = get_f64(&j, &["steal", "lockfree_ops_per_sec"]).unwrap();
+        assert!(lf > 0.0);
+        assert!(get_f64(&j, &["sim", "sim_tao_per_sec"]).unwrap() > 0.0);
+        // Tables render without panicking.
+        let tables = render_tables(&j, &opts);
+        assert!(tables.len() >= 3);
+        for t in tables {
+            assert!(!t.render().is_empty());
+        }
+    }
+}

@@ -1,42 +1,146 @@
-//! Per-core FIFO assembly queues (§3.1).
+//! Per-core FIFO assembly queues (§3.1) — a lock-free MPSC queue.
 //!
 //! When a ready TAO's resource partition is decided, a pointer to the TAO
 //! is inserted into the AQ of **every core in the partition**; each core
 //! then fetches its pointer asynchronously and executes its share. AQs are
-//! strictly FIFO: placement is irrevocable, and consistent insertion order
-//! across AQs (one placement inserts to all member queues before the next
-//! placement's inserts can interleave on the same queues — guaranteed by
-//! the engines) keeps multi-queue fetches deadlock-free.
+//! strictly FIFO: placement is irrevocable, and because members execute
+//! their share immediately on arrival (asynchronous entry, no barrier),
+//! inconsistent insertion interleavings across AQs cannot produce a
+//! circular wait (see `coordinator::worker`).
+//!
+//! The access pattern is **multi-producer, single-consumer**: any worker
+//! that makes a placement decision pushes (into several AQs at once), but
+//! only the queue's own core pops. This implementation is Vyukov's
+//! intrusive MPSC queue: a push is one `swap` on the head plus one link
+//! store — wait-free for producers — and the owner's pop is a plain
+//! pointer chase. No operation takes a lock.
+//!
+//! Trade-off, stated honestly: each push allocates one node and each pop
+//! frees one, so the *uncontended* per-op cost can exceed the old
+//! mutex+`VecDeque` (which amortized allocation away). What the lock-free
+//! queue buys is the contended case — no lock convoy when several placers
+//! hit the same core's AQ while its owner fetches, which is precisely the
+//! §5.3 interference scenario. `repro bench-overhead --compare` measures
+//! both regimes rather than asserting either.
+//!
+//! One transient state exists by design: between a producer's `swap` and
+//! its link store, the chain is momentarily broken and `pop` reports the
+//! queue empty even though later pushes may have completed. The worker
+//! loop simply re-polls, and the park/unpark protocol in
+//! `coordinator::worker` orders every wake-up *after* the link store, so a
+//! sleeping worker can never miss an insertion.
+//!
+//! The mutex-guarded baseline this replaced lives on in
+//! [`super::mutex_queues`] for the `bench-overhead` comparison.
 
-use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::cell::UnsafeCell;
+use std::fmt;
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
 
-#[derive(Debug, Default)]
-pub struct AssemblyQueue<T> {
-    q: Mutex<VecDeque<T>>,
+struct Node<T> {
+    next: AtomicPtr<Node<T>>,
+    /// `None` only for the stub node the consumer currently parks on.
+    value: Option<T>,
 }
+
+/// Lock-free MPSC FIFO queue. `push` from any thread; `pop` is
+/// **owner-only** (exactly one consumer thread at a time — the engines
+/// uphold this: only core `c` pops `aqs[c]`).
+pub struct AssemblyQueue<T> {
+    /// Producers `swap` here; points at the most recently pushed node.
+    head: AtomicPtr<Node<T>>,
+    /// Consumer-owned cursor; points at the current stub (the node whose
+    /// value was already taken, or the initial dummy).
+    tail: UnsafeCell<*mut Node<T>>,
+    /// Item count (incremented before the push is linked, so it never
+    /// under-reports a pop-visible item).
+    count: AtomicUsize,
+}
+
+// Safety: `tail` is only touched by the single consumer (contract above);
+// producers communicate exclusively through `head`/`next` atomics.
+unsafe impl<T: Send> Send for AssemblyQueue<T> {}
+unsafe impl<T: Send> Sync for AssemblyQueue<T> {}
 
 impl<T> AssemblyQueue<T> {
     pub fn new() -> AssemblyQueue<T> {
-        AssemblyQueue { q: Mutex::new(VecDeque::new()) }
+        let stub = Box::into_raw(Box::new(Node {
+            next: AtomicPtr::new(ptr::null_mut()),
+            value: None,
+        }));
+        AssemblyQueue {
+            head: AtomicPtr::new(stub),
+            tail: UnsafeCell::new(stub),
+            count: AtomicUsize::new(0),
+        }
     }
 
-    /// Insert at the tail (placement time).
+    /// Insert at the tail (placement time). Any thread; wait-free.
     pub fn push(&self, item: T) {
-        self.q.lock().unwrap().push_back(item);
+        self.count.fetch_add(1, Ordering::AcqRel);
+        let n = Box::into_raw(Box::new(Node {
+            next: AtomicPtr::new(ptr::null_mut()),
+            value: Some(item),
+        }));
+        let prev = self.head.swap(n, Ordering::AcqRel);
+        // Link. Between the swap above and this store the chain is
+        // unwalkable past `prev`; consumers transiently see "empty" and
+        // re-poll (module docs).
+        unsafe { (*prev).next.store(n, Ordering::Release) };
     }
 
-    /// Fetch from the head (execution time).
+    /// Fetch from the head (execution time). **Owner-only.**
     pub fn pop(&self) -> Option<T> {
-        self.q.lock().unwrap().pop_front()
+        unsafe {
+            let tail = *self.tail.get();
+            let next = (*tail).next.load(Ordering::Acquire);
+            if next.is_null() {
+                return None;
+            }
+            let value = (*next).value.take();
+            debug_assert!(value.is_some(), "non-stub node must carry a value");
+            // `next` becomes the new stub; the old one is done for good.
+            *self.tail.get() = next;
+            drop(Box::from_raw(tail));
+            self.count.fetch_sub(1, Ordering::AcqRel);
+            value
+        }
     }
 
+    /// Approximate length (counts completed and in-flight pushes).
     pub fn len(&self) -> usize {
-        self.q.lock().unwrap().len()
+        self.count.load(Ordering::Acquire)
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+impl<T> Default for AssemblyQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> fmt::Debug for AssemblyQueue<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AssemblyQueue").field("len", &self.len()).finish()
+    }
+}
+
+impl<T> Drop for AssemblyQueue<T> {
+    fn drop(&mut self) {
+        // Exclusive access: walk the chain from the stub, freeing every
+        // node (remaining values drop with their `Option`).
+        unsafe {
+            let mut p = *self.tail.get();
+            while !p.is_null() {
+                let boxed = Box::from_raw(p);
+                p = boxed.next.load(Ordering::Relaxed);
+            }
+        }
     }
 }
 
@@ -52,5 +156,65 @@ mod tests {
         assert_eq!(q.pop(), Some("a"));
         assert_eq!(q.pop(), Some("b"));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn len_tracks_and_interleaves() {
+        let q = AssemblyQueue::new();
+        assert!(q.is_empty());
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        q.push(3);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drops_unconsumed_values() {
+        use std::sync::Arc;
+        let marker = Arc::new(());
+        {
+            let q = AssemblyQueue::new();
+            q.push(marker.clone());
+            q.push(marker.clone());
+            let _ = q.pop();
+            // One value still queued when `q` drops.
+        }
+        assert_eq!(Arc::strong_count(&marker), 1, "queued Arc must be released");
+    }
+
+    #[test]
+    fn concurrent_producers_single_consumer() {
+        use std::sync::Arc;
+        let q = Arc::new(AssemblyQueue::new());
+        let producers = 4;
+        let per = 500usize;
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                let q = &q;
+                s.spawn(move || {
+                    for i in 0..per {
+                        q.push((p, i));
+                    }
+                });
+            }
+            // Single consumer drains from this thread.
+            let mut next_seq = vec![0usize; producers];
+            let mut got = 0;
+            while got < producers * per {
+                if let Some((p, i)) = q.pop() {
+                    assert_eq!(i, next_seq[p], "per-producer FIFO violated");
+                    next_seq[p] += 1;
+                    got += 1;
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        });
+        assert!(q.is_empty());
     }
 }

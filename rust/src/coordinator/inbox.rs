@@ -1,0 +1,154 @@
+//! Per-core admission inboxes — lock-free MPSC handoff into a live worker.
+//!
+//! The Chase–Lev deque ([`super::wsq::WsQueue`]) makes `push` owner-only,
+//! so the stream submitter thread (and any future external injector) can no
+//! longer push late-arriving roots straight into a live worker's WSQ. The
+//! inbox is the seam: producers push here (a Treiber stack — one CAS per
+//! push, from any thread), and the owning worker drains the whole batch at
+//! the top of its loop with a single `swap`, re-pushing the tasks into its
+//! own deque. When the inbox is empty — the overwhelmingly common case —
+//! the drain is a single relaxed load.
+//!
+//! `take_all` returns the items in FIFO push order (the detached LIFO chain
+//! is reversed), so admission order is preserved end to end.
+
+use std::fmt;
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+struct Node<T> {
+    next: *mut Node<T>,
+    value: T,
+}
+
+/// Lock-free multi-producer inbox; see the module docs.
+pub struct Inbox<T> {
+    head: AtomicPtr<Node<T>>,
+}
+
+// Safety: values cross threads only through the `head` atomic.
+unsafe impl<T: Send> Send for Inbox<T> {}
+unsafe impl<T: Send> Sync for Inbox<T> {}
+
+impl<T> Inbox<T> {
+    pub fn new() -> Inbox<T> {
+        Inbox { head: AtomicPtr::new(ptr::null_mut()) }
+    }
+
+    /// Push from any thread (lock-free; one CAS on the uncontended path).
+    pub fn push(&self, value: T) {
+        let n = Box::into_raw(Box::new(Node { next: ptr::null_mut(), value }));
+        let mut cur = self.head.load(Ordering::Relaxed);
+        loop {
+            unsafe { (*n).next = cur };
+            match self.head.compare_exchange_weak(cur, n, Ordering::Release, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Detach and return everything pushed so far, in FIFO push order.
+    /// Safe from any thread (the swap is atomic), but intended for the
+    /// owning worker. Costs one relaxed load when empty.
+    pub fn take_all(&self) -> Vec<T> {
+        if self.head.load(Ordering::Relaxed).is_null() {
+            return Vec::new();
+        }
+        let mut p = self.head.swap(ptr::null_mut(), Ordering::Acquire);
+        let mut out = Vec::new();
+        while !p.is_null() {
+            let boxed = unsafe { Box::from_raw(p) };
+            p = boxed.next;
+            out.push(boxed.value);
+        }
+        out.reverse();
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Relaxed).is_null()
+    }
+}
+
+impl<T> Default for Inbox<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> fmt::Debug for Inbox<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Inbox").field("empty", &self.is_empty()).finish()
+    }
+}
+
+impl<T> Drop for Inbox<T> {
+    fn drop(&mut self) {
+        let _ = self.take_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_single_producer() {
+        let inbox = Inbox::new();
+        for i in 0..10 {
+            inbox.push(i);
+        }
+        assert_eq!(inbox.take_all(), (0..10).collect::<Vec<_>>());
+        assert!(inbox.take_all().is_empty());
+        assert!(inbox.is_empty());
+    }
+
+    #[test]
+    fn batches_are_independent() {
+        let inbox = Inbox::new();
+        inbox.push('a');
+        assert_eq!(inbox.take_all(), vec!['a']);
+        inbox.push('b');
+        inbox.push('c');
+        assert_eq!(inbox.take_all(), vec!['b', 'c']);
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing() {
+        let inbox = Inbox::new();
+        let producers = 4;
+        let per = 1000usize;
+        let mut all = Vec::new();
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                let inbox = &inbox;
+                s.spawn(move || {
+                    for i in 0..per {
+                        inbox.push(p * per + i);
+                    }
+                });
+            }
+            // Interleave drains with production.
+            for _ in 0..100 {
+                all.extend(inbox.take_all());
+                std::thread::yield_now();
+            }
+        });
+        all.extend(inbox.take_all());
+        all.sort_unstable();
+        assert_eq!(all, (0..producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_releases_pending_values() {
+        use std::sync::Arc;
+        let marker = Arc::new(());
+        {
+            let inbox = Inbox::new();
+            inbox.push(marker.clone());
+            inbox.push(marker.clone());
+        }
+        assert_eq!(Arc::strong_count(&marker), 1);
+    }
+}

@@ -36,7 +36,11 @@ impl TraceRecord {
     }
 }
 
-/// Thread-safe trace collector.
+/// Mutex-guarded trace collector for ad-hoc/test use: every `push` takes
+/// the one global lock. The real engine no longer records through it —
+/// each worker commits into its own private shard (a plain `&mut
+/// Vec<TraceRecord>`, see `coordinator::worker`) merged after the workers
+/// join and sorted with [`sort_by_commit`].
 #[derive(Debug, Default)]
 pub struct Trace {
     records: Mutex<Vec<TraceRecord>>,
@@ -58,6 +62,18 @@ impl Trace {
     pub fn snapshot(&self) -> Vec<TraceRecord> {
         self.records.lock().unwrap().clone()
     }
+}
+
+/// Deterministic total order for merged wall-clock traces: commit time
+/// (`t_end`), then task id. Task ids are unique, so the comparator is
+/// total — the real engine concatenates its per-worker trace shards and
+/// sorts with this, so the shard layout (which worker committed what) can
+/// never leak into `RunResult::records`: the same record set sorts to the
+/// same sequence, bit for bit. (The sim backend keeps its historical
+/// stable-by-`t_start` sort; its single-threaded completion order is
+/// already deterministic.)
+pub fn sort_by_commit(records: &mut [TraceRecord]) {
+    records.sort_unstable_by(|a, b| a.t_end.total_cmp(&b.t_end).then(a.task.cmp(&b.task)));
 }
 
 /// Result of one DAG execution.
@@ -439,6 +455,28 @@ mod tests {
     #[should_panic]
     fn jain_index_rejects_nonpositive() {
         jain_fairness_index(&[1.0, 0.0]);
+    }
+
+    // Regression pin for the sharded real-engine trace: the final record
+    // order must be a pure function of the record *set* — two different
+    // merge interleavings (different shard assignments of the same
+    // commits) sort identically, including tied commit times.
+    #[test]
+    fn merged_trace_order_is_deterministic_regardless_of_shard_order() {
+        let recs = vec![
+            rec(3, false, 1, 1, 0.0, 2.0),
+            rec(1, true, 0, 1, 0.5, 1.0),
+            rec(2, false, 2, 1, 0.2, 1.0), // ties task 1 on t_end
+            rec(0, false, 3, 1, 0.1, 3.0),
+        ];
+        let mut a = recs.clone();
+        let mut b: Vec<TraceRecord> = recs.iter().rev().copied().collect();
+        sort_by_commit(&mut a);
+        sort_by_commit(&mut b);
+        assert_eq!(a, b, "merge order must not leak into the sorted trace");
+        // (t_end, task): the t_end tie between tasks 1 and 2 breaks by id.
+        let order: Vec<usize> = a.iter().map(|r| r.task).collect();
+        assert_eq!(order, vec![1, 2, 3, 0]);
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //! - [`tao`] — Task Assembly Objects (internally parallel tasks).
 //! - [`dag`] — TAO-DAGs, bottom-up criticality, average parallelism (§2).
 //! - [`ptt`] — the Performance Trace Table (§3.2).
-//! - [`wsq`] / [`aq`] — per-core work-stealing and assembly queues (§3.1).
+//! - [`wsq`] / [`aq`] — lock-free per-core work-stealing (Chase–Lev) and
+//!   assembly (MPSC) queues (§3.1); [`inbox`] — lock-free admission
+//!   handoff into live workers; [`mutex_queues`] — the mutex baselines,
+//!   kept only for the `bench-overhead` comparison.
 //! - [`scheduler`] — the performance-based policy and the baselines (§3.3, §6).
 //! - [`worker`] — the real-thread execution engine.
 //! - [`metrics`] — traces and derived run metrics.
@@ -16,7 +19,9 @@
 
 pub mod aq;
 pub mod dag;
+pub mod inbox;
 pub mod metrics;
+pub mod mutex_queues;
 pub mod ptt;
 pub mod scheduler;
 pub mod tao;
@@ -24,7 +29,10 @@ pub mod worker;
 pub mod wsq;
 
 pub use dag::{TaoDag, TaoNode, TaskId};
-pub use metrics::{AppMetrics, RunResult, Trace, TraceRecord, jain_fairness_index, per_app_metrics};
+pub use metrics::{
+    AppMetrics, RunResult, Trace, TraceRecord, jain_fairness_index, per_app_metrics,
+    sort_by_commit,
+};
 pub use ptt::Ptt;
 pub use scheduler::{
     CatsLike, DheftLike, EnergyMinimizing, HomogeneousWs, PerformanceBased, PlaceCtx, Policy,

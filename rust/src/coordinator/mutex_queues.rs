@@ -1,0 +1,112 @@
+//! Mutex-guarded baseline queues — the hot path this repository *used* to
+//! run on, kept only as the measurement baseline.
+//!
+//! The engines now use the lock-free [`super::wsq::WsQueue`] (Chase–Lev)
+//! and [`super::aq::AssemblyQueue`] (Vyukov MPSC). These mutex variants
+//! exist for two consumers:
+//!
+//! - `repro bench-overhead --compare` / `cargo bench --bench
+//!   sched_overhead`, which pit lock-free against mutex on a steal-heavy
+//!   workload and record the ratio in `BENCH_sched_overhead.json`;
+//! - `tests/lockfree_queues.rs`, which uses them as trivially correct
+//!   reference implementations to pin the lock-free queues' ordering
+//!   semantics (LIFO pop / FIFO steal, strict AQ FIFO).
+//!
+//! Do **not** use them in engine code.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Mutex-guarded work-stealing queue: owner pushes/pops at the back,
+/// thieves steal from the front. Same API as [`super::wsq::WsQueue`].
+#[derive(Debug, Default)]
+pub struct MutexWsQueue<T> {
+    q: Mutex<VecDeque<T>>,
+}
+
+impl<T> MutexWsQueue<T> {
+    pub fn new() -> MutexWsQueue<T> {
+        MutexWsQueue { q: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Owner-side push (back).
+    pub fn push(&self, item: T) {
+        self.q.lock().unwrap().push_back(item);
+    }
+
+    /// Owner-side pop (back, LIFO).
+    pub fn pop(&self) -> Option<T> {
+        self.q.lock().unwrap().pop_back()
+    }
+
+    /// Thief-side steal (front, FIFO).
+    pub fn steal(&self) -> Option<T> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Mutex-guarded FIFO assembly queue. Same API as
+/// [`super::aq::AssemblyQueue`].
+#[derive(Debug, Default)]
+pub struct MutexAssemblyQueue<T> {
+    q: Mutex<VecDeque<T>>,
+}
+
+impl<T> MutexAssemblyQueue<T> {
+    pub fn new() -> MutexAssemblyQueue<T> {
+        MutexAssemblyQueue { q: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Insert at the tail (placement time).
+    pub fn push(&self, item: T) {
+        self.q.lock().unwrap().push_back(item);
+    }
+
+    /// Fetch from the head (execution time).
+    pub fn pop(&self) -> Option<T> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_wsq_owner_lifo_thief_fifo() {
+        let q = MutexWsQueue::new();
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.steal(), Some(1));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn mutex_aq_strict_fifo() {
+        let q = MutexAssemblyQueue::new();
+        q.push("a");
+        q.push("b");
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+    }
+}

@@ -24,28 +24,62 @@
 //! (the perf figures come from `crate::sim`); on a real multicore it is a
 //! faithful runtime, including optional thread pinning.
 //!
+//! ## Hot-path concurrency
+//!
+//! The paper calls the PTT "a lightweight, lock-free manifest of per-core
+//! latency"; this engine's own bookkeeping is held to the same standard —
+//! no scheduling operation takes a lock:
+//!
+//! - **WSQs** are Chase–Lev deques ([`super::wsq`]): owner LIFO push/pop,
+//!   thief FIFO steal via one CAS on `top`.
+//! - **AQs** are Vyukov MPSC queues ([`super::aq`]): any placer pushes,
+//!   only the owning core pops.
+//! - **Trace commits** go to per-worker cache-padded shards: each worker
+//!   owns a disjoint `&mut Vec<TraceRecord>` (no sharing, no unsafe),
+//!   merged once after the workers join and sorted by the deterministic
+//!   `(t_end, task)` order ([`super::metrics::sort_by_commit`]).
+//! - **Admission** crosses into live workers through per-core lock-free
+//!   inboxes ([`super::inbox`]) — the deque's bottom end is owner-only.
+//!
+//! Idle workers do not burn the cores the PTT is profiling: after a short
+//! spin/yield backoff and one full steal sweep, a worker parks. The
+//! sleep/wake race is closed by a store-buffer (Dekker) handshake: the
+//! sleeper advertises itself (parked flag + `n_parked` counter), issues a
+//! `SeqCst` fence, then re-scans *every* work source and only sleeps if
+//! all are still empty; a producer publishes its work, issues a `SeqCst`
+//! fence, and unparks flagged sleepers only when `n_parked > 0`. The
+//! paired fences guarantee at least one side observes the other: either
+//! the producer sees the counter (and its unpark token makes a pre-park
+//! `unpark` stick) or the sleeper's re-scan sees the published work. On
+//! the common busy path the producer cost is one fence + one load of a
+//! read-mostly counter — no contended RMW. A bounded `park_timeout`
+//! backstops the protocol. See DESIGN.md §Hot-path concurrency.
+//!
 //! ## Multi-application admission
 //!
 //! [`run_stream_real`] executes a workload stream: a dedicated *submitter*
 //! thread sleeps until each application's wall-clock arrival time and then
-//! injects that app's root tasks into the live worker pool's work-stealing
-//! queues (round-robin, like the initial root distribution). Workers never
-//! notice the difference between bootstrap roots and admitted roots —
-//! admission is just more pushes into the same queues, so the engine's
-//! deadlock-freedom argument is unchanged. [`run_dag_real`] is the
-//! degenerate stream (one app, arrival 0).
+//! hands that app's root tasks to the live worker pool through the
+//! per-core admission inboxes (round-robin, like the initial root
+//! distribution); each owner drains its inbox into its own work-stealing
+//! queue, so workers never notice the difference between bootstrap roots
+//! and admitted roots and the engine's deadlock-freedom argument is
+//! unchanged. [`run_dag_real`] is the degenerate stream (one app,
+//! arrival 0).
 
 use super::aq::AssemblyQueue;
 use super::dag::{TaoDag, TaskId};
-use super::metrics::{RunResult, Trace, TraceRecord};
+use super::inbox::Inbox;
+use super::metrics::{RunResult, TraceRecord, sort_by_commit};
 use super::ptt::Ptt;
 use super::scheduler::{PlaceCtx, Policy};
 use super::wsq::WsQueue;
 use crate::platform::Topology;
 use crate::util::Pcg32;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering, fence};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
 
 /// Engine options.
 #[derive(Debug, Clone)]
@@ -54,11 +88,20 @@ pub struct RealEngineOpts {
     pub pin_threads: bool,
     /// Seed for victim selection and root distribution.
     pub seed: u64,
+    /// Backstop period for parked idle workers. The wake handshake makes
+    /// lost wakeups impossible by construction, so this only bounds the
+    /// damage of a protocol bug; tests stretch it to prove the handshake
+    /// (not the timeout) delivers admissions.
+    pub park_timeout: Duration,
 }
 
 impl Default for RealEngineOpts {
     fn default() -> Self {
-        RealEngineOpts { pin_threads: false, seed: 0x7a0 }
+        RealEngineOpts {
+            pin_threads: false,
+            seed: 0x7a0,
+            park_timeout: Duration::from_millis(1),
+        }
     }
 }
 
@@ -76,6 +119,17 @@ struct TaoInstance {
     leader_end: AtomicU64,
 }
 
+/// Park/unpark state of one worker (cache-padded in `Shared` so flag
+/// traffic never false-shares between workers).
+#[derive(Default)]
+struct Parker {
+    /// Registered by the worker before its first loop iteration.
+    thread: OnceLock<std::thread::Thread>,
+    /// Set (SeqCst) by the worker just before sleeping; producers unpark
+    /// only flagged workers. Cleared by the worker itself on wake.
+    parked: AtomicBool,
+}
+
 struct Shared<'a> {
     dag: &'a TaoDag,
     /// Task → application id; empty slice means "everything is app 0".
@@ -85,6 +139,19 @@ struct Shared<'a> {
     ptt: &'a Ptt,
     wsqs: Vec<WsQueue<TaskId>>,
     aqs: Vec<AssemblyQueue<Arc<TaoInstance>>>,
+    /// Per-core admission inboxes: late roots may not be pushed into a
+    /// live worker's deque (owner-only bottom end), so the submitter puts
+    /// them here and the owner drains them into its own WSQ.
+    inboxes: Vec<Inbox<TaskId>>,
+    /// Per-worker park/unpark state.
+    parkers: Vec<CachePadded<Parker>>,
+    /// Number of workers currently advertising themselves as parked (or
+    /// committed to parking). Producers read it after a `SeqCst` fence and
+    /// skip the wake scan entirely while it is zero — the busy-path common
+    /// case (module docs).
+    n_parked: AtomicUsize,
+    /// Park backstop period (see [`RealEngineOpts::park_timeout`]).
+    park_timeout: Duration,
     /// Per-task remaining-dependency counters.
     pending: Vec<AtomicUsize>,
     /// Criticality flags resolved at wake time.
@@ -93,7 +160,6 @@ struct Shared<'a> {
     on_cp: Vec<AtomicBool>,
     completed: AtomicUsize,
     done: AtomicBool,
-    trace: Trace,
     t0: Instant,
 }
 
@@ -106,14 +172,87 @@ impl<'a> Shared<'a> {
         self.app_of.get(task).copied().unwrap_or(0)
     }
 
-    /// Insert a placed TAO into all member AQs. No cross-queue ordering
-    /// lock is needed: members execute their share immediately on arrival
-    /// (asynchronous entry, no barrier), so inconsistent interleavings
-    /// cannot produce a circular wait.
-    fn insert_into_aqs(&self, inst: Arc<TaoInstance>) {
-        for c in inst.partition.cores() {
+    /// Producer half of the sleep/wake handshake: call *after* the work
+    /// has been published. The fence pairs with the sleeper's pre-park
+    /// fence (module docs); the wake scan runs only when someone is
+    /// parked, so the busy-path cost is one fence + one load.
+    fn wake_after_publish(&self, wake: impl FnOnce(&Self)) {
+        fence(Ordering::SeqCst);
+        if self.n_parked.load(Ordering::SeqCst) > 0 {
+            wake(self);
+        }
+    }
+
+    /// Read-only probe of every source that could feed `core`: its inbox,
+    /// its AQ (the in-flight counter covers the MPSC link transient), its
+    /// own deque, and every victim deque. Used by the sleeper's post-fence
+    /// re-scan.
+    fn has_visible_work(&self, core: usize) -> bool {
+        if !self.inboxes[core].is_empty()
+            || !self.aqs[core].is_empty()
+            || !self.wsqs[core].is_empty()
+        {
+            return true;
+        }
+        (0..self.wsqs.len()).any(|v| v != core && !self.wsqs[v].is_empty())
+    }
+
+    /// Unpark worker `c` if it flagged itself parked.
+    fn wake_core(&self, c: usize) {
+        let p = &*self.parkers[c];
+        if p.parked.load(Ordering::SeqCst) {
+            if let Some(t) = p.thread.get() {
+                t.unpark();
+            }
+        }
+    }
+
+    /// Unpark up to `k` parked workers other than `origin` — stealable
+    /// work appeared on `origin`'s deque and any thief will do.
+    fn wake_thieves(&self, origin: usize, k: usize) {
+        let n = self.topo.n_cores();
+        let mut woken = 0usize;
+        for off in 1..n {
+            if woken >= k {
+                break;
+            }
+            let c = (origin + off) % n;
+            let p = &*self.parkers[c];
+            if p.parked.load(Ordering::SeqCst) {
+                if let Some(t) = p.thread.get() {
+                    t.unpark();
+                    woken += 1;
+                }
+            }
+        }
+    }
+
+    /// Unpark every registered worker (run end).
+    fn wake_all(&self) {
+        for p in &self.parkers {
+            if let Some(t) = p.thread.get() {
+                t.unpark();
+            }
+        }
+    }
+
+    /// Insert a placed TAO into all member AQs, then wake any parked
+    /// members. No cross-queue ordering lock is needed: members execute
+    /// their share immediately on arrival (asynchronous entry, no
+    /// barrier), so inconsistent interleavings cannot produce a circular
+    /// wait.
+    fn insert_into_aqs(&self, placer: usize, inst: Arc<TaoInstance>) {
+        let partition = inst.partition;
+        for c in partition.cores() {
             self.aqs[c].push(inst.clone());
         }
+        self.wake_after_publish(|s| {
+            for c in partition.cores() {
+                if c != placer {
+                    s.wake_core(c);
+                }
+            }
+        });
     }
 
     /// Place one ready task from the perspective of `core`.
@@ -140,11 +279,12 @@ impl<'a> Shared<'a> {
             leader_start: AtomicU64::new(0),
             leader_end: AtomicU64::new(0),
         });
-        self.insert_into_aqs(inst);
+        self.insert_into_aqs(core, inst);
     }
 
     /// Execute this core's share of a TAO instance; commit if last.
-    fn execute_share(&self, core: usize, inst: &Arc<TaoInstance>) {
+    /// `sink` is this worker's private trace shard.
+    fn execute_share(&self, core: usize, inst: &Arc<TaoInstance>, sink: &mut Vec<TraceRecord>) {
         let rank = inst.arrivals.fetch_add(1, Ordering::AcqRel);
         debug_assert!(rank < inst.partition.width);
         let node = &self.dag.nodes[inst.task];
@@ -164,12 +304,18 @@ impl<'a> Shared<'a> {
             }
         }
         if inst.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            self.commit_and_wake(core, inst, t_end);
+            self.commit_and_wake(core, inst, t_end, sink);
         }
     }
 
     /// Commit-and-wake-up (§3.3): record the trace, resolve children.
-    fn commit_and_wake(&self, core: usize, inst: &Arc<TaoInstance>, t_end: f64) {
+    fn commit_and_wake(
+        &self,
+        core: usize,
+        inst: &Arc<TaoInstance>,
+        t_end: f64,
+        sink: &mut Vec<TraceRecord>,
+    ) {
         let node = &self.dag.nodes[inst.task];
         let le_bits = inst.leader_end.load(Ordering::Acquire);
         let (ls, le) = if le_bits == 0 {
@@ -177,7 +323,8 @@ impl<'a> Shared<'a> {
         } else {
             (f64::from_bits(inst.leader_start.load(Ordering::Relaxed)), f64::from_bits(le_bits))
         };
-        self.trace.push(TraceRecord {
+        // Lock-free commit: a plain push into this worker's own shard.
+        sink.push(TraceRecord {
             task: inst.task,
             app_id: self.app_of(inst.task),
             class: node.class,
@@ -196,54 +343,126 @@ impl<'a> Shared<'a> {
                 self.on_cp[c].store(true, Ordering::Release);
             }
         }
+        let mut woken = 0usize;
         for &child in &node.succs {
             if self.pending[child].fetch_sub(1, Ordering::AcqRel) == 1 {
                 let crit = self.on_cp[child].load(Ordering::Acquire);
                 self.critical[child].store(crit, Ordering::Relaxed);
                 self.wsqs[core].push(child);
+                woken += 1;
             }
+        }
+        if woken > 0 {
+            // New stealable work on our deque: offer it to as many parked
+            // thieves as there are new tasks.
+            self.wake_after_publish(|s| s.wake_thieves(core, woken));
         }
         let done = self.completed.fetch_add(1, Ordering::AcqRel) + 1;
         if done == self.dag.len() {
             self.done.store(true, Ordering::Release);
+            // Unconditional: every worker must observe the end of the run.
+            self.wake_all();
         }
     }
 }
 
-fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32) {
+/// Spin-backoff bounds: probe attempts before escalating to `yield_now`,
+/// then to the full-sweep-and-park regime.
+const SPIN_LIMIT: u32 = 16;
+const YIELD_LIMIT: u32 = 32;
+
+fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32, sink: &mut Vec<TraceRecord>) {
+    let _ = shared.parkers[core].thread.set(std::thread::current());
     let n = shared.topo.n_cores();
-    let mut idle_spins = 0u32;
+    let mut idle = 0u32;
     while !shared.done.load(Ordering::Acquire) {
+        // 0. Admission inbox: late roots handed over by the submitter are
+        // drained into our own deque (owner-only push).
+        let admitted = shared.inboxes[core].take_all();
+        if !admitted.is_empty() {
+            let k = admitted.len();
+            for task in admitted {
+                shared.wsqs[core].push(task);
+            }
+            // The roots are stealable from our deque now; let parked
+            // neighbours help.
+            shared.wake_after_publish(|s| s.wake_thieves(core, k));
+            idle = 0;
+            continue;
+        }
         // 1. Assembly queue: committed work for this core.
         if let Some(inst) = shared.aqs[core].pop() {
-            shared.execute_share(core, &inst);
-            idle_spins = 0;
+            shared.execute_share(core, &inst, sink);
+            idle = 0;
             continue;
         }
         // 2. Own WSQ: ready tasks needing a placement decision.
         if let Some(task) = shared.wsqs[core].pop() {
             shared.place_task(core, task);
-            idle_spins = 0;
+            idle = 0;
             continue;
         }
-        // 3. Random steal.
+        // 3. Random steal (one probe — cheap, keeps victim choice fair).
         if n > 1 {
             let victim = rng.gen_usize(0, n - 1);
             let victim = if victim >= core { victim + 1 } else { victim };
             if let Some(task) = shared.wsqs[victim].steal() {
                 shared.place_task(core, task);
-                idle_spins = 0;
+                idle = 0;
                 continue;
             }
         }
-        // 4. Back off (crucial on hosts with fewer physical cores than
-        // workers: spinning would starve the workers that hold work).
-        idle_spins += 1;
-        if idle_spins < 16 {
-            std::thread::yield_now();
-        } else {
-            std::thread::sleep(std::time::Duration::from_micros(50));
+        // 4. Exponential backoff: spin, then yield (crucial on hosts with
+        // fewer physical cores than workers), then sweep-and-park.
+        idle += 1;
+        if idle < SPIN_LIMIT {
+            std::hint::spin_loop();
+            continue;
         }
+        if idle < YIELD_LIMIT {
+            std::thread::yield_now();
+            continue;
+        }
+        // 5. Full steal sweep: the single random probe above may simply
+        // have missed the one victim holding work — never park on a
+        // sampling miss.
+        if n > 1 {
+            let mut found = false;
+            for off in 1..n {
+                let v = (core + off) % n;
+                if let Some(task) = shared.wsqs[v].steal() {
+                    shared.place_task(core, task);
+                    found = true;
+                    break;
+                }
+            }
+            if found {
+                idle = 0;
+                continue;
+            }
+        }
+        // 6. Park. Sleeper half of the handshake: advertise (flag +
+        // counter), fence, then re-scan every work source; sleep only if
+        // all are still empty. Producers fence after publishing and scan
+        // the flags when the counter is non-zero, so either they see us
+        // (their unpark token makes a pre-park `unpark` stick) or the
+        // re-scan below sees their work (module docs).
+        let parker = &*shared.parkers[core];
+        parker.parked.store(true, Ordering::SeqCst);
+        shared.n_parked.fetch_add(1, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+        if shared.done.load(Ordering::Acquire) || shared.has_visible_work(core) {
+            shared.n_parked.fetch_sub(1, Ordering::SeqCst);
+            parker.parked.store(false, Ordering::SeqCst);
+            idle = 0;
+            continue;
+        }
+        std::thread::park_timeout(shared.park_timeout);
+        shared.n_parked.fetch_sub(1, Ordering::SeqCst);
+        parker.parked.store(false, Ordering::SeqCst);
+        // Re-scan everything once, then fall straight back to the
+        // sweep-and-park regime while idleness persists.
+        idle = YIELD_LIMIT - 1;
     }
 }
 
@@ -280,7 +499,8 @@ pub fn run_dag_real(
 /// Apps arriving at `t ≤ 0` are admitted before the workers start (so the
 /// single-app path is byte-identical to the historical bootstrap); later
 /// apps are injected by a submitter thread that sleeps until each wall-
-/// clock arrival and pushes the roots into the live WSQs. Workers cannot
+/// clock arrival and hands the roots to the owning workers through the
+/// per-core admission inboxes (waking any parked owner). Workers cannot
 /// distinguish admitted roots from bootstrap roots, and the run ends only
 /// when every task of every app has committed.
 pub fn run_stream_real(
@@ -309,6 +529,10 @@ pub fn run_stream_real(
         ptt,
         wsqs: (0..topo.n_cores()).map(|_| WsQueue::new()).collect(),
         aqs: (0..topo.n_cores()).map(|_| AssemblyQueue::new()).collect(),
+        inboxes: (0..topo.n_cores()).map(|_| Inbox::new()).collect(),
+        parkers: (0..topo.n_cores()).map(|_| CachePadded::new(Parker::default())).collect(),
+        n_parked: AtomicUsize::new(0),
+        park_timeout: opts.park_timeout,
         pending: dag.nodes.iter().map(|x| AtomicUsize::new(x.preds.len())).collect(),
         critical: dag.nodes.iter().map(|_| AtomicBool::new(false)).collect(),
         // Per-app critical-path seeding shared with the sim engine
@@ -316,9 +540,12 @@ pub fn run_stream_real(
         on_cp: dag.cp_root_seeds(app_of).into_iter().map(AtomicBool::new).collect(),
         completed: AtomicUsize::new(0),
         done: AtomicBool::new(false),
-        trace: Trace::new(),
         t0: Instant::now(),
     };
+    // One private, cache-padded trace shard per worker: commits are plain
+    // `Vec::push`es through a disjoint `&mut` — no locks, no sharing.
+    let mut trace_shards: Vec<CachePadded<Vec<TraceRecord>>> =
+        (0..topo.n_cores()).map(|_| CachePadded::new(Vec::new())).collect();
     // Admit everything due at the start (arrival ≤ 0) before the workers
     // spawn — round-robin root distribution (§3.3's "default policy");
     // initial tasks are non-critical by definition.
@@ -335,7 +562,7 @@ pub fn run_stream_real(
     let mut root_rng = Pcg32::seeded(opts.seed);
     let online = crate::platform::detect::online_cpus();
     std::thread::scope(|s| {
-        for core in 0..topo.n_cores() {
+        for (core, shard) in trace_shards.iter_mut().enumerate() {
             let rng = root_rng.split(core as u64);
             let shared = &shared;
             let pin = opts.pin_threads;
@@ -343,15 +570,17 @@ pub fn run_stream_real(
                 if pin {
                     pin_to_cpu(core % online);
                 }
-                worker_loop(shared, core, rng);
+                worker_loop(shared, core, rng, shard);
             });
         }
         if !future.is_empty() {
             let shared = &shared;
             s.spawn(move || {
-                // The submitter: sleep until each arrival, then inject the
-                // app's roots. Short bounded naps keep the arrival error in
-                // the low milliseconds without burning a core.
+                // The submitter: sleep until each arrival, then hand the
+                // app's roots to the live workers through their admission
+                // inboxes (the deque bottom end is owner-only). Short
+                // bounded naps keep the arrival error in the low
+                // milliseconds without burning a core.
                 for (arrival, roots) in future {
                     loop {
                         let behind = *arrival - shared.now();
@@ -363,8 +592,15 @@ pub fn run_stream_real(
                         ));
                     }
                     for (i, &root) in roots.iter().enumerate() {
-                        shared.wsqs[i % n_cores].push(root);
+                        shared.inboxes[i % n_cores].push(root);
                     }
+                    // Producer half of the park handshake: wake every
+                    // core that received a root.
+                    shared.wake_after_publish(|sh| {
+                        for c in 0..n_cores.min(roots.len()) {
+                            sh.wake_core(c);
+                        }
+                    });
                 }
             });
         }
@@ -372,8 +608,12 @@ pub fn run_stream_real(
 
     assert_eq!(shared.completed.load(Ordering::Acquire), dag.len());
     let makespan = shared.now();
-    let mut records = shared.trace.snapshot();
-    records.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
+    // Merge the per-worker shards and impose the deterministic
+    // `(t_end, task)` total order — the shard layout (which worker
+    // committed what) must never show through in the result.
+    let mut records: Vec<TraceRecord> =
+        trace_shards.into_iter().flat_map(CachePadded::into_inner).collect();
+    sort_by_commit(&mut records);
     RunResult {
         policy: policy.name().to_string(),
         platform: topo.name.clone(),

@@ -1,47 +1,251 @@
-//! Per-core work-stealing queues (§3.1).
+//! Per-core work-stealing queues (§3.1) — a lock-free Chase–Lev deque.
 //!
-//! The WSQ stores *ready* tasks. The owner pushes and pops at the back
+//! The WSQ stores *ready* tasks. The owner pushes and pops at the bottom
 //! (LIFO — freshly woken children run first, preserving locality); thieves
-//! steal from the front (FIFO — the oldest, usually largest-subtree work
-//! migrates). A mutex-guarded deque is sufficient here: the queues hold
-//! task ids (copy types), critical sections are a few instructions, and
-//! correctness/portability beat a lock-free Chase–Lev under this
-//! repository's testing budget (measured in `sched_overhead`).
+//! steal from the top (FIFO — the oldest, usually largest-subtree work
+//! migrates). This is the dynamic circular work-stealing deque of Chase &
+//! Lev (SPAA'05) with the weak-memory ordering discipline of Lê et al.
+//! (PPoPP'13): owner pushes and non-racing pops are fence-free, a single
+//! `SeqCst` fence orders the owner's `bottom` write against thief reads,
+//! and thieves race each other (and the owner, on the last element) with
+//! one CAS on `top`.
+//!
+//! An earlier revision guarded a `VecDeque` with a mutex and claimed the
+//! lock was "sufficient" without a measurement. The measurement now exists:
+//! `repro bench-overhead --compare` pits this deque against that mutex
+//! baseline (kept in [`super::mutex_queues`]) on a steal-heavy workload and
+//! records the ratio in `BENCH_sched_overhead.json`. On the paper's 20-core
+//! Haswell scenario every push/pop/steal used to serialize through one lock
+//! per core — the scheduler itself became the interference the PTT is
+//! supposed to measure.
+//!
+//! ## Contract
+//!
+//! - `push`/`pop` are **owner-only**: at most one thread (the queue's core)
+//!   uses the bottom end at a time. The engines uphold this by
+//!   construction: a worker only touches its own queue, root bootstrap
+//!   happens strictly before the workers spawn, and late admission goes
+//!   through the per-core [`super::inbox::Inbox`] instead of a foreign
+//!   push.
+//! - `steal`/`len`/`is_empty` are safe from any thread, any number of
+//!   thieves.
+//! - `T: Copy` (and padding-free, at most word-sized — asserted in `new`):
+//!   a thief may read a slot and then lose the `top` CAS, discarding the
+//!   value, and a *stale* thief may even read a slot the owner is
+//!   concurrently overwriting. Slots are therefore relaxed `AtomicU64`
+//!   cells (values bit-cast through one word, exactly like Lê et al.'s
+//!   atomic array accesses): the racing read is well-defined, merely
+//!   possibly stale — and a stale value never survives the CAS. With
+//!   `Copy` types the discarded duplicate is inert. (Task ids are `usize`,
+//!   so the engines lose nothing.)
+//!
+//! Grown-out-of buffers are *retired*, not freed: a stale thief may still
+//! read them, and its CAS then fails harmlessly. Retirement takes a lock,
+//! but only inside `grow` — never on the push/pop/steal fast path.
 
-use std::collections::VecDeque;
+use std::fmt;
+use std::marker::PhantomData;
+use std::mem::MaybeUninit;
+use std::ptr;
 use std::sync::Mutex;
+use std::sync::atomic::{AtomicIsize, AtomicPtr, AtomicU64, Ordering, fence};
 
-#[derive(Debug, Default)]
-pub struct WsQueue<T> {
-    q: Mutex<VecDeque<T>>,
+/// Power-of-two circular buffer; indices wrap via the mask. Slots hold `T`
+/// bit-cast into a `u64` word so every access is a (relaxed) atomic —
+/// see the module docs for why the stale-thief race demands this.
+struct Buffer<T> {
+    mask: usize,
+    slots: Box<[AtomicU64]>,
+    _marker: PhantomData<T>,
 }
 
-impl<T> WsQueue<T> {
+impl<T: Copy> Buffer<T> {
+    fn alloc(cap: usize) -> *mut Buffer<T> {
+        debug_assert!(cap.is_power_of_two());
+        assert!(
+            std::mem::size_of::<T>() <= 8,
+            "WsQueue items must fit one machine word (got {} bytes)",
+            std::mem::size_of::<T>()
+        );
+        let slots =
+            (0..cap).map(|_| AtomicU64::new(0)).collect::<Vec<_>>().into_boxed_slice();
+        Box::into_raw(Box::new(Buffer { mask: cap - 1, slots, _marker: PhantomData }))
+    }
+
+    fn cap(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Write slot `i` (owner-only). A stale thief may load this slot
+    /// concurrently — defined behaviour (both sides are atomic), and the
+    /// thief's value dies with its failed `top` CAS.
+    fn put(&self, i: isize, v: T) {
+        let mut bits = 0u64;
+        // Safety: size checked in `alloc`; `v` is a valid T.
+        unsafe {
+            ptr::copy_nonoverlapping(
+                &v as *const T as *const u8,
+                &mut bits as *mut u64 as *mut u8,
+                std::mem::size_of::<T>(),
+            );
+        }
+        self.slots[i as usize & self.mask].store(bits, Ordering::Relaxed);
+    }
+
+    /// Read slot `i`. The value is only *used* by whoever wins the CAS on
+    /// `top` (or by the owner when no race is possible), so slots that
+    /// were written by `put` with a valid T are the only ones ever kept.
+    ///
+    /// Safety: the caller must only keep the value under the conditions
+    /// above (index in the live `top..bottom` window at CAS time).
+    unsafe fn get(&self, i: isize) -> T {
+        let bits = self.slots[i as usize & self.mask].load(Ordering::Relaxed);
+        let mut v = MaybeUninit::<T>::uninit();
+        unsafe {
+            ptr::copy_nonoverlapping(
+                &bits as *const u64 as *const u8,
+                v.as_mut_ptr() as *mut u8,
+                std::mem::size_of::<T>(),
+            );
+            v.assume_init()
+        }
+    }
+}
+
+const INITIAL_CAP: usize = 64;
+
+/// Lock-free work-stealing deque. See the module docs for the ownership
+/// contract (`push`/`pop` owner-only, `steal` from anywhere).
+pub struct WsQueue<T> {
+    /// Thief end; monotonically increasing (no ABA).
+    top: AtomicIsize,
+    /// Owner end.
+    bottom: AtomicIsize,
+    buf: AtomicPtr<Buffer<T>>,
+    /// Buffers replaced by `grow`, kept alive until drop for stale thieves.
+    retired: Mutex<Vec<*mut Buffer<T>>>,
+}
+
+// Safety: the slots only ever transfer `T` by copy between threads, and all
+// cross-thread index handoffs go through the atomics above.
+unsafe impl<T: Copy + Send> Send for WsQueue<T> {}
+unsafe impl<T: Copy + Send> Sync for WsQueue<T> {}
+
+impl<T: Copy> WsQueue<T> {
     pub fn new() -> WsQueue<T> {
-        WsQueue { q: Mutex::new(VecDeque::new()) }
+        WsQueue {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(Buffer::alloc(INITIAL_CAP)),
+            retired: Mutex::new(Vec::new()),
+        }
     }
 
-    /// Owner-side push (back).
+    /// Owner-side push (bottom).
     pub fn push(&self, item: T) {
-        self.q.lock().unwrap().push_back(item);
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = self.buf.load(Ordering::Relaxed);
+        if b - t >= unsafe { &*buf }.cap() as isize {
+            buf = self.grow(t, b, buf);
+        }
+        unsafe { (*buf).put(b, item) };
+        self.bottom.store(b + 1, Ordering::Release);
     }
 
-    /// Owner-side pop (back, LIFO).
+    /// Owner-side pop (bottom, LIFO).
     pub fn pop(&self) -> Option<T> {
-        self.q.lock().unwrap().pop_back()
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let buf = self.buf.load(Ordering::Relaxed);
+        self.bottom.store(b, Ordering::Relaxed);
+        // Order the `bottom` decrement against thief reads of `top`.
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let item = unsafe { (*buf).get(b) };
+            if t == b {
+                // Last element: race the thieves for it.
+                let won = self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                return won.then_some(item);
+            }
+            Some(item)
+        } else {
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
     }
 
-    /// Thief-side steal (front, FIFO).
+    /// Thief-side steal (top, FIFO). Retries internally when it loses a
+    /// race; returns `None` only when the deque was observed empty.
     pub fn steal(&self) -> Option<T> {
-        self.q.lock().unwrap().pop_front()
+        loop {
+            let t = self.top.load(Ordering::Acquire);
+            fence(Ordering::SeqCst);
+            let b = self.bottom.load(Ordering::Acquire);
+            if t >= b {
+                return None;
+            }
+            let buf = self.buf.load(Ordering::Acquire);
+            let item = unsafe { (*buf).get(t) };
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(item);
+            }
+            // Lost to the owner or another thief; re-read and retry.
+        }
     }
 
+    /// Approximate length (exact when the queue is quiescent).
     pub fn len(&self) -> usize {
-        self.q.lock().unwrap().len()
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Double the buffer, copying the live range; the old buffer is
+    /// retired (see the module docs), not freed.
+    fn grow(&self, t: isize, b: isize, old: *mut Buffer<T>) -> *mut Buffer<T> {
+        let new = Buffer::alloc(unsafe { &*old }.cap() * 2);
+        for i in t..b {
+            unsafe { (*new).put(i, (*old).get(i)) };
+        }
+        self.buf.store(new, Ordering::Release);
+        self.retired.lock().unwrap().push(old);
+        new
+    }
+}
+
+impl<T: Copy> Default for WsQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy> fmt::Debug for WsQueue<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WsQueue").field("len", &self.len()).finish()
+    }
+}
+
+impl<T> Drop for WsQueue<T> {
+    fn drop(&mut self) {
+        // `T: Copy` for every constructible instance ⇒ no element
+        // destructors to run; only the buffers need freeing.
+        unsafe { drop(Box::from_raw(self.buf.load(Ordering::Relaxed))) };
+        for p in self.retired.get_mut().unwrap().drain(..) {
+            unsafe { drop(Box::from_raw(p)) };
+        }
     }
 }
 
@@ -93,5 +297,37 @@ mod tests {
         q.push(());
         q.push(());
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let q = WsQueue::new();
+        let n = (super::INITIAL_CAP * 5) as i64;
+        for i in 0..n {
+            q.push(i);
+        }
+        assert_eq!(q.len(), n as usize);
+        // LIFO pops return everything in reverse push order across the
+        // grown buffer.
+        for i in (0..n).rev() {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn interleaved_push_pop_steal_preserves_order_semantics() {
+        let q = WsQueue::new();
+        q.push(10);
+        q.push(11);
+        assert_eq!(q.pop(), Some(11));
+        q.push(12);
+        assert_eq!(q.steal(), Some(10));
+        assert_eq!(q.steal(), Some(12));
+        assert_eq!(q.steal(), None);
+        assert_eq!(q.pop(), None);
+        // Reuse after empty.
+        q.push(13);
+        assert_eq!(q.pop(), Some(13));
     }
 }

@@ -29,8 +29,12 @@
 //! - the DAG must be finalized and non-empty;
 //! - a fresh PTT is created when `ptt` is `None`; passing a warm table
 //!   chains runs (the VGG scalability study relies on this);
-//! - the returned trace has one record per executed TAO, sorted by start
-//!   time, with partitions valid on the given platform's topology.
+//! - the returned trace has one record per executed TAO, with partitions
+//!   valid on the given platform's topology. The sim backend sorts records
+//!   by start time (its single-threaded completion order is already
+//!   deterministic); the real backend imposes the deterministic
+//!   `(t_end, task)` total order so the per-worker trace-shard layout can
+//!   never leak into the result (`metrics::sort_by_commit`).
 //!
 //! Differences that remain by design: the simulated backend interprets the
 //! platform's performance model and episode schedule in virtual time and
@@ -258,7 +262,7 @@ impl ExecutionBackend for RealBackend {
             &plat.topo,
             policy,
             ptt,
-            &RealEngineOpts { pin_threads: opts.pin_threads, seed: opts.seed },
+            &RealEngineOpts { pin_threads: opts.pin_threads, seed: opts.seed, ..Default::default() },
         );
         if !opts.trace {
             result.records.clear();
@@ -281,7 +285,7 @@ impl ExecutionBackend for RealBackend {
             &plat.topo,
             policy,
             ptt,
-            &RealEngineOpts { pin_threads: opts.pin_threads, seed: opts.seed },
+            &RealEngineOpts { pin_threads: opts.pin_threads, seed: opts.seed, ..Default::default() },
         );
         if !opts.trace {
             result.records.clear();

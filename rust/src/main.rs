@@ -16,6 +16,7 @@
 //!   repro vgg16-infer [--mode pipeline|whole|dag] [--hw 64] [--block-len 64]
 //!   repro ptt-dump [--platform tx2] [--tasks 500] ...
 //!   repro scenarios                 # list platform + stream scenarios
+//!   repro bench-overhead [--quick] [--json] [--compare]   # perf harness
 //!
 //! Platforms resolve through the scenario registry
 //! (`platform::scenarios`), execution substrates through the
@@ -46,6 +47,7 @@ fn main() {
             cmd_figures(&cmd, &args)
         }
         "run-dag" => cmd_run_dag(&args),
+        "bench-overhead" => cmd_bench_overhead(&args),
         "stream" => cmd_stream(&args),
         "vgg16" => cmd_vgg16(&args),
         "vgg16-infer" => cmd_vgg16_infer(&args),
@@ -80,6 +82,11 @@ streams:    stream [--scenario stream-pois8|duet-tx2|bg-interferer-haswell20]
                    --parallelism 4 --mean-gap 0.02
 platforms:  run `repro scenarios` for the registered list; hom<N> for
             any homogeneous core count
+
+perf:       bench-overhead [--quick] [--json] [--compare]
+            (lock-free hot-path overhead; --json writes
+             BENCH_sched_overhead.json at the repo root, --compare prints
+             the mutex-vs-lockfree speedup)
 
 vgg:        vgg16 [--threads N] [--repeats R] [--block-len B] [--policy ...]
             vgg16-infer [--mode pipeline|whole|dag|validate] [--hw 64]
@@ -217,6 +224,16 @@ fn cmd_run_dag(args: &Args) -> i32 {
     );
     let busy = result.core_busy_time(plat.topo.n_cores());
     println!("per-core busy [s]: {:?}", busy.iter().map(|b| (b * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    0
+}
+
+fn cmd_bench_overhead(args: &Args) -> i32 {
+    let opts = xitao::bench::OverheadOpts {
+        quick: args.switch("quick"),
+        compare: args.switch("compare"),
+        json: args.switch("json"),
+    };
+    bench::emit_overhead(&opts);
     0
 }
 

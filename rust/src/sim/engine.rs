@@ -101,7 +101,17 @@ struct Sim<'a> {
     wsqs: Vec<VecDeque<TaskId>>,
     aqs: Vec<VecDeque<usize>>,
     insts: Vec<Inst>,
+    /// Running-instance list in start order, with `TOMB` holes left by
+    /// `complete` (O(1) removal via `running_pos`); compacted once half
+    /// the slots are dead. The *live* iteration order is identical to the
+    /// old `retain`-based list: rng draws at completion time depend on
+    /// that order, so bit-for-bit determinism forbids a plain swap-remove
+    /// (it would reorder simultaneous completions).
     running: Vec<usize>,
+    /// `inst idx → position in running` (`TOMB` when not running).
+    running_pos: Vec<usize>,
+    /// Number of live (non-tombstone) entries in `running`.
+    running_live: usize,
     pending: Vec<usize>,
     critical: Vec<bool>,
     /// Critical-path membership, propagated at commit time.
@@ -115,7 +125,12 @@ struct Sim<'a> {
     snapshot_buf: Vec<RunningTask>,
     /// Reusable completion buffer.
     done_buf: Vec<usize>,
+    /// Reusable `acquire_fixpoint` scan-order buffer.
+    order_buf: Vec<usize>,
 }
+
+/// Tombstone marker in `running` / `running_pos`.
+const TOMB: usize = usize::MAX;
 
 impl<'a> Sim<'a> {
     fn n(&self) -> usize {
@@ -159,6 +174,7 @@ impl<'a> Sim<'a> {
             remaining_work: node.class.traits().base_work * node.work_scale,
             rate: 0.0,
         });
+        self.running_pos.push(TOMB); // parallel to insts; set in start_tao
         for c in partition.cores() {
             self.aqs[c].push_back(idx);
         }
@@ -172,7 +188,12 @@ impl<'a> Sim<'a> {
     /// (on the TX2 model) silently gift the fast Denver cluster to the
     /// homogeneous baseline.
     fn acquire_fixpoint(&mut self) {
-        let mut order: Vec<usize> = (0..self.n()).collect();
+        // Reused buffer, reset to the identity each call: the shuffle must
+        // see exactly the input the old allocating version saw (bit-for-bit
+        // rng parity) — only the per-call allocation is gone.
+        let mut order = std::mem::take(&mut self.order_buf);
+        order.clear();
+        order.extend(0..self.n());
         loop {
             let mut progress = false;
             self.rng.shuffle(&mut order);
@@ -220,6 +241,7 @@ impl<'a> Sim<'a> {
                 break;
             }
         }
+        self.order_buf = order;
     }
 
     fn start_tao(&mut self, idx: usize) {
@@ -229,17 +251,25 @@ impl<'a> Sim<'a> {
         for c in inst.partition.cores() {
             self.cores[c] = CoreState::Running(idx);
         }
+        self.running_pos[idx] = self.running.len();
         self.running.push(idx);
+        self.running_live += 1;
     }
 
     /// Recompute rates of all running TAOs against current contention.
     fn rerate(&mut self) {
         self.snapshot_buf.clear();
-        self.snapshot_buf.extend(self.running.iter().map(|&i| RunningTask {
-            class: self.dag.nodes[self.insts[i].task].class,
-            partition: self.insts[i].partition,
-        }));
+        let (dag, insts) = (self.dag, &self.insts);
+        self.snapshot_buf.extend(
+            self.running.iter().copied().filter(|&i| i != TOMB).map(|i| RunningTask {
+                class: dag.nodes[insts[i].task].class,
+                partition: insts[i].partition,
+            }),
+        );
         for &i in &self.running {
+            if i == TOMB {
+                continue;
+            }
             let class = self.dag.nodes[self.insts[i].task].class;
             let r = self.plat.rate(class, self.insts[i].partition, &self.snapshot_buf, self.t);
             assert!(r > 0.0, "rate must be positive (class {class:?})");
@@ -253,7 +283,7 @@ impl<'a> Sim<'a> {
     /// admitted roots must be placed at exactly their arrival time).
     fn advance(&mut self, next_arrival: Option<f64>) {
         assert!(
-            !self.running.is_empty(),
+            self.running_live > 0,
             "no running tasks but {} of {} incomplete — scheduler deadlock",
             self.dag.len() - self.completed,
             self.dag.len()
@@ -261,6 +291,7 @@ impl<'a> Sim<'a> {
         let dt_complete = self
             .running
             .iter()
+            .filter(|&&i| i != TOMB)
             .map(|&i| self.insts[i].remaining_work / self.insts[i].rate)
             .fold(f64::INFINITY, f64::min);
         let mut dt = dt_complete;
@@ -277,21 +308,47 @@ impl<'a> Sim<'a> {
         }
         self.t += dt;
         for &i in &self.running {
+            if i == TOMB {
+                continue;
+            }
             let inst = &mut self.insts[i];
             inst.remaining_work -= inst.rate * dt;
         }
         // Complete everything that reached zero (tolerance for fp drift).
         let mut done = std::mem::take(&mut self.done_buf);
         done.clear();
-        done.extend(self.running.iter().copied().filter(|&i| self.insts[i].remaining_work <= 1e-12));
+        done.extend(
+            self.running
+                .iter()
+                .copied()
+                .filter(|&i| i != TOMB && self.insts[i].remaining_work <= 1e-12),
+        );
         for &idx in &done {
             self.complete(idx);
         }
         self.done_buf = done;
     }
 
+    /// O(1) removal from `running`: tombstone the slot found through the
+    /// position map; survivors keep their relative order (see the field
+    /// docs — determinism depends on it), and compaction amortises the
+    /// holes away.
+    fn unrun(&mut self, idx: usize) {
+        let pos = self.running_pos[idx];
+        debug_assert_eq!(self.running[pos], idx);
+        self.running[pos] = TOMB;
+        self.running_pos[idx] = TOMB;
+        self.running_live -= 1;
+        if self.running.len() >= 64 && self.running_live * 2 <= self.running.len() {
+            self.running.retain(|&i| i != TOMB);
+            for (pos, &i) in self.running.iter().enumerate() {
+                self.running_pos[i] = pos;
+            }
+        }
+    }
+
     fn complete(&mut self, idx: usize) {
-        self.running.retain(|&i| i != idx);
+        self.unrun(idx);
         let (task, partition, critical, t_start) = {
             let inst = &self.insts[idx];
             (inst.task, inst.partition, inst.critical, inst.t_start)
@@ -403,6 +460,8 @@ pub fn run_stream_sim(
         aqs: (0..n).map(|_| VecDeque::new()).collect(),
         insts: Vec::with_capacity(dag.len()),
         running: Vec::new(),
+        running_pos: Vec::with_capacity(dag.len()),
+        running_live: 0,
         pending: dag.nodes.iter().map(|x| x.preds.len()).collect(),
         critical: vec![false; dag.len()],
         on_cp: dag.cp_root_seeds(app_of),
@@ -413,6 +472,7 @@ pub fn run_stream_sim(
         samples: Vec::new(),
         snapshot_buf: Vec::with_capacity(n),
         done_buf: Vec::with_capacity(n),
+        order_buf: Vec::with_capacity(n),
     };
     let mut next_adm = 0usize;
     while sim.completed < dag.len() {
@@ -429,7 +489,7 @@ pub fn run_stream_sim(
         if sim.completed == dag.len() {
             break;
         }
-        if sim.running.is_empty() {
+        if sim.running_live == 0 {
             // Everything admitted has drained; jump to the next arrival.
             assert!(
                 next_adm < admissions.len(),

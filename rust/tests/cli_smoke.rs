@@ -54,6 +54,23 @@ fn run_dag_quick_works_on_hom_family_and_real_backend() {
 }
 
 #[test]
+fn bench_overhead_quick_compare_exits_zero() {
+    // No --json: the smoke must not clobber the committed
+    // BENCH_sched_overhead.json (CI's dedicated step regenerates it).
+    let out = repro()
+        .args(["bench-overhead", "--quick", "--compare"])
+        .output()
+        .expect("spawn repro");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("chase-lev"), "{text}");
+    assert!(text.contains("speedup"), "{text}");
+    for scen in ["hom4", "hom20", "biglittle44"] {
+        assert!(text.contains(scen), "missing {scen} in:\n{text}");
+    }
+}
+
+#[test]
 fn run_dag_rejects_unknown_backend_and_platform() {
     let st = repro()
         .args(["run-dag", "--quick", "--backend", "quantum"])

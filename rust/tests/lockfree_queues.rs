@@ -1,0 +1,235 @@
+//! Stress and conformance suite for the lock-free hot-path queues.
+//!
+//! Three families of pins:
+//!
+//! - **Conformance**: driven by a seeded op sequence, the Chase–Lev
+//!   [`WsQueue`] must agree step-for-step with the trivially correct mutex
+//!   reference ([`MutexWsQueue`]) — LIFO owner pops, FIFO thief steals —
+//!   and likewise the MPSC [`AssemblyQueue`] against
+//!   [`MutexAssemblyQueue`] (strict FIFO).
+//! - **Stress**: one owner + several thieves hammer a single deque; every
+//!   pushed item must be consumed exactly once (a lost or duplicated item
+//!   fails the count/set assertions; a lost wake would hang the loop and
+//!   fail by timeout). CI additionally runs this file under
+//!   `cargo test --release` so the atomics are exercised with
+//!   optimizations on.
+//! - **MPSC/inbox stress**: concurrent producers against a single
+//!   consumer preserve per-producer FIFO order and lose nothing.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use xitao::coordinator::aq::AssemblyQueue;
+use xitao::coordinator::inbox::Inbox;
+use xitao::coordinator::mutex_queues::{MutexAssemblyQueue, MutexWsQueue};
+use xitao::coordinator::wsq::WsQueue;
+
+/// Deterministic LCG so the conformance sequences are reproducible.
+struct Lcg(u64);
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+#[test]
+fn wsq_conformance_matches_mutex_reference_single_thread() {
+    // 10k random ops applied to both implementations in lockstep: every
+    // pop/steal must return the identical value (or identical None).
+    let lf: WsQueue<u64> = WsQueue::new();
+    let mx: MutexWsQueue<u64> = MutexWsQueue::new();
+    let mut rng = Lcg(0xC0FFEE);
+    let mut next_val = 0u64;
+    for step in 0..10_000 {
+        match rng.next() % 3 {
+            0 => {
+                lf.push(next_val);
+                mx.push(next_val);
+                next_val += 1;
+            }
+            1 => {
+                assert_eq!(lf.pop(), mx.pop(), "pop diverged at step {step}");
+            }
+            _ => {
+                assert_eq!(lf.steal(), mx.steal(), "steal diverged at step {step}");
+            }
+        }
+        assert_eq!(lf.len(), mx.len(), "len diverged at step {step}");
+    }
+    // Drain and compare the leftovers too.
+    loop {
+        let (a, b) = (lf.pop(), mx.pop());
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn wsq_lifo_pop_fifo_steal_order() {
+    // The explicit ordering contract, stated without the reference impl.
+    let q = WsQueue::new();
+    for i in 0..8 {
+        q.push(i);
+    }
+    assert_eq!(q.steal(), Some(0), "thief takes the oldest");
+    assert_eq!(q.steal(), Some(1));
+    assert_eq!(q.pop(), Some(7), "owner takes the newest");
+    assert_eq!(q.pop(), Some(6));
+    assert_eq!(q.steal(), Some(2));
+    assert_eq!(q.pop(), Some(5));
+    assert_eq!(q.pop(), Some(4));
+    assert_eq!(q.pop(), Some(3));
+    assert_eq!(q.pop(), None);
+    assert_eq!(q.steal(), None);
+}
+
+#[test]
+fn wsq_stress_every_item_seen_exactly_once() {
+    // 1 owner (push + occasional pop) vs N stealers, far past the initial
+    // buffer capacity so `grow` is exercised under fire.
+    const ITEMS: usize = 100_000;
+    let n_thieves = 3;
+    let q: WsQueue<usize> = WsQueue::new();
+    let consumed = AtomicUsize::new(0);
+    let mut all: Vec<usize> = Vec::with_capacity(ITEMS);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_thieves)
+            .map(|_| {
+                let (q, consumed) = (&q, &consumed);
+                s.spawn(move || {
+                    let mut got = Vec::new();
+                    while consumed.load(Ordering::Relaxed) < ITEMS {
+                        if let Some(v) = q.steal() {
+                            got.push(v);
+                            consumed.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        // Owner: push everything, popping a share along the way.
+        let mut popped = Vec::new();
+        for i in 0..ITEMS {
+            q.push(i);
+            if i % 4 == 0 {
+                if let Some(v) = q.pop() {
+                    popped.push(v);
+                    consumed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        while consumed.load(Ordering::Relaxed) < ITEMS {
+            if let Some(v) = q.pop() {
+                popped.push(v);
+                consumed.fetch_add(1, Ordering::Relaxed);
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        all.extend(popped);
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+    });
+    assert_eq!(all.len(), ITEMS, "exactly-once count");
+    all.sort_unstable();
+    for (i, &v) in all.iter().enumerate() {
+        assert_eq!(v, i, "item {i} lost or duplicated");
+    }
+    assert!(q.is_empty());
+    assert_eq!(q.pop(), None);
+    assert_eq!(q.steal(), None);
+}
+
+#[test]
+fn aq_conformance_matches_mutex_reference_single_thread() {
+    let lf: AssemblyQueue<u64> = AssemblyQueue::new();
+    let mx: MutexAssemblyQueue<u64> = MutexAssemblyQueue::new();
+    let mut rng = Lcg(0xBEEF);
+    let mut next_val = 0u64;
+    for step in 0..10_000 {
+        if rng.next() % 2 == 0 {
+            lf.push(next_val);
+            mx.push(next_val);
+            next_val += 1;
+        } else {
+            assert_eq!(lf.pop(), mx.pop(), "pop diverged at step {step}");
+        }
+        assert_eq!(lf.len(), mx.len(), "len diverged at step {step}");
+    }
+}
+
+#[test]
+fn aq_mpsc_stress_per_producer_fifo() {
+    const PRODUCERS: usize = 4;
+    const PER: usize = 25_000;
+    let q: AssemblyQueue<(usize, usize)> = AssemblyQueue::new();
+    std::thread::scope(|s| {
+        for p in 0..PRODUCERS {
+            let q = &q;
+            s.spawn(move || {
+                for i in 0..PER {
+                    q.push((p, i));
+                }
+            });
+        }
+        // Single consumer (this thread): per-producer sequences must
+        // arrive strictly in order, and every item must arrive.
+        let mut next_seq = [0usize; PRODUCERS];
+        let mut got = 0usize;
+        while got < PRODUCERS * PER {
+            if let Some((p, i)) = q.pop() {
+                assert_eq!(i, next_seq[p], "producer {p} FIFO violated");
+                next_seq[p] += 1;
+                got += 1;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    });
+    assert!(q.is_empty());
+    assert_eq!(q.pop(), None);
+}
+
+#[test]
+fn inbox_concurrent_admission_drains_in_order() {
+    const PRODUCERS: usize = 3;
+    const PER: usize = 20_000;
+    let inbox: Inbox<(usize, usize)> = Inbox::new();
+    let mut seen = vec![Vec::new(); PRODUCERS];
+    std::thread::scope(|s| {
+        for p in 0..PRODUCERS {
+            let inbox = &inbox;
+            s.spawn(move || {
+                for i in 0..PER {
+                    inbox.push((p, i));
+                }
+            });
+        }
+        // Consumer drains in batches while producers run.
+        let mut got = 0usize;
+        while got < PRODUCERS * PER {
+            let batch = inbox.take_all();
+            if batch.is_empty() {
+                std::hint::spin_loop();
+                continue;
+            }
+            got += batch.len();
+            for (p, i) in batch {
+                seen[p].push(i);
+            }
+        }
+    });
+    for (p, seq) in seen.iter().enumerate() {
+        assert_eq!(seq.len(), PER, "producer {p} lost items");
+        // take_all returns FIFO push order, so each producer's sequence is
+        // strictly increasing across batches.
+        for w in seq.windows(2) {
+            assert!(w[0] < w[1], "producer {p} order violated: {} !< {}", w[0], w[1]);
+        }
+    }
+}

@@ -228,6 +228,57 @@ fn ptt_interference_regression_critical_leaders_leave_victim_cores() {
 }
 
 #[test]
+fn parked_workers_wake_for_admission_after_idle_gap() {
+    // Park/unpark regression (no lost wakeups): app "tiny" drains almost
+    // immediately, then the whole pool sits parked for ~50 ms with zero
+    // queued work anywhere before the submitter admits "late" through the
+    // per-core inboxes. The park backstop is stretched to one second so a
+    // broken producer-side handshake cannot be rescued by the timeout: if
+    // the submitter's wake were lost, the late app would start ~1 s late
+    // and the latency bound below would fail.
+    use std::time::Duration;
+    use xitao::coordinator::{RealEngineOpts, run_stream_real};
+
+    let stream = WorkloadStream::fixed(
+        vec![
+            AppSpec::new("tiny", DagParams::mix(8, 4.0, 11), 0.0),
+            AppSpec::new("late", DagParams::mix(40, 4.0, 12), 0.05),
+        ],
+        2,
+    );
+    let multi = stream.build();
+    let plat = scenarios::by_name("hom4").unwrap();
+    let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
+    let opts =
+        RealEngineOpts { park_timeout: Duration::from_secs(1), ..Default::default() };
+    let result = run_stream_real(
+        &multi.dag,
+        &multi.app_of,
+        &multi.admissions(),
+        &plat.topo,
+        policy.as_ref(),
+        None,
+        &opts,
+    );
+    assert_eq!(result.records.len(), 48, "both apps must complete");
+    let first_late = result
+        .records
+        .iter()
+        .filter(|r| r.app_id == 1)
+        .map(|r| r.t_start)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        first_late >= 0.05 - 1e-9,
+        "late app started at {first_late} before its 50 ms arrival"
+    );
+    assert!(
+        first_late < 0.05 + 0.35,
+        "admission-to-start latency too high ({first_late}s after t=0): the submitter's \
+         wake was lost and only the 1 s park backstop rescued the pool"
+    );
+}
+
+#[test]
 fn real_backend_admits_late_arrivals_and_accounts_them() {
     // Wall-clock admission: the second app arrives 20 ms in; its first
     // task cannot start before that, and everything still runs once.
