@@ -10,4 +10,4 @@ pub use figures::{
     BenchOpts, ablation_baselines, ablation_energy, ablation_ptt, emit, fig5, fig6, fig7, fig8,
     fig9, fig10, stream_interference,
 };
-pub use overhead::{OverheadOpts, emit_overhead, run_overhead};
+pub use overhead::{OverheadOpts, OverheadRun, emit_overhead, run_overhead};

@@ -17,9 +17,14 @@
 //!
 //! `--json` writes the machine-readable result to
 //! `BENCH_sched_overhead.json` at the repository root; `--compare` prints
-//! the focused mutex-vs-lockfree table. Numbers are host-dependent; the
-//! *shape* under test is "the lock-free path is no slower, and faster
-//! under steal contention".
+//! the focused mutex-vs-lockfree table **and**, when a committed
+//! `BENCH_sched_overhead.json` exists, a current-vs-committed table of the
+//! hot-path throughput metrics — flagging any metric that fell below
+//! [`REGRESSION_FLOOR`] of a `"measured"`, same-`--quick`-scale baseline
+//! (a seed-estimate or different-scale baseline is printed for context
+//! but never flagged), and the CLI exits non-zero when anything is
+//! flagged. Numbers are host-dependent; the *shape* under test is "the
+//! lock-free path is no slower, and faster under steal contention".
 
 use crate::coordinator::aq::AssemblyQueue;
 use crate::coordinator::dag::TaoDag;
@@ -333,6 +338,87 @@ fn get_f64(j: &Json, path: &[&str]) -> Option<f64> {
     cur.as_f64()
 }
 
+/// A current run must reach at least this fraction of a *measured*
+/// committed baseline on every tracked hot-path metric, or `--compare`
+/// flags it. Generous on purpose: CI runners are shared and noisy; the
+/// floor catches "accidentally re-introduced a lock on the fast path"
+/// (integer-factor slowdowns), not single-digit-percent drift.
+pub const REGRESSION_FLOOR: f64 = 0.5;
+
+/// Hot-path throughput metrics compared against the committed baseline:
+/// `(json path, human label)`. Higher is better for all of them.
+const TRACKED: [(&[&str], &str); 5] = [
+    (&["scenarios", "hom4", "tasks_per_sec"], "hom4 tasks/s"),
+    (&["scenarios", "hom20", "tasks_per_sec"], "hom20 tasks/s"),
+    (&["scenarios", "biglittle44", "tasks_per_sec"], "biglittle44 tasks/s"),
+    (&["steal", "lockfree_ops_per_sec"], "steal-heavy ops/s"),
+    (&["sim", "sim_tao_per_sec"], "sim TAO/s"),
+];
+
+/// Outcome of one current-vs-committed baseline comparison.
+pub struct BaselineComparison {
+    /// The rendered metric table (always produced).
+    pub table: Table,
+    /// One line per flagged hot-path regression. Non-empty only when the
+    /// baseline gates (measured provenance AND matching `quick` scale).
+    pub regressions: Vec<String>,
+    /// Informational caveats (non-measured provenance, scale mismatch).
+    pub notes: Vec<String>,
+}
+
+/// Compare a fresh result against the committed baseline JSON. Regressions
+/// are flagged only when the baseline is `provenance: "measured"` *and*
+/// was produced at the same `quick` scale as the current run — a seed
+/// estimate or a full-mode baseline under a quick run is context, not a
+/// gate (the workload sizes differ, so ratios are not comparable).
+pub fn compare_with_committed(current: &Json, baseline: &Json) -> BaselineComparison {
+    let provenance = baseline.get("provenance").and_then(Json::as_str).unwrap_or("unknown");
+    let measured = provenance == "measured";
+    let same_scale = current.get("quick").and_then(Json::as_bool)
+        == baseline.get("quick").and_then(Json::as_bool);
+    let gating = measured && same_scale;
+    let mut table = Table::new(
+        "Current vs committed BENCH_sched_overhead.json (hot-path throughput)",
+        &["metric", "committed", "current", "ratio"],
+    );
+    let mut regressions = Vec::new();
+    for (path, label) in TRACKED {
+        let base = get_f64(baseline, path);
+        let cur = get_f64(current, path);
+        let (Some(base), Some(cur)) = (base, cur) else {
+            table.row(vec![label.into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        };
+        let ratio = cur / base.max(1e-9);
+        table.row(vec![
+            label.into(),
+            format!("{base:.0}"),
+            format!("{cur:.0}"),
+            format!("{ratio:.2}x"),
+        ]);
+        if gating && ratio < REGRESSION_FLOOR {
+            regressions.push(format!(
+                "REGRESSION: {label} at {ratio:.2}x of the committed measured baseline \
+                 ({cur:.0} vs {base:.0}) — below the {REGRESSION_FLOOR} floor"
+            ));
+        }
+    }
+    let mut notes = Vec::new();
+    if !measured {
+        notes.push(format!(
+            "note: committed baseline provenance is '{provenance}' (not 'measured') — \
+             ratios above are context only, no regression gating"
+        ));
+    } else if !same_scale {
+        notes.push(
+            "note: committed baseline was recorded at a different --quick scale — \
+             ratios above are context only, no regression gating"
+                .to_string(),
+        );
+    }
+    BaselineComparison { table, regressions, notes }
+}
+
 /// Render the result as tables (the CLI's human-readable half).
 pub fn render_tables(result: &Json, opts: &OverheadOpts) -> Vec<Table> {
     let mut out = Vec::new();
@@ -422,12 +508,48 @@ pub fn render_tables(result: &Json, opts: &OverheadOpts) -> Vec<Table> {
     out
 }
 
+/// What [`emit_overhead`] produced: the machine-readable result plus the
+/// number of baseline regressions flagged (0 when no committed baseline
+/// gates the run). The CLI turns a non-zero count into a non-zero exit
+/// code so the CI comparison step actually fails on a hot-path collapse.
+pub struct OverheadRun {
+    pub result: Json,
+    pub regressions: usize,
+}
+
 /// CLI entry point: run, print tables, optionally write the JSON file.
-/// Returns the result so callers (tests, benches) can assert on it.
-pub fn emit_overhead(opts: &OverheadOpts) -> Json {
+/// Returns the result (and the flagged-regression count) so callers
+/// (tests, benches, the CLI) can assert on it.
+pub fn emit_overhead(opts: &OverheadOpts) -> OverheadRun {
     let result = run_overhead(opts);
     for t in render_tables(&result, opts) {
         println!("{}", t.render());
+    }
+    let mut regressions = 0usize;
+    if opts.compare {
+        // Compare against the committed record *before* --json overwrites
+        // it, so a CI `--json --compare` run flags regressions vs the
+        // checked-in numbers, not vs itself.
+        let path = bench_json_path();
+        match std::fs::read_to_string(&path)
+            .map_err(|e| e.to_string())
+            .and_then(|s| Json::parse(&s).map_err(|e| e.to_string()))
+        {
+            Ok(baseline) => {
+                let cmp = compare_with_committed(&result, &baseline);
+                println!("{}", cmp.table.render());
+                for n in &cmp.notes {
+                    println!("{n}");
+                }
+                for r in &cmp.regressions {
+                    eprintln!("{r}");
+                }
+                regressions = cmp.regressions.len();
+            }
+            Err(e) => {
+                println!("(no committed baseline to compare against: {e})");
+            }
+        }
     }
     if opts.json {
         let path = bench_json_path();
@@ -436,7 +558,7 @@ pub fn emit_overhead(opts: &OverheadOpts) -> Json {
             Err(e) => eprintln!("[json] write failed ({}): {e}", path.display()),
         }
     }
-    result
+    OverheadRun { result, regressions }
 }
 
 #[cfg(test)]
@@ -473,5 +595,63 @@ mod tests {
         for t in tables {
             assert!(!t.render().is_empty());
         }
+    }
+
+    fn synthetic_result(scale: f64, provenance: &str, quick: bool) -> Json {
+        let scen = |tps: f64| Json::obj(vec![("tasks_per_sec", Json::Num(tps * scale))]);
+        Json::obj(vec![
+            ("provenance", Json::Str(provenance.into())),
+            ("quick", Json::Bool(quick)),
+            (
+                "scenarios",
+                Json::obj(vec![
+                    ("hom4", scen(300_000.0)),
+                    ("hom20", scen(120_000.0)),
+                    ("biglittle44", scen(200_000.0)),
+                ]),
+            ),
+            (
+                "steal",
+                Json::obj(vec![("lockfree_ops_per_sec", Json::Num(18e6 * scale))]),
+            ),
+            ("sim", Json::obj(vec![("sim_tao_per_sec", Json::Num(250_000.0 * scale))])),
+        ])
+    }
+
+    #[test]
+    fn baseline_comparison_flags_only_real_regressions_on_measured_baselines() {
+        let baseline = synthetic_result(1.0, "measured", true);
+        // Healthy run (noise-level wobble): table renders, nothing flagged.
+        let cmp = compare_with_committed(&synthetic_result(0.9, "measured", true), &baseline);
+        assert!(cmp.table.render().contains("hom4"));
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        assert!(cmp.notes.is_empty(), "{:?}", cmp.notes);
+        // Collapsed hot path (below the floor on every metric): flagged.
+        let cmp = compare_with_committed(&synthetic_result(0.3, "measured", true), &baseline);
+        assert_eq!(cmp.regressions.len(), TRACKED.len(), "{:?}", cmp.regressions);
+        assert!(cmp.regressions[0].contains("REGRESSION"));
+    }
+
+    #[test]
+    fn baseline_comparison_never_gates_on_seed_estimates() {
+        // The committed file starts life as a seed estimate (no toolchain
+        // in the authoring container); it must inform, not gate.
+        let baseline = synthetic_result(1.0, "seed-estimate (no local toolchain)", true);
+        let cmp = compare_with_committed(&synthetic_result(0.1, "measured", true), &baseline);
+        assert!(cmp.table.render().contains("sim TAO/s"));
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        assert_eq!(cmp.notes.len(), 1, "{:?}", cmp.notes);
+        assert!(cmp.notes[0].contains("not 'measured'"), "{:?}", cmp.notes);
+    }
+
+    #[test]
+    fn baseline_comparison_never_gates_across_quick_full_scales() {
+        // A full-mode measured baseline under a --quick run (or vice
+        // versa) measures a different workload size — context only.
+        let baseline = synthetic_result(1.0, "measured", false);
+        let cmp = compare_with_committed(&synthetic_result(0.1, "measured", true), &baseline);
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        assert_eq!(cmp.notes.len(), 1, "{:?}", cmp.notes);
+        assert!(cmp.notes[0].contains("different --quick scale"), "{:?}", cmp.notes);
     }
 }

@@ -232,9 +232,10 @@ impl TaoDag {
     /// (§3.3: initial tasks are *placed* as non-critical but still hand
     /// the path to their children). `app_of[task]` maps tasks to
     /// applications; an empty slice treats the whole DAG as one app, in
-    /// which case this is exactly "roots of global max criticality". Both
-    /// engines consume this one implementation, so sim/real criticality
-    /// parity cannot drift.
+    /// which case this is exactly "roots of global max criticality". The
+    /// shared scheduling core ([`crate::coordinator::core::SchedCore`])
+    /// seeds its critical-path state from this one implementation, so
+    /// sim/real criticality parity cannot drift.
     pub fn cp_root_seeds(&self, app_of: &[usize]) -> Vec<bool> {
         assert!(self.finalized, "finalize() first");
         let n_apps = app_of.iter().copied().max().map_or(1, |m| m + 1);
@@ -253,9 +254,10 @@ impl TaoDag {
     }
 
     /// Validate a workload-stream admission schedule against this DAG —
-    /// the shared precondition check of both stream engines
-    /// (`sim::run_stream_sim`, `coordinator::run_stream_real`), kept in
-    /// one place so the backends cannot drift. Panics on: an unfinalized
+    /// the precondition check of the shared
+    /// [`crate::coordinator::core::AdmissionSource`] both stream engines
+    /// admit through, kept in one place so the backends cannot drift.
+    /// Panics on: an unfinalized
     /// or empty DAG, an empty schedule, an `app_of` map of the wrong
     /// length, unsorted or negative arrival times, and an admission set
     /// that does not cover every root exactly once — a miss would

@@ -1,9 +1,12 @@
 //! Execution traces and derived metrics.
 //!
-//! Both engines record one [`TraceRecord`] per executed TAO. The figure
-//! harnesses derive everything from these records: throughput (Fig 5/6),
-//! speedups (Fig 7), per-core scheduling timelines (Fig 8), scaling
-//! (Fig 9) and width histograms (Fig 10).
+//! Both engines record one [`TraceRecord`] per executed TAO — constructed
+//! in one place, the shared scheduling core's commit
+//! ([`crate::coordinator::core::SchedCore::commit`]); the substrates only
+//! decide where the record is stored. The figure harnesses derive
+//! everything from these records: throughput (Fig 5/6), speedups (Fig 7),
+//! per-core scheduling timelines (Fig 8), scaling (Fig 9) and width
+//! histograms (Fig 10).
 //!
 //! Multi-application runs (see [`crate::workload`]) tag every record with
 //! the submitting application's `app_id`; the per-app accounting —

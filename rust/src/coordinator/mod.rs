@@ -3,6 +3,9 @@
 //!
 //! - [`tao`] — Task Assembly Objects (internally parallel tasks).
 //! - [`dag`] — TAO-DAGs, bottom-up criticality, average parallelism (§2).
+//! - [`core`] — the backend-agnostic task-lifecycle core ([`SchedCore`]):
+//!   placement, §3.3 commit-and-wake-up, admission — shared verbatim by
+//!   the real-thread engine and [`crate::sim`].
 //! - [`ptt`] — the Performance Trace Table (§3.2).
 //! - [`wsq`] / [`aq`] — lock-free per-core work-stealing (Chase–Lev) and
 //!   assembly (MPSC) queues (§3.1); [`inbox`] — lock-free admission
@@ -13,11 +16,12 @@
 //! - [`metrics`] — traces and derived run metrics.
 //!
 //! The simulated engine that drives the paper-figure reproductions lives in
-//! [`crate::sim`] and reuses `dag`, `ptt`, `scheduler` and `metrics`
-//! verbatim — the scheduling logic under test is the same code in both
-//! engines.
+//! [`crate::sim`] and reuses `core`, `dag`, `ptt`, `scheduler` and
+//! `metrics` verbatim — the scheduling logic under test is the same code
+//! objects in both engines, so sim/real conformance holds by construction.
 
 pub mod aq;
+pub mod core;
 pub mod dag;
 pub mod inbox;
 pub mod metrics;
@@ -28,6 +32,7 @@ pub mod tao;
 pub mod worker;
 pub mod wsq;
 
+pub use self::core::{AdmissionSource, CommitInfo, CommitOutcome, Placement, SchedCore};
 pub use dag::{TaoDag, TaoNode, TaskId};
 pub use metrics::{
     AppMetrics, RunResult, Trace, TraceRecord, jain_fairness_index, per_app_metrics,
@@ -35,8 +40,8 @@ pub use metrics::{
 };
 pub use ptt::Ptt;
 pub use scheduler::{
-    CatsLike, DheftLike, EnergyMinimizing, HomogeneousWs, PerformanceBased, PlaceCtx, Policy,
-    policy_by_name,
+    CatsLike, DheftLike, EnergyMinimizing, HomogeneousWs, POLICIES, PerformanceBased, PlaceCtx,
+    Policy, PolicyInfo, policy_by_name, policy_names,
 };
 pub use tao::{NopPayload, TaoPayload, payload_fn};
 pub use worker::{RealEngineOpts, run_dag_real, run_stream_real};

@@ -259,16 +259,69 @@ impl Policy for EnergyMinimizing {
     }
 }
 
-/// Construct a policy by CLI/config name.
+/// One row of the policy registry: canonical name (what [`Policy::name`]
+/// reports), the CLI aliases accepted by [`policy_by_name`], and a
+/// one-line description (`repro policies` prints this table).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub description: &'static str,
+}
+
+/// The policy registry, in presentation order. [`policy_by_name`] resolves
+/// through this same table, so the CLI listing and the accepted names
+/// cannot drift.
+pub const POLICIES: [PolicyInfo; 5] = [
+    PolicyInfo {
+        name: "performance-based",
+        aliases: &["performance", "ptt"],
+        description: "the paper's §3.3 scheduler: critical tasks search the PTT globally, \
+                      non-critical tasks pick the best local width",
+    },
+    PolicyInfo {
+        name: "homogeneous-ws",
+        aliases: &["homogeneous", "ws"],
+        description: "XiTAO's default random work stealing at width 1, PTT-unaware (§5 baseline)",
+    },
+    PolicyInfo {
+        name: "cats-like",
+        aliases: &["cats"],
+        description: "criticality-aware baseline (§6): critical tasks to the learned-fastest \
+                      cluster, width 1",
+    },
+    PolicyInfo {
+        name: "dheft-like",
+        aliases: &["dheft"],
+        description: "dynamic-HEFT baseline (§6): earliest-finish-time placement from learned \
+                      width-1 latencies",
+    },
+    PolicyInfo {
+        name: "energy-minimizing",
+        aliases: &["energy"],
+        description: "§3.3's alternative objective: minimise exec_time × partition power \
+                      (joules per task)",
+    },
+];
+
+/// Canonical policy names, in registry order.
+pub fn policy_names() -> [&'static str; POLICIES.len()] {
+    POLICIES.map(|p| p.name)
+}
+
+/// Construct a policy by CLI/config name (canonical or alias — see
+/// [`POLICIES`]).
 pub fn policy_by_name(name: &str, n_cores: usize) -> Option<Box<dyn Policy>> {
-    match name {
-        "performance" | "performance-based" | "ptt" => Some(Box::new(PerformanceBased)),
-        "homogeneous" | "ws" | "homogeneous-ws" => Some(Box::new(HomogeneousWs)),
-        "cats" | "cats-like" => Some(Box::new(CatsLike::default())),
-        "dheft" | "dheft-like" => Some(Box::new(DheftLike::new(n_cores))),
-        "energy" | "energy-minimizing" => Some(Box::new(EnergyMinimizing)),
-        _ => None,
-    }
+    let canonical =
+        POLICIES.iter().find(|p| p.name == name || p.aliases.contains(&name))?.name;
+    Some(match canonical {
+        "performance-based" => Box::new(PerformanceBased),
+        "homogeneous-ws" => Box::new(HomogeneousWs),
+        "cats-like" => Box::new(CatsLike::default()),
+        "dheft-like" => Box::new(DheftLike::new(n_cores)),
+        "energy-minimizing" => Box::new(EnergyMinimizing),
+        _ => unreachable!("registry row without a constructor"),
+    })
 }
 
 #[cfg(test)]
@@ -438,5 +491,20 @@ mod tests {
             assert_eq!(policy_by_name(n, 4).unwrap().name(), expect);
         }
         assert!(policy_by_name("nope", 4).is_none());
+    }
+
+    #[test]
+    fn registry_names_and_aliases_all_construct_their_policy() {
+        // The registry is the single source of truth: every canonical name
+        // and every alias must resolve, and the constructed policy must
+        // report the row's canonical name.
+        for info in POLICIES {
+            assert_eq!(policy_by_name(info.name, 4).unwrap().name(), info.name);
+            for alias in info.aliases {
+                assert_eq!(policy_by_name(alias, 4).unwrap().name(), info.name);
+            }
+            assert!(!info.description.is_empty());
+        }
+        assert_eq!(policy_names().len(), POLICIES.len());
     }
 }

@@ -12,13 +12,19 @@
 //! TAO instances are executed cooperatively: each member core claims a rank
 //! on arrival at its AQ head and runs `payload.execute(rank, width)`
 //! immediately (XiTAO's asynchronous entry/exit — no entry barrier). The
-//! last rank to finish performs *commit-and-wake-up*: it decrements each
-//! child's dependency count and pushes newly ready children onto its own
-//! WSQ, tagging them critical per the paper's rule (criticality difference
-//! of exactly 1 along any incoming edge).
+//! last rank to finish performs *commit-and-wake-up* via the shared
+//! scheduling core ([`SchedCore::commit`]): dependency release, the §3.3
+//! criticality re-derivation and the trace record are the *same code
+//! objects* the sim engine runs; this substrate only decides that released
+//! children land on the committer's own WSQ. Likewise every placement
+//! decision is [`SchedCore::place`] — this file owns no PlaceCtx-building
+//! or wake-up logic of its own, only the lock-free queues, the parking
+//! protocol, and wall-clock execution.
 //!
 //! The **leader core** times its own share and is the only writer of the
-//! PTT entry — the paper's design for avoiding cache-line migration.
+//! PTT entry ([`SchedCore::record_leader_share`], invoked from the
+//! leader's thread) — the paper's design for avoiding cache-line
+//! migration.
 //!
 //! On the single-core build host this engine validates *functionality*
 //! (the perf figures come from `crate::sim`); on a real multicore it is a
@@ -68,11 +74,12 @@
 //! arrival 0).
 
 use super::aq::AssemblyQueue;
+use super::core::{AdmissionSource, CommitInfo, SchedCore};
 use super::dag::{TaoDag, TaskId};
 use super::inbox::Inbox;
 use super::metrics::{RunResult, TraceRecord, sort_by_commit};
 use super::ptt::Ptt;
-use super::scheduler::{PlaceCtx, Policy};
+use super::scheduler::Policy;
 use super::wsq::WsQueue;
 use crate::platform::Topology;
 use crate::util::Pcg32;
@@ -105,6 +112,14 @@ impl Default for RealEngineOpts {
     }
 }
 
+/// Explicit "leader timing not yet published" sentinel for
+/// [`TaoInstance::leader_start`]/[`TaoInstance::leader_end`]. `u64::MAX`
+/// is the bit pattern of an f64 NaN, which no `Instant`-derived timestamp
+/// can produce — unlike the old `0` sentinel, which was indistinguishable
+/// from a legitimate `0.0`-second leader timestamp and could silently
+/// misattribute a zero-duration leader share to the committer.
+const LEADER_UNSET: u64 = u64::MAX;
+
 /// A TAO that has been placed on a partition and sits in member AQs.
 struct TaoInstance {
     task: TaskId,
@@ -114,7 +129,8 @@ struct TaoInstance {
     arrivals: AtomicUsize,
     /// Completion countdown; the rank that drops it to zero commits.
     remaining: AtomicUsize,
-    /// Wall-clock start/end of the leader's share, f64 bits (0 = unset).
+    /// Wall-clock start/end of the leader's share, f64 bits
+    /// ([`LEADER_UNSET`] until the leader publishes them).
     leader_start: AtomicU64,
     leader_end: AtomicU64,
 }
@@ -131,12 +147,11 @@ struct Parker {
 }
 
 struct Shared<'a> {
-    dag: &'a TaoDag,
-    /// Task → application id; empty slice means "everything is app 0".
-    app_of: &'a [usize],
-    topo: &'a Topology,
-    policy: &'a dyn Policy,
-    ptt: &'a Ptt,
+    /// The shared task-lifecycle core (placement, commit-and-wake-up,
+    /// criticality, per-app attribution) — identical code to the sim
+    /// engine's. All its state is atomic; workers drive it through
+    /// `&self` with no locks.
+    core: SchedCore<'a>,
     wsqs: Vec<WsQueue<TaskId>>,
     aqs: Vec<AssemblyQueue<Arc<TaoInstance>>>,
     /// Per-core admission inboxes: late roots may not be pushed into a
@@ -152,13 +167,8 @@ struct Shared<'a> {
     n_parked: AtomicUsize,
     /// Park backstop period (see [`RealEngineOpts::park_timeout`]).
     park_timeout: Duration,
-    /// Per-task remaining-dependency counters.
-    pending: Vec<AtomicUsize>,
-    /// Criticality flags resolved at wake time.
-    critical: Vec<AtomicBool>,
-    /// Critical-path membership, propagated at commit time.
-    on_cp: Vec<AtomicBool>,
-    completed: AtomicUsize,
+    /// Run-termination flag, observed by the worker loops. Set by the
+    /// worker whose commit the core reports as the run's last.
     done: AtomicBool,
     t0: Instant,
 }
@@ -168,8 +178,8 @@ impl<'a> Shared<'a> {
         self.t0.elapsed().as_secs_f64()
     }
 
-    fn app_of(&self, task: TaskId) -> usize {
-        self.app_of.get(task).copied().unwrap_or(0)
+    fn n_cores(&self) -> usize {
+        self.core.topo().n_cores()
     }
 
     /// Producer half of the sleep/wake handshake: call *after* the work
@@ -210,7 +220,7 @@ impl<'a> Shared<'a> {
     /// Unpark up to `k` parked workers other than `origin` — stealable
     /// work appeared on `origin`'s deque and any thief will do.
     fn wake_thieves(&self, origin: usize, k: usize) {
-        let n = self.topo.n_cores();
+        let n = self.n_cores();
         let mut woken = 0usize;
         for off in 1..n {
             if woken >= k {
@@ -255,29 +265,19 @@ impl<'a> Shared<'a> {
         });
     }
 
-    /// Place one ready task from the perspective of `core`.
+    /// Place one ready task from the perspective of `core`: the decision
+    /// (PlaceCtx + policy dispatch) is the shared core's; this substrate
+    /// only materialises the instance and routes it into the member AQs.
     fn place_task(&self, core: usize, task: TaskId) {
-        let node = &self.dag.nodes[task];
-        let critical = self.critical[task].load(Ordering::Relaxed);
-        let ctx = PlaceCtx {
-            core,
-            type_id: node.type_id,
-            critical,
-            app_id: self.app_of(task),
-            ptt: self.ptt,
-            topo: self.topo,
-            now: self.now(),
-        };
-        let partition = self.policy.place(&ctx);
-        debug_assert!(self.topo.is_valid_partition(partition), "{partition:?}");
+        let placed = self.core.place(core, task, self.now());
         let inst = Arc::new(TaoInstance {
             task,
-            partition,
-            critical,
+            partition: placed.partition,
+            critical: placed.critical,
             arrivals: AtomicUsize::new(0),
-            remaining: AtomicUsize::new(partition.width),
-            leader_start: AtomicU64::new(0),
-            leader_end: AtomicU64::new(0),
+            remaining: AtomicUsize::new(placed.partition.width),
+            leader_start: AtomicU64::new(LEADER_UNSET),
+            leader_end: AtomicU64::new(LEADER_UNSET),
         });
         self.insert_into_aqs(core, inst);
     }
@@ -287,7 +287,7 @@ impl<'a> Shared<'a> {
     fn execute_share(&self, core: usize, inst: &Arc<TaoInstance>, sink: &mut Vec<TraceRecord>) {
         let rank = inst.arrivals.fetch_add(1, Ordering::AcqRel);
         debug_assert!(rank < inst.partition.width);
-        let node = &self.dag.nodes[inst.task];
+        let node = &self.core.dag().nodes[inst.task];
         let is_leader = core == inst.partition.leader;
         let t_start = self.now();
         if let Some(p) = &node.payload {
@@ -297,18 +297,20 @@ impl<'a> Shared<'a> {
         if is_leader {
             inst.leader_start.store(t_start.to_bits(), Ordering::Relaxed);
             inst.leader_end.store(t_end.to_bits(), Ordering::Release);
-            if self.policy.uses_ptt() {
-                // §3.2: the leader records its own execution time; the 4:1
-                // moving average absorbs rank-imbalance skew.
-                self.ptt.update(node.type_id, inst.partition.leader, inst.partition.width, t_end - t_start);
-            }
+            // §3.2: the leader records its own execution time from its own
+            // thread (no PTT cache-line migration); the 4:1 moving average
+            // absorbs rank-imbalance skew.
+            self.core.record_leader_share(inst.task, inst.partition, t_end - t_start);
         }
         if inst.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             self.commit_and_wake(core, inst, t_end, sink);
         }
     }
 
-    /// Commit-and-wake-up (§3.3): record the trace, resolve children.
+    /// Commit-and-wake-up (§3.3), delegated to [`SchedCore::commit`]: the
+    /// substrate derives the leader-share timings, routes released
+    /// children onto the committer's own deque, and stores the record in
+    /// this worker's private shard (a plain lock-free `Vec::push`).
     fn commit_and_wake(
         &self,
         core: usize,
@@ -316,49 +318,33 @@ impl<'a> Shared<'a> {
         t_end: f64,
         sink: &mut Vec<TraceRecord>,
     ) {
-        let node = &self.dag.nodes[inst.task];
         let le_bits = inst.leader_end.load(Ordering::Acquire);
-        let (ls, le) = if le_bits == 0 {
+        let (ls, le) = if le_bits == LEADER_UNSET {
             (t_end, t_end) // leader still mid-share; attribute to committer
         } else {
             (f64::from_bits(inst.leader_start.load(Ordering::Relaxed)), f64::from_bits(le_bits))
         };
-        // Lock-free commit: a plain push into this worker's own shard.
-        sink.push(TraceRecord {
+        let info = CommitInfo {
             task: inst.task,
-            app_id: self.app_of(inst.task),
-            class: node.class,
-            type_id: node.type_id,
-            critical: inst.critical,
             partition: inst.partition,
+            critical: inst.critical,
             t_start: ls,
             t_end: le.max(t_end),
-        });
-        self.policy.on_complete(inst.partition.leader, inst.partition.width, le - ls, t_end);
-        // Critical-path hand-off (see sim/engine.rs for the rationale):
-        // a task on the path marks its criticality-minus-one child before
-        // any wake-up can read the flag.
-        if self.on_cp[inst.task].load(Ordering::Acquire) {
-            if let Some(c) = node.cp_child {
-                self.on_cp[c].store(true, Ordering::Release);
-            }
-        }
+            exec: le - ls,
+            now: t_end,
+        };
         let mut woken = 0usize;
-        for &child in &node.succs {
-            if self.pending[child].fetch_sub(1, Ordering::AcqRel) == 1 {
-                let crit = self.on_cp[child].load(Ordering::Acquire);
-                self.critical[child].store(crit, Ordering::Relaxed);
-                self.wsqs[core].push(child);
-                woken += 1;
-            }
-        }
+        let out = self.core.commit(&info, |child| {
+            self.wsqs[core].push(child);
+            woken += 1;
+        });
+        sink.push(out.record);
         if woken > 0 {
             // New stealable work on our deque: offer it to as many parked
             // thieves as there are new tasks.
             self.wake_after_publish(|s| s.wake_thieves(core, woken));
         }
-        let done = self.completed.fetch_add(1, Ordering::AcqRel) + 1;
-        if done == self.dag.len() {
+        if out.done {
             self.done.store(true, Ordering::Release);
             // Unconditional: every worker must observe the end of the run.
             self.wake_all();
@@ -373,7 +359,7 @@ const YIELD_LIMIT: u32 = 32;
 
 fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32, sink: &mut Vec<TraceRecord>) {
     let _ = shared.parkers[core].thread.set(std::thread::current());
-    let n = shared.topo.n_cores();
+    let n = shared.n_cores();
     let mut idle = 0u32;
     while !shared.done.load(Ordering::Acquire) {
         // 0. Admission inbox: late roots handed over by the submitter are
@@ -512,7 +498,7 @@ pub fn run_stream_real(
     ptt: Option<&Ptt>,
     opts: &RealEngineOpts,
 ) -> RunResult {
-    dag.validate_admissions(app_of, admissions);
+    let source = AdmissionSource::new(dag, app_of, admissions);
     let fresh;
     let ptt = match ptt {
         Some(p) => p,
@@ -522,23 +508,13 @@ pub fn run_stream_real(
         }
     };
     let shared = Shared {
-        dag,
-        app_of,
-        topo,
-        policy,
-        ptt,
+        core: SchedCore::new(dag, app_of, topo, policy, ptt),
         wsqs: (0..topo.n_cores()).map(|_| WsQueue::new()).collect(),
         aqs: (0..topo.n_cores()).map(|_| AssemblyQueue::new()).collect(),
         inboxes: (0..topo.n_cores()).map(|_| Inbox::new()).collect(),
         parkers: (0..topo.n_cores()).map(|_| CachePadded::new(Parker::default())).collect(),
         n_parked: AtomicUsize::new(0),
         park_timeout: opts.park_timeout,
-        pending: dag.nodes.iter().map(|x| AtomicUsize::new(x.preds.len())).collect(),
-        critical: dag.nodes.iter().map(|_| AtomicBool::new(false)).collect(),
-        // Per-app critical-path seeding shared with the sim engine
-        // (TaoDag::cp_root_seeds), so parity cannot drift.
-        on_cp: dag.cp_root_seeds(app_of).into_iter().map(AtomicBool::new).collect(),
-        completed: AtomicUsize::new(0),
         done: AtomicBool::new(false),
         t0: Instant::now(),
     };
@@ -547,17 +523,11 @@ pub fn run_stream_real(
     let mut trace_shards: Vec<CachePadded<Vec<TraceRecord>>> =
         (0..topo.n_cores()).map(|_| CachePadded::new(Vec::new())).collect();
     // Admit everything due at the start (arrival ≤ 0) before the workers
-    // spawn — round-robin root distribution (§3.3's "default policy");
-    // initial tasks are non-critical by definition.
+    // spawn, through the same shared source the sim engine consumes —
+    // round-robin root distribution (§3.3's "default policy"); initial
+    // tasks are non-critical by definition.
     let n_cores = topo.n_cores();
-    let mut first_future = 0usize;
-    while first_future < admissions.len() && admissions[first_future].0 <= 0.0 {
-        for (i, &root) in admissions[first_future].1.iter().enumerate() {
-            shared.wsqs[i % n_cores].push(root);
-        }
-        first_future += 1;
-    }
-    let future = &admissions[first_future..];
+    source.admit_due(0.0, n_cores, |lane, root| shared.wsqs[lane].push(root));
 
     let mut root_rng = Pcg32::seeded(opts.seed);
     let online = crate::platform::detect::online_cpus();
@@ -573,17 +543,17 @@ pub fn run_stream_real(
                 worker_loop(shared, core, rng, shard);
             });
         }
-        if !future.is_empty() {
-            let shared = &shared;
+        if !source.is_exhausted() {
+            let (shared, source) = (&shared, &source);
             s.spawn(move || {
                 // The submitter: sleep until each arrival, then hand the
                 // app's roots to the live workers through their admission
                 // inboxes (the deque bottom end is owner-only). Short
                 // bounded naps keep the arrival error in the low
                 // milliseconds without burning a core.
-                for (arrival, roots) in future {
+                while let Some(arrival) = source.next_arrival() {
                     loop {
-                        let behind = *arrival - shared.now();
+                        let behind = arrival - shared.now();
                         if behind <= 0.0 {
                             break;
                         }
@@ -591,13 +561,14 @@ pub fn run_stream_real(
                             behind.min(0.002),
                         ));
                     }
-                    for (i, &root) in roots.iter().enumerate() {
-                        shared.inboxes[i % n_cores].push(root);
-                    }
+                    let pushed = source.admit_due(shared.now(), n_cores, |lane, root| {
+                        shared.inboxes[lane].push(root);
+                    });
                     // Producer half of the park handshake: wake every
-                    // core that received a root.
+                    // core that received a root (each due batch fills
+                    // lanes from 0, so the prefix covers them all).
                     shared.wake_after_publish(|sh| {
-                        for c in 0..n_cores.min(roots.len()) {
+                        for c in 0..n_cores.min(pushed) {
                             sh.wake_core(c);
                         }
                     });
@@ -606,7 +577,7 @@ pub fn run_stream_real(
         }
     });
 
-    assert_eq!(shared.completed.load(Ordering::Acquire), dag.len());
+    assert!(shared.core.is_done(), "worker pool exited with incomplete tasks");
     let makespan = shared.now();
     // Merge the per-worker shards and impose the deterministic
     // `(t_end, task)` total order — the shard layout (which worker
@@ -626,36 +597,10 @@ pub fn run_stream_real(
 mod tests {
     use super::*;
     use std::sync::Mutex;
-    use crate::coordinator::dag::paper_figure1_dag;
     use crate::coordinator::scheduler::{HomogeneousWs, PerformanceBased};
     use crate::coordinator::tao::payload_fn;
+    use crate::dag_gen::fixtures::{counting_dag, paper_figure1_dag};
     use crate::platform::KernelClass;
-    use std::sync::atomic::AtomicUsize as Counter;
-
-    fn counting_dag(n: usize, chain: bool) -> (TaoDag, Arc<Counter>) {
-        let hits = Arc::new(Counter::new(0));
-        let mut d = TaoDag::new();
-        let ids: Vec<_> = (0..n)
-            .map(|_| {
-                let h = hits.clone();
-                d.add_task_payload(
-                    KernelClass::MatMul,
-                    0,
-                    1.0,
-                    Some(payload_fn(KernelClass::MatMul, move |_r, _w| {
-                        h.fetch_add(1, Ordering::SeqCst);
-                    })),
-                )
-            })
-            .collect();
-        if chain {
-            for w in ids.windows(2) {
-                d.add_edge(w[0], w[1]);
-            }
-        }
-        d.finalize().unwrap();
-        (d, hits)
-    }
 
     #[test]
     fn executes_every_task_exactly_width_times() {
@@ -739,15 +684,11 @@ mod tests {
         }
         // Mark critical? Roots are non-critical; local search from any core
         // in the single cluster can still pick width 4.
-        let res = run_dag_real(&dag_with(d), &topo, &PerformanceBased, Some(&ptt), &Default::default());
+        let res = run_dag_real(&d, &topo, &PerformanceBased, Some(&ptt), &Default::default());
         assert_eq!(res.records[0].partition.width, 4);
         let mut seen = ranks_seen.lock().unwrap().clone();
         seen.sort();
         assert_eq!(seen, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
-    }
-
-    fn dag_with(d: TaoDag) -> TaoDag {
-        d
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Deterministic DAG fixtures shared by the test tree.
+//!
+//! Before this module, `independent_dag`, chain builders and payload
+//! counters were re-implemented in `sim/engine.rs`, `coordinator/worker.rs`
+//! and the integration tests — near-identical helpers that drifted
+//! independently. Tests (unit, integration and property) should build
+//! structural fixtures from here; the randomized workloads stay with
+//! [`crate::dag_gen::generate`]. The Figure-1 example DAG remains in
+//! [`crate::coordinator::dag`] next to the criticality logic it
+//! illustrates and is re-exported here for convenience.
+//!
+//! Everything here is deliberately tiny and deterministic — no rng, no
+//! sizes that would slow a `--quick` CI run.
+
+pub use crate::coordinator::dag::paper_figure1_dag;
+use crate::coordinator::dag::TaoDag;
+use crate::coordinator::tao::payload_fn;
+use crate::platform::KernelClass;
+use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// `n` independent tasks of one kernel class (simulation-only payloads):
+/// maximal parallelism, critical-path length 1.
+pub fn independent_dag(n: usize, class: KernelClass) -> TaoDag {
+    let mut d = TaoDag::new();
+    for _ in 0..n {
+        d.add_task(class, class.index(), 1.0);
+    }
+    d.finalize().unwrap();
+    d
+}
+
+/// A strict chain of `n` tasks of one kernel class (simulation-only
+/// payloads): parallelism 1, task ids `0..n` in execution order.
+pub fn chain_dag(n: usize, class: KernelClass) -> TaoDag {
+    let mut d = TaoDag::new();
+    let ids: Vec<_> = (0..n).map(|_| d.add_task(class, class.index(), 1.0)).collect();
+    for w in ids.windows(2) {
+        d.add_edge(w[0], w[1]);
+    }
+    d.finalize().unwrap();
+    d
+}
+
+/// `n` MatMul tasks whose payload increments a shared counter once per
+/// *executed share* (rank); `chain` links them into a dependency chain.
+/// The counter proves exactly-once execution per rank on the real engine.
+pub fn counting_dag(n: usize, chain: bool) -> (TaoDag, Arc<AtomicUsize>) {
+    let hits = Arc::new(AtomicUsize::new(0));
+    let mut d = TaoDag::new();
+    let ids: Vec<_> = (0..n)
+        .map(|_| {
+            let h = hits.clone();
+            d.add_task_payload(
+                KernelClass::MatMul,
+                0,
+                1.0,
+                Some(payload_fn(KernelClass::MatMul, move |_r, _w| {
+                    h.fetch_add(1, Ordering::SeqCst);
+                })),
+            )
+        })
+        .collect();
+    if chain {
+        for w in ids.windows(2) {
+            d.add_edge(w[0], w[1]);
+        }
+    }
+    d.finalize().unwrap();
+    (d, hits)
+}
+
+/// A chain of `n` MatMul tasks counting *rank-0* executions (one per TAO
+/// regardless of the width the scheduler chooses). With `assert_order`,
+/// each payload additionally asserts it observes the counter at exactly
+/// its chain position — proving dependency ordering under real threads.
+pub fn rank0_counting_chain(n: usize, assert_order: bool) -> (TaoDag, Arc<AtomicUsize>) {
+    let hits = Arc::new(AtomicUsize::new(0));
+    let mut d = TaoDag::new();
+    let mut prev: Option<usize> = None;
+    for i in 0..n {
+        let h = hits.clone();
+        let id = d.add_task_payload(
+            KernelClass::MatMul,
+            0,
+            1.0,
+            Some(payload_fn(KernelClass::MatMul, move |rank, _w| {
+                if rank == 0 {
+                    let v = h.fetch_add(1, Ordering::SeqCst);
+                    if assert_order {
+                        assert_eq!(v, i, "chain order violated");
+                    }
+                }
+            })),
+        );
+        if let Some(p) = prev {
+            d.add_edge(p, id);
+        }
+        prev = Some(id);
+    }
+    d.finalize().unwrap();
+    (d, hits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_are_as_documented() {
+        let ind = independent_dag(8, KernelClass::Sort);
+        assert_eq!(ind.len(), 8);
+        assert_eq!(ind.critical_path_len(), 1);
+        assert_eq!(ind.roots().len(), 8);
+
+        let chain = chain_dag(5, KernelClass::MatMul);
+        assert_eq!(chain.len(), 5);
+        assert_eq!(chain.critical_path_len(), 5);
+        assert_eq!(chain.roots(), vec![0]);
+
+        let (counting, hits) = counting_dag(3, true);
+        assert_eq!(counting.critical_path_len(), 3);
+        counting.nodes[0].payload.as_ref().unwrap().execute(0, 1);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+
+        let (rank0, hits) = rank0_counting_chain(4, false);
+        assert_eq!(rank0.critical_path_len(), 4);
+        rank0.nodes[0].payload.as_ref().unwrap().execute(1, 2); // non-zero rank
+        assert_eq!(hits.load(Ordering::SeqCst), 0, "only rank 0 counts");
+    }
+}

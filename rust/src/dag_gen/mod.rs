@@ -20,6 +20,11 @@
 //!
 //! A fixed seed recreates the identical DAG, which is how the paper
 //! compares schedulers on the same workload.
+//!
+//! Hand-built deterministic test DAGs (independent sets, chains, payload
+//! counters) live in [`fixtures`], shared by the whole test tree.
+
+pub mod fixtures;
 
 use crate::coordinator::dag::TaoDag;
 use crate::coordinator::tao::TaoPayload;

@@ -16,6 +16,7 @@
 //!   repro vgg16-infer [--mode pipeline|whole|dag] [--hw 64] [--block-len 64]
 //!   repro ptt-dump [--platform tx2] [--tasks 500] ...
 //!   repro scenarios                 # list platform + stream scenarios
+//!   repro policies                  # list scheduling policies + aliases
 //!   repro bench-overhead [--quick] [--json] [--compare]   # perf harness
 //!
 //! Platforms resolve through the scenario registry
@@ -53,6 +54,7 @@ fn main() {
         "vgg16-infer" => cmd_vgg16_infer(&args),
         "ptt-dump" => cmd_ptt_dump(&args),
         "scenarios" => cmd_scenarios(),
+        "policies" => cmd_policies(),
         "help" | "--help" => {
             print!("{}", HELP);
             0
@@ -82,6 +84,8 @@ streams:    stream [--scenario stream-pois8|duet-tx2|bg-interferer-haswell20]
                    --parallelism 4 --mean-gap 0.02
 platforms:  run `repro scenarios` for the registered list; hom<N> for
             any homogeneous core count
+policies:   run `repro policies` for the registered list with aliases
+            and descriptions
 
 perf:       bench-overhead [--quick] [--json] [--compare]
             (lock-free hot-path overhead; --json writes
@@ -92,6 +96,14 @@ vgg:        vgg16 [--threads N] [--repeats R] [--block-len B] [--policy ...]
             vgg16-infer [--mode pipeline|whole|dag|validate] [--hw 64]
 diag:       ptt-dump [--platform ...] [--tasks N]
 ";
+
+fn cmd_policies() -> i32 {
+    println!("registered scheduling policies (run-dag/stream --policy <name-or-alias>):");
+    for p in xitao::coordinator::scheduler::POLICIES {
+        println!("  {:18} aliases: {:22} — {}", p.name, p.aliases.join(", "), p.description);
+    }
+    0
+}
 
 fn cmd_scenarios() -> i32 {
     println!("registered platform scenarios (plus dynamic hom<N>):");
@@ -233,7 +245,15 @@ fn cmd_bench_overhead(args: &Args) -> i32 {
         compare: args.switch("compare"),
         json: args.switch("json"),
     };
-    bench::emit_overhead(&opts);
+    let run = bench::emit_overhead(&opts);
+    if run.regressions > 0 {
+        eprintln!(
+            "bench-overhead: {} hot-path metric(s) regressed below the committed measured \
+             baseline (details above)",
+            run.regressions
+        );
+        return 1;
+    }
     0
 }
 

@@ -1,13 +1,21 @@
 //! Discrete-event execution of the XiTAO coordinator on modelled platforms.
 //!
-//! This engine runs the *same* scheduling code as the real-thread engine —
-//! the DAG/criticality logic, the PTT, and the [`Policy`] implementations
-//! are shared — but executes TAOs in **virtual time** against the
-//! [`Platform`] performance model. That is what makes the paper's
-//! experiments reproducible on this single-core build host: heterogeneity,
-//! cache/bandwidth contention and interference episodes are modelled, while
-//! every scheduling decision is made by the code under test, driven only by
-//! what the PTT observed (see DESIGN.md §Substitutions).
+//! This engine is a thin *substrate* over the shared scheduling core
+//! ([`SchedCore`]): the entire task lifecycle — [`PlaceCtx`] construction
+//! and policy dispatch, the §3.3 commit-and-wake-up with the criticality
+//! hand-off, the leader-side PTT update, per-app attribution — is the
+//! *same code objects* as in the real-thread engine
+//! (`coordinator::worker`). What this file owns is only the
+//! discrete-event machinery: **virtual time** advancement against the
+//! [`Platform`] performance model, the analytic rating of running TAOs,
+//! and the modelled timer jitter fed to the PTT. That is what makes the
+//! paper's experiments reproducible on this single-core build host:
+//! heterogeneity, cache/bandwidth contention and interference episodes
+//! are modelled, while every scheduling decision is made by the shared
+//! core, driven only by what the PTT observed (see DESIGN.md
+//! §Substitutions).
+//!
+//! [`PlaceCtx`]: crate::coordinator::scheduler::PlaceCtx
 //!
 //! ## Execution model
 //!
@@ -35,10 +43,11 @@
 //! (one app, arrival 0), so the single-DAG path and the stream path are
 //! the same code — the parity the multi-app tests pin bit-for-bit.
 
+use crate::coordinator::core::{AdmissionSource, CommitInfo, SchedCore};
 use crate::coordinator::dag::{TaoDag, TaskId};
 use crate::coordinator::metrics::{RunResult, TraceRecord};
 use crate::coordinator::ptt::Ptt;
-use crate::coordinator::scheduler::{PlaceCtx, Policy};
+use crate::coordinator::scheduler::Policy;
 use crate::platform::{Partition, Platform, RunningTask};
 use crate::util::Pcg32;
 use std::collections::VecDeque;
@@ -90,12 +99,11 @@ struct Inst {
 
 struct Sim<'a> {
     dag: &'a TaoDag,
-    /// Task → application id; empty slice means "everything is app 0"
-    /// (the single-DAG path pays no lookup cost for the app dimension).
-    app_of: &'a [usize],
     plat: &'a Platform,
-    policy: &'a dyn Policy,
-    ptt: &'a Ptt,
+    /// The shared task-lifecycle core (placement, commit-and-wake-up,
+    /// criticality, per-app attribution) — identical code to the real
+    /// engine's; this struct keeps only the DES substrate around it.
+    core: SchedCore<'a>,
     t: f64,
     cores: Vec<CoreState>,
     wsqs: Vec<VecDeque<TaskId>>,
@@ -112,11 +120,6 @@ struct Sim<'a> {
     running_pos: Vec<usize>,
     /// Number of live (non-tombstone) entries in `running`.
     running_live: usize,
-    pending: Vec<usize>,
-    critical: Vec<bool>,
-    /// Critical-path membership, propagated at commit time.
-    on_cp: Vec<bool>,
-    completed: usize,
     records: Vec<TraceRecord>,
     rng: Pcg32,
     probe: Option<(usize, usize, usize)>,
@@ -139,35 +142,23 @@ impl<'a> Sim<'a> {
 
     fn sample_probe(&mut self) {
         if let Some((ty, c, w)) = self.probe {
-            self.samples.push((self.t, self.ptt.read(ty, c, w)));
+            self.samples.push((self.t, self.core.ptt().read(ty, c, w)));
         }
     }
 
-    fn app_of(&self, task: TaskId) -> usize {
-        self.app_of.get(task).copied().unwrap_or(0)
-    }
-
-    /// Place `task` from the perspective of `core`, inserting the new
-    /// instance into every member AQ (atomic w.r.t. other placements —
-    /// we're single-threaded here, so trivially so).
+    /// Place `task` from the perspective of `core`: the decision (PlaceCtx
+    /// + policy dispatch) is the shared core's; this substrate only
+    /// materialises the instance and inserts it into every member AQ
+    /// (atomic w.r.t. other placements — we're single-threaded here, so
+    /// trivially so).
     fn place(&mut self, core: usize, task: TaskId) {
+        let placed = self.core.place(core, task, self.t);
         let node = &self.dag.nodes[task];
-        let ctx = PlaceCtx {
-            core,
-            type_id: node.type_id,
-            critical: self.critical[task],
-            app_id: self.app_of(task),
-            ptt: self.ptt,
-            topo: &self.plat.topo,
-            now: self.t,
-        };
-        let partition = self.policy.place(&ctx);
-        debug_assert!(self.plat.topo.is_valid_partition(partition), "{partition:?}");
         let idx = self.insts.len();
         self.insts.push(Inst {
             task,
-            partition,
-            critical: self.critical[task],
+            partition: placed.partition,
+            critical: placed.critical,
             arrived: 0,
             started: false,
             t_start: 0.0,
@@ -175,7 +166,7 @@ impl<'a> Sim<'a> {
             rate: 0.0,
         });
         self.running_pos.push(TOMB); // parallel to insts; set in start_tao
-        for c in partition.cores() {
+        for c in placed.partition.cores() {
             self.aqs[c].push_back(idx);
         }
     }
@@ -285,7 +276,7 @@ impl<'a> Sim<'a> {
         assert!(
             self.running_live > 0,
             "no running tasks but {} of {} incomplete — scheduler deadlock",
-            self.dag.len() - self.completed,
+            self.dag.len() - self.core.completed(),
             self.dag.len()
         );
         let dt_complete = self
@@ -353,51 +344,37 @@ impl<'a> Sim<'a> {
             let inst = &self.insts[idx];
             (inst.task, inst.partition, inst.critical, inst.t_start)
         };
-        let node = &self.dag.nodes[task];
         let exec = self.t - t_start;
-        if self.policy.uses_ptt() {
+        if self.core.uses_ptt() {
             // Real timers jitter by a few percent (system activity, timer
             // resolution). Modelling it matters: without noise, PTT values
             // of identical partitions stay exactly tied and the argmin
             // degenerates to one partition instead of wandering among
-            // near-equals like the real scheduler.
+            // near-equals like the real scheduler. The rng draw is gated
+            // on `uses_ptt` so the draw order matches the historical
+            // engine bit for bit.
             let noise = 1.0 + 0.05 * (self.rng.gen_f64() * 2.0 - 1.0);
-            self.ptt.update(node.type_id, partition.leader, partition.width, exec * noise);
+            self.core.record_leader_share(task, partition, exec * noise);
         }
-        self.policy.on_complete(partition.leader, partition.width, exec, self.t);
-        let app_id = self.app_of(task);
-        self.records.push(TraceRecord {
+        // Commit-and-wake-up is the shared core's; this substrate only
+        // decides *where* released children go — onto the leader's WSQ,
+        // the single-threaded stand-in for "the committing core's deque".
+        let info = CommitInfo {
             task,
-            app_id,
-            class: node.class,
-            type_id: node.type_id,
-            critical,
             partition,
+            critical,
             t_start,
             t_end: self.t,
-        });
+            exec,
+            now: self.t,
+        };
+        let (core, wsqs) = (&self.core, &mut self.wsqs);
+        let out = core.commit(&info, |child| wsqs[partition.leader].push_back(child));
+        self.records.push(out.record);
         for c in partition.cores() {
             debug_assert_eq!(self.cores[c], CoreState::Running(idx));
             self.cores[c] = CoreState::Idle;
         }
-        // Commit-and-wake-up. Critical-path propagation: a task on the
-        // path hands it to exactly one child — the one whose criticality
-        // is one less (§2: critical tasks are the tasks *of the critical
-        // path*; the diff-by-1 check alone floods layered DAGs where every
-        // edge decrements criticality).
-        if self.on_cp[task] {
-            if let Some(c) = node.cp_child {
-                self.on_cp[c] = true;
-            }
-        }
-        for &child in &node.succs {
-            self.pending[child] -= 1;
-            if self.pending[child] == 0 {
-                self.critical[child] = self.on_cp[child];
-                self.wsqs[partition.leader].push_back(child);
-            }
-        }
-        self.completed += 1;
         self.sample_probe();
     }
 }
@@ -438,7 +415,7 @@ pub fn run_stream_sim(
     ptt: Option<&Ptt>,
     opts: &SimOpts,
 ) -> SimRun {
-    dag.validate_admissions(app_of, admissions);
+    let source = AdmissionSource::new(dag, app_of, admissions);
     let fresh;
     let ptt = match ptt {
         Some(p) => p,
@@ -450,10 +427,8 @@ pub fn run_stream_sim(
     let n = plat.topo.n_cores();
     let mut sim = Sim {
         dag,
-        app_of,
         plat,
-        policy,
-        ptt,
+        core: SchedCore::new(dag, app_of, &plat.topo, policy, ptt),
         t: 0.0,
         cores: vec![CoreState::Idle; n],
         wsqs: (0..n).map(|_| VecDeque::new()).collect(),
@@ -462,10 +437,6 @@ pub fn run_stream_sim(
         running: Vec::new(),
         running_pos: Vec::with_capacity(dag.len()),
         running_live: 0,
-        pending: dag.nodes.iter().map(|x| x.preds.len()).collect(),
-        critical: vec![false; dag.len()],
-        on_cp: dag.cp_root_seeds(app_of),
-        completed: 0,
         records: Vec::with_capacity(dag.len()),
         rng: Pcg32::seeded(opts.seed),
         probe: opts.ptt_probe,
@@ -474,34 +445,32 @@ pub fn run_stream_sim(
         done_buf: Vec::with_capacity(n),
         order_buf: Vec::with_capacity(n),
     };
-    let mut next_adm = 0usize;
-    while sim.completed < dag.len() {
-        // Admit every application whose arrival time has been reached.
-        // Roots are distributed round-robin per app; initial tasks are
-        // non-critical (§3.3).
-        while next_adm < admissions.len() && admissions[next_adm].0 <= sim.t {
-            for (i, &root) in admissions[next_adm].1.iter().enumerate() {
-                sim.wsqs[i % n].push_back(root);
-            }
-            next_adm += 1;
+    while !sim.core.is_done() {
+        // Admit every application whose arrival time has been reached,
+        // through the shared source (round-robin per batch; initial tasks
+        // are non-critical, §3.3).
+        {
+            let wsqs = &mut sim.wsqs;
+            source.admit_due(sim.t, n, |lane, root| wsqs[lane].push_back(root));
         }
         sim.acquire_fixpoint();
-        if sim.completed == dag.len() {
+        if sim.core.is_done() {
             break;
         }
         if sim.running_live == 0 {
             // Everything admitted has drained; jump to the next arrival.
-            assert!(
-                next_adm < admissions.len(),
-                "no running tasks, no pending arrivals, but {} of {} incomplete — scheduler deadlock",
-                dag.len() - sim.completed,
-                dag.len()
-            );
-            sim.t = admissions[next_adm].0;
+            let next = source.next_arrival().unwrap_or_else(|| {
+                panic!(
+                    "no running tasks, no pending arrivals, but {} of {} incomplete — scheduler deadlock",
+                    dag.len() - sim.core.completed(),
+                    dag.len()
+                )
+            });
+            sim.t = next;
             continue;
         }
         sim.rerate();
-        sim.advance(admissions.get(next_adm).map(|a| a.0));
+        sim.advance(source.next_arrival());
     }
     let mut records = sim.records;
     records.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
@@ -519,18 +488,9 @@ pub fn run_stream_sim(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::dag::paper_figure1_dag;
     use crate::coordinator::scheduler::{HomogeneousWs, PerformanceBased};
+    use crate::dag_gen::fixtures::{chain_dag, independent_dag, paper_figure1_dag};
     use crate::platform::KernelClass;
-
-    fn independent_dag(n: usize, class: KernelClass) -> TaoDag {
-        let mut d = TaoDag::new();
-        for _ in 0..n {
-            d.add_task(class, class.index(), 1.0);
-        }
-        d.finalize().unwrap();
-        d
-    }
 
     #[test]
     fn completes_all_tasks() {
@@ -554,12 +514,7 @@ mod tests {
     #[test]
     fn chain_is_sequential_in_virtual_time() {
         let plat = Platform::homogeneous(4);
-        let mut d = TaoDag::new();
-        let ids: Vec<_> = (0..5).map(|_| d.add_task(KernelClass::MatMul, 0, 1.0)).collect();
-        for w in ids.windows(2) {
-            d.add_edge(w[0], w[1]);
-        }
-        d.finalize().unwrap();
+        let d = chain_dag(5, KernelClass::MatMul);
         let run = run_dag_sim(&d, &plat, &HomogeneousWs, None, &Default::default());
         let recs = &run.result.records;
         for w in recs.windows(2) {
@@ -615,12 +570,7 @@ mod tests {
         // The paper's headline: at low parallelism the PTT scheduler routes
         // critical work to fast cores and picks useful widths.
         let plat = Platform::tx2();
-        let mut d = TaoDag::new();
-        let ids: Vec<_> = (0..200).map(|_| d.add_task(KernelClass::MatMul, 0, 1.0)).collect();
-        for w in ids.windows(2) {
-            d.add_edge(w[0], w[1]); // parallelism = 1
-        }
-        d.finalize().unwrap();
+        let d = chain_dag(200, KernelClass::MatMul); // parallelism = 1
         let perf = run_dag_sim(&d, &plat, &PerformanceBased, None, &Default::default());
         let homo = run_dag_sim(&d, &plat, &HomogeneousWs, None, &Default::default());
         let speedup = homo.result.makespan / perf.result.makespan;

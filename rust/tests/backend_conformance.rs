@@ -99,34 +99,11 @@ fn run_triple_covers_the_full_registry_product() {
 fn payload_execution_counts_match_across_backends() {
     // With real payloads attached, the real backend must still execute each
     // TAO exactly once (counted via rank-0 hits), matching the sim trace.
-    use std::sync::Arc;
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    use xitao::coordinator::payload_fn;
-    use xitao::coordinator::TaoDag;
-    use xitao::platform::KernelClass;
+    use std::sync::atomic::Ordering;
+    use xitao::dag_gen::fixtures::rank0_counting_chain;
 
     let plat = scenarios::by_name("biglittle44").unwrap();
-    let hits = Arc::new(AtomicUsize::new(0));
-    let mut dag = TaoDag::new();
-    let mut prev: Option<usize> = None;
-    for _ in 0..30 {
-        let h = hits.clone();
-        let id = dag.add_task_payload(
-            KernelClass::MatMul,
-            0,
-            1.0,
-            Some(payload_fn(KernelClass::MatMul, move |rank, _w| {
-                if rank == 0 {
-                    h.fetch_add(1, Ordering::SeqCst);
-                }
-            })),
-        );
-        if let Some(p) = prev {
-            dag.add_edge(p, id);
-        }
-        prev = Some(id);
-    }
-    dag.finalize().unwrap();
+    let (dag, hits) = rank0_counting_chain(30, false);
 
     let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
     let sim = backend_by_name("sim").unwrap();

@@ -28,6 +28,22 @@ fn scenarios_command_lists_the_registry() {
 }
 
 #[test]
+fn policies_command_lists_the_registry_with_aliases() {
+    let out = repro().arg("policies").output().expect("spawn repro");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for info in xitao::coordinator::scheduler::POLICIES {
+        assert!(text.contains(info.name), "missing {} in:\n{text}", info.name);
+        // Assert on the rendered aliases column, not individual aliases —
+        // every alias is a substring of some canonical name already in
+        // the output, so a bare contains() would pass even if the aliases
+        // column were dropped entirely.
+        let alias_col = format!("aliases: {}", info.aliases.join(", "));
+        assert!(text.contains(&alias_col), "missing '{alias_col}' in:\n{text}");
+    }
+}
+
+#[test]
 fn run_dag_quick_exits_zero_on_every_registered_scenario() {
     for name in xitao::platform::scenarios::names() {
         let out = repro()

@@ -4,8 +4,7 @@
 //! `integration_vgg.rs` for that) and pin the paper's qualitative claims
 //! so regressions in any module surface as claim failures.
 
-use std::sync::Arc;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use xitao::bench::{BenchOpts, figures};
 use xitao::coordinator::scheduler::policy_by_name;
 use xitao::coordinator::{PerformanceBased, RealEngineOpts, run_dag_real};
@@ -30,30 +29,10 @@ fn real_engine_runs_generated_dag_with_kernel_payloads() {
 
 #[test]
 fn real_engine_executes_payload_work_correctly_under_scheduling() {
-    // A DAG of counting payloads with enforced dependencies: the counter
-    // sequence proves ordering AND exactly-once-per-rank execution.
-    let counter = Arc::new(AtomicUsize::new(0));
-    let mut dag = xitao::coordinator::TaoDag::new();
-    let mut prev: Option<usize> = None;
-    for i in 0..20 {
-        let c = counter.clone();
-        let id = dag.add_task_payload(
-            KernelClass::MatMul,
-            0,
-            1.0,
-            Some(xitao::coordinator::payload_fn(KernelClass::MatMul, move |rank, _w| {
-                if rank == 0 {
-                    let v = c.fetch_add(1, Ordering::SeqCst);
-                    assert_eq!(v, i, "chain order violated");
-                }
-            })),
-        );
-        if let Some(p) = prev {
-            dag.add_edge(p, id);
-        }
-        prev = Some(id);
-    }
-    dag.finalize().unwrap();
+    // A chain of counting payloads with enforced dependencies: the counter
+    // sequence proves ordering AND exactly-once-per-rank execution (the
+    // fixture's payloads assert they run at their chain position).
+    let (dag, counter) = xitao::dag_gen::fixtures::rank0_counting_chain(20, true);
     let topo = xitao::platform::Topology::homogeneous(2);
     run_dag_real(&dag, &topo, &PerformanceBased, None, &RealEngineOpts::default());
     assert_eq!(counter.load(Ordering::SeqCst), 20);

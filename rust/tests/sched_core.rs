@@ -1,0 +1,202 @@
+//! The shared scheduling core (`coordinator::core`): the lifecycle pins
+//! that used to be enforceable only indirectly, through whole-engine
+//! conformance runs. With one `SchedCore` under both engines these become
+//! direct unit pins:
+//!
+//! - the §3.3 wake rule (a woken child is critical iff it continues its
+//!   application's critical path — the criticality-gap-of-1 hand-off, not
+//!   the naive "any gap-1 edge" rule that floods layered DAGs);
+//! - exactly-once dependency release under concurrent committers;
+//! - stream-admission conformance: the sim-style and real-style drivers
+//!   of one `AdmissionSource` admit identical `(lane, root)` sets.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use xitao::coordinator::dag::paper_figure1_dag;
+use xitao::coordinator::ptt::Ptt;
+use xitao::coordinator::scheduler::{HomogeneousWs, PerformanceBased};
+use xitao::coordinator::{AdmissionSource, CommitInfo, SchedCore, TaoDag};
+use xitao::dag_gen::DagParams;
+use xitao::platform::{KernelClass, Partition, Topology};
+use xitao::workload::{AppSpec, WorkloadStream};
+
+fn commit_info(task: usize, t: f64) -> CommitInfo {
+    CommitInfo {
+        task,
+        partition: Partition { leader: 0, width: 1 },
+        critical: false,
+        t_start: t - 1.0,
+        t_end: t,
+        exec: 1.0,
+        now: t,
+    }
+}
+
+/// Drain a single-threaded run of `core` over `dag`, returning the
+/// criticality flag each task was woken with (roots: placement flag).
+fn run_to_completion(dag: &TaoDag, core: &SchedCore<'_>) -> Vec<bool> {
+    let mut critical_at_wake = vec![false; dag.len()];
+    let mut ready: Vec<usize> = dag.roots();
+    let mut t = 1.0;
+    while let Some(task) = ready.pop() {
+        let placed = core.place(0, task, t - 1.0);
+        critical_at_wake[task] = placed.critical;
+        let mut info = commit_info(task, t);
+        info.partition = placed.partition;
+        info.critical = placed.critical;
+        core.commit(&info, |child| ready.push(child));
+        t += 1.0;
+    }
+    assert!(core.is_done(), "drain must complete the DAG");
+    critical_at_wake
+}
+
+#[test]
+fn wake_rule_marks_exactly_the_critical_path() {
+    // Figure 1: A→C→G→D→F is the critical path (length 5). The §3.3 rule
+    // must wake C, G, D, F critical; roots A, B are non-critical by
+    // definition, and E (woken over a gap-2 edge) stays non-critical.
+    let (dag, [a, b, c, e, g, dd, f]) = paper_figure1_dag();
+    let topo = Topology::homogeneous(2);
+    let ptt = Ptt::new(dag.n_types(), &topo);
+    let core = SchedCore::new(&dag, &[], &topo, &PerformanceBased, &ptt);
+    let crit = run_to_completion(&dag, &core);
+    for (task, expect) in
+        [(a, false), (b, false), (c, true), (e, false), (g, true), (dd, true), (f, true)]
+    {
+        assert_eq!(crit[task], expect, "task {task}");
+    }
+}
+
+#[test]
+fn wake_rule_hands_off_to_one_child_not_every_gap1_edge() {
+    // A layered diamond: P feeds X and Y, both of criticality exactly
+    // one less than P. The naive "critical iff gap == 1" reading would
+    // mark both; the hand-off rule marks only the designated cp_child
+    // (the first gap-1 successor), keeping the critical set a *path*.
+    let mut d = TaoDag::new();
+    let p = d.add_task(KernelClass::MatMul, 0, 1.0);
+    let x = d.add_task(KernelClass::MatMul, 0, 1.0);
+    let y = d.add_task(KernelClass::MatMul, 0, 1.0);
+    let z = d.add_task(KernelClass::MatMul, 0, 1.0);
+    d.add_edge(p, x);
+    d.add_edge(p, y);
+    d.add_edge(x, z);
+    d.add_edge(y, z);
+    d.finalize().unwrap();
+    assert_eq!(d.nodes[x].criticality, d.nodes[y].criticality, "symmetric diamond");
+    assert_eq!(d.nodes[p].cp_child, Some(x));
+
+    let topo = Topology::homogeneous(2);
+    let ptt = Ptt::new(d.n_types(), &topo);
+    let core = SchedCore::new(&d, &[], &topo, &PerformanceBased, &ptt);
+    let crit = run_to_completion(&d, &core);
+    assert!(!crit[p], "roots are placed non-critical");
+    assert!(crit[x], "the designated cp_child continues the path");
+    assert!(!crit[y], "the sibling gap-1 edge must NOT be tagged");
+    assert!(crit[z], "the path continues through x into z");
+}
+
+#[test]
+fn dependency_release_is_exactly_once_under_concurrent_committers() {
+    // `fan` parents all feed one child; `fan` threads commit one parent
+    // each, racing on the child's dependency counter. Across every round
+    // the child must be woken exactly once, by exactly one committer.
+    let fan = 8;
+    let topo = Topology::homogeneous(4);
+    for round in 0..50 {
+        let mut d = TaoDag::new();
+        let parents: Vec<_> =
+            (0..fan).map(|_| d.add_task(KernelClass::MatMul, 0, 1.0)).collect();
+        let child = d.add_task(KernelClass::Sort, 1, 1.0);
+        for &p in &parents {
+            d.add_edge(p, child);
+        }
+        d.finalize().unwrap();
+        let ptt = Ptt::new(d.n_types(), &topo);
+        let core = SchedCore::new(&d, &[], &topo, &HomogeneousWs, &ptt);
+        let wakes = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for &p in &parents {
+                let (core, wakes) = (&core, &wakes);
+                s.spawn(move || {
+                    core.commit(&commit_info(p, 1.0), |woken| {
+                        assert_eq!(woken, child);
+                        wakes.fetch_add(1, Ordering::SeqCst);
+                    });
+                });
+            }
+        });
+        assert_eq!(
+            wakes.load(Ordering::SeqCst),
+            1,
+            "round {round}: child released a wrong number of times"
+        );
+        assert_eq!(core.completed(), fan, "round {round}: every parent committed");
+    }
+}
+
+#[test]
+fn commit_attributes_records_to_the_owning_app() {
+    // Two single-task apps: records carry the app ids of the task→app map.
+    let mut d = TaoDag::new();
+    let t0 = d.add_task(KernelClass::MatMul, 0, 1.0);
+    let t1 = d.add_task(KernelClass::Sort, 1, 1.0);
+    d.finalize().unwrap();
+    let app_of = vec![0usize, 1usize];
+    let topo = Topology::homogeneous(2);
+    let ptt = Ptt::new(d.n_types(), &topo);
+    let core = SchedCore::new(&d, &app_of, &topo, &HomogeneousWs, &ptt);
+    assert_eq!(core.commit(&commit_info(t0, 1.0), |_| {}).record.app_id, 0);
+    assert_eq!(core.commit(&commit_info(t1, 2.0), |_| {}).record.app_id, 1);
+}
+
+#[test]
+fn both_substrate_styles_admit_identical_root_sets() {
+    // One admission schedule, driven the two ways the engines drive it:
+    // the sim loop admits everything due at each virtual-time step; the
+    // real engine bootstraps arrivals ≤ 0 on the main thread, then a
+    // submitter admits each later batch at its wall-clock deadline. Both
+    // must produce the same (lane, root) sequence — root distribution
+    // parity is structural, not tested-into-existence per engine.
+    let stream = WorkloadStream::fixed(
+        vec![
+            AppSpec::new("a", DagParams::mix(40, 4.0, 1), 0.0),
+            AppSpec::new("b", DagParams::mix(30, 2.0, 2), 0.25),
+            AppSpec::new("c", DagParams::mix(20, 8.0, 3), 0.25),
+            AppSpec::new("d", DagParams::mix(25, 4.0, 4), 0.9),
+        ],
+        7,
+    );
+    let multi = stream.build();
+    let admissions = multi.admissions();
+    let n_lanes = 4;
+
+    // Sim style: a virtual-time loop sweeping arrivals as it reaches them.
+    let sim_src = AdmissionSource::new(&multi.dag, &multi.app_of, &admissions);
+    let mut sim_order: Vec<(usize, usize)> = Vec::new();
+    let mut t = 0.0;
+    loop {
+        sim_src.admit_due(t, n_lanes, |lane, root| sim_order.push((lane, root)));
+        match sim_src.next_arrival() {
+            Some(next) => t = next,
+            None => break,
+        }
+    }
+
+    // Real style: bootstrap at t ≤ 0, then submitter batches.
+    let real_src = AdmissionSource::new(&multi.dag, &multi.app_of, &admissions);
+    let mut real_order: Vec<(usize, usize)> = Vec::new();
+    real_src.admit_due(0.0, n_lanes, |lane, root| real_order.push((lane, root)));
+    while let Some(arrival) = real_src.next_arrival() {
+        // The submitter wakes at (or slightly after) the deadline.
+        real_src.admit_due(arrival + 1e-6, n_lanes, |lane, root| {
+            real_order.push((lane, root));
+        });
+    }
+
+    assert_eq!(sim_order, real_order, "substrates must admit identically");
+    // And the admitted set is exactly the combined DAG's root set.
+    let mut roots: Vec<usize> = sim_order.iter().map(|&(_, r)| r).collect();
+    roots.sort_unstable();
+    assert_eq!(roots, multi.dag.roots());
+}
