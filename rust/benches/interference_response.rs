@@ -1,0 +1,19 @@
+//! `cargo bench --bench interference_response` — the §5.3
+//! dynamic-heterogeneity response analysis, full scale.
+//!
+//! Delegates to the same harness as `repro bench-interference`
+//! (`xitao::bench::interference_response`), so the two measurement paths
+//! cannot drift: per-interval PTT values, change-detector flag state and
+//! critical-task placements on the interfered cores, for the plain
+//! `performance-based` policy vs `ptt-adaptive`, on both execution
+//! backends. Set `BENCH_QUICK=1` for the CI smoke scale.
+//!
+//! Results feed EXPERIMENTS.md §Interference response and
+//! `BENCH_interference_response.json`.
+
+use xitao::bench::{InterferenceOpts, emit_interference};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    emit_interference(&InterferenceOpts { quick, ..Default::default() });
+}

@@ -1,0 +1,560 @@
+//! Interference-response harness (`repro bench-interference`) — the §5.3
+//! analysis, end to end and in **both** execution backends.
+//!
+//! The paper's dynamic-heterogeneity claim is a *response shape*: when a
+//! background process squeezes some cores mid-run, the scheduler's critical
+//! tasks must leave those cores within a bounded window and return after
+//! the episode ends. This harness reproduces that analysis as a per-interval
+//! time series, for the plain `performance-based` policy and the PTT v2
+//! `ptt-adaptive` policy side by side:
+//!
+//! - per-core **PTT width-1 values** (sampled every interval: virtual-time
+//!   interval probe in the sim, a wall-clock sampler thread in the real
+//!   engine — the table is shared, so reads are free);
+//! - per-core **change-detector flag state** ([`Ptt::core_flags`]);
+//! - **critical-task placement counts** on victim vs non-victim cores,
+//!   bucketed from the trace.
+//!
+//! The victim set and episode window are derived from the scenario's own
+//! [`EpisodeSchedule`] — no silently drifting copies. `--json` writes the
+//! machine-readable series to `BENCH_interference_response.json` at the
+//! repository root; `tests/interference_response.rs` asserts the *shape*
+//! (adaptive cuts critical placements on victims during the episode and
+//! recovers after, plain `ptt` lags), never exact values.
+
+use crate::coordinator::metrics::RunResult;
+use crate::coordinator::ptt::Ptt;
+use crate::coordinator::scheduler::policy_by_name;
+use crate::coordinator::worker::{RealEngineOpts, run_dag_real};
+use crate::dag_gen::{DagParams, generate};
+use crate::kernels::KernelSizes;
+use crate::platform::{KernelClass, Platform, scenarios};
+use crate::sim::{SimOpts, run_dag_sim};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Harness options.
+#[derive(Debug, Clone)]
+pub struct InterferenceOpts {
+    /// CI smoke scale (smaller workload; the episode window still has to
+    /// be spanned, so the floor is higher than other quick modes).
+    pub quick: bool,
+    /// Write `BENCH_interference_response.json` at the repository root.
+    pub json: bool,
+    /// `"sim"`, `"real"`, or `"both"`.
+    pub backend: String,
+    /// Platform scenario with a non-empty episode schedule.
+    pub scenario: String,
+    /// Seed for DAG generation and engine randomness.
+    pub seed: u64,
+}
+
+impl Default for InterferenceOpts {
+    fn default() -> Self {
+        InterferenceOpts {
+            quick: false,
+            json: false,
+            backend: "both".to_string(),
+            scenario: "interference20".to_string(),
+            seed: 7,
+        }
+    }
+}
+
+/// The two policies the response analysis compares.
+pub const INTERFERENCE_POLICIES: [&str; 2] = ["performance-based", "ptt-adaptive"];
+
+/// Sampling interval of the time series, seconds (virtual or wall).
+pub const SAMPLE_INTERVAL: f64 = 0.01;
+
+/// One interval of the response time series.
+#[derive(Debug, Clone)]
+pub struct IntervalPoint {
+    /// End of the interval (seconds since run start).
+    pub t: f64,
+    /// Mean PTT width-1 long-run estimate over the victim cores.
+    pub victim_w1: f64,
+    /// Mean PTT width-1 long-run estimate over all other cores.
+    pub other_w1: f64,
+    /// Victim cores currently flagged by the change detector.
+    pub victims_flagged: usize,
+    /// Critical-task placements whose partition touches a victim core.
+    pub crit_victims: usize,
+    /// Critical-task placements entirely off the victim cores.
+    pub crit_other: usize,
+    /// All placements starting in this interval.
+    pub tasks: usize,
+}
+
+/// Critical-placement accounting for one phase (pre/during/post episode).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseSummary {
+    /// Critical placements in the phase.
+    pub n_crit: usize,
+    /// ...of which touch a victim core.
+    pub on_victims: usize,
+}
+
+impl PhaseSummary {
+    /// Fraction of the phase's critical placements touching victims
+    /// (0 when the phase saw no critical tasks).
+    pub fn share(&self) -> f64 {
+        if self.n_crit == 0 { 0.0 } else { self.on_victims as f64 / self.n_crit as f64 }
+    }
+}
+
+/// The full response series of one `(backend, policy)` run.
+#[derive(Debug, Clone)]
+pub struct ResponseRun {
+    pub backend: String,
+    pub policy: String,
+    pub makespan: f64,
+    pub n_tasks: usize,
+    pub points: Vec<IntervalPoint>,
+    pub pre: PhaseSummary,
+    pub during: PhaseSummary,
+    pub post: PhaseSummary,
+    /// Max victim cores simultaneously flagged in any sampled interval.
+    pub peak_victims_flagged: usize,
+}
+
+/// Derive the victim core set and the `[start, end)` envelope of a
+/// scenario's episode schedule (union over episodes).
+pub fn victims_and_window(plat: &Platform) -> (Vec<usize>, (f64, f64)) {
+    let mut victims: Vec<usize> =
+        plat.episodes.episodes.iter().flat_map(|e| e.cores.iter().copied()).collect();
+    victims.sort_unstable();
+    victims.dedup();
+    let start =
+        plat.episodes.episodes.iter().map(|e| e.t_start).fold(f64::INFINITY, f64::min);
+    let end = plat.episodes.episodes.iter().map(|e| e.t_end).fold(0.0, f64::max);
+    (victims, (start, end))
+}
+
+/// Assemble the per-interval series from a trace plus aligned PTT samples
+/// (`samples[i]` ≈ state at the end of interval `i`).
+fn assemble(
+    backend: &str,
+    policy: &str,
+    result: &RunResult,
+    samples: &[(Vec<f64>, Vec<bool>)],
+    victims: &[usize],
+    window: (f64, f64),
+) -> ResponseRun {
+    let iv = SAMPLE_INTERVAL;
+    let n_intervals = ((result.makespan / iv).ceil() as usize).max(samples.len()).max(1);
+    let touches_victims = |r: &crate::coordinator::metrics::TraceRecord| {
+        r.partition.cores().any(|c| victims.contains(&c))
+    };
+    let mut points: Vec<IntervalPoint> = (0..n_intervals)
+        .map(|i| {
+            // The last interval of a run often has no sample of its own
+            // (the final event lands between boundaries) — carry the last
+            // known PTT state forward rather than emitting a spurious
+            // all-zeros collapse at the end of the series.
+            let (victim_w1, other_w1, victims_flagged) =
+                match samples.get(i).or_else(|| samples.last()) {
+                    Some((w1, flags)) => {
+                        let vmean = mean_over(w1, |c| victims.contains(&c));
+                        let omean = mean_over(w1, |c| !victims.contains(&c));
+                        let nf =
+                            victims.iter().filter(|&&v| flags.get(v) == Some(&true)).count();
+                        (vmean, omean, nf)
+                    }
+                    None => (0.0, 0.0, 0),
+                };
+            IntervalPoint {
+                t: (i + 1) as f64 * iv,
+                victim_w1,
+                other_w1,
+                victims_flagged,
+                crit_victims: 0,
+                crit_other: 0,
+                tasks: 0,
+            }
+        })
+        .collect();
+    let (mut pre, mut during, mut post) = (
+        PhaseSummary { n_crit: 0, on_victims: 0 },
+        PhaseSummary { n_crit: 0, on_victims: 0 },
+        PhaseSummary { n_crit: 0, on_victims: 0 },
+    );
+    for r in &result.records {
+        let idx = ((r.t_start / iv) as usize).min(n_intervals - 1);
+        points[idx].tasks += 1;
+        if r.critical {
+            let on = touches_victims(r);
+            if on {
+                points[idx].crit_victims += 1;
+            } else {
+                points[idx].crit_other += 1;
+            }
+            let phase = if r.t_start < window.0 {
+                &mut pre
+            } else if r.t_start < window.1 {
+                &mut during
+            } else {
+                &mut post
+            };
+            phase.n_crit += 1;
+            if on {
+                phase.on_victims += 1;
+            }
+        }
+    }
+    let peak = points.iter().map(|p| p.victims_flagged).max().unwrap_or(0);
+    ResponseRun {
+        backend: backend.to_string(),
+        policy: policy.to_string(),
+        makespan: result.makespan,
+        n_tasks: result.records.len(),
+        points,
+        pre,
+        during,
+        post,
+        peak_victims_flagged: peak,
+    }
+}
+
+fn mean_over(w1: &[f64], keep: impl Fn(usize) -> bool) -> f64 {
+    let vals: Vec<f64> =
+        w1.iter().enumerate().filter(|(c, _)| keep(*c)).map(|(_, &v)| v).collect();
+    if vals.is_empty() { 0.0 } else { vals.iter().sum::<f64>() / vals.len() as f64 }
+}
+
+/// Run one `(backend, policy)` response experiment on `scenario` and build
+/// its time series. Panics on unknown names (the CLI validates first).
+pub fn run_response(
+    backend: &str,
+    scenario: &str,
+    policy_name: &str,
+    opts: &InterferenceOpts,
+) -> ResponseRun {
+    let plat = scenarios::by_name(scenario)
+        .unwrap_or_else(|| panic!("unknown platform scenario '{scenario}'"));
+    assert!(
+        !plat.episodes.is_empty(),
+        "scenario '{scenario}' has no episodes — nothing to respond to"
+    );
+    let (victims, window) = victims_and_window(&plat);
+    let policy = policy_by_name(policy_name, plat.topo.n_cores())
+        .unwrap_or_else(|| panic!("unknown policy '{policy_name}'"));
+    match backend {
+        "sim" => {
+            // Virtual time: the workload must span the episode window plus
+            // a recovery tail. At ~17-21k MatMul tasks/s on the saturated
+            // 20-core model, 10k tasks run ~0.5s of virtual time — about
+            // 2x the interference20 window end.
+            let n_tasks = if opts.quick { 10_000 } else { 20_000 };
+            let (dag, _) =
+                generate(&DagParams::single(KernelClass::MatMul, n_tasks, 16.0, opts.seed));
+            let run = run_dag_sim(
+                &dag,
+                &plat,
+                policy.as_ref(),
+                None,
+                &SimOpts {
+                    seed: opts.seed,
+                    ptt_probe: None,
+                    probe_interval: Some(SAMPLE_INTERVAL),
+                },
+            );
+            let samples: Vec<(Vec<f64>, Vec<bool>)> = run
+                .interval_samples
+                .into_iter()
+                .map(|s| (s.w1, s.flags))
+                .collect();
+            assemble("sim", policy_name, &run.result, &samples, &victims, window)
+        }
+        "real" => {
+            // Wall clock: size the workload so the run outlives the episode
+            // window on this host — calibrate one payload, then target
+            // ~2.2x the window end of busy time per online CPU.
+            let sizes = KernelSizes { matmul_n: 64, ..KernelSizes::small() };
+            let probe = sizes.instantiate(KernelClass::MatMul, opts.seed);
+            let t = Instant::now();
+            let reps = 16;
+            for _ in 0..reps {
+                probe.execute(0, 1);
+            }
+            let per_task = (t.elapsed().as_secs_f64() / reps as f64).max(1e-6);
+            let online = crate::platform::detect::online_cpus();
+            let target_wall = window.1 * 2.2;
+            let n_tasks = ((target_wall * online as f64 / per_task) as usize)
+                .clamp(2_000, if opts.quick { 24_000 } else { 96_000 });
+            let (dag, _) = generate(
+                &DagParams::single(KernelClass::MatMul, n_tasks, 16.0, opts.seed)
+                    .with_payloads(sizes),
+            );
+            let ptt = Ptt::new(dag.n_types(), &plat.topo);
+            let stop = AtomicBool::new(false);
+            let mut samples: Vec<(Vec<f64>, Vec<bool>)> = Vec::new();
+            let mut result: Option<RunResult> = None;
+            std::thread::scope(|s| {
+                let sampler = s.spawn(|| {
+                    // Wall-clock sampler: the PTT is shared, reads are racy
+                    // by design (never torn), so sampling costs the run
+                    // nothing. If the thread is starved past several
+                    // boundaries (oversubscribed CI host), the missed
+                    // slots are filled by carrying the *previous* state
+                    // forward — never by backfilling the current state
+                    // into the past, which would skew flag-onset timing.
+                    let t0 = Instant::now();
+                    let mut out: Vec<(Vec<f64>, Vec<bool>)> = Vec::new();
+                    while !stop.load(Ordering::Acquire) {
+                        let next = (out.len() + 1) as f64 * SAMPLE_INTERVAL;
+                        let behind = next - t0.elapsed().as_secs_f64();
+                        if behind > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(behind.min(0.002)));
+                            continue;
+                        }
+                        let obs: (Vec<f64>, Vec<bool>) = (
+                            (0..plat.topo.n_cores()).map(|c| ptt.read(0, c, 1)).collect(),
+                            ptt.core_flags(),
+                        );
+                        let reached =
+                            (t0.elapsed().as_secs_f64() / SAMPLE_INTERVAL) as usize;
+                        while out.len() + 1 < reached {
+                            let fill = out.last().cloned().unwrap_or_else(|| obs.clone());
+                            out.push(fill);
+                        }
+                        out.push(obs);
+                    }
+                    out
+                });
+                result = Some(run_dag_real(
+                    &dag,
+                    &plat.topo,
+                    policy.as_ref(),
+                    Some(&ptt),
+                    &RealEngineOpts {
+                        seed: opts.seed,
+                        episodes: plat.episodes.clone(),
+                        ..Default::default()
+                    },
+                ));
+                stop.store(true, Ordering::Release);
+                samples = sampler.join().expect("sampler thread");
+            });
+            let result = result.expect("run finished");
+            assemble("real", policy_name, &result, &samples, &victims, window)
+        }
+        other => panic!("unknown backend '{other}' (sim|real)"),
+    }
+}
+
+/// Run the configured backends × [`INTERFERENCE_POLICIES`] and assemble
+/// the machine-readable result. Prints nothing — see [`emit_interference`].
+pub fn run_interference(opts: &InterferenceOpts) -> Json {
+    let plat = scenarios::by_name(&opts.scenario)
+        .unwrap_or_else(|| panic!("unknown platform scenario '{}'", opts.scenario));
+    let (victims, window) = victims_and_window(&plat);
+    let backends: Vec<&str> = match opts.backend.as_str() {
+        "both" => vec!["sim", "real"],
+        "sim" => vec!["sim"],
+        "real" => vec!["real"],
+        other => panic!("unknown backend '{other}' (sim|real|both)"),
+    };
+    let mut runs = Vec::new();
+    for be in backends {
+        for policy in INTERFERENCE_POLICIES {
+            let r = run_response(be, &opts.scenario, policy, opts);
+            runs.push(response_to_json(&r));
+        }
+    }
+    Json::obj(vec![
+        ("bench", Json::Str("interference_response".into())),
+        ("schema", Json::Num(1.0)),
+        ("provenance", Json::Str("measured".into())),
+        ("quick", Json::Bool(opts.quick)),
+        ("scenario", Json::Str(opts.scenario.clone())),
+        ("victims", Json::Arr(victims.iter().map(|&v| Json::Num(v as f64)).collect())),
+        ("window", Json::Arr(vec![Json::Num(window.0), Json::Num(window.1)])),
+        ("interval", Json::Num(SAMPLE_INTERVAL)),
+        ("runs", Json::Arr(runs)),
+    ])
+}
+
+fn phase_json(p: &PhaseSummary) -> Json {
+    Json::obj(vec![
+        ("n_crit", Json::Num(p.n_crit as f64)),
+        ("on_victims", Json::Num(p.on_victims as f64)),
+        ("share", Json::Num(p.share())),
+    ])
+}
+
+fn response_to_json(r: &ResponseRun) -> Json {
+    Json::obj(vec![
+        ("backend", Json::Str(r.backend.clone())),
+        ("policy", Json::Str(r.policy.clone())),
+        ("makespan", Json::Num(r.makespan)),
+        ("n_tasks", Json::Num(r.n_tasks as f64)),
+        ("peak_victims_flagged", Json::Num(r.peak_victims_flagged as f64)),
+        (
+            "summary",
+            Json::obj(vec![
+                ("pre", phase_json(&r.pre)),
+                ("during", phase_json(&r.during)),
+                ("post", phase_json(&r.post)),
+            ]),
+        ),
+        (
+            "series",
+            Json::Arr(
+                r.points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("t", Json::Num(p.t)),
+                            ("victim_w1", Json::Num(p.victim_w1)),
+                            ("other_w1", Json::Num(p.other_w1)),
+                            ("victims_flagged", Json::Num(p.victims_flagged as f64)),
+                            ("crit_victims", Json::Num(p.crit_victims as f64)),
+                            ("crit_other", Json::Num(p.crit_other as f64)),
+                            ("tasks", Json::Num(p.tasks as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Render the human-readable summary table.
+pub fn render_interference_tables(result: &Json) -> Vec<Table> {
+    let mut t = Table::new(
+        "Interference response: critical-task share on victim cores per phase",
+        &["backend", "policy", "pre", "during", "post", "crit during", "peak flags", "makespan"],
+    );
+    if let Some(runs) = result.get("runs").and_then(Json::as_arr) {
+        for r in runs {
+            let share = |phase: &str| -> String {
+                r.get("summary")
+                    .and_then(|s| s.get(phase))
+                    .and_then(|p| p.get("share"))
+                    .and_then(Json::as_f64)
+                    .map_or("-".into(), |v| format!("{v:.3}"))
+            };
+            let num = |k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            let crit_during = r
+                .get("summary")
+                .and_then(|s| s.get("during"))
+                .and_then(|p| p.get("n_crit"))
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN);
+            t.row(vec![
+                r.get("backend").and_then(Json::as_str).unwrap_or("?").to_string(),
+                r.get("policy").and_then(Json::as_str).unwrap_or("?").to_string(),
+                share("pre"),
+                share("during"),
+                share("post"),
+                format!("{crit_during:.0}"),
+                format!("{:.0}", num("peak_victims_flagged")),
+                format!("{:.3}s", num("makespan")),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+/// CLI entry point: run, print, optionally write the JSON file.
+pub fn emit_interference(opts: &InterferenceOpts) -> Json {
+    let result = run_interference(opts);
+    for t in render_interference_tables(&result) {
+        println!("{}", t.render());
+    }
+    if opts.json {
+        let path = super::overhead::repo_root_file("BENCH_interference_response.json");
+        match std::fs::write(&path, result.to_pretty()) {
+            Ok(()) => println!("[json] {}", path.display()),
+            Err(e) => eprintln!("[json] write failed ({}): {e}", path.display()),
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::TraceRecord;
+    use crate::platform::{Episode, EpisodeSchedule, Partition};
+
+    #[test]
+    fn victims_and_window_derive_from_schedule() {
+        let plat = scenarios::by_name("interference20").unwrap();
+        let (victims, window) = victims_and_window(&plat);
+        assert_eq!(victims, vec![0, 1]);
+        assert!((window.0 - 0.05).abs() < 1e-12);
+        assert!((window.1 - 0.25).abs() < 1e-12);
+        // Multi-episode envelope.
+        let p = Platform::homogeneous(4).with_episodes(EpisodeSchedule::new(vec![
+            Episode::dvfs(vec![1], 0.1, 0.2, 0.5),
+            Episode::interference(vec![2], 0.15, 0.4, 0.5, 0.0),
+        ]));
+        let (v, w) = victims_and_window(&p);
+        assert_eq!(v, vec![1, 2]);
+        assert_eq!(w, (0.1, 0.4));
+    }
+
+    fn rec(critical: bool, leader: usize, t_start: f64) -> TraceRecord {
+        TraceRecord {
+            task: 0,
+            app_id: 0,
+            class: KernelClass::MatMul,
+            type_id: 0,
+            critical,
+            partition: Partition { leader, width: 1 },
+            t_start,
+            t_end: t_start + 0.001,
+        }
+    }
+
+    #[test]
+    fn assemble_buckets_and_phases() {
+        let result = RunResult {
+            policy: "x".into(),
+            platform: "y".into(),
+            makespan: 0.05,
+            records: vec![
+                rec(true, 0, 0.001),  // pre, on victim
+                rec(true, 3, 0.005),  // pre, off
+                rec(true, 1, 0.015),  // during, on victim
+                rec(false, 0, 0.016), // during, non-critical
+                rec(true, 2, 0.021),  // during, off
+                rec(true, 0, 0.041),  // post, on victim
+            ],
+        };
+        let samples = vec![
+            (vec![1.0, 1.0, 1.0, 1.0], vec![false, false, false, false]),
+            (vec![2.0, 2.0, 1.0, 1.0], vec![true, true, false, false]),
+        ];
+        let r = assemble("sim", "ptt-adaptive", &result, &samples, &[0, 1], (0.01, 0.03));
+        assert_eq!(r.points.len(), 5);
+        assert_eq!(r.pre.n_crit, 2);
+        assert_eq!(r.pre.on_victims, 1);
+        assert_eq!(r.during.n_crit, 2);
+        assert_eq!(r.during.on_victims, 1);
+        assert_eq!(r.post.n_crit, 1);
+        assert_eq!(r.post.on_victims, 1);
+        assert!((r.pre.share() - 0.5).abs() < 1e-12);
+        // Interval 0: two tasks; interval 1: flags on both victims.
+        assert_eq!(r.points[0].tasks, 2);
+        assert_eq!(r.points[1].victims_flagged, 2);
+        assert!((r.points[1].victim_w1 - 2.0).abs() < 1e-12);
+        assert!((r.points[1].other_w1 - 1.0).abs() < 1e-12);
+        assert_eq!(r.peak_victims_flagged, 2);
+        // JSON round-trips with the documented fields.
+        let j = response_to_json(&r);
+        assert_eq!(j.get("policy").unwrap().as_str().unwrap(), "ptt-adaptive");
+        assert_eq!(j.get("series").unwrap().as_arr().unwrap().len(), 5);
+        assert!(j.get("summary").unwrap().get("during").unwrap().get("share").is_some());
+    }
+
+    #[test]
+    fn phase_share_handles_empty_phase() {
+        let p = PhaseSummary { n_crit: 0, on_victims: 0 };
+        assert_eq!(p.share(), 0.0);
+    }
+}

@@ -1,13 +1,19 @@
 //! Benchmark/figure harness: one regenerator per table and figure in the
 //! paper's evaluation (§5), plus the design ablations called out in
-//! DESIGN.md and the scheduler-overhead perf harness ([`overhead`]).
+//! DESIGN.md, the scheduler-overhead perf harness ([`overhead`]) and the
+//! §5.3 interference-response harness ([`interference_response`]).
 //! Used by the `repro` CLI and the `cargo bench` targets.
 
 pub mod figures;
+pub mod interference_response;
 pub mod overhead;
 
 pub use figures::{
     BenchOpts, ablation_baselines, ablation_energy, ablation_ptt, emit, fig5, fig6, fig7, fig8,
     fig9, fig10, stream_interference,
+};
+pub use interference_response::{
+    INTERFERENCE_POLICIES, InterferenceOpts, ResponseRun, emit_interference, run_interference,
+    run_response,
 };
 pub use overhead::{OverheadOpts, OverheadRun, emit_overhead, run_overhead};

@@ -55,22 +55,28 @@ pub struct OverheadOpts {
 /// Scenarios the end-to-end overhead is measured on.
 pub const OVERHEAD_SCENARIOS: [&str; 3] = ["hom4", "hom20", "biglittle44"];
 
-/// Where the machine-readable result lands: the nearest ancestor of the
+/// Resolve `name` at the repository root: the nearest ancestor of the
 /// current directory whose `Cargo.toml` declares a `[workspace]` (this
 /// repository's root manifest). Walking up and stopping at the *first*
 /// workspace root means a checkout nested inside some other Cargo project
 /// is never escaped. Falls back to the build-time manifest location for
-/// artifacts executed outside any checkout.
-pub fn bench_json_path() -> std::path::PathBuf {
+/// artifacts executed outside any checkout. Shared by every committed
+/// `BENCH_*.json` emitter.
+pub fn repo_root_file(name: &str) -> std::path::PathBuf {
     let cwd = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
     for dir in cwd.ancestors() {
         if let Ok(text) = std::fs::read_to_string(dir.join("Cargo.toml")) {
             if text.contains("[workspace]") {
-                return dir.join("BENCH_sched_overhead.json");
+                return dir.join(name);
             }
         }
     }
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sched_overhead.json")
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
+
+/// Where the scheduler-overhead JSON lands (see [`repo_root_file`]).
+pub fn bench_json_path() -> std::path::PathBuf {
+    repo_root_file("BENCH_sched_overhead.json")
 }
 
 /// Time `f` over `iters` iterations, returning ns/op. Shared with the

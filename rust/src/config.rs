@@ -7,7 +7,8 @@
 //! {
 //!   "platform": "tx2",          // any registered scenario | hom<N>
 //!   "backend": "sim",           // sim | real
-//!   "policy": "performance",    // performance | homogeneous | cats | dheft | energy
+//!   "policy": "performance",    // see `repro policies`: performance | ptt-adaptive |
+//!                               // homogeneous | cats | dheft | energy (+ aliases)
 //!   "tasks": 1000,
 //!   "parallelism": 4.0,
 //!   "kernel": "mix",            // mix | matmul | sort | copy

@@ -213,6 +213,11 @@ impl<'a> SchedCore<'a> {
     /// from the leader's own share (the paper's rule for avoiding PTT
     /// cache-line migration); the single-threaded sim calls it at
     /// completion, after applying its timer-jitter model.
+    ///
+    /// One observation feeds the PTT's *entire* v2 state — the long-run
+    /// average, the recent window and the per-core change detector
+    /// ([`Ptt::update`]) — so both engines share the change-detection
+    /// logic by construction, exactly like the rest of the lifecycle.
     pub fn record_leader_share(&self, task: TaskId, partition: Partition, observed_exec: f64) {
         if self.policy.uses_ptt() {
             self.ptt.update(

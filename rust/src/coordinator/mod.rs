@@ -23,6 +23,7 @@
 pub mod aq;
 pub mod core;
 pub mod dag;
+pub mod episodes_rt;
 pub mod inbox;
 pub mod metrics;
 pub mod mutex_queues;
@@ -34,6 +35,7 @@ pub mod wsq;
 
 pub use self::core::{AdmissionSource, CommitInfo, CommitOutcome, Placement, SchedCore};
 pub use dag::{TaoDag, TaoNode, TaskId};
+pub use episodes_rt::EpisodeDriver;
 pub use metrics::{
     AppMetrics, RunResult, Trace, TraceRecord, jain_fairness_index, per_app_metrics,
     sort_by_commit,
@@ -41,7 +43,7 @@ pub use metrics::{
 pub use ptt::Ptt;
 pub use scheduler::{
     CatsLike, DheftLike, EnergyMinimizing, HomogeneousWs, POLICIES, PerformanceBased, PlaceCtx,
-    Policy, PolicyInfo, policy_by_name, policy_names,
+    Policy, PolicyInfo, PttAdaptive, policy_by_name, policy_names,
 };
 pub use tao::{NopPayload, TaoPayload, payload_fn};
 pub use worker::{RealEngineOpts, run_dag_real, run_stream_real};

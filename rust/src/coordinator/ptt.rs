@@ -22,18 +22,83 @@
 //! - reads are racy by design (schedulers tolerate slightly stale values).
 //!   Values are stored as bit-cast `f64` in `AtomicU64`s, so every read and
 //!   write is individually atomic — stale is possible, torn is not.
+//!
+//! ## PTT v2 — change detection and fast re-learning
+//!
+//! A single 4:1 moving average is equally sluggish whether the platform is
+//! steady or mid-episode. To adapt to *dynamic* heterogeneity (DVFS,
+//! background interferers — §5.3) each cell now keeps **two** estimates:
+//!
+//! - the **long-run average** (the paper's 4:1 blend, what [`Ptt::read`]
+//!   and every search returns), and
+//! - a **recent-window estimate** (a 1:1 blend, ≈ two-sample memory).
+//!
+//! The **change detector** compares the pair on every leader write: when
+//! the recent/long-run ratio of the freshly updated cell exceeds
+//! [`FLAG_THRESHOLD`] that *cell* turns diverged — its effective behaviour
+//! has shifted faster than the long-run average can track — and it
+//! reconverges only once the ratio falls below [`UNFLAG_THRESHOLD`]
+//! (per-cell hysteresis: a dead band between the thresholds, and a
+//! sibling cell's evidence can never clear a bit it did not set). A core
+//! is **flagged** while any of its cells is diverged; while flagged, all
+//! its cells blend at the low [`FAST_WEIGHT`] (fast re-learn). Policies
+//! read the flags through [`Ptt::core_flagged`] / [`Ptt::core_flags`] as
+//! "this core's observed behaviour just changed" — the `ptt-adaptive`
+//! policy steers critical tasks away from flagged cores while the fast
+//! re-learn pulls the long-run rows back to reality.
+//!
+//! The v2 state follows the same concurrency discipline as v1: recent
+//! cells are bit-cast `f64` in `AtomicU64`s written only by the leader;
+//! the diverged bits and the per-core diverged-cell count have a single
+//! writer each (the core itself — only core `c` leads partitions whose
+//! PTT rows are `c`). Detection reads the values the update just wrote,
+//! draws no randomness, and is therefore exactly as deterministic as the
+//! update sequence itself — the virtual-time engine stays bit-for-bit
+//! reproducible.
 
 use crate::platform::{CoreId, Partition, Topology};
 use crossbeam_utils::CachePadded;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// History weight: `(WEIGHT·old + new) / (WEIGHT + 1)`.
 pub const HISTORY_WEIGHT: f64 = 4.0;
 
+/// Recent-window weight: a 1:1 blend (≈ two-sample memory) that tracks the
+/// platform's *current* behaviour fast enough to expose episode edges.
+pub const RECENT_WEIGHT: f64 = 1.0;
+
+/// History weight applied to a **flagged** core's long-run cells: while the
+/// change detector says the core's behaviour shifted, the long-run average
+/// re-learns at this low weight instead of [`HISTORY_WEIGHT`].
+pub const FAST_WEIGHT: f64 = 1.0;
+
+/// Flag a core when `max(recent, long) / min(recent, long)` of the freshly
+/// updated cell exceeds this. Calibrated against both regimes: for an
+/// abrupt step of factor `k` the ratio peaks at
+/// `(0.75k + 0.25) / (0.36k + 0.64)` (1:1 vs 4:1 blends, second sample) —
+/// ≈ 1.33 for the §5.3 interference factor k ≈ 2.2, crossing 1.25 on the
+/// first or second post-edge sample — while bounded ±5% timer jitter can
+/// push the ratio to at most ≈ 1.09 in steady state, so the detector
+/// cannot false-fire on noise.
+pub const FLAG_THRESHOLD: f64 = 1.25;
+
+/// Unflag once the ratio falls back below this. Strictly below
+/// [`FLAG_THRESHOLD`] so the flag has a dead band instead of chattering,
+/// and above the ≈ 1.05 steady-jitter ratio so reconvergence is reachable.
+pub const UNFLAG_THRESHOLD: f64 = 1.10;
+
 /// One core's row: per-width moving averages, cache-line padded.
 struct Row {
-    /// Indexed by width *index* (position in `Ptt::widths`).
+    /// Long-run averages, indexed by width *index* (position in
+    /// `Ptt::widths`).
     cells: CachePadded<Vec<AtomicU64>>,
+    /// Recent-window estimates, same indexing and bit-cast discipline.
+    recent: CachePadded<Vec<AtomicU64>>,
+    /// Per-cell diverged bits (the change detector's hysteresis state).
+    /// Per-cell, not per-core: one stale sibling cell producing a
+    /// ratio-1.0 sample must not clear the core's flag while another cell
+    /// is still mid-shift.
+    diverged: CachePadded<Vec<AtomicBool>>,
 }
 
 /// The PTT for a set of TAO types on a fixed topology.
@@ -44,6 +109,10 @@ pub struct Ptt {
     n_types: usize,
     /// `rows[type * n_cores + core]`.
     rows: Vec<Row>,
+    /// Per-core count of currently diverged cells (single writer: the core
+    /// itself — only core `c` leads partitions whose rows are `c`). A core
+    /// is *flagged* while any of its cells is diverged.
+    n_diverged: Vec<CachePadded<AtomicUsize>>,
     /// Tunable history weight (paper default 4.0 = 4:1). Stored bit-cast so
     /// the table stays `Sync` without locks.
     weight: AtomicU64,
@@ -58,6 +127,12 @@ impl Ptt {
                 cells: CachePadded::new(
                     (0..widths.len()).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
                 ),
+                recent: CachePadded::new(
+                    (0..widths.len()).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
+                ),
+                diverged: CachePadded::new(
+                    (0..widths.len()).map(|_| AtomicBool::new(false)).collect(),
+                ),
             })
             .collect();
         Ptt {
@@ -65,6 +140,7 @@ impl Ptt {
             n_cores,
             n_types: n_types.max(1),
             rows,
+            n_diverged: (0..n_cores).map(|_| CachePadded::new(AtomicUsize::new(0))).collect(),
             weight: AtomicU64::new(HISTORY_WEIGHT.to_bits()),
         }
     }
@@ -91,32 +167,146 @@ impl Ptt {
         self.widths.iter().position(|&w| w == width)
     }
 
-    fn cell(&self, type_id: usize, core: CoreId, width: usize) -> &AtomicU64 {
-        let wi = self
-            .width_index(width)
-            .unwrap_or_else(|| panic!("width {width} not in PTT axis {:?}", self.widths));
+    fn row(&self, type_id: usize, core: CoreId) -> &Row {
         assert!(type_id < self.n_types, "type {type_id} out of range {}", self.n_types);
         assert!(core < self.n_cores, "core {core} out of range {}", self.n_cores);
-        &self.rows[type_id * self.n_cores + core].cells[wi]
+        &self.rows[type_id * self.n_cores + core]
     }
 
-    /// Read the moving average for `(type, leader core, width)`; 0 = untrained.
+    fn width_index_or_panic(&self, width: usize) -> usize {
+        self.width_index(width)
+            .unwrap_or_else(|| panic!("width {width} not in PTT axis {:?}", self.widths))
+    }
+
+    fn cell(&self, type_id: usize, core: CoreId, width: usize) -> &AtomicU64 {
+        let wi = self.width_index_or_panic(width);
+        &self.row(type_id, core).cells[wi]
+    }
+
+    /// Read the long-run moving average for `(type, leader core, width)`;
+    /// 0 = untrained. This is what every search minimises over.
     pub fn read(&self, type_id: usize, core: CoreId, width: usize) -> f64 {
         f64::from_bits(self.cell(type_id, core, width).load(Ordering::Relaxed))
     }
 
+    /// Read the recent-window estimate for `(type, leader core, width)`;
+    /// 0 = untrained. Diverges from [`Ptt::read`] exactly when the core's
+    /// effective behaviour is shifting (the change detector's input).
+    pub fn read_recent(&self, type_id: usize, core: CoreId, width: usize) -> f64 {
+        let wi = self.width_index_or_panic(width);
+        f64::from_bits(self.row(type_id, core).recent[wi].load(Ordering::Relaxed))
+    }
+
+    /// Whether the change detector currently flags `core` ("this core's
+    /// observed behaviour just shifted — estimates are re-learning"): true
+    /// while *any* of the core's cells is diverged.
+    pub fn core_flagged(&self, core: CoreId) -> bool {
+        self.n_diverged[core].load(Ordering::Relaxed) > 0
+    }
+
+    /// Snapshot of every core's change-detector flag, indexed by core id.
+    pub fn core_flags(&self) -> Vec<bool> {
+        self.n_diverged.iter().map(|n| n.load(Ordering::Relaxed) > 0).collect()
+    }
+
+    /// Number of currently flagged cores (diagnostics / bench summaries).
+    pub fn n_flagged(&self) -> usize {
+        self.n_diverged.iter().filter(|n| n.load(Ordering::Relaxed) > 0).count()
+    }
+
     /// Leader-side update with an observed execution time (seconds).
     ///
-    /// First sample replaces the 0 initialiser outright (a 4:1 blend with a
-    /// fictitious zero would underestimate fivefold and distort the first
-    /// few searches).
+    /// First sample replaces the 0 initialiser outright (a blend with a
+    /// fictitious zero would underestimate and distort the first few
+    /// searches). Feeds **both** estimates — the long-run average at
+    /// [`HISTORY_WEIGHT`] (or [`FAST_WEIGHT`] while the core is flagged)
+    /// and the recent window at [`RECENT_WEIGHT`] — then runs the per-core
+    /// change detector on the freshly updated pair (see the module docs).
     pub fn update(&self, type_id: usize, leader: CoreId, width: usize, exec_time: f64) {
         debug_assert!(exec_time >= 0.0 && exec_time.is_finite());
-        let cell = self.cell(type_id, leader, width);
+        let wi = self.width_index_or_panic(width);
+        let row = self.row(type_id, leader);
+        // Recent window first: the detector below compares the long-run
+        // value against what the platform looks like *now*.
+        let rcell = &row.recent[wi];
+        let r_old = f64::from_bits(rcell.load(Ordering::Relaxed));
+        let r_new = if r_old == 0.0 {
+            exec_time
+        } else {
+            (RECENT_WEIGHT * r_old + exec_time) / (RECENT_WEIGHT + 1.0)
+        };
+        rcell.store(r_new.to_bits(), Ordering::Relaxed);
+        // Long-run average, at the fast weight while the core is flagged.
+        let cell = &row.cells[wi];
         let old = f64::from_bits(cell.load(Ordering::Relaxed));
-        let w = self.history_weight();
+        let w = if self.core_flagged(leader) {
+            self.history_weight().min(FAST_WEIGHT)
+        } else {
+            self.history_weight()
+        };
         let new = if old == 0.0 { exec_time } else { (w * old + exec_time) / (w + 1.0) };
         cell.store(new.to_bits(), Ordering::Relaxed);
+        // Change detector with per-cell hysteresis: a cell turns diverged
+        // above FLAG_THRESHOLD, reconverges below UNFLAG_THRESHOLD, holds
+        // in the dead band; the core's flag is "any cell diverged". The
+        // state must be per-cell: one cell's ratio-1.0 sample (a stale
+        // sibling updating in lockstep at the fast weight, or an untrained
+        // cell's first observation) says nothing about the cell that
+        // actually diverged, so it may only clear *its own* bit. A cell's
+        // first sample carries no divergence evidence at all (both
+        // estimates are set to the sample) and is skipped outright.
+        if r_old > 0.0 && old > 0.0 {
+            let ratio = if r_new > new { r_new / new } else { new / r_new };
+            let dcell = &row.diverged[wi];
+            let was = dcell.load(Ordering::Relaxed);
+            let is = if ratio > FLAG_THRESHOLD {
+                true
+            } else if ratio < UNFLAG_THRESHOLD {
+                false
+            } else {
+                was
+            };
+            if is != was {
+                // swap, not store: the counter must track *actual* bit
+                // transitions. Under the single-writer contract this is
+                // equivalent; under contract-violating concurrent updates
+                // to one cell (the determinism suite's hammer test does
+                // this deliberately) two racing writers would otherwise
+                // both count the same transition and corrupt the counter
+                // permanently — with swap the loser observes `prev == is`
+                // and backs off, so the count stays the number of set bits.
+                let prev = dcell.swap(is, Ordering::Relaxed);
+                if prev != is {
+                    if is {
+                        self.n_diverged[leader].fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.n_diverged[leader].fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The one `time × width` argmin every search is built on: minimise
+    /// over the candidate partitions, first-wins tie-break (`c <= cost`
+    /// keeps the earliest candidate), `None` for an empty candidate set.
+    /// Candidate *order* is part of each search's contract — callers pass
+    /// deterministic sequences.
+    fn best_over(
+        &self,
+        type_id: usize,
+        candidates: impl IntoIterator<Item = Partition>,
+    ) -> Option<(Partition, f64)> {
+        let mut best: Option<(Partition, f64)> = None;
+        for p in candidates {
+            let t = self.read(type_id, p.leader, p.width);
+            let cost = t * p.width as f64;
+            match best {
+                Some((_, c)) if c <= cost => {}
+                _ => best = Some((p, cost)),
+            }
+        }
+        best
     }
 
     /// **Global search** (critical tasks, §3.3): over every valid partition
@@ -125,16 +315,8 @@ impl Ptt {
     /// forcing exploration. Deterministic tie-break: first in
     /// `Topology::all_partitions` order.
     pub fn best_global(&self, type_id: usize, topo: &Topology) -> (Partition, f64) {
-        let mut best: Option<(Partition, f64)> = None;
-        for p in topo.all_partitions() {
-            let t = self.read(type_id, p.leader, p.width);
-            let cost = t * p.width as f64;
-            match best {
-                Some((_, c)) if c <= cost => {}
-                _ => best = Some((p, cost)),
-            }
-        }
-        best.expect("topology has at least one partition")
+        self.best_over(type_id, topo.all_partitions())
+            .expect("topology has at least one partition")
     }
 
     /// **Local width search** (non-critical tasks, §3.3): the task stays
@@ -142,19 +324,55 @@ impl Ptt {
     /// chosen, reading the leader's entries. Minimises `time × width`.
     pub fn best_width_for(&self, type_id: usize, core: CoreId, topo: &Topology) -> (Partition, f64) {
         let cluster = topo.cluster_of(core);
-        let mut best: Option<(Partition, f64)> = None;
-        for w in cluster.valid_widths() {
-            let p = topo
-                .enclosing_partition(core, w)
-                .expect("cluster width must yield an enclosing partition");
-            let t = self.read(type_id, p.leader, p.width);
-            let cost = t * w as f64;
-            match best {
-                Some((_, c)) if c <= cost => {}
-                _ => best = Some((p, cost)),
-            }
-        }
-        best.expect("cluster has at least width 1")
+        self.best_over(
+            type_id,
+            cluster.valid_widths().into_iter().map(|w| {
+                topo.enclosing_partition(core, w)
+                    .expect("cluster width must yield an enclosing partition")
+            }),
+        )
+        .expect("cluster has at least width 1")
+    }
+
+    /// **Filtered global search**: like [`Ptt::best_global`], but skipping
+    /// every partition that contains a core for which `avoid` returns true.
+    /// Returns `None` when every partition touches an avoided core (the
+    /// caller falls back to the unfiltered search — a fully flagged machine
+    /// has no safe harbour and the plain `time × width` argmin is the best
+    /// remaining answer).
+    pub fn best_global_avoiding(
+        &self,
+        type_id: usize,
+        topo: &Topology,
+        avoid: impl Fn(CoreId) -> bool,
+    ) -> Option<(Partition, f64)> {
+        self.best_over(
+            type_id,
+            topo.all_partitions().into_iter().filter(|p| !p.cores().any(&avoid)),
+        )
+    }
+
+    /// **Widened local search**: every partition of the cluster containing
+    /// `core` (any leader, any width) — not just the partitions *enclosing*
+    /// `core` as in [`Ptt::best_width_for`]. Partitions containing a core
+    /// for which `avoid` returns true are skipped; returns `None` if the
+    /// whole cluster is avoided. The `ptt-adaptive` policy uses this to let
+    /// a non-critical task escape its own interfered core without paying
+    /// the full global search.
+    pub fn best_in_cluster_avoiding(
+        &self,
+        type_id: usize,
+        core: CoreId,
+        topo: &Topology,
+        avoid: impl Fn(CoreId) -> bool,
+    ) -> Option<(Partition, f64)> {
+        let cluster = topo.cluster_of(core).id;
+        self.best_over(
+            type_id,
+            topo.all_partitions()
+                .into_iter()
+                .filter(|p| topo.cluster_of(p.leader).id == cluster && !p.cores().any(&avoid)),
+        )
     }
 
     /// Lowest observed width-1 time per cluster (used by the CATS-like
@@ -346,5 +564,201 @@ mod tests {
         let before = ptt.untrained_fraction(&topo);
         ptt.update(0, 0, 1, 1.0);
         assert!(ptt.untrained_fraction(&topo) < before);
+    }
+
+    // ----- PTT v2: recent window, change detection, fast re-learn ---------
+
+    /// Train a cell to a steady value (enough samples that both estimates
+    /// converge and the flag, if any, clears).
+    fn steady(ptt: &Ptt, core: CoreId, v: f64) {
+        for _ in 0..20 {
+            ptt.update(0, core, 1, v);
+        }
+    }
+
+    #[test]
+    fn recent_window_tracks_faster_than_long_run() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        steady(&ptt, 0, 1.0);
+        assert!((ptt.read_recent(0, 0, 1) - 1.0).abs() < 1e-9);
+        // One shifted sample: recent moves halfway, long run lags.
+        ptt.update(0, 0, 1, 3.0);
+        let recent = ptt.read_recent(0, 0, 1);
+        let long = ptt.read(0, 0, 1);
+        assert!((recent - 2.0).abs() < 1e-9, "recent {recent}");
+        assert!(recent > long, "recent {recent} must lead long {long}");
+    }
+
+    #[test]
+    fn steady_state_never_flags() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        // ±5% jitter around 1.0 — the sim's timer-noise envelope.
+        for i in 0..200 {
+            let v = 1.0 + 0.05 * if i % 2 == 0 { 1.0 } else { -1.0 };
+            ptt.update(0, 1, 1, v);
+            assert!(!ptt.core_flagged(1), "steady jitter flagged at sample {i}");
+        }
+        assert_eq!(ptt.n_flagged(), 0);
+        assert_eq!(ptt.core_flags(), vec![false; 6]);
+    }
+
+    #[test]
+    fn abrupt_shift_flags_then_reconverges_and_unflags() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        steady(&ptt, 2, 1.0);
+        assert!(!ptt.core_flagged(2));
+        // A 2.2x interference-style inflation: the detector must flag
+        // within a few samples.
+        let mut flagged_at = None;
+        for i in 0..10 {
+            ptt.update(0, 2, 1, 2.2);
+            if ptt.core_flagged(2) {
+                flagged_at = Some(i);
+                break;
+            }
+        }
+        assert!(flagged_at.is_some(), "2.2x shift never flagged core 2");
+        // Keep feeding the new reality: fast re-learn reconverges the
+        // long-run average and the flag clears again. (40 samples: the
+        // residual decays at 0.8/sample once the flag drops back to 4:1.)
+        for _ in 0..40 {
+            ptt.update(0, 2, 1, 2.2);
+        }
+        assert!(!ptt.core_flagged(2), "flag must clear after reconvergence");
+        assert!((ptt.read(0, 2, 1) - 2.2).abs() < 1e-3);
+        assert!((ptt.read_recent(0, 2, 1) - 2.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flagged_core_relearns_faster_than_unflagged() {
+        let topo = tx2();
+        // Two identical cores, same steady history, same shifted input —
+        // but core 0 is flagged first (via the shift itself), so its
+        // long-run average must close the gap faster than a hypothetical
+        // 4:1-only table. Compare against the closed-form 4:1 trajectory.
+        let ptt = Ptt::new(1, &topo);
+        steady(&ptt, 0, 1.0);
+        let mut pure41 = 1.0;
+        for _ in 0..8 {
+            ptt.update(0, 0, 1, 3.0);
+            pure41 = (4.0 * pure41 + 3.0) / 5.0;
+        }
+        let v2 = ptt.read(0, 0, 1);
+        assert!(
+            3.0 - v2 < 3.0 - pure41,
+            "fast re-learn must beat the 4:1 trajectory: v2 {v2}, 4:1 {pure41}"
+        );
+    }
+
+    #[test]
+    fn episode_end_reflags_for_fast_recovery() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        // Interfered steady state (trained at the inflated value)...
+        steady(&ptt, 0, 2.2);
+        assert!(!ptt.core_flagged(0));
+        // ...then the episode ends: times drop back, detector re-flags.
+        let mut flagged = false;
+        for _ in 0..10 {
+            ptt.update(0, 0, 1, 1.0);
+            flagged |= ptt.core_flagged(0);
+        }
+        assert!(flagged, "downward shift (episode end) must also flag");
+        for _ in 0..40 {
+            ptt.update(0, 0, 1, 1.0);
+        }
+        assert!(!ptt.core_flagged(0));
+        assert!((ptt.read(0, 0, 1) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sibling_cell_lockstep_sample_cannot_clear_anothers_divergence() {
+        // Core 0 leads two cells (widths 1 and 2). Cell w1 diverges and
+        // flags the core; cell w2's first post-shift sample blends recent
+        // and long in lockstep (fast weight) — ratio exactly 1 — which is
+        // evidence about w2 only and must NOT clear the core flag while
+        // w1 is still mid-shift.
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for _ in 0..20 {
+            ptt.update(0, 0, 1, 1.0);
+            ptt.update(0, 0, 2, 1.0);
+        }
+        assert!(!ptt.core_flagged(0));
+        ptt.update(0, 0, 1, 2.2); // w1 diverges (ratio 1.29)
+        assert!(ptt.core_flagged(0));
+        ptt.update(0, 0, 2, 2.2); // w2 lockstep: recent == long, ratio 1.0
+        assert!(
+            ptt.core_flagged(0),
+            "a sibling cell's ratio-1.0 sample cleared the core flag"
+        );
+        // Once w1 itself reconverges, the core unflags.
+        for _ in 0..10 {
+            ptt.update(0, 0, 1, 2.2);
+        }
+        assert!(!ptt.core_flagged(0));
+    }
+
+    #[test]
+    fn flags_are_per_core() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        steady(&ptt, 0, 1.0);
+        steady(&ptt, 3, 1.0);
+        for _ in 0..2 {
+            ptt.update(0, 3, 1, 4.0); // only core 3 shifts
+        }
+        assert!(ptt.core_flagged(3));
+        assert!(!ptt.core_flagged(0));
+        let flags = ptt.core_flags();
+        assert!(flags[3] && !flags[0]);
+        assert_eq!(ptt.n_flagged(), 1);
+    }
+
+    #[test]
+    fn best_global_avoiding_skips_flagged_and_falls_back() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        // Make (0,1) the unconstrained argmin.
+        for _ in 0..50 {
+            ptt.update(0, 0, 1, 0.01);
+        }
+        assert_eq!(ptt.best_global(0, &topo).0, Partition { leader: 0, width: 1 });
+        // Avoiding core 0 must pick a partition not touching it.
+        let (p, _) = ptt.best_global_avoiding(0, &topo, |c| c == 0).unwrap();
+        assert!(!p.contains(0), "{p:?}");
+        // Avoiding everything: no candidate survives.
+        assert!(ptt.best_global_avoiding(0, &topo, |_| true).is_none());
+    }
+
+    #[test]
+    fn best_in_cluster_avoiding_widens_but_stays_in_cluster() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        // Core 3 (a57): its enclosing-partition search can only lead from
+        // {3, 2}; the widened search may pick any a57 leader, e.g. 4.
+        for _ in 0..50 {
+            ptt.update(0, 4, 1, 0.01);
+        }
+        let (p, _) = ptt.best_in_cluster_avoiding(0, 3, &topo, |_| false).unwrap();
+        assert_eq!((p.leader, p.width), (4, 1));
+        assert_eq!(topo.cluster_of(p.leader).id, 1);
+        // Avoiding core 3 still yields a candidate elsewhere in the cluster.
+        let (p, _) = ptt.best_in_cluster_avoiding(0, 3, &topo, |c| c == 3).unwrap();
+        assert!(!p.contains(3));
+        // Avoiding the whole cluster: none.
+        assert!(
+            ptt.best_in_cluster_avoiding(0, 3, &topo, |c| topo.cluster_of(c).id == 1)
+                .is_none()
+        );
     }
 }

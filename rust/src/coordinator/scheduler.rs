@@ -86,6 +86,95 @@ impl Policy for PerformanceBased {
 }
 
 // ---------------------------------------------------------------------------
+// Adaptive performance-based scheduler (PTT v2 change-detector aware)
+// ---------------------------------------------------------------------------
+
+/// [`PerformanceBased`] plus the PTT v2 change detector: the same
+/// `time × width` searches, but placement reacts to *dynamic* heterogeneity
+/// the moment the detector flags it instead of waiting for the 4:1 average
+/// to re-learn.
+///
+/// - **Critical tasks** search globally *avoiding flagged cores* — a core
+///   whose recent behaviour diverged from its long-run average (an
+///   interferer arrived, DVFS kicked in, an episode ended) must not host
+///   the critical path while its estimates are stale. If every partition
+///   touches a flagged core the plain global search is the fallback: a
+///   fully flagged machine has no safe harbour.
+/// - **Non-critical tasks** normally keep the paper's cheap local width
+///   search; when the *deciding core itself* is flagged the search widens
+///   to the whole cluster (still never crossing it), restricted to
+///   partitions touching no flagged core — with the plain local search as
+///   the fallback when the entire cluster is flagged — so the task
+///   escapes the interfered core without paying the global search.
+///   Every [`PROBE_PERIOD`]th such decision stays local
+///   instead: a flagged core whose rows stop receiving samples could never
+///   reconverge (the flag would latch and the core would be exiled even
+///   after the episode ends), so a deterministic trickle of non-critical
+///   probes keeps the PTT fresh — the paper's own §5.3 recovery mechanism.
+///
+/// With no flags raised this policy makes exactly [`PerformanceBased`]'s
+/// decisions (the filtered searches degenerate to the plain ones), so it
+/// inherits the §3.3 exploration behaviour on untrained tables.
+#[derive(Debug)]
+pub struct PttAdaptive {
+    /// Per-core escape counters for the non-critical probe trickle — one
+    /// counter per *deciding* core, so every flagged core earns its own
+    /// probes regardless of how its decisions interleave with other
+    /// flagged cores' (a shared counter could park all probes on one core
+    /// under an adversarial interleaving and latch the other's flag).
+    /// Deterministic in the single-threaded sim; in real mode the exact
+    /// interleaving is timing-dependent like every other placement input.
+    probe: Vec<AtomicUsize>,
+}
+
+/// One in this many non-critical decisions on a flagged core stays local
+/// (see [`PttAdaptive`]): enough refresh traffic for the estimates to
+/// reconverge within a few sampling rounds, while ~75% of the work still
+/// escapes the interfered core immediately.
+pub const PROBE_PERIOD: usize = 4;
+
+impl PttAdaptive {
+    pub fn new(n_cores: usize) -> PttAdaptive {
+        PttAdaptive { probe: (0..n_cores).map(|_| AtomicUsize::new(0)).collect() }
+    }
+}
+
+impl Policy for PttAdaptive {
+    fn name(&self) -> &'static str {
+        "ptt-adaptive"
+    }
+
+    fn place(&self, ctx: &PlaceCtx<'_>) -> Partition {
+        let flagged = |c: crate::platform::CoreId| ctx.ptt.core_flagged(c);
+        if ctx.critical {
+            if let Some((p, _)) = ctx.ptt.best_global_avoiding(ctx.type_id, ctx.topo, flagged) {
+                return p;
+            }
+            ctx.ptt.best_global(ctx.type_id, ctx.topo).0
+        } else {
+            if ctx.ptt.core_flagged(ctx.core) {
+                // Counts 0..PERIOD-2 escape (the urgent case at an episode
+                // edge); every PERIOD-th stays as a local probe so the
+                // flagged core's rows keep learning.
+                let count = self.probe[ctx.core].fetch_add(1, Ordering::Relaxed);
+                let stay = count % PROBE_PERIOD == PROBE_PERIOD - 1;
+                if !stay {
+                    if let Some((p, _)) = ctx.ptt.best_in_cluster_avoiding(
+                        ctx.type_id,
+                        ctx.core,
+                        ctx.topo,
+                        flagged,
+                    ) {
+                        return p;
+                    }
+                }
+            }
+            ctx.ptt.best_width_for(ctx.type_id, ctx.core, ctx.topo).0
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Homogeneous random-work-stealing baseline
 // ---------------------------------------------------------------------------
 
@@ -272,12 +361,19 @@ pub struct PolicyInfo {
 /// The policy registry, in presentation order. [`policy_by_name`] resolves
 /// through this same table, so the CLI listing and the accepted names
 /// cannot drift.
-pub const POLICIES: [PolicyInfo; 5] = [
+pub const POLICIES: [PolicyInfo; 6] = [
     PolicyInfo {
         name: "performance-based",
         aliases: &["performance", "ptt"],
         description: "the paper's §3.3 scheduler: critical tasks search the PTT globally, \
                       non-critical tasks pick the best local width",
+    },
+    PolicyInfo {
+        name: "ptt-adaptive",
+        aliases: &["adaptive", "pttv2"],
+        description: "performance-based + PTT v2 change detection: critical tasks avoid \
+                      flagged (interfered) cores, non-critical tasks widen the local search \
+                      when their own core is flagged",
     },
     PolicyInfo {
         name: "homogeneous-ws",
@@ -316,6 +412,7 @@ pub fn policy_by_name(name: &str, n_cores: usize) -> Option<Box<dyn Policy>> {
         POLICIES.iter().find(|p| p.name == name || p.aliases.contains(&name))?.name;
     Some(match canonical {
         "performance-based" => Box::new(PerformanceBased),
+        "ptt-adaptive" => Box::new(PttAdaptive::new(n_cores)),
         "homogeneous-ws" => Box::new(HomogeneousWs),
         "cats-like" => Box::new(CatsLike::default()),
         "dheft-like" => Box::new(DheftLike::new(n_cores)),
@@ -483,6 +580,8 @@ mod tests {
     fn policy_by_name_resolves() {
         for (n, expect) in [
             ("performance", "performance-based"),
+            ("adaptive", "ptt-adaptive"),
+            ("pttv2", "ptt-adaptive"),
             ("homogeneous", "homogeneous-ws"),
             ("cats", "cats-like"),
             ("dheft", "dheft-like"),
@@ -491,6 +590,97 @@ mod tests {
             assert_eq!(policy_by_name(n, 4).unwrap().name(), expect);
         }
         assert!(policy_by_name("nope", 4).is_none());
+    }
+
+    #[test]
+    fn adaptive_matches_performance_based_without_flags() {
+        // With no flags raised the adaptive policy must make exactly the
+        // paper scheduler's decisions — both on a trained table and on a
+        // fresh (exploring) one.
+        let topo = tx2();
+        for train in [false, true] {
+            let ptt = Ptt::new(1, &topo);
+            if train {
+                for p in topo.all_partitions() {
+                    ptt.update(0, p.leader, p.width, 1.0);
+                }
+                for _ in 0..50 {
+                    ptt.update(0, 0, 2, 0.05);
+                }
+            }
+            assert_eq!(ptt.n_flagged(), 0);
+            let adaptive = PttAdaptive::new(topo.n_cores());
+            let plain = PerformanceBased;
+            for core in 0..topo.n_cores() {
+                for critical in [false, true] {
+                    let c = ctx(core, critical, &ptt, &topo);
+                    assert_eq!(
+                        adaptive.place(&c),
+                        plain.place(&c),
+                        "core {core} critical {critical} train {train}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_steers_critical_tasks_off_flagged_cores() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        // Denver core 0 is the clear unconstrained winner...
+        for _ in 0..50 {
+            ptt.update(0, 0, 1, 0.01);
+        }
+        assert_eq!(PerformanceBased.place(&ctx(5, true, &ptt, &topo)).leader, 0);
+        // ...until its behaviour shifts and the detector flags it. Two
+        // samples: the first raises the flag, the second sits inside the
+        // hysteresis dead band (fast re-learn clears it a few samples
+        // later — that reconvergence is pinned in the ptt tests).
+        for _ in 0..2 {
+            ptt.update(0, 0, 1, 0.05);
+        }
+        assert!(ptt.core_flagged(0), "5x shift must flag core 0");
+        let p = PttAdaptive::new(topo.n_cores()).place(&ctx(5, true, &ptt, &topo));
+        assert!(!p.contains(0), "critical task placed onto flagged core: {p:?}");
+        // The plain policy keeps trusting the (still attractive) stale row.
+        assert_eq!(PerformanceBased.place(&ctx(5, true, &ptt, &topo)).leader, 0);
+    }
+
+    #[test]
+    fn adaptive_noncritical_widens_off_its_flagged_core() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        // Flag core 2 (a57 cluster leader) via an abrupt shift (two
+        // samples: flag raised, then held inside the dead band).
+        for _ in 0..2 {
+            ptt.update(0, 2, 1, 5.0);
+        }
+        assert!(ptt.core_flagged(2));
+        let adaptive = PttAdaptive::new(topo.n_cores());
+        // A non-critical task deciding on the flagged core 2 escapes to an
+        // unflagged a57 partition — never to the denver cluster.
+        let p = adaptive.place(&ctx(2, false, &ptt, &topo));
+        assert!(!p.contains(2), "{p:?}");
+        assert_eq!(topo.cluster_of(p.leader).id, 1, "must stay in its cluster: {p:?}");
+        // Every PROBE_PERIODth decision stays local so the flagged rows
+        // keep learning (recovery depends on it): decisions 2 and 3 escape,
+        // decision 4 is the probe.
+        assert!(!adaptive.place(&ctx(2, false, &ptt, &topo)).contains(2));
+        assert!(!adaptive.place(&ctx(2, false, &ptt, &topo)).contains(2));
+        let probe = adaptive.place(&ctx(2, false, &ptt, &topo));
+        assert!(probe.contains(2), "4th decision must stay local as a probe: {probe:?}");
+        // Deciding on an unflagged core: identical to the plain local search.
+        assert_eq!(
+            adaptive.place(&ctx(4, false, &ptt, &topo)),
+            PerformanceBased.place(&ctx(4, false, &ptt, &topo))
+        );
     }
 
     #[test]

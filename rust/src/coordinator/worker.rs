@@ -76,12 +76,13 @@
 use super::aq::AssemblyQueue;
 use super::core::{AdmissionSource, CommitInfo, SchedCore};
 use super::dag::{TaoDag, TaskId};
+use super::episodes_rt::EpisodeDriver;
 use super::inbox::Inbox;
 use super::metrics::{RunResult, TraceRecord, sort_by_commit};
 use super::ptt::Ptt;
 use super::scheduler::Policy;
 use super::wsq::WsQueue;
-use crate::platform::Topology;
+use crate::platform::{EpisodeSchedule, Topology};
 use crate::util::Pcg32;
 use crossbeam_utils::CachePadded;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering, fence};
@@ -100,6 +101,12 @@ pub struct RealEngineOpts {
     /// damage of a protocol bug; tests stretch it to prove the handshake
     /// (not the timeout) delivers admissions.
     pub park_timeout: Duration,
+    /// Dynamic-heterogeneity episodes realized in wall-clock time by the
+    /// [`EpisodeDriver`]: interference episodes spawn background spinner
+    /// threads, and shares on affected cores are duty-cycle throttled so
+    /// the leader's own PTT observation sees the slowdown (empty = none;
+    /// `exec::RealBackend` fills this from the platform scenario).
+    pub episodes: EpisodeSchedule,
 }
 
 impl Default for RealEngineOpts {
@@ -108,6 +115,7 @@ impl Default for RealEngineOpts {
             pin_threads: false,
             seed: 0x7a0,
             park_timeout: Duration::from_millis(1),
+            episodes: EpisodeSchedule::default(),
         }
     }
 }
@@ -167,6 +175,10 @@ struct Shared<'a> {
     n_parked: AtomicUsize,
     /// Park backstop period (see [`RealEngineOpts::park_timeout`]).
     park_timeout: Duration,
+    /// Wall-clock realization of the platform's episode schedule
+    /// ([`super::episodes_rt`]): duty-cycle throttling of shares on
+    /// affected cores; inert when the schedule is empty.
+    episodes: EpisodeDriver,
     /// Run-termination flag, observed by the worker loops. Set by the
     /// worker whose commit the core reports as the run's last.
     done: AtomicBool,
@@ -292,6 +304,13 @@ impl<'a> Shared<'a> {
         let t_start = self.now();
         if let Some(p) = &node.payload {
             p.execute(rank, inst.partition.width);
+        }
+        // Realize dynamic heterogeneity: a share on an episode-affected
+        // core is stretched *before* t_end is taken, so the leader's own
+        // timing — the only PTT write — observes the slowdown exactly as
+        // it would observe a genuinely slower core.
+        if self.episodes.is_active() {
+            self.episodes.throttle_share(core, t_start, || self.now());
         }
         let t_end = self.now();
         if is_leader {
@@ -460,6 +479,15 @@ fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32, sink: &mut Vec<
 /// to wire OS affinity back in.
 fn pin_to_cpu(_cpu: usize) {}
 
+/// Whether [`pin_to_cpu`] actually pins on this build. The episode driver
+/// keys its interference-throttle rule off this: with real pinning, a
+/// pinned background spinner takes its CPU share by itself and the
+/// duty-cycle stretch must not be applied on top (it would square the
+/// slowdown — see `episodes_rt`). Flip together with `pin_to_cpu`.
+fn pinning_available() -> bool {
+    false
+}
+
 /// Execute `dag` with `policy` on `topo.n_cores()` worker threads.
 ///
 /// The PTT is created fresh unless `ptt` is provided (warm-started PTTs let
@@ -515,6 +543,13 @@ pub fn run_stream_real(
         parkers: (0..topo.n_cores()).map(|_| CachePadded::new(Parker::default())).collect(),
         n_parked: AtomicUsize::new(0),
         park_timeout: opts.park_timeout,
+        // Interference episodes are throttled only while spinners cannot
+        // be genuinely pinned — with real affinity the pinned spinner IS
+        // the share realization and throttling too would double-count.
+        episodes: EpisodeDriver::with_interference_throttle(
+            opts.episodes.clone(),
+            !(pinning_available() && opts.pin_threads),
+        ),
         done: AtomicBool::new(false),
         t0: Instant::now(),
     };
@@ -532,6 +567,17 @@ pub fn run_stream_real(
     let mut root_rng = Pcg32::seeded(opts.seed);
     let online = crate::platform::detect::online_cpus();
     std::thread::scope(|s| {
+        // Background interferers first (they nap until their window): one
+        // spinner per (interference episode × affected core), best-effort
+        // pinned like the workers, stopped early by the run's `done` flag.
+        if shared.episodes.is_active() {
+            let pin_threads = opts.pin_threads;
+            shared.episodes.spawn_spinners(s, shared.t0, &shared.done, move |c| {
+                if pin_threads {
+                    pin_to_cpu(c % online);
+                }
+            });
+        }
         for (core, shard) in trace_shards.iter_mut().enumerate() {
             let rng = root_rng.split(core as u64);
             let shared = &shared;
@@ -709,5 +755,79 @@ mod tests {
         assert_eq!(res.n_tasks(), 10);
         assert_eq!(hits.load(Ordering::SeqCst), 10);
         assert!(res.makespan > 0.0);
+    }
+
+    #[test]
+    fn dvfs_episode_throttles_affected_core_in_wall_clock() {
+        // Core 0 runs at 20% speed for the whole run; payloads *sleep* (a
+        // wall-clock cost immune to host CPU contention), so the throttle
+        // stretch is the only per-core asymmetry. Shares led by core 0
+        // must take several times longer than shares led by core 1.
+        let topo = Topology::homogeneous(2);
+        let mut d = TaoDag::new();
+        for _ in 0..16 {
+            d.add_task_payload(
+                KernelClass::MatMul,
+                0,
+                1.0,
+                Some(payload_fn(KernelClass::MatMul, |_r, _w| {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                })),
+            );
+        }
+        d.finalize().unwrap();
+        let opts = RealEngineOpts {
+            episodes: EpisodeSchedule::new(vec![crate::platform::Episode::dvfs(
+                vec![0],
+                0.0,
+                1e9,
+                0.2,
+            )]),
+            ..Default::default()
+        };
+        let res = run_dag_real(&d, &topo, &HomogeneousWs, None, &opts);
+        assert_eq!(res.n_tasks(), 16);
+        let mean_on = |leader: usize| -> f64 {
+            let v: Vec<f64> = res
+                .records
+                .iter()
+                .filter(|r| r.partition.leader == leader)
+                .map(|r| r.exec_time())
+                .collect();
+            assert!(!v.is_empty(), "no shares led by core {leader}");
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        let (m0, m1) = (mean_on(0), mean_on(1));
+        // 2 ms stretched by 5x vs 2 ms plain: expect ~5x, assert > 2x to
+        // stay robust on noisy shared runners.
+        assert!(m0 > 2.0 * m1, "throttled core not slower: {m0} vs {m1}");
+    }
+
+    #[test]
+    fn run_ending_before_interference_window_does_not_hang_on_spinners() {
+        // An interference episode far in the future spawns spinners that
+        // nap until their window; the run drains in milliseconds and the
+        // `done` flag must release them — the scoped join cannot wait for
+        // the window to open.
+        let topo = Topology::homogeneous(2);
+        let (dag, _) = counting_dag(8, false);
+        let opts = RealEngineOpts {
+            episodes: EpisodeSchedule::new(vec![crate::platform::Episode::interference(
+                vec![0, 1],
+                30.0,
+                60.0,
+                0.5,
+                0.0,
+            )]),
+            ..Default::default()
+        };
+        let t = Instant::now();
+        let res = run_dag_real(&dag, &topo, &HomogeneousWs, None, &opts);
+        assert_eq!(res.n_tasks(), 8);
+        assert!(
+            t.elapsed() < Duration::from_secs(10),
+            "spinners outlived the run: {:?}",
+            t.elapsed()
+        );
     }
 }

@@ -204,7 +204,7 @@ impl ExecutionBackend for SimBackend {
             plat,
             policy,
             ptt,
-            &SimOpts { seed: opts.seed, ptt_probe: opts.ptt_probe },
+            &SimOpts { seed: opts.seed, ptt_probe: opts.ptt_probe, ..Default::default() },
         );
         let mut result = run.result;
         if !opts.trace {
@@ -228,7 +228,7 @@ impl ExecutionBackend for SimBackend {
             plat,
             policy,
             ptt,
-            &SimOpts { seed: opts.seed, ptt_probe: opts.ptt_probe },
+            &SimOpts { seed: opts.seed, ptt_probe: opts.ptt_probe, ..Default::default() },
         );
         let mut result = run.result;
         if !opts.trace {
@@ -239,8 +239,10 @@ impl ExecutionBackend for SimBackend {
 }
 
 /// Real worker threads on the host ([`run_dag_real`]) — wall time. Uses
-/// only the platform's topology; the performance model and episodes are
-/// ignored (the host *is* the model).
+/// the platform's topology and **episode schedule** (realized in wall
+/// clock by `coordinator::episodes_rt`: interference episodes spawn
+/// background spinner threads, affected cores are duty-cycle throttled);
+/// the analytic performance model is ignored (the host *is* the model).
 #[derive(Debug, Default)]
 pub struct RealBackend;
 
@@ -262,7 +264,12 @@ impl ExecutionBackend for RealBackend {
             &plat.topo,
             policy,
             ptt,
-            &RealEngineOpts { pin_threads: opts.pin_threads, seed: opts.seed, ..Default::default() },
+            &RealEngineOpts {
+                pin_threads: opts.pin_threads,
+                seed: opts.seed,
+                episodes: plat.episodes.clone(),
+                ..Default::default()
+            },
         );
         if !opts.trace {
             result.records.clear();
@@ -285,7 +292,12 @@ impl ExecutionBackend for RealBackend {
             &plat.topo,
             policy,
             ptt,
-            &RealEngineOpts { pin_threads: opts.pin_threads, seed: opts.seed, ..Default::default() },
+            &RealEngineOpts {
+                pin_threads: opts.pin_threads,
+                seed: opts.seed,
+                episodes: plat.episodes.clone(),
+                ..Default::default()
+            },
         );
         if !opts.trace {
             result.records.clear();

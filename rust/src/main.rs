@@ -49,6 +49,7 @@ fn main() {
         }
         "run-dag" => cmd_run_dag(&args),
         "bench-overhead" => cmd_bench_overhead(&args),
+        "bench-interference" => cmd_bench_interference(&args),
         "stream" => cmd_stream(&args),
         "vgg16" => cmd_vgg16(&args),
         "vgg16-infer" => cmd_vgg16_infer(&args),
@@ -91,6 +92,12 @@ perf:       bench-overhead [--quick] [--json] [--compare]
             (lock-free hot-path overhead; --json writes
              BENCH_sched_overhead.json at the repo root, --compare prints
              the mutex-vs-lockfree speedup)
+            bench-interference [--quick] [--json] [--backend sim|real|both]
+            [--scenario interference20] [--seed S]
+            (the §5.3 dynamic-heterogeneity response: per-interval PTT
+             values, change-detector flags and critical placements on the
+             interfered cores, ptt vs ptt-adaptive, both backends; --json
+             writes BENCH_interference_response.json at the repo root)
 
 vgg:        vgg16 [--threads N] [--repeats R] [--block-len B] [--policy ...]
             vgg16-infer [--mode pipeline|whole|dag|validate] [--hw 64]
@@ -254,6 +261,35 @@ fn cmd_bench_overhead(args: &Args) -> i32 {
         );
         return 1;
     }
+    0
+}
+
+fn cmd_bench_interference(args: &Args) -> i32 {
+    let backend = args.get_str("backend", "both");
+    if !["sim", "real", "both"].contains(&backend.as_str()) {
+        eprintln!("unknown backend '{backend}' (sim|real|both)");
+        return 2;
+    }
+    let scenario = args.get_str("scenario", "interference20");
+    let plat = match scenarios::by_name(&scenario) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown platform scenario '{scenario}'");
+            return 2;
+        }
+    };
+    if plat.episodes.is_empty() {
+        eprintln!("scenario '{scenario}' has no episodes — nothing to respond to");
+        return 2;
+    }
+    let opts = xitao::bench::InterferenceOpts {
+        quick: args.switch("quick"),
+        json: args.switch("json"),
+        backend,
+        scenario,
+        seed: args.get("seed", 7),
+    };
+    xitao::bench::emit_interference(&opts);
     0
 }
 

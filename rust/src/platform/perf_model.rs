@@ -19,7 +19,9 @@
 //!
 //! All figure reproductions rest on this model; the constants below are
 //! calibrated to published Denver2/A57 micro-benchmarks and to the paper's
-//! reported speedups (see DESIGN.md §Substitutions and EXPERIMENTS.md).
+//! reported speedups (see DESIGN.md §Substitutions, and EXPERIMENTS.md
+//! §Calibration at the repository root for the full constant tables and
+//! the interference-response measurement protocol they feed).
 
 use super::episodes::EpisodeSchedule;
 use super::topology::{Partition, Topology};

@@ -22,9 +22,15 @@
 //!   (the last one adds a heavy 0.05–0.45 s squeeze of cores 0–1).
 //!
 //! The dynamic `hom<N>` family (N homogeneous cores) is also resolved by
-//! [`by_name`] for arbitrary N ≥ 1. Episode schedules only influence the
-//! simulated backend; the real-thread backend executes on the host and sees
-//! whatever dynamic behaviour the host actually has.
+//! [`by_name`] for arbitrary N ≥ 1. Episode schedules drive **both**
+//! backends: the simulator interprets them analytically in virtual time,
+//! and the real-thread engine realizes the same schedule in wall clock
+//! (`coordinator::episodes_rt` — background spinner threads for
+//! interference plus per-core duty-cycle throttling), so a scenario like
+//! `interference20` produces a comparable response shape on either
+//! substrate. Keep episode windows short enough for a real run to span
+//! them — a wall-clock run that drains early simply never sees the
+//! episode.
 
 use super::episodes::{Episode, EpisodeSchedule};
 use super::perf_model::Platform;

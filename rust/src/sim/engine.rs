@@ -60,12 +60,31 @@ pub struct SimOpts {
     /// If set, sample the PTT entry `(type_id, core, width)` after every
     /// simulation event — reproduces the PTT-value trace of Fig 8(a).
     pub ptt_probe: Option<(usize, usize, usize)>,
+    /// If set, snapshot the full per-core PTT state (type-0 width-1
+    /// long-run values + change-detector flags) once virtual time crosses
+    /// each multiple of the given interval — the §5.3 interference-response
+    /// time series (`bench-interference`). Sampling only *reads* the PTT
+    /// (no rng draws, no scheduling effect), so it cannot perturb the
+    /// run's bit-for-bit determinism.
+    pub probe_interval: Option<f64>,
 }
 
 impl Default for SimOpts {
     fn default() -> Self {
-        SimOpts { seed: 0x51b, ptt_probe: None }
+        SimOpts { seed: 0x51b, ptt_probe: None, probe_interval: None }
     }
+}
+
+/// One interval snapshot of the PTT's per-core state (see
+/// [`SimOpts::probe_interval`]).
+#[derive(Debug, Clone)]
+pub struct PttIntervalSample {
+    /// Virtual time of the event that crossed the interval boundary.
+    pub t: f64,
+    /// Long-run width-1 estimate of PTT type 0 for every core.
+    pub w1: Vec<f64>,
+    /// Change-detector flag of every core ([`Ptt::core_flags`]).
+    pub flags: Vec<bool>,
 }
 
 /// Result of a simulated run: the usual [`RunResult`] plus probe samples.
@@ -74,6 +93,8 @@ pub struct SimRun {
     pub result: RunResult,
     /// `(virtual time, PTT value)` samples if a probe was configured.
     pub ptt_samples: Vec<(f64, f64)>,
+    /// Interval snapshots if [`SimOpts::probe_interval`] was configured.
+    pub interval_samples: Vec<PttIntervalSample>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -124,6 +145,9 @@ struct Sim<'a> {
     rng: Pcg32,
     probe: Option<(usize, usize, usize)>,
     samples: Vec<(f64, f64)>,
+    /// Interval-snapshot state: `(interval, next boundary to cross)`.
+    interval_probe: Option<(f64, f64)>,
+    interval_samples: Vec<PttIntervalSample>,
     /// Reusable rate-snapshot buffer (avoids per-event allocation).
     snapshot_buf: Vec<RunningTask>,
     /// Reusable completion buffer.
@@ -143,6 +167,22 @@ impl<'a> Sim<'a> {
     fn sample_probe(&mut self) {
         if let Some((ty, c, w)) = self.probe {
             self.samples.push((self.t, self.core.ptt().read(ty, c, w)));
+        }
+        if let Some((interval, next)) = self.interval_probe {
+            // Snapshot once per crossed boundary (catching up over long
+            // event gaps with one sample per boundary keeps the series
+            // aligned with wall-style periodic sampling).
+            let mut next = next;
+            while self.t >= next {
+                let ptt = self.core.ptt();
+                self.interval_samples.push(PttIntervalSample {
+                    t: self.t,
+                    w1: (0..self.plat.topo.n_cores()).map(|c| ptt.read(0, c, 1)).collect(),
+                    flags: ptt.core_flags(),
+                });
+                next += interval;
+            }
+            self.interval_probe = Some((interval, next));
         }
     }
 
@@ -441,6 +481,11 @@ pub fn run_stream_sim(
         rng: Pcg32::seeded(opts.seed),
         probe: opts.ptt_probe,
         samples: Vec::new(),
+        interval_probe: opts.probe_interval.map(|iv| {
+            assert!(iv > 0.0, "probe interval must be positive");
+            (iv, iv)
+        }),
+        interval_samples: Vec::new(),
         snapshot_buf: Vec::with_capacity(n),
         done_buf: Vec::with_capacity(n),
         order_buf: Vec::with_capacity(n),
@@ -482,6 +527,7 @@ pub fn run_stream_sim(
             records,
         },
         ptt_samples: sim.samples,
+        interval_samples: sim.interval_samples,
     }
 }
 
@@ -587,6 +633,27 @@ mod tests {
         for w in run.ptt_samples.windows(2) {
             assert!(w[1].0 >= w[0].0);
         }
+    }
+
+    #[test]
+    fn interval_probe_snapshots_per_core_state() {
+        let plat = Platform::tx2();
+        let dag = independent_dag(80, KernelClass::MatMul);
+        let opts = SimOpts { probe_interval: Some(0.005), ..Default::default() };
+        let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &opts);
+        assert!(!run.interval_samples.is_empty());
+        for s in &run.interval_samples {
+            assert_eq!(s.w1.len(), 6);
+            assert_eq!(s.flags.len(), 6);
+        }
+        for w in run.interval_samples.windows(2) {
+            assert!(w[1].t >= w[0].t);
+        }
+        // Off by default: existing callers see no samples and identical
+        // runs (the probe only reads).
+        let plain = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default());
+        assert!(plain.interval_samples.is_empty());
+        assert_eq!(plain.result.makespan.to_bits(), run.result.makespan.to_bits());
     }
 
     #[test]

@@ -87,6 +87,56 @@ fn bench_overhead_quick_compare_exits_zero() {
 }
 
 #[test]
+fn policies_command_lists_ptt_adaptive() {
+    // The PTT v2 policy must be registered and advertised: `repro policies`
+    // names it with its aliases (the §5.3 response bench selects it by
+    // this name).
+    let out = repro().arg("policies").output().expect("spawn repro");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("ptt-adaptive"), "{text}");
+    assert!(text.contains("aliases: adaptive, pttv2"), "{text}");
+}
+
+#[test]
+fn bench_interference_quick_exits_zero() {
+    // Sim backend only: the smoke pins the harness wiring (series +
+    // summary table), not the wall-clock real engine (CI runs that in a
+    // dedicated step; the shape itself is asserted in
+    // tests/interference_response.rs).
+    let out = repro()
+        .args(["bench-interference", "--quick", "--backend", "sim"])
+        .output()
+        .expect("spawn repro");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Interference response"), "{text}");
+    assert!(text.contains("ptt-adaptive"), "{text}");
+    assert!(text.contains("performance-based"), "{text}");
+    assert!(text.contains("during"), "{text}");
+}
+
+#[test]
+fn bench_interference_rejects_bad_backend_and_scenario() {
+    let st = repro()
+        .args(["bench-interference", "--quick", "--backend", "quantum"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+    let st = repro()
+        .args(["bench-interference", "--quick", "--scenario", "nope"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+    // A scenario without episodes has no response to measure.
+    let st = repro()
+        .args(["bench-interference", "--quick", "--scenario", "hom4"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+}
+
+#[test]
 fn run_dag_rejects_unknown_backend_and_platform() {
     let st = repro()
         .args(["run-dag", "--quick", "--backend", "quantum"])

@@ -1,0 +1,231 @@
+//! Interference-response shape regressions (§5.3, both PTT generations)
+//! plus the coincident-boundary determinism pin.
+//!
+//! These tests assert *shapes*, never exact values: on the deterministic
+//! sim backend, the `ptt-adaptive` policy must cut critical-task
+//! placements on the interfered cores during the episode and recover after
+//! it ends, while the plain 4:1 `performance-based` policy lags behind;
+//! the change detector must actually fire on the victims. The committed
+//! `BENCH_interference_response.json` is checked for schema, not numbers
+//! (it starts life as a seed estimate; CI regenerates it with measured
+//! series).
+
+use xitao::bench::interference_response::SAMPLE_INTERVAL;
+use xitao::bench::overhead::repo_root_file;
+use xitao::bench::{InterferenceOpts, ResponseRun, run_response};
+use xitao::coordinator::scheduler::policy_by_name;
+use xitao::dag_gen::DagParams;
+use xitao::platform::{Episode, EpisodeSchedule, Platform, scenarios};
+use xitao::sim::{SimOpts, run_stream_sim};
+use xitao::util::json::Json;
+use xitao::workload::{AppSpec, WorkloadStream};
+
+fn quick() -> InterferenceOpts {
+    InterferenceOpts { quick: true, ..Default::default() }
+}
+
+fn sim_run(policy: &str) -> ResponseRun {
+    run_response("sim", "interference20", policy, &quick())
+}
+
+#[test]
+fn adaptive_cuts_victim_placements_during_episode_and_recovers() {
+    let adaptive = sim_run("ptt-adaptive");
+    let plain = sim_run("performance-based");
+    let (_, window) = {
+        let plat = scenarios::by_name("interference20").unwrap();
+        xitao::bench::interference_response::victims_and_window(&plat)
+    };
+    // The workload must span the whole episode plus a recovery tail.
+    for r in [&adaptive, &plain] {
+        assert!(
+            r.makespan > window.1 + 0.05,
+            "{}: run too short ({}) to span the episode ending at {}",
+            r.policy,
+            r.makespan,
+            window.1
+        );
+        assert!(r.pre.n_crit > 0, "{}: no critical tasks pre-episode", r.policy);
+        assert!(r.during.n_crit > 0, "{}: no critical tasks during episode", r.policy);
+        assert!(r.post.n_crit > 0, "{}: no critical tasks post-episode", r.policy);
+        assert!(!r.points.is_empty());
+    }
+    // The change detector fired on the victims for the adaptive run.
+    assert!(
+        adaptive.peak_victims_flagged >= 1,
+        "change detector never flagged a victim core"
+    );
+    // The cut: during the episode the adaptive policy's critical share on
+    // victim cores drops below its own pre-episode share...
+    assert!(
+        adaptive.during.share() < adaptive.pre.share(),
+        "no cut: pre {:.3} (n={}) vs during {:.3} (n={})",
+        adaptive.pre.share(),
+        adaptive.pre.n_crit,
+        adaptive.during.share(),
+        adaptive.during.n_crit
+    );
+    // ...and the recovery: after the episode the victims are ordinary
+    // cores again and critical work returns to them.
+    assert!(
+        adaptive.post.share() > adaptive.during.share(),
+        "no recovery: during {:.3} vs post {:.3}",
+        adaptive.during.share(),
+        adaptive.post.share()
+    );
+    assert!(adaptive.post.on_victims > 0, "critical tasks never returned to the victims");
+    // The lag. Both policies read the same v2 table (fast re-learn is a
+    // property of the PTT itself), so the difference under test is pure
+    // *placement*: the flag-blind policy keeps trusting each victim cell
+    // until that cell individually re-learns — and keeps exploring
+    // untrained victim cells mid-episode — while the adaptive policy
+    // steers off the whole core the moment the detector fires.
+    assert!(
+        plain.during.on_victims > adaptive.during.on_victims,
+        "plain ptt must lag the adaptive policy: plain {} vs adaptive {} victim \
+         placements during the episode",
+        plain.during.on_victims,
+        adaptive.during.on_victims
+    );
+}
+
+#[test]
+fn response_series_is_bit_for_bit_deterministic() {
+    let a = sim_run("ptt-adaptive");
+    let b = sim_run("ptt-adaptive");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.n_tasks, b.n_tasks);
+    assert_eq!(a.points.len(), b.points.len());
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.t.to_bits(), y.t.to_bits());
+        assert_eq!(x.victim_w1.to_bits(), y.victim_w1.to_bits());
+        assert_eq!(x.other_w1.to_bits(), y.other_w1.to_bits());
+        assert_eq!(x.victims_flagged, y.victims_flagged);
+        assert_eq!(x.crit_victims, y.crit_victims);
+        assert_eq!(x.crit_other, y.crit_other);
+        assert_eq!(x.tasks, y.tasks);
+    }
+    assert_eq!(a.peak_victims_flagged, b.peak_victims_flagged);
+}
+
+#[test]
+fn series_intervals_cover_the_run() {
+    let r = sim_run("ptt-adaptive");
+    let expected = (r.makespan / SAMPLE_INTERVAL).ceil() as usize;
+    assert!(
+        r.points.len() >= expected,
+        "series has {} intervals, run needs {expected}",
+        r.points.len()
+    );
+    let placed: usize = r.points.iter().map(|p| p.tasks).sum();
+    assert_eq!(placed, r.n_tasks, "every record lands in exactly one interval");
+}
+
+/// Determinism pin for coincident boundaries: an episode edge and a stream
+/// arrival at the *same* virtual timestamp must re-rate running TAOs in a
+/// stable order — two seeds × two policies, makespans compared bit for bit
+/// across repeated runs, traces field by field.
+#[test]
+fn coincident_episode_edge_and_arrival_is_deterministic() {
+    let plat = Platform::homogeneous(4).with_episodes(EpisodeSchedule::new(vec![
+        Episode::dvfs(vec![0, 1], 0.1, 0.3, 0.4),
+    ]));
+    for policy_name in ["performance-based", "ptt-adaptive"] {
+        for seed in [3u64, 11] {
+            // App "late" arrives exactly at the episode's start edge (0.1):
+            // the DES sees two events at one timestamp and must order the
+            // re-rates stably.
+            let stream = WorkloadStream::fixed(
+                vec![
+                    AppSpec::new("fg", DagParams::mix(800, 4.0, seed), 0.0),
+                    AppSpec::new("late", DagParams::mix(200, 4.0, seed ^ 0xA5), 0.1),
+                ],
+                seed,
+            );
+            let multi = stream.build();
+            let run = || {
+                let policy = policy_by_name(policy_name, plat.topo.n_cores()).unwrap();
+                run_stream_sim(
+                    &multi.dag,
+                    &multi.app_of,
+                    &multi.admissions(),
+                    &plat,
+                    policy.as_ref(),
+                    None,
+                    &SimOpts { seed, ..Default::default() },
+                )
+            };
+            let a = run();
+            let b = run();
+            assert!(
+                a.result.makespan > 0.1,
+                "{policy_name}/{seed}: run must still be live at the coincident edge"
+            );
+            assert_eq!(
+                a.result.makespan.to_bits(),
+                b.result.makespan.to_bits(),
+                "{policy_name}/{seed}: makespan bits differ"
+            );
+            assert_eq!(a.result.records.len(), b.result.records.len());
+            for (x, y) in a.result.records.iter().zip(&b.result.records) {
+                assert_eq!(x.task, y.task, "{policy_name}/{seed}");
+                assert_eq!(x.partition, y.partition, "{policy_name}/{seed}");
+                assert_eq!(x.critical, y.critical, "{policy_name}/{seed}");
+                assert_eq!(x.t_start.to_bits(), y.t_start.to_bits(), "{policy_name}/{seed}");
+                assert_eq!(x.t_end.to_bits(), y.t_end.to_bits(), "{policy_name}/{seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn committed_series_json_matches_schema() {
+    let path = repo_root_file("BENCH_interference_response.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing committed {}: {e}", path.display()));
+    let j = Json::parse(&text).expect("committed series must parse");
+    assert_eq!(j.get("bench").and_then(Json::as_str), Some("interference_response"));
+    assert_eq!(j.get("schema").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(j.get("scenario").and_then(Json::as_str), Some("interference20"));
+    assert!(j.get("provenance").and_then(Json::as_str).is_some());
+    let victims = j.get("victims").and_then(Json::as_arr).expect("victims array");
+    assert!(!victims.is_empty());
+    let window = j.get("window").and_then(Json::as_arr).expect("window array");
+    assert_eq!(window.len(), 2);
+    let runs = j.get("runs").and_then(Json::as_arr).expect("runs array");
+    // One entry per backend × policy; both policies present on the sim
+    // backend at minimum.
+    let mut sim_policies: Vec<&str> = runs
+        .iter()
+        .filter(|r| r.get("backend").and_then(Json::as_str) == Some("sim"))
+        .filter_map(|r| r.get("policy").and_then(Json::as_str))
+        .collect();
+    sim_policies.sort_unstable();
+    assert_eq!(sim_policies, vec!["performance-based", "ptt-adaptive"]);
+    for r in runs {
+        assert!(r.get("makespan").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+        for phase in ["pre", "during", "post"] {
+            let p = r
+                .get("summary")
+                .and_then(|s| s.get(phase))
+                .unwrap_or_else(|| panic!("missing summary.{phase}"));
+            assert!(p.get("n_crit").is_some() && p.get("share").is_some());
+        }
+        let series = r.get("series").and_then(Json::as_arr).expect("series array");
+        assert!(!series.is_empty());
+        let fields = [
+            "t",
+            "victim_w1",
+            "other_w1",
+            "victims_flagged",
+            "crit_victims",
+            "crit_other",
+            "tasks",
+        ];
+        for pt in series {
+            for field in fields {
+                assert!(pt.get(field).is_some(), "series point missing '{field}'");
+            }
+        }
+    }
+}
