@@ -1,0 +1,18 @@
+//! `cargo bench --bench serving` — the continuous multi-tenant serving
+//! ramp, full scale.
+//!
+//! Delegates to the same harness as `repro bench-serving`
+//! (`xitao::bench::serving`), so the two measurement paths cannot drift:
+//! per-step sustained admissions/sec, p99 slowdown over admitted apps,
+//! per-QoS-class SLO attainment and the fairness loop's Jain index, as the
+//! tenant count ramps under a fixed per-tenant arrival rate. Set
+//! `BENCH_QUICK=1` for the CI smoke scale.
+//!
+//! Results feed EXPERIMENTS.md §Serving mode and `BENCH_serving.json`.
+
+use xitao::bench::{ServingBenchOpts, emit_serving};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    emit_serving(&ServingBenchOpts { quick, ..Default::default() });
+}

@@ -7,6 +7,7 @@
 pub mod figures;
 pub mod interference_response;
 pub mod overhead;
+pub mod serving;
 
 pub use figures::{
     BenchOpts, ablation_baselines, ablation_energy, ablation_ptt, emit, fig5, fig6, fig7, fig8,
@@ -17,3 +18,4 @@ pub use interference_response::{
     run_response,
 };
 pub use overhead::{OverheadOpts, OverheadRun, emit_overhead, run_overhead};
+pub use serving::{RATE_PER_TENANT, ServingBenchOpts, ServingStep, emit_serving, run_serving_bench};

@@ -1,0 +1,266 @@
+//! Serving-mode harness (`repro bench-serving`) — the continuous
+//! multi-tenant analysis: what the scheduler sustains when the work never
+//! drains.
+//!
+//! Each step of the **tenant ramp** builds an open-loop
+//! [`ServingStream`] whose offered load grows with the tenant count
+//! (fixed per-tenant arrival rate, QoS classes assigned round-robin over
+//! latency/batch/besteffort), runs one bounded serving window through
+//! [`run_serving_triple`] on the simulated backend with per-app isolated
+//! baselines, and reports:
+//!
+//! - sustained **admissions/sec** vs the offered rate;
+//! - **p99 slowdown** over the admitted apps;
+//! - per-class **SLO attainment** ([`QosClass::slo_slowdown`]);
+//! - the fairness loop's final **Jain index**;
+//! - the backpressure counters (delays and sheds per class) and the lane
+//!   high-water mark, so a ramp step that sheds is visible as such.
+//!
+//! The sim backend keeps the ramp deterministic for a fixed seed and
+//! independent of host load; `tests/serving.rs` soaks the real engine.
+//! `--json` writes `BENCH_serving.json` at the repository root.
+
+use crate::coordinator::QosClass;
+use crate::coordinator::core::ServingOpts;
+use crate::dag_gen::DagParams;
+use crate::exec::{RunOpts, ServingReport, run_serving_triple};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workload::{ServingStream, TenantSpec};
+
+/// Harness options.
+#[derive(Debug, Clone)]
+pub struct ServingBenchOpts {
+    /// CI smoke scale: shorter window, smaller ramp, fewer tasks per app.
+    pub quick: bool,
+    /// Write `BENCH_serving.json` at the repository root.
+    pub json: bool,
+    /// Platform scenario the serving window runs on.
+    pub scenario: String,
+    /// Scheduling policy under test.
+    pub policy: String,
+    /// Seed of the arrival process (tenant mix and instance DAGs derive
+    /// their own sub-seeds from it).
+    pub seed: u64,
+}
+
+impl Default for ServingBenchOpts {
+    fn default() -> Self {
+        ServingBenchOpts {
+            quick: false,
+            json: false,
+            scenario: "hom4".to_string(),
+            policy: "ptt-serving".to_string(),
+            seed: 11,
+        }
+    }
+}
+
+/// Offered arrival rate per tenant (admissions/sec) — total offered load
+/// of a ramp step is `RATE_PER_TENANT * tenants`.
+pub const RATE_PER_TENANT: f64 = 15.0;
+
+/// One measured step of the tenant ramp.
+#[derive(Debug)]
+pub struct ServingStep {
+    /// Tenant count of this step.
+    pub tenants: usize,
+    /// Total offered arrival rate (admissions/sec).
+    pub rate: f64,
+    /// The full serving report (counters, per-app metrics, fairness).
+    pub report: ServingReport,
+}
+
+/// Build the ramp step's tenant mix: QoS classes round-robin over
+/// [`QosClass::ALL`], workload sizes staggered so tenants are not clones
+/// of each other.
+pub fn ramp_tenants(n: usize, quick: bool, seed: u64) -> Vec<TenantSpec> {
+    (0..n)
+        .map(|i| {
+            let qos = QosClass::ALL[i % QosClass::ALL.len()];
+            let base = if quick { 8 } else { 14 };
+            let n_tasks = base + 4 * (i % 3);
+            let params = DagParams::mix(n_tasks, 2.0 + (i % 2) as f64, seed ^ (i as u64 + 1));
+            TenantSpec::new(format!("tenant{i}"), params, qos)
+        })
+        .collect()
+}
+
+/// Run the tenant ramp. Panics on unknown scenario/policy names (the CLI
+/// validates first; `run_serving_triple` reports them as errors).
+pub fn run_serving_bench(opts: &ServingBenchOpts) -> Vec<ServingStep> {
+    let ramp: &[usize] = if opts.quick { &[2, 4] } else { &[2, 4, 8] };
+    let horizon = if opts.quick { 0.5 } else { 2.0 };
+    let serving = ServingOpts::default();
+    ramp.iter()
+        .map(|&tenants| {
+            let rate = RATE_PER_TENANT * tenants as f64;
+            let stream =
+                ServingStream::new(ramp_tenants(tenants, opts.quick, opts.seed), rate, opts.seed);
+            let report = run_serving_triple(
+                "sim",
+                &opts.scenario,
+                &opts.policy,
+                &stream,
+                horizon,
+                &RunOpts { seed: opts.seed, trace: false, ..Default::default() },
+                &serving,
+                true,
+            )
+            .unwrap_or_else(|e| panic!("serving ramp step failed: {e}"));
+            ServingStep { tenants, rate, report }
+        })
+        .collect()
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+fn counters_json(per_class: &[usize; 3]) -> Json {
+    Json::obj(
+        QosClass::ALL
+            .iter()
+            .map(|q| (q.name(), Json::Num(per_class[q.index()] as f64)))
+            .collect(),
+    )
+}
+
+fn step_json(s: &ServingStep) -> Json {
+    let slo = s.report.slo_attainment();
+    Json::obj(vec![
+        ("tenants", Json::Num(s.tenants as f64)),
+        ("rate", Json::Num(s.rate)),
+        ("horizon", Json::Num(s.report.horizon)),
+        ("offered", Json::Num(s.report.offered() as f64)),
+        ("admissions_per_sec", Json::Num(s.report.admissions_per_sec())),
+        ("p99_slowdown", opt_num(s.report.p99_slowdown())),
+        (
+            "slo_attainment",
+            Json::obj(
+                QosClass::ALL.iter().map(|q| (q.name(), opt_num(slo[q.index()]))).collect(),
+            ),
+        ),
+        ("jain", Json::Num(s.report.jain())),
+        ("admitted", counters_json(&s.report.run.counters.admitted)),
+        ("delays", counters_json(&s.report.run.counters.delays)),
+        ("sheds", counters_json(&s.report.run.counters.sheds)),
+        ("lane_high_water", Json::Num(s.report.run.lane_high_water as f64)),
+        ("makespan", Json::Num(s.report.run.result.makespan)),
+    ])
+}
+
+/// Assemble the machine-readable ramp result. Prints nothing — see
+/// [`emit_serving`].
+pub fn run_serving_json(opts: &ServingBenchOpts) -> Json {
+    let steps = run_serving_bench(opts);
+    Json::obj(vec![
+        ("bench", Json::Str("serving".into())),
+        ("schema", Json::Num(1.0)),
+        ("provenance", Json::Str("measured".into())),
+        ("quick", Json::Bool(opts.quick)),
+        ("scenario", Json::Str(opts.scenario.clone())),
+        ("policy", Json::Str(opts.policy.clone())),
+        ("rate_per_tenant", Json::Num(RATE_PER_TENANT)),
+        ("steps", Json::Arr(steps.iter().map(step_json).collect())),
+    ])
+}
+
+/// Render the human-readable ramp table.
+pub fn render_serving_table(result: &Json) -> Table {
+    let mut t = Table::new(
+        "Serving ramp: sustained admission, tail slowdown, SLO attainment, fairness",
+        &[
+            "tenants", "rate", "adm/s", "p99 slow", "slo lat", "slo batch", "slo be", "jain",
+            "delays", "sheds", "lane hw",
+        ],
+    );
+    if let Some(steps) = result.get("steps").and_then(Json::as_arr) {
+        for s in steps {
+            let num = |k: &str| s.get(k).and_then(Json::as_f64);
+            let fmt = |v: Option<f64>| v.map_or("-".into(), |x| format!("{x:.3}"));
+            let slo = |class: &str| {
+                fmt(s.get("slo_attainment").and_then(|o| o.get(class)).and_then(Json::as_f64))
+            };
+            let class_sum = |k: &str| -> f64 {
+                QosClass::ALL
+                    .iter()
+                    .filter_map(|q| s.get(k).and_then(|o| o.get(q.name())).and_then(Json::as_f64))
+                    .sum()
+            };
+            t.row(vec![
+                format!("{:.0}", num("tenants").unwrap_or(f64::NAN)),
+                format!("{:.0}", num("rate").unwrap_or(f64::NAN)),
+                format!("{:.1}", num("admissions_per_sec").unwrap_or(f64::NAN)),
+                fmt(num("p99_slowdown")),
+                slo("latency"),
+                slo("batch"),
+                slo("besteffort"),
+                fmt(num("jain")),
+                format!("{:.0}", class_sum("delays")),
+                format!("{:.0}", class_sum("sheds")),
+                format!("{:.0}", num("lane_high_water").unwrap_or(f64::NAN)),
+            ]);
+        }
+    }
+    t
+}
+
+/// CLI entry point: run, print, optionally write the JSON file.
+pub fn emit_serving(opts: &ServingBenchOpts) -> Json {
+    let result = run_serving_json(opts);
+    println!("{}", render_serving_table(&result).render());
+    if opts.json {
+        let path = super::overhead::repo_root_file("BENCH_serving.json");
+        match std::fs::write(&path, result.to_pretty()) {
+            Ok(()) => println!("[json] {}", path.display()),
+            Err(e) => eprintln!("[json] write failed ({}): {e}", path.display()),
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramp_tenants_cycle_qos_and_stagger_seeds() {
+        let ts = ramp_tenants(6, true, 3);
+        assert_eq!(ts.len(), 6);
+        for (i, t) in ts.iter().enumerate() {
+            assert_eq!(t.qos, QosClass::ALL[i % 3]);
+        }
+        // Every class appears — the ramp exercises the whole QoS ladder.
+        for q in QosClass::ALL {
+            assert!(ts.iter().any(|t| t.qos == q));
+        }
+        assert_ne!(ts[0].params.seed, ts[1].params.seed);
+    }
+
+    #[test]
+    fn quick_ramp_reports_every_step_and_serialises() {
+        let opts = ServingBenchOpts { quick: true, ..Default::default() };
+        let result = run_serving_json(&opts);
+        let steps = result.get("steps").and_then(Json::as_arr).expect("steps array");
+        assert_eq!(steps.len(), 2);
+        for s in steps {
+            let adm = s.get("admissions_per_sec").and_then(Json::as_f64).unwrap();
+            assert!(adm > 0.0, "ramp step admitted nothing");
+            let jain = s.get("jain").and_then(Json::as_f64).unwrap();
+            assert!((0.0..=1.0 + 1e-9).contains(&jain));
+            // Latency apps are never shed or delayed — the whole point of
+            // the QoS ladder.
+            for k in ["delays", "sheds"] {
+                let v = s.get(k).and_then(|o| o.get("latency")).and_then(Json::as_f64);
+                assert_eq!(v, Some(0.0));
+            }
+        }
+        // The table renders without panicking on the real payload shape.
+        let rendered = render_serving_table(&result).render();
+        assert!(rendered.contains("tenants"));
+    }
+}

@@ -49,10 +49,11 @@
 //! where a committed record is stored (per-worker shard vs one `Vec`).
 
 use super::dag::{TaoDag, TaskId};
-use super::metrics::TraceRecord;
+use super::metrics::{RunResult, TraceRecord};
 use super::ptt::Ptt;
-use super::scheduler::{PlaceCtx, Policy};
+use super::scheduler::{PlaceCtx, Policy, QosClass};
 use crate::platform::{CoreId, Partition, Topology};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 /// One placement decision, as returned by [`SchedCore::place`].
@@ -118,6 +119,17 @@ pub struct SchedCore<'a> {
     /// ([`TaoDag::cp_root_seeds`]) and propagated at commit time.
     on_cp: Vec<AtomicBool>,
     completed: AtomicUsize,
+    /// Per-application QoS class (empty ⇒ every app is
+    /// [`QosClass::default`]); set by [`SchedCore::with_app_qos`].
+    qos_of: Vec<QosClass>,
+    /// Per-application committed-task counters (rolling-fairness input for
+    /// the serving layer; one relaxed add per commit).
+    app_done: Vec<AtomicUsize>,
+    /// Per-core monopolisation streaks: the app whose tasks this core led
+    /// most recently, and how many of its commits ran uninterrupted there.
+    /// Relaxed heuristic state for [`SchedCore::monopolists`].
+    core_last_app: Vec<AtomicUsize>,
+    core_streak: Vec<AtomicUsize>,
 }
 
 impl<'a> SchedCore<'a> {
@@ -135,6 +147,8 @@ impl<'a> SchedCore<'a> {
             app_of.is_empty() || app_of.len() == dag.len(),
             "app_of must be empty or cover every task"
         );
+        let n_apps = app_of.iter().copied().max().map_or(1, |m| m + 1);
+        let n_cores = topo.n_cores();
         SchedCore {
             dag,
             app_of,
@@ -145,7 +159,24 @@ impl<'a> SchedCore<'a> {
             critical: dag.nodes.iter().map(|_| AtomicBool::new(false)).collect(),
             on_cp: dag.cp_root_seeds(app_of).into_iter().map(AtomicBool::new).collect(),
             completed: AtomicUsize::new(0),
+            qos_of: Vec::new(),
+            app_done: (0..n_apps).map(|_| AtomicUsize::new(0)).collect(),
+            core_last_app: (0..n_cores).map(|_| AtomicUsize::new(usize::MAX)).collect(),
+            core_streak: (0..n_cores).map(|_| AtomicUsize::new(0)).collect(),
         }
+    }
+
+    /// Attach per-application QoS classes (serving mode). `qos` must be
+    /// empty or cover every app id appearing in `app_of`.
+    pub fn with_app_qos(mut self, qos: Vec<QosClass>) -> SchedCore<'a> {
+        assert!(
+            qos.is_empty() || qos.len() >= self.app_done.len(),
+            "qos must cover every app ({} < {})",
+            qos.len(),
+            self.app_done.len()
+        );
+        self.qos_of = qos;
+        self
     }
 
     pub fn dag(&self) -> &'a TaoDag {
@@ -171,6 +202,46 @@ impl<'a> SchedCore<'a> {
         self.app_of.get(task).copied().unwrap_or(0)
     }
 
+    /// QoS class of application `app` (default when none was attached).
+    pub fn qos_of_app(&self, app: usize) -> QosClass {
+        self.qos_of.get(app).copied().unwrap_or_default()
+    }
+
+    /// Number of applications in this run.
+    pub fn n_apps(&self) -> usize {
+        self.app_done.len()
+    }
+
+    /// Committed tasks of application `app` so far (rolling-fairness
+    /// input; relaxed — a control heuristic, not an exactness contract).
+    pub fn app_done(&self, app: usize) -> usize {
+        self.app_done[app].load(Ordering::Relaxed)
+    }
+
+    /// Per-core monopolist snapshot: for each core, the app that led its
+    /// last `min_streak`-or-more commits uninterrupted (`None` otherwise).
+    /// Fed to [`Policy::on_fairness`] by the serving drivers.
+    pub fn monopolists(&self, min_streak: usize) -> Vec<Option<usize>> {
+        self.core_last_app
+            .iter()
+            .zip(&self.core_streak)
+            .map(|(app, streak)| {
+                let a = app.load(Ordering::Relaxed);
+                (a != usize::MAX && streak.load(Ordering::Relaxed) >= min_streak).then_some(a)
+            })
+            .collect()
+    }
+
+    /// Cancel `n_tasks` tasks that will never be pushed to any queue (a
+    /// shed admission: the app's roots were refused, so its whole subgraph
+    /// is unreachable). Accounts them as completed so [`SchedCore::is_done`]
+    /// still terminates the run; returns `true` when this cancellation
+    /// completes the run (the caller must propagate the done signal the
+    /// same way a final commit would).
+    pub fn cancel_tasks(&self, n_tasks: usize) -> bool {
+        self.completed.fetch_add(n_tasks, Ordering::AcqRel) + n_tasks == self.dag.len()
+    }
+
     /// Tasks committed so far.
     pub fn completed(&self) -> usize {
         self.completed.load(Ordering::Acquire)
@@ -192,11 +263,13 @@ impl<'a> SchedCore<'a> {
     pub fn place(&self, core: CoreId, task: TaskId, now: f64) -> Placement {
         let node = &self.dag.nodes[task];
         let critical = self.critical[task].load(Ordering::Relaxed);
+        let app_id = self.app_of(task);
         let ctx = PlaceCtx {
             core,
             type_id: node.type_id,
             critical,
-            app_id: self.app_of(task),
+            app_id,
+            qos: self.qos_of_app(app_id),
             ptt: self.ptt,
             topo: self.topo,
             now,
@@ -247,9 +320,10 @@ impl<'a> SchedCore<'a> {
     /// Returns the record plus `done == true` on the run's final commit.
     pub fn commit(&self, info: &CommitInfo, mut wake: impl FnMut(TaskId)) -> CommitOutcome {
         let node = &self.dag.nodes[info.task];
+        let app_id = self.app_of(info.task);
         let record = TraceRecord {
             task: info.task,
-            app_id: self.app_of(info.task),
+            app_id,
             class: node.class,
             type_id: node.type_id,
             critical: info.critical,
@@ -257,6 +331,17 @@ impl<'a> SchedCore<'a> {
             t_start: info.t_start,
             t_end: info.t_end,
         };
+        // Serving-feedback bookkeeping: per-app progress and the leader
+        // core's monopolisation streak. Relaxed heuristic counters — racy
+        // interleavings on one core merely shorten an observed streak.
+        self.app_done[app_id].fetch_add(1, Ordering::Relaxed);
+        let leader = info.partition.leader;
+        if self.core_last_app[leader].load(Ordering::Relaxed) == app_id {
+            self.core_streak[leader].fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.core_last_app[leader].store(app_id, Ordering::Relaxed);
+            self.core_streak[leader].store(1, Ordering::Relaxed);
+        }
         self.policy.on_complete(info.partition.leader, info.partition.width, info.exec, info.now);
         // Critical-path hand-off: a task on the path marks the one child
         // whose criticality is exactly one less (§2: critical tasks are
@@ -340,6 +425,205 @@ impl<'a> AdmissionSource<'a> {
         }
         admitted
     }
+}
+
+/// One application offered to the serving admission path.
+#[derive(Debug, Clone)]
+pub struct ServingApp {
+    pub app_id: usize,
+    /// Scheduled offer time (seconds; virtual in sim, wall in real mode).
+    pub arrival: f64,
+    pub qos: QosClass,
+    /// The app's root tasks (pushed on admission).
+    pub roots: Vec<TaskId>,
+    /// Total task count (cancelled wholesale when the app is shed).
+    pub n_tasks: usize,
+}
+
+/// Per-class admission accounting, indexed by [`QosClass::index`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServingCounters {
+    /// Apps admitted (pushed into the lanes), per class.
+    pub admitted: [usize; 3],
+    /// Delay *events* per class (one app re-offered twice counts twice).
+    pub delays: [usize; 3],
+    /// Apps shed (refused outright, tasks cancelled), per class.
+    pub sheds: [usize; 3],
+}
+
+/// The serving-mode admission path: [`AdmissionSource`]'s open-loop
+/// schedule plus **backpressure**, consumed identically by both engines.
+///
+/// Admission is open-loop — apps are offered at their scheduled arrival
+/// regardless of backlog — but each offer consults the target lanes'
+/// depth. When any target lane sits at or above `max_lane_depth` the
+/// offer is *pressured*, and the outcome is decided strictly by QoS class,
+/// highest priority first (the ordering the soak tests pin):
+///
+/// - [`QosClass::Latency`] — admitted anyway (the SLO class is never the
+///   one to pay for backlog);
+/// - [`QosClass::Batch`] — **delayed**: re-offered `delay_step` seconds
+///   later (repeatedly, if pressure persists);
+/// - [`QosClass::BestEffort`] — **shed**: refused outright; the caller's
+///   `shed` hook must cancel the app's tasks in the [`SchedCore`]
+///   (they were never pushed) so the run still terminates.
+///
+/// Methods take `&mut self`: a single admitter owns the source (the sim
+/// loop, or the real engine's submitter thread).
+pub struct ServingSource {
+    apps: Vec<ServingApp>,
+    /// `(offer time, app index)`, sorted ascending by offer time.
+    queue: VecDeque<(f64, usize)>,
+    counters: ServingCounters,
+    max_lane_depth: usize,
+    delay_step: f64,
+    draining: bool,
+}
+
+impl ServingSource {
+    /// Wrap an admission schedule. `max_lane_depth` bounds per-lane inbox
+    /// depth (the backpressure threshold); `delay_step` is the re-offer
+    /// interval for delayed batch apps.
+    pub fn new(apps: Vec<ServingApp>, max_lane_depth: usize, delay_step: f64) -> ServingSource {
+        assert!(max_lane_depth > 0, "a zero-depth lane admits nothing");
+        assert!(delay_step > 0.0, "delayed apps must be re-offered strictly later");
+        let mut order: Vec<usize> = (0..apps.len()).collect();
+        order.sort_by(|&a, &b| apps[a].arrival.total_cmp(&apps[b].arrival));
+        let queue = order.into_iter().map(|i| (apps[i].arrival, i)).collect();
+        ServingSource {
+            apps,
+            queue,
+            counters: ServingCounters::default(),
+            max_lane_depth,
+            delay_step,
+            draining: false,
+        }
+    }
+
+    /// Offer time of the next pending app, if any.
+    pub fn next_offer(&self) -> Option<f64> {
+        self.queue.front().map(|&(t, _)| t)
+    }
+
+    /// Whether every app has been admitted or shed.
+    pub fn is_exhausted(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn counters(&self) -> ServingCounters {
+        self.counters
+    }
+
+    /// Enter quiesce: backpressure is ignored from here on, so every
+    /// still-pending (including previously delayed) app admits at its
+    /// offer time and the run drains cleanly.
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+    }
+
+    /// Offer every app due by `now`. Roots of admitted apps are
+    /// distributed round-robin from lane 0 via `push(lane, root)`
+    /// ([`AdmissionSource`]'s rule); `lane_depth(lane)` supplies the
+    /// backpressure reading; `shed` is invoked for refused apps. Returns
+    /// the number of roots pushed.
+    pub fn admit_due(
+        &mut self,
+        now: f64,
+        n_lanes: usize,
+        lane_depth: impl Fn(usize) -> usize,
+        mut push: impl FnMut(usize, TaskId),
+        mut shed: impl FnMut(&ServingApp),
+    ) -> usize {
+        let mut pushed = 0usize;
+        while let Some(&(offer, idx)) = self.queue.front() {
+            if offer > now {
+                break;
+            }
+            self.queue.pop_front();
+            let app = &self.apps[idx];
+            let pressured = !self.draining && {
+                let targets = app.roots.len().min(n_lanes).max(1);
+                (0..targets).any(|k| lane_depth(k) >= self.max_lane_depth)
+            };
+            if pressured {
+                match app.qos {
+                    QosClass::Latency => {} // falls through to admission
+                    QosClass::Batch => {
+                        self.counters.delays[app.qos.index()] += 1;
+                        let retry = now + self.delay_step;
+                        let pos = self.queue.partition_point(|&(t, _)| t <= retry);
+                        self.queue.insert(pos, (retry, idx));
+                        continue;
+                    }
+                    QosClass::BestEffort => {
+                        self.counters.sheds[app.qos.index()] += 1;
+                        shed(app);
+                        continue;
+                    }
+                }
+            }
+            self.counters.admitted[app.qos.index()] += 1;
+            for (k, &root) in app.roots.iter().enumerate() {
+                push(k % n_lanes, root);
+                pushed += 1;
+            }
+        }
+        pushed
+    }
+}
+
+/// Serving-mode knobs shared by both engines. Times are in the backend's
+/// clock (virtual seconds in the sim, wall seconds on real threads), so
+/// callers scale them to the workload.
+#[derive(Debug, Clone)]
+pub struct ServingOpts {
+    /// Backpressure threshold: an offer is pressured when any target lane
+    /// already holds this many undrained roots.
+    pub max_lane_depth: usize,
+    /// Re-offer interval for delayed [`QosClass::Batch`] apps.
+    pub delay_step: f64,
+    /// Stop serving at this time: backpressure is switched off
+    /// ([`ServingSource::begin_drain`]) so the backlog quiesces cleanly.
+    /// The default never drains — harnesses set it to the window horizon.
+    pub drain_after: f64,
+    /// Period of the fairness feedback loop
+    /// ([`super::scheduler::Policy::on_fairness`]).
+    pub fairness_period: f64,
+    /// Minimum uninterrupted same-app commit streak for a core to count
+    /// as monopolised ([`SchedCore::monopolists`]).
+    pub min_streak: usize,
+}
+
+impl Default for ServingOpts {
+    fn default() -> Self {
+        ServingOpts {
+            max_lane_depth: 64,
+            delay_step: 0.002,
+            drain_after: f64::INFINITY,
+            fairness_period: 0.005,
+            min_streak: 8,
+        }
+    }
+}
+
+/// Result of one serving-mode run, either backend: the ordinary run result
+/// plus the admission accounting the serving harness reports.
+#[derive(Debug)]
+pub struct ServingRun {
+    pub result: RunResult,
+    /// Per-class admitted / delayed / shed counts.
+    pub counters: ServingCounters,
+    /// `app_id`s refused by backpressure (their tasks never ran; their
+    /// trace records do not exist).
+    pub shed_apps: Vec<usize>,
+    /// Largest per-lane admission backlog observed: inbox high-water on
+    /// the real backend, pending-lane high-water in the sim.
+    pub lane_high_water: usize,
+    /// Retired-but-unreclaimed WSQ buffers left at the end (real backend;
+    /// 0 in the sim). Bounded, or the never-drains path leaks.
+    pub wsq_retired: usize,
+    /// Jain fairness samples `(t, index)` taken by the feedback loop.
+    pub fairness: Vec<(f64, f64)>,
 }
 
 #[cfg(test)]
@@ -468,5 +752,170 @@ mod tests {
         assert_eq!(src.admit_due(0.15, 4, |lane, root| got.push((lane, root))), 3);
         assert_eq!(got, vec![(0, 0), (1, 1), (0, 2)]);
         assert!(!src.is_exhausted());
+    }
+
+    #[test]
+    fn commit_tracks_app_progress_and_core_streaks() {
+        let mut d = TaoDag::new();
+        for _ in 0..4 {
+            d.add_task(crate::platform::KernelClass::Copy, 0, 1.0);
+        }
+        d.finalize().unwrap();
+        let app_of = vec![0usize, 0, 1, 1];
+        let topo = topo4();
+        let ptt = Ptt::new(d.n_types(), &topo);
+        let core = SchedCore::new(&d, &app_of, &topo, &HomogeneousWs, &ptt)
+            .with_app_qos(vec![QosClass::Latency, QosClass::BestEffort]);
+        assert_eq!(core.n_apps(), 2);
+        assert_eq!(core.qos_of_app(0), QosClass::Latency);
+        assert_eq!(core.qos_of_app(1), QosClass::BestEffort);
+        let mk = |task| CommitInfo {
+            task,
+            partition: Partition { leader: 2, width: 1 },
+            critical: false,
+            t_start: 0.0,
+            t_end: 1.0,
+            exec: 1.0,
+            now: 1.0,
+        };
+        // App 0 commits twice on core 2: streak of 2, monopolist at
+        // min_streak 2 but not 3.
+        core.commit(&mk(0), |_| {});
+        core.commit(&mk(1), |_| {});
+        assert_eq!(core.app_done(0), 2);
+        assert_eq!(core.app_done(1), 0);
+        assert_eq!(core.monopolists(2)[2], Some(0));
+        assert_eq!(core.monopolists(3)[2], None);
+        assert_eq!(core.monopolists(1)[0], None, "idle core has no monopolist");
+        // App 1 takes over core 2: the streak resets.
+        core.commit(&mk(2), |_| {});
+        assert_eq!(core.monopolists(2)[2], None);
+        assert_eq!(core.monopolists(1)[2], Some(1));
+    }
+
+    #[test]
+    fn cancel_tasks_completes_the_run_like_commits_do() {
+        let mut d = TaoDag::new();
+        for _ in 0..3 {
+            d.add_task(crate::platform::KernelClass::Sort, 0, 1.0);
+        }
+        d.finalize().unwrap();
+        let topo = topo4();
+        let ptt = Ptt::new(d.n_types(), &topo);
+        let core = SchedCore::new(&d, &[], &topo, &HomogeneousWs, &ptt);
+        assert!(!core.cancel_tasks(1), "2 of 3 still outstanding");
+        let info = CommitInfo {
+            task: 0,
+            partition: Partition { leader: 0, width: 1 },
+            critical: false,
+            t_start: 0.0,
+            t_end: 1.0,
+            exec: 1.0,
+            now: 1.0,
+        };
+        assert!(!core.commit(&info, |_| {}).done);
+        assert!(core.cancel_tasks(1), "final cancellation reports done");
+        assert!(core.is_done());
+    }
+
+    fn serving_app(app_id: usize, arrival: f64, qos: QosClass, root: TaskId) -> ServingApp {
+        ServingApp { app_id, arrival, qos, roots: vec![root], n_tasks: 2 }
+    }
+
+    fn serving_apps() -> Vec<ServingApp> {
+        vec![
+            serving_app(0, 0.0, QosClass::Latency, 0),
+            serving_app(1, 0.1, QosClass::Batch, 2),
+            serving_app(2, 0.2, QosClass::BestEffort, 4),
+        ]
+    }
+
+    #[test]
+    fn serving_source_admits_everything_without_pressure() {
+        let mut src = ServingSource::new(serving_apps(), 4, 0.05);
+        let mut pushed = Vec::new();
+        let n = src.admit_due(1.0, 2, |_| 0, |lane, root| pushed.push((lane, root)), |_| {
+            panic!("nothing should shed")
+        });
+        assert_eq!(n, 3);
+        assert_eq!(pushed, vec![(0, 0), (0, 2), (0, 4)]);
+        assert!(src.is_exhausted());
+        let c = src.counters();
+        assert_eq!(c.admitted, [1, 1, 1]);
+        assert_eq!(c.delays, [0, 0, 0]);
+        assert_eq!(c.sheds, [0, 0, 0]);
+    }
+
+    #[test]
+    fn serving_pressure_hits_lower_qos_classes_first() {
+        // Full lanes: latency admits anyway, batch is delayed, besteffort
+        // is shed — the class ordering the acceptance criteria pin.
+        let mut src = ServingSource::new(serving_apps(), 2, 0.05);
+        let mut pushed = Vec::new();
+        let mut shed_apps = Vec::new();
+        let n = src.admit_due(
+            0.3,
+            2,
+            |_| 99,
+            |lane, root| pushed.push((lane, root)),
+            |app: &ServingApp| shed_apps.push(app.app_id),
+        );
+        assert_eq!(n, 1, "only the latency app got through");
+        assert_eq!(pushed, vec![(0, 0)]);
+        assert_eq!(shed_apps, vec![2]);
+        let c = src.counters();
+        assert_eq!(c.admitted, [1, 0, 0]);
+        assert_eq!(c.delays, [0, 1, 0], "batch delayed, never latency");
+        assert_eq!(c.sheds, [0, 0, 1], "besteffort shed, nothing above it");
+        // The delayed batch app is re-offered later and admits once the
+        // pressure clears.
+        assert!(!src.is_exhausted());
+        assert_eq!(src.next_offer(), Some(0.35));
+        let n = src.admit_due(0.4, 2, |_| 0, |lane, root| pushed.push((lane, root)), |_| {
+            panic!("no shed")
+        });
+        assert_eq!(n, 1);
+        assert_eq!(src.counters().admitted, [1, 1, 0]);
+        assert!(src.is_exhausted());
+    }
+
+    #[test]
+    fn serving_drain_ignores_pressure_for_clean_quiesce() {
+        let mut src = ServingSource::new(serving_apps(), 2, 0.05);
+        src.begin_drain();
+        let mut pushed = Vec::new();
+        let n = src.admit_due(
+            f64::INFINITY,
+            2,
+            |_| 99,
+            |lane, root| pushed.push((lane, root)),
+            |_| panic!("drain never sheds"),
+        );
+        assert_eq!(n, 3);
+        assert!(src.is_exhausted());
+        assert_eq!(src.counters().admitted, [1, 1, 1]);
+    }
+
+    #[test]
+    fn serving_batch_delay_repeats_under_sustained_pressure() {
+        let apps = vec![ServingApp {
+            app_id: 0,
+            arrival: 0.0,
+            qos: QosClass::Batch,
+            roots: vec![0],
+            n_tasks: 1,
+        }];
+        let mut src = ServingSource::new(apps, 1, 0.1);
+        for i in 1..=3 {
+            let t = 0.1 * i as f64;
+            assert_eq!(src.admit_due(t, 1, |_| 5, |_, _| {}, |_| panic!("batch never sheds")), 0);
+            assert_eq!(src.counters().delays[QosClass::Batch.index()], i);
+        }
+        // Pressure clears: the app finally admits; total delays preserved.
+        assert_eq!(src.admit_due(1.0, 1, |_| 0, |_, _| {}, |_| {}), 1);
+        let c = src.counters();
+        assert_eq!(c.admitted[QosClass::Batch.index()], 1);
+        assert_eq!(c.delays[QosClass::Batch.index()], 3);
+        assert!(src.is_exhausted());
     }
 }

@@ -12,9 +12,16 @@
 //! `take_all` returns the items in FIFO push order (the detached LIFO chain
 //! is reversed), so admission order is preserved end to end.
 
+//!
+//! For admission backpressure the inbox tracks its approximate `depth`
+//! (pushes minus drains) plus a high-water mark: the serving layer bounds
+//! per-core inbox depth by consulting `depth()` before admitting, and the
+//! soak tests assert `high_water()` stays below the configured bound. Both
+//! counters are relaxed — backpressure is a heuristic, not a hand-off.
+
 use std::fmt;
 use std::ptr;
-use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
 
 struct Node<T> {
     next: *mut Node<T>,
@@ -24,6 +31,10 @@ struct Node<T> {
 /// Lock-free multi-producer inbox; see the module docs.
 pub struct Inbox<T> {
     head: AtomicPtr<Node<T>>,
+    /// Approximate number of undrained items (relaxed; see module docs).
+    depth: AtomicUsize,
+    /// Largest depth ever observed by a push (relaxed monotonic max).
+    high_water: AtomicUsize,
 }
 
 // Safety: values cross threads only through the `head` atomic.
@@ -32,11 +43,20 @@ unsafe impl<T: Send> Sync for Inbox<T> {}
 
 impl<T> Inbox<T> {
     pub fn new() -> Inbox<T> {
-        Inbox { head: AtomicPtr::new(ptr::null_mut()) }
+        Inbox {
+            head: AtomicPtr::new(ptr::null_mut()),
+            depth: AtomicUsize::new(0),
+            high_water: AtomicUsize::new(0),
+        }
     }
 
     /// Push from any thread (lock-free; one CAS on the uncontended path).
     pub fn push(&self, value: T) {
+        // Count *before* the node becomes visible: a racing `take_all`
+        // can then never subtract an item whose add is still pending
+        // (depth transiently over-counts instead of underflowing).
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.high_water.fetch_max(d, Ordering::Relaxed);
         let n = Box::into_raw(Box::new(Node { next: ptr::null_mut(), value }));
         let mut cur = self.head.load(Ordering::Relaxed);
         loop {
@@ -63,11 +83,24 @@ impl<T> Inbox<T> {
             out.push(boxed.value);
         }
         out.reverse();
+        self.depth.fetch_sub(out.len(), Ordering::Relaxed);
         out
     }
 
     pub fn is_empty(&self) -> bool {
         self.head.load(Ordering::Relaxed).is_null()
+    }
+
+    /// Approximate number of undrained items (backpressure input). May
+    /// transiently over-count a concurrent drain or under-count a push in
+    /// flight — fine for an admission heuristic.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Largest depth ever observed by a push (bounded-inbox assertions).
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
     }
 }
 
@@ -138,6 +171,25 @@ mod tests {
         all.extend(inbox.take_all());
         all.sort_unstable();
         assert_eq!(all, (0..producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn depth_and_high_water_track_pushes_and_drains() {
+        let inbox = Inbox::new();
+        assert_eq!(inbox.depth(), 0);
+        assert_eq!(inbox.high_water(), 0);
+        for i in 0..5 {
+            inbox.push(i);
+        }
+        assert_eq!(inbox.depth(), 5);
+        assert_eq!(inbox.high_water(), 5);
+        assert_eq!(inbox.take_all().len(), 5);
+        assert_eq!(inbox.depth(), 0);
+        // High water is a lifetime max, not a current reading.
+        assert_eq!(inbox.high_water(), 5);
+        inbox.push(9);
+        assert_eq!(inbox.depth(), 1);
+        assert_eq!(inbox.high_water(), 5);
     }
 
     #[test]

@@ -300,6 +300,28 @@ pub fn jain_fairness_index(xs: &[f64]) -> f64 {
     (sum * sum) / (xs.len() as f64 * sum_sq)
 }
 
+/// Total (non-panicking) Jain index for *live* control loops.
+///
+/// The strict [`jain_fairness_index`] is right for offline metrics, where
+/// a non-positive allocation is a harness bug worth crashing on. Fed live
+/// into the serving fairness loop it is fatal: an app admitted moments ago
+/// legitimately has **zero** completed tasks in the current window.
+///
+/// Epsilon semantics: non-positive and non-finite entries are clamped to
+/// `1e-12` rather than skipped — zero progress is the *worst* allocation,
+/// so starvation must drag the index toward `1/n` instead of silently
+/// vanishing from the denominator. Returns 1.0 for an empty slice.
+pub fn jain_fairness_total(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let clamped: Vec<f64> =
+        xs.iter().map(|&x| if x.is_finite() && x > 0.0 { x } else { 1e-12 }).collect();
+    let sum: f64 = clamped.iter().sum();
+    let sum_sq: f64 = clamped.iter().map(|&x| x * x).sum();
+    (sum * sum) / (clamped.len() as f64 * sum_sq)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -458,6 +480,23 @@ mod tests {
     #[should_panic]
     fn jain_index_rejects_nonpositive() {
         jain_fairness_index(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn jain_total_is_total_and_matches_strict_on_positive_input() {
+        // Agrees with the strict variant wherever the strict one is defined.
+        for xs in [vec![3.7], vec![2.0, 2.0, 2.0], vec![1.0, 3.0]] {
+            assert_eq!(jain_fairness_total(&xs), jain_fairness_index(&xs));
+        }
+        assert_eq!(jain_fairness_total(&[]), 1.0);
+        // Inputs that panic the strict variant: zero progress clamps to
+        // epsilon and drags fairness down (starvation ≠ fairness).
+        let j = jain_fairness_total(&[1.0, 0.0]);
+        assert!(j > 0.0 && j < 0.51, "{j}");
+        let j = jain_fairness_total(&[1.0, f64::NAN, -2.0, f64::INFINITY]);
+        assert!(j > 0.0 && j < 0.26, "{j}");
+        // All-zero window: every app is equally (non-)progressing.
+        assert!((jain_fairness_total(&[0.0, 0.0]) - 1.0).abs() < 1e-12);
     }
 
     // Regression pin for the sharded real-engine trace: the final record

@@ -33,17 +33,21 @@ pub mod tao;
 pub mod worker;
 pub mod wsq;
 
-pub use self::core::{AdmissionSource, CommitInfo, CommitOutcome, Placement, SchedCore};
+pub use self::core::{
+    AdmissionSource, CommitInfo, CommitOutcome, Placement, SchedCore, ServingApp,
+    ServingCounters, ServingOpts, ServingRun, ServingSource,
+};
 pub use dag::{TaoDag, TaoNode, TaskId};
 pub use episodes_rt::EpisodeDriver;
 pub use metrics::{
-    AppMetrics, RunResult, Trace, TraceRecord, jain_fairness_index, per_app_metrics,
-    sort_by_commit,
+    AppMetrics, RunResult, Trace, TraceRecord, jain_fairness_index, jain_fairness_total,
+    per_app_metrics, sort_by_commit,
 };
 pub use ptt::Ptt;
 pub use scheduler::{
-    CatsLike, DheftLike, EnergyMinimizing, HomogeneousWs, POLICIES, PerformanceBased, PlaceCtx,
-    Policy, PolicyInfo, PttAdaptive, policy_by_name, policy_names,
+    CatsLike, DheftLike, EnergyMinimizing, FAIRNESS_SETPOINT, HomogeneousWs, POLICIES,
+    PerformanceBased, PlaceCtx, Policy, PolicyInfo, PttAdaptive, PttServing, QosClass,
+    policy_by_name, policy_names,
 };
 pub use tao::{NopPayload, TaoPayload, payload_fn};
-pub use worker::{RealEngineOpts, run_dag_real, run_stream_real};
+pub use worker::{RealEngineOpts, run_dag_real, run_serving_real, run_stream_real};

@@ -22,7 +22,69 @@
 
 use super::ptt::Ptt;
 use crate::platform::{CoreId, Partition, Topology};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Per-tenant quality-of-service class, carried from
+/// [`crate::workload::AppSpec`] through the scheduling core into every
+/// placement decision ([`PlaceCtx::qos`]) and into the serving layer's
+/// admission-backpressure ordering.
+///
+/// The variants are in **priority order** (`Latency` highest): the serving
+/// admission path sheds/delays strictly from the bottom of this order
+/// (`BestEffort` is shed, `Batch` is delayed, `Latency` is always
+/// admitted), and the derived `Ord` encodes exactly that ranking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum QosClass {
+    /// Interactive traffic with a tight per-app latency SLO; never shed or
+    /// delayed by admission backpressure.
+    Latency,
+    /// Throughput-oriented work with a loose SLO; delayed (re-offered
+    /// later) under pressure, never shed.
+    #[default]
+    Batch,
+    /// Scavenger work with no SLO; first (and only) class to be shed.
+    BestEffort,
+}
+
+impl QosClass {
+    /// All classes, in priority order (index = [`QosClass::index`]).
+    pub const ALL: [QosClass; 3] = [QosClass::Latency, QosClass::Batch, QosClass::BestEffort];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Latency => "latency",
+            QosClass::Batch => "batch",
+            QosClass::BestEffort => "besteffort",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<QosClass> {
+        match name {
+            "latency" => Some(QosClass::Latency),
+            "batch" => Some(QosClass::Batch),
+            "besteffort" | "best-effort" => Some(QosClass::BestEffort),
+            _ => None,
+        }
+    }
+
+    /// Position in [`QosClass::ALL`] (stable per-class array index for
+    /// counters and reports).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Default per-class SLO target, expressed as a slowdown bound
+    /// (response time / isolated makespan). An app *attains* its SLO when
+    /// its observed slowdown stays at or below this. Best-effort work has
+    /// no SLO (`INFINITY` — trivially attained).
+    pub fn slo_slowdown(self) -> f64 {
+        match self {
+            QosClass::Latency => 2.0,
+            QosClass::Batch => 8.0,
+            QosClass::BestEffort => f64::INFINITY,
+        }
+    }
+}
 
 /// Everything a policy may consult when placing one task.
 pub struct PlaceCtx<'a> {
@@ -38,6 +100,9 @@ pub struct PlaceCtx<'a> {
     /// compare how [`PerformanceBased`] isolates a foreground app from an
     /// interfering stream versus the app-blind baselines.
     pub app_id: usize,
+    /// The submitting application's QoS class ([`QosClass::default`] for
+    /// finite experiment runs — only the serving layer assigns classes).
+    pub qos: QosClass,
     pub ptt: &'a Ptt,
     pub topo: &'a Topology,
     /// Engine time in seconds (virtual in sim, wall in real mode).
@@ -53,6 +118,13 @@ pub trait Policy: Send + Sync {
 
     /// Completion hook (time bookkeeping for EFT-style baselines).
     fn on_complete(&self, _leader: CoreId, _width: usize, _exec_time: f64, _now: f64) {}
+
+    /// Fairness feedback hook (serving mode): the driver periodically
+    /// reports the rolling Jain index over per-app progress plus, per
+    /// core, the app currently monopolising that core (`None` when no app
+    /// holds a long uninterrupted run there). Default: ignored — only
+    /// fairness-aware policies ([`PttServing`]) react.
+    fn on_fairness(&self, _jain: f64, _monopolist: &[Option<usize>]) {}
 
     /// Whether the engine should bother updating the PTT (the homogeneous
     /// baseline is PTT-unaware; skipping updates mirrors its zero overhead).
@@ -170,6 +242,95 @@ impl Policy for PttAdaptive {
                 }
             }
             ctx.ptt.best_width_for(ctx.type_id, ctx.core, ctx.topo).0
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving variant (fairness-feedback aware)
+// ---------------------------------------------------------------------------
+
+/// Jain-index setpoint for [`PttServing`]: the monopolisation bias only
+/// engages while the rolling fairness reported through
+/// [`Policy::on_fairness`] sits below this.
+pub const FAIRNESS_SETPOINT: f64 = 0.8;
+
+/// [`PerformanceBased`] with fairness as a control input — the serving
+/// mode's placement policy.
+///
+/// The serving driver periodically feeds two signals through
+/// [`Policy::on_fairness`]: the rolling Jain index over per-app progress
+/// (computed with the total, non-panicking
+/// [`crate::coordinator::metrics::jain_fairness_total`]) and, per core,
+/// which app (if any) is currently *monopolising* it — holding a long
+/// uninterrupted run of completions there. While fairness sits at or above
+/// [`FAIRNESS_SETPOINT`] this policy makes exactly [`PerformanceBased`]'s
+/// decisions. When it dips below, tasks **of the monopolising app** are
+/// biased away from the cores that app monopolises:
+///
+/// - critical tasks search globally avoiding those cores (plain global
+///   search as the fallback when every partition touches one);
+/// - non-critical tasks deciding *on* a core their own app monopolises
+///   widen to the cluster avoiding such cores (plain local width search
+///   as the fallback).
+///
+/// Only the monopolist is displaced — other tenants keep full use of the
+/// machine, so the bias opens the monopolised cores to starved apps
+/// instead of shuffling everyone.
+#[derive(Debug)]
+pub struct PttServing {
+    /// Rolling fairness is below [`FAIRNESS_SETPOINT`] (bias engaged).
+    fairness_low: AtomicBool,
+    /// Per-core monopolising app id; `usize::MAX` = none.
+    monopolist: Vec<AtomicUsize>,
+}
+
+impl PttServing {
+    pub fn new(n_cores: usize) -> PttServing {
+        PttServing {
+            fairness_low: AtomicBool::new(false),
+            monopolist: (0..n_cores).map(|_| AtomicUsize::new(usize::MAX)).collect(),
+        }
+    }
+
+    fn avoids(&self, core: CoreId, app_id: usize) -> bool {
+        self.monopolist[core].load(Ordering::Relaxed) == app_id
+    }
+}
+
+impl Policy for PttServing {
+    fn name(&self) -> &'static str {
+        "ptt-serving"
+    }
+
+    fn place(&self, ctx: &PlaceCtx<'_>) -> Partition {
+        if self.fairness_low.load(Ordering::Relaxed) {
+            let avoid = |c: CoreId| self.avoids(c, ctx.app_id);
+            if ctx.critical {
+                if let Some((p, _)) =
+                    ctx.ptt.best_global_avoiding(ctx.type_id, ctx.topo, avoid)
+                {
+                    return p;
+                }
+            } else if avoid(ctx.core) {
+                if let Some((p, _)) =
+                    ctx.ptt.best_in_cluster_avoiding(ctx.type_id, ctx.core, ctx.topo, avoid)
+                {
+                    return p;
+                }
+            }
+        }
+        if ctx.critical {
+            ctx.ptt.best_global(ctx.type_id, ctx.topo).0
+        } else {
+            ctx.ptt.best_width_for(ctx.type_id, ctx.core, ctx.topo).0
+        }
+    }
+
+    fn on_fairness(&self, jain: f64, monopolist: &[Option<usize>]) {
+        self.fairness_low.store(jain < FAIRNESS_SETPOINT, Ordering::Relaxed);
+        for (cell, m) in self.monopolist.iter().zip(monopolist) {
+            cell.store(m.unwrap_or(usize::MAX), Ordering::Relaxed);
         }
     }
 }
@@ -361,7 +522,7 @@ pub struct PolicyInfo {
 /// The policy registry, in presentation order. [`policy_by_name`] resolves
 /// through this same table, so the CLI listing and the accepted names
 /// cannot drift.
-pub const POLICIES: [PolicyInfo; 6] = [
+pub const POLICIES: [PolicyInfo; 7] = [
     PolicyInfo {
         name: "performance-based",
         aliases: &["performance", "ptt"],
@@ -374,6 +535,13 @@ pub const POLICIES: [PolicyInfo; 6] = [
         description: "performance-based + PTT v2 change detection: critical tasks avoid \
                       flagged (interfered) cores, non-critical tasks widen the local search \
                       when their own core is flagged",
+    },
+    PolicyInfo {
+        name: "ptt-serving",
+        aliases: &["serving"],
+        description: "performance-based + fairness feedback (serving mode): when the rolling \
+                      Jain index dips below the setpoint, the monopolising tenant is biased \
+                      off the cores it monopolises",
     },
     PolicyInfo {
         name: "homogeneous-ws",
@@ -413,6 +581,7 @@ pub fn policy_by_name(name: &str, n_cores: usize) -> Option<Box<dyn Policy>> {
     Some(match canonical {
         "performance-based" => Box::new(PerformanceBased),
         "ptt-adaptive" => Box::new(PttAdaptive::new(n_cores)),
+        "ptt-serving" => Box::new(PttServing::new(n_cores)),
         "homogeneous-ws" => Box::new(HomogeneousWs),
         "cats-like" => Box::new(CatsLike::default()),
         "dheft-like" => Box::new(DheftLike::new(n_cores)),
@@ -436,7 +605,16 @@ mod tests {
         ptt: &'a Ptt,
         topo: &'a Topology,
     ) -> PlaceCtx<'a> {
-        PlaceCtx { core, type_id: 0, critical, app_id: 0, ptt, topo, now: 0.0 }
+        PlaceCtx {
+            core,
+            type_id: 0,
+            critical,
+            app_id: 0,
+            qos: QosClass::default(),
+            ptt,
+            topo,
+            now: 0.0,
+        }
     }
 
     #[test]
@@ -681,6 +859,83 @@ mod tests {
             adaptive.place(&ctx(4, false, &ptt, &topo)),
             PerformanceBased.place(&ctx(4, false, &ptt, &topo))
         );
+    }
+
+    #[test]
+    fn qos_classes_order_resolve_and_carry_slos() {
+        // Priority order is load-bearing: the admission path sheds from
+        // the bottom of it.
+        assert!(QosClass::Latency < QosClass::Batch);
+        assert!(QosClass::Batch < QosClass::BestEffort);
+        for (i, q) in QosClass::ALL.into_iter().enumerate() {
+            assert_eq!(q.index(), i);
+            assert_eq!(QosClass::by_name(q.name()), Some(q));
+        }
+        assert_eq!(QosClass::by_name("best-effort"), Some(QosClass::BestEffort));
+        assert_eq!(QosClass::by_name("nope"), None);
+        assert!(QosClass::Latency.slo_slowdown() < QosClass::Batch.slo_slowdown());
+        assert!(QosClass::BestEffort.slo_slowdown().is_infinite());
+    }
+
+    #[test]
+    fn serving_matches_performance_based_until_fairness_dips() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        for _ in 0..50 {
+            ptt.update(0, 0, 1, 0.01); // core 0 is the clear winner
+        }
+        let serving = PttServing::new(topo.n_cores());
+        let plain = PerformanceBased;
+        // No feedback yet (and feedback above the setpoint): identical
+        // decisions everywhere.
+        let mono = vec![Some(0usize); topo.n_cores()];
+        for fed in [false, true] {
+            if fed {
+                serving.on_fairness(FAIRNESS_SETPOINT + 0.1, &mono);
+            }
+            for core in 0..topo.n_cores() {
+                for critical in [false, true] {
+                    let c = ctx(core, critical, &ptt, &topo);
+                    assert_eq!(serving.place(&c), plain.place(&c), "fed {fed} core {core}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serving_biases_monopolist_off_its_cores_when_unfair() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        for _ in 0..50 {
+            ptt.update(0, 0, 1, 0.01); // core 0 is everyone's favourite
+        }
+        let serving = PttServing::new(topo.n_cores());
+        // App 7 monopolises core 0; fairness collapsed below the setpoint.
+        let mut mono = vec![None; topo.n_cores()];
+        mono[0] = Some(7usize);
+        serving.on_fairness(0.4, &mono);
+        // The monopolist's critical task is steered off core 0...
+        let c7 = PlaceCtx { app_id: 7, ..ctx(5, true, &ptt, &topo) };
+        let p = serving.place(&c7);
+        assert!(!p.contains(0), "monopolist kept its core: {p:?}");
+        // ...while another tenant still gets the fast core.
+        let c3 = PlaceCtx { app_id: 3, ..ctx(5, true, &ptt, &topo) };
+        assert_eq!(serving.place(&c3).leader, 0);
+        // The monopolist's non-critical task escapes its own monopolised
+        // core (cluster-local).
+        let nc7 = PlaceCtx { app_id: 7, ..ctx(0, false, &ptt, &topo) };
+        let p = serving.place(&nc7);
+        assert!(!p.contains(0), "{p:?}");
+        assert_eq!(topo.cluster_of(p.leader).id, 0, "stays in its cluster: {p:?}");
+        // Fairness recovering above the setpoint disengages the bias.
+        serving.on_fairness(0.95, &mono);
+        assert_eq!(serving.place(&c7).leader, 0);
     }
 
     #[test]

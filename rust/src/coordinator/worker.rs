@@ -74,19 +74,21 @@
 //! arrival 0).
 
 use super::aq::AssemblyQueue;
-use super::core::{AdmissionSource, CommitInfo, SchedCore};
+use super::core::{
+    AdmissionSource, CommitInfo, SchedCore, ServingApp, ServingOpts, ServingRun, ServingSource,
+};
 use super::dag::{TaoDag, TaskId};
 use super::episodes_rt::EpisodeDriver;
 use super::inbox::Inbox;
-use super::metrics::{RunResult, TraceRecord, sort_by_commit};
+use super::metrics::{RunResult, TraceRecord, jain_fairness_total, sort_by_commit};
 use super::ptt::Ptt;
-use super::scheduler::Policy;
+use super::scheduler::{Policy, QosClass};
 use super::wsq::WsQueue;
 use crate::platform::{EpisodeSchedule, Topology};
 use crate::util::Pcg32;
 use crossbeam_utils::CachePadded;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering, fence};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Engine options.
@@ -376,11 +378,29 @@ impl<'a> Shared<'a> {
 const SPIN_LIMIT: u32 = 16;
 const YIELD_LIMIT: u32 = 32;
 
+/// Cap on the parked-worker sleep backoff. A serving run can hold workers
+/// idle for long stretches (admission gaps, drained lanes); re-waking
+/// every `park_timeout` (1 ms) just to find nothing is a busy-wakeup in
+/// slow motion — thousands of pointless sweeps a second across the pool.
+/// Consecutive fruitless park timeouts therefore double the sleep from
+/// `park_timeout` up to this cap; finding *any* work resets it. The wake
+/// handshake is untouched — producers unpark sleepers explicitly, so a
+/// long sleep only bounds how late a worker notices a protocol bug, not
+/// how late it notices work.
+const PARK_BACKOFF_CAP: Duration = Duration::from_millis(100);
+
 fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32, sink: &mut Vec<TraceRecord>) {
     let _ = shared.parkers[core].thread.set(std::thread::current());
     let n = shared.n_cores();
     let mut idle = 0u32;
+    // Tests stretch `park_timeout` past the cap to prove the handshake
+    // (not the timeout) delivers wakeups; the backoff must not shrink it.
+    let park_cap = shared.park_timeout.max(PARK_BACKOFF_CAP);
+    let mut park_backoff = shared.park_timeout;
     while !shared.done.load(Ordering::Acquire) {
+        if idle == 0 {
+            park_backoff = shared.park_timeout;
+        }
         // 0. Admission inbox: late roots handed over by the submitter are
         // drained into our own deque (owner-only push).
         let admitted = shared.inboxes[core].take_all();
@@ -462,9 +482,16 @@ fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32, sink: &mut Vec<
             idle = 0;
             continue;
         }
-        std::thread::park_timeout(shared.park_timeout);
+        // About to go idle: reclaim any retired deque buffers while no
+        // thief brackets our queue (owner-only; cheap no-op when empty).
+        shared.wsqs[core].maintain();
+        std::thread::park_timeout(park_backoff);
         shared.n_parked.fetch_sub(1, Ordering::SeqCst);
         parker.parked.store(false, Ordering::SeqCst);
+        // A fruitless timeout doubles the next sleep (capped); finding
+        // work on the re-scan below resets `idle`, and with it the
+        // backoff, at the top of the loop.
+        park_backoff = (park_backoff * 2).min(park_cap);
         // Re-scan everything once, then fall straight back to the
         // sweep-and-park regime while idleness persists.
         idle = YIELD_LIMIT - 1;
@@ -636,6 +663,229 @@ pub fn run_stream_real(
         platform: topo.name.clone(),
         makespan,
         records,
+    }
+}
+
+/// Serving-mode admission state owned by the submitter thread. Boxed in a
+/// `Mutex` only so the scoped thread can mutate it and the caller can take
+/// it back after the join — the lock is held once, uncontended.
+struct ServingState {
+    source: ServingSource,
+    /// `shed[app]` — refused by backpressure (excluded from fairness).
+    shed: Vec<bool>,
+    shed_apps: Vec<usize>,
+    fairness: Vec<(f64, f64)>,
+    last_feedback: f64,
+}
+
+/// One tick of the serving fairness feedback loop: at most once per
+/// `period`, sample the Jain index over the *offered*, non-shed apps'
+/// completion fractions and report it — with the per-core monopolist
+/// view — to the policy's `on_fairness` hook (only `ptt-serving` reacts).
+/// `app_meta[app] = (arrival, n_tasks)`.
+fn fairness_tick(
+    shared: &Shared<'_>,
+    policy: &dyn Policy,
+    app_meta: &[(f64, usize)],
+    shed: &[bool],
+    opts: &ServingOpts,
+    last: &mut f64,
+    out: &mut Vec<(f64, f64)>,
+) {
+    let now = shared.now();
+    if now - *last < opts.fairness_period {
+        return;
+    }
+    *last = now;
+    let xs: Vec<f64> = app_meta
+        .iter()
+        .enumerate()
+        .filter(|&(a, &(arrival, _))| arrival <= now && !shed[a])
+        .map(|(a, &(_, n))| shared.core.app_done(a) as f64 / n as f64)
+        .collect();
+    if xs.len() < 2 {
+        return; // fairness over one tenant is vacuous
+    }
+    let jain = jain_fairness_total(&xs);
+    policy.on_fairness(jain, &shared.core.monopolists(opts.min_streak));
+    out.push((now, jain));
+}
+
+/// Execute a serving-mode workload on real worker threads: the open-loop
+/// admission schedule in `apps` is offered at wall-clock arrival times
+/// through [`ServingSource`] — per-core inbox depth is the backpressure
+/// reading, pressured offers are delayed (batch) or shed (best-effort,
+/// tasks cancelled in the core so the run still terminates), and the
+/// fairness feedback loop runs from the submitter thread. At
+/// `serving.drain_after` the source switches to drain mode and the
+/// backlog quiesces; the run ends when every admitted task committed and
+/// every shed task was cancelled.
+///
+/// `app_qos[app]` must cover every app in `app_of` (it feeds placement
+/// contexts); `apps` carries the offer schedule, QoS and root sets.
+#[allow(clippy::too_many_arguments)]
+pub fn run_serving_real(
+    dag: &TaoDag,
+    app_of: &[usize],
+    apps: Vec<ServingApp>,
+    app_qos: Vec<QosClass>,
+    topo: &Topology,
+    policy: &dyn Policy,
+    ptt: Option<&Ptt>,
+    opts: &RealEngineOpts,
+    serving: &ServingOpts,
+) -> ServingRun {
+    // (arrival, n_tasks) per app id, for the fairness sampler. Apps not in
+    // the serving schedule keep arrival = ∞ and are never sampled.
+    let n_apps = apps.iter().map(|a| a.app_id + 1).max().unwrap_or(1);
+    let mut app_meta = vec![(f64::INFINITY, 1usize); n_apps];
+    for a in &apps {
+        app_meta[a.app_id] = (a.arrival, a.n_tasks.max(1));
+    }
+    let state = Mutex::new(ServingState {
+        source: ServingSource::new(apps, serving.max_lane_depth, serving.delay_step),
+        shed: vec![false; n_apps],
+        shed_apps: Vec::new(),
+        fairness: Vec::new(),
+        last_feedback: 0.0,
+    });
+    let fresh;
+    let ptt = match ptt {
+        Some(p) => p,
+        None => {
+            fresh = Ptt::new(dag.n_types(), topo);
+            &fresh
+        }
+    };
+    let shared = Shared {
+        core: SchedCore::new(dag, app_of, topo, policy, ptt).with_app_qos(app_qos),
+        wsqs: (0..topo.n_cores()).map(|_| WsQueue::new()).collect(),
+        aqs: (0..topo.n_cores()).map(|_| AssemblyQueue::new()).collect(),
+        inboxes: (0..topo.n_cores()).map(|_| Inbox::new()).collect(),
+        parkers: (0..topo.n_cores()).map(|_| CachePadded::new(Parker::default())).collect(),
+        n_parked: AtomicUsize::new(0),
+        park_timeout: opts.park_timeout,
+        episodes: EpisodeDriver::with_interference_throttle(
+            opts.episodes.clone(),
+            !(pinning_available() && opts.pin_threads),
+        ),
+        done: AtomicBool::new(false),
+        t0: Instant::now(),
+    };
+    let mut trace_shards: Vec<CachePadded<Vec<TraceRecord>>> =
+        (0..topo.n_cores()).map(|_| CachePadded::new(Vec::new())).collect();
+    let n_cores = topo.n_cores();
+    // Bootstrap: apps due at t ≤ 0 go straight into the deques. No worker
+    // is running yet, so every lane is empty and no offer can be pressured.
+    state.lock().unwrap().source.admit_due(
+        0.0,
+        n_cores,
+        |_lane| 0,
+        |lane, root| shared.wsqs[lane].push(root),
+        |_app| unreachable!("empty lanes cannot pressure a bootstrap offer"),
+    );
+
+    let mut root_rng = Pcg32::seeded(opts.seed);
+    let online = crate::platform::detect::online_cpus();
+    std::thread::scope(|s| {
+        if shared.episodes.is_active() {
+            let pin_threads = opts.pin_threads;
+            shared.episodes.spawn_spinners(s, shared.t0, &shared.done, move |c| {
+                if pin_threads {
+                    pin_to_cpu(c % online);
+                }
+            });
+        }
+        for (core, shard) in trace_shards.iter_mut().enumerate() {
+            let rng = root_rng.split(core as u64);
+            let shared = &shared;
+            let pin = opts.pin_threads;
+            s.spawn(move || {
+                if pin {
+                    pin_to_cpu(core % online);
+                }
+                worker_loop(shared, core, rng, shard);
+            });
+        }
+        let (shared, state) = (&shared, &state);
+        s.spawn(move || {
+            // The serving submitter: the single admitter. Like the stream
+            // submitter it naps in short bounded slices towards the next
+            // offer, but it also drives the fairness feedback from the
+            // same naps and flips the source into drain mode at the
+            // quiesce deadline.
+            let st = &mut *state.lock().unwrap();
+            let ServingState { source, shed, shed_apps, fairness, last_feedback } = st;
+            let mut draining = false;
+            while let Some(offer) = source.next_offer() {
+                loop {
+                    let now = shared.now();
+                    if !draining && now >= serving.drain_after {
+                        source.begin_drain();
+                        draining = true;
+                    }
+                    if offer <= now {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_secs_f64((offer - now).min(0.002)));
+                    fairness_tick(
+                        shared,
+                        policy,
+                        &app_meta,
+                        shed,
+                        serving,
+                        last_feedback,
+                        fairness,
+                    );
+                }
+                let pushed = source.admit_due(
+                    shared.now(),
+                    n_cores,
+                    |lane| shared.inboxes[lane].depth(),
+                    |lane, root| shared.inboxes[lane].push(root),
+                    |app| {
+                        shed[app.app_id] = true;
+                        shed_apps.push(app.app_id);
+                        // Shed roots were never pushed: the whole subgraph
+                        // is unreachable, so account it as done wholesale.
+                        if shared.core.cancel_tasks(app.n_tasks) {
+                            shared.done.store(true, Ordering::Release);
+                            shared.wake_all();
+                        }
+                    },
+                );
+                if pushed > 0 {
+                    shared.wake_after_publish(|sh| {
+                        for c in 0..n_cores.min(pushed) {
+                            sh.wake_core(c);
+                        }
+                    });
+                }
+                fairness_tick(shared, policy, &app_meta, shed, serving, last_feedback, fairness);
+            }
+        });
+    });
+
+    assert!(shared.core.is_done(), "worker pool exited with incomplete tasks");
+    let makespan = shared.now();
+    let mut records: Vec<TraceRecord> =
+        trace_shards.into_iter().flat_map(CachePadded::into_inner).collect();
+    sort_by_commit(&mut records);
+    let lane_high_water = shared.inboxes.iter().map(Inbox::high_water).max().unwrap_or(0);
+    let wsq_retired = shared.wsqs.iter().map(WsQueue::retired_len).max().unwrap_or(0);
+    let st = state.into_inner().unwrap();
+    ServingRun {
+        result: RunResult {
+            policy: policy.name().to_string(),
+            platform: topo.name.clone(),
+            makespan,
+            records,
+        },
+        counters: st.source.counters(),
+        shed_apps: st.shed_apps,
+        lane_high_water,
+        wsq_retired,
+        fairness: st.fairness,
     }
 }
 

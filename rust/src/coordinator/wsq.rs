@@ -39,16 +39,39 @@
 //!   `Copy` types the discarded duplicate is inert. (Task ids are `usize`,
 //!   so the engines lose nothing.)
 //!
-//! Grown-out-of buffers are *retired*, not freed: a stale thief may still
-//! read them, and its CAS then fails harmlessly. Retirement takes a lock,
-//! but only inside `grow` — never on the push/pop/steal fast path.
+//! Grown-out-of buffers are *retired*, not freed immediately: a stale
+//! thief may still read them, and its CAS then fails harmlessly.
+//! Retirement takes a lock, but only inside `grow` — never on the
+//! push/pop/steal fast path.
+//!
+//! ## Retired-buffer reclamation
+//!
+//! An earlier revision kept retired buffers until `Drop` — fine for a
+//! finite run, unbounded memory for a never-draining service where deques
+//! resize under churn forever. Retired buffers are now freed at
+//! **quiescent points** via a thief refcount (`thieves`): every `steal`
+//! brackets its buffer access with a `SeqCst` increment/decrement, and the
+//! owner frees the retired list only after observing `thieves == 0`.
+//!
+//! Soundness (sequential-consistency argument; every participating access
+//! is `SeqCst`): a thief can only obtain a retired pointer `P` by loading
+//! `buf` *before* the `grow` that replaced `P` in the SC total order, and
+//! its `thieves` increment precedes that load. The owner's `thieves` read
+//! follows the replacing store (same thread: `grow`/`maintain` are
+//! owner-only). So if the owner reads 0, every thief that could hold `P`
+//! has already decremented — i.e. finished its steal — and any *later*
+//! thief's `buf` load follows the replacing `SeqCst` store in SC order and
+//! must observe the new buffer. Freeing `P` is then safe. Reclamation runs
+//! opportunistically inside `grow` and from [`WsQueue::maintain`], which
+//! the real engine's workers call before parking — exactly when thieves
+//! are likeliest to be quiescent.
 
 use std::fmt;
 use std::marker::PhantomData;
 use std::mem::MaybeUninit;
 use std::ptr;
 use std::sync::Mutex;
-use std::sync::atomic::{AtomicIsize, AtomicPtr, AtomicU64, Ordering, fence};
+use std::sync::atomic::{AtomicIsize, AtomicPtr, AtomicU64, AtomicUsize, Ordering, fence};
 
 /// Power-of-two circular buffer; indices wrap via the mask. Slots hold `T`
 /// bit-cast into a `u64` word so every access is a (relaxed) atomic —
@@ -122,8 +145,12 @@ pub struct WsQueue<T> {
     /// Owner end.
     bottom: AtomicIsize,
     buf: AtomicPtr<Buffer<T>>,
-    /// Buffers replaced by `grow`, kept alive until drop for stale thieves.
+    /// Buffers replaced by `grow`, kept alive while a stale thief may
+    /// still read them; freed at quiescent points (see the module docs).
     retired: Mutex<Vec<*mut Buffer<T>>>,
+    /// Number of thieves currently inside `steal` (the quiescence
+    /// refcount guarding `retired`).
+    thieves: AtomicUsize,
 }
 
 // Safety: the slots only ever transfer `T` by copy between threads, and all
@@ -138,6 +165,7 @@ impl<T: Copy> WsQueue<T> {
             bottom: AtomicIsize::new(0),
             buf: AtomicPtr::new(Buffer::alloc(INITIAL_CAP)),
             retired: Mutex::new(Vec::new()),
+            thieves: AtomicUsize::new(0),
         }
     }
 
@@ -182,6 +210,15 @@ impl<T: Copy> WsQueue<T> {
     /// Thief-side steal (top, FIFO). Retries internally when it loses a
     /// race; returns `None` only when the deque was observed empty.
     pub fn steal(&self) -> Option<T> {
+        // Quiescence guard: while the count is non-zero the owner must not
+        // free retired buffers (this thief may hold a stale pointer).
+        self.thieves.fetch_add(1, Ordering::SeqCst);
+        let item = self.steal_inner();
+        self.thieves.fetch_sub(1, Ordering::SeqCst);
+        item
+    }
+
+    fn steal_inner(&self) -> Option<T> {
         loop {
             let t = self.top.load(Ordering::Acquire);
             fence(Ordering::SeqCst);
@@ -189,7 +226,10 @@ impl<T: Copy> WsQueue<T> {
             if t >= b {
                 return None;
             }
-            let buf = self.buf.load(Ordering::Acquire);
+            // SeqCst (not just Acquire): the reclamation proof needs this
+            // load totally ordered against `grow`'s buffer swap — see the
+            // module docs.
+            let buf = self.buf.load(Ordering::SeqCst);
             let item = unsafe { (*buf).get(t) };
             if self
                 .top
@@ -214,15 +254,53 @@ impl<T: Copy> WsQueue<T> {
     }
 
     /// Double the buffer, copying the live range; the old buffer is
-    /// retired (see the module docs), not freed.
+    /// retired (see the module docs) and freed once no thief can hold it.
     fn grow(&self, t: isize, b: isize, old: *mut Buffer<T>) -> *mut Buffer<T> {
         let new = Buffer::alloc(unsafe { &*old }.cap() * 2);
         for i in t..b {
             unsafe { (*new).put(i, (*old).get(i)) };
         }
-        self.buf.store(new, Ordering::Release);
+        // SeqCst: totally ordered against thief buffer loads and the
+        // owner's quiescence check (the reclamation proof's anchor).
+        self.buf.store(new, Ordering::SeqCst);
         self.retired.lock().unwrap().push(old);
+        self.reclaim_if_quiescent();
         new
+    }
+
+    /// Owner-side housekeeping: free retired buffers if no thief is
+    /// mid-steal. **Owner-only**, like `push`/`pop` — the soundness
+    /// argument needs the quiescence check ordered after this queue's own
+    /// `grow` stores, which same-thread program order provides. The real
+    /// engine's workers call this right before parking.
+    pub fn maintain(&self) {
+        self.reclaim_if_quiescent();
+    }
+
+    /// Number of retired (not yet reclaimed) buffers — observability for
+    /// the long-churn bounded-memory tests.
+    pub fn retired_len(&self) -> usize {
+        self.retired.lock().unwrap().len()
+    }
+
+    fn reclaim_if_quiescent(&self) {
+        let mut retired = match self.retired.try_lock() {
+            Ok(r) => r,
+            // Contended only by another reclaim attempt or Drop; skip.
+            Err(_) => return,
+        };
+        if retired.is_empty() {
+            return;
+        }
+        // Check *after* taking the lock: a thief that increments after
+        // this load can no longer observe any pointer in `retired` (its
+        // `buf` load is SC-after the store that retired it — module docs).
+        if self.thieves.load(Ordering::SeqCst) != 0 {
+            return;
+        }
+        for p in retired.drain(..) {
+            unsafe { drop(Box::from_raw(p)) };
+        }
     }
 }
 
@@ -313,6 +391,67 @@ mod tests {
             assert_eq!(q.pop(), Some(i));
         }
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn quiescent_grow_reclaims_retired_buffers() {
+        // No thieves at all: every grow can free the buffer it retires,
+        // so the retired list never exceeds the one entry `grow` pushes
+        // before its own reclaim pass (which drains it).
+        let q = WsQueue::new();
+        for round in 0..20 {
+            for i in 0..(super::INITIAL_CAP as i64 * (round + 2)) {
+                q.push(i);
+            }
+            assert_eq!(q.retired_len(), 0, "round {round}");
+            while q.pop().is_some() {}
+        }
+    }
+
+    #[test]
+    fn long_churn_with_thieves_keeps_retired_bounded() {
+        // The never-draining-service scenario: the owner pushes/pops under
+        // sustained stealing pressure for many grow cycles. The retired
+        // list must stay bounded (reclaimed at quiescent points), not grow
+        // monotonically as it did before reclamation existed.
+        use std::sync::atomic::AtomicBool;
+        let q = Arc::new(WsQueue::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let thieves: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        if q.steal().is_some() {
+                            n += 1;
+                        }
+                    }
+                    n
+                })
+            })
+            .collect();
+        let mut max_retired = 0;
+        for _ in 0..200 {
+            for i in 0..(super::INITIAL_CAP as i64 * 8) {
+                q.push(i);
+            }
+            while q.pop().is_some() {}
+            q.maintain();
+            max_retired = max_retired.max(q.retired_len());
+        }
+        stop.store(true, Ordering::Relaxed);
+        for t in thieves {
+            t.join().unwrap();
+        }
+        q.maintain();
+        // A deque retires one buffer per grow, i.e. at most
+        // log2(peak window / INITIAL_CAP) in total — the list must never
+        // exceed that small bound while thieves are live, and must drain
+        // to zero at the first thief-free maintain().
+        assert!(max_retired <= 8, "retired list grew unbounded: {max_retired}");
+        assert_eq!(q.retired_len(), 0, "final maintain() with no thieves must drain");
     }
 
     #[test]

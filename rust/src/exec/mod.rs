@@ -42,14 +42,21 @@
 //! `topo.n_cores()` worker threads on the host in wall time, so makespans
 //! are host-dependent (and `ptt_probe` sampling is sim-only).
 
+use crate::coordinator::core::{ServingOpts, ServingRun};
 use crate::coordinator::dag::TaoDag;
-use crate::coordinator::metrics::{AppMetrics, RunResult, jain_fairness_index, per_app_metrics};
+use crate::coordinator::metrics::{
+    AppMetrics, RunResult, jain_fairness_index, jain_fairness_total, per_app_metrics,
+};
 use crate::coordinator::ptt::Ptt;
-use crate::coordinator::scheduler::{Policy, policy_by_name};
-use crate::coordinator::worker::{RealEngineOpts, run_dag_real, run_stream_real};
+use crate::coordinator::scheduler::{Policy, QosClass, policy_by_name};
+use crate::coordinator::worker::{
+    RealEngineOpts, run_dag_real, run_serving_real, run_stream_real,
+};
 use crate::platform::{Platform, scenarios};
-use crate::sim::{SimOpts, run_dag_sim, run_stream_sim};
-use crate::workload::{MultiDag, WorkloadStream};
+use crate::sim::{SimOpts, run_dag_sim, run_serving_sim, run_stream_sim};
+use crate::util::stats;
+use crate::workload::{MultiDag, ServingStream, WorkloadStream};
+use std::collections::HashSet;
 
 /// Options understood by every backend.
 #[derive(Debug, Clone)]
@@ -156,6 +163,24 @@ pub trait ExecutionBackend: Send + Sync {
         opts: &RunOpts,
     ) -> BackendRun;
 
+    /// Execute a serving-mode workload ([`MultiDag`] built from a
+    /// [`ServingStream`] window): offers go through [`ServingSource`]
+    /// backpressure, QoS classes steer shed/delay decisions, and the
+    /// fairness feedback loop drives [`Policy::on_fairness`]. Returns the
+    /// raw engine outcome; [`run_serving_triple`] layers metrics on top.
+    ///
+    /// [`ServingSource`]: crate::coordinator::ServingSource
+    /// [`Policy::on_fairness`]: crate::coordinator::Policy::on_fairness
+    fn run_serving(
+        &self,
+        multi: &MultiDag,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+        serving: &ServingOpts,
+    ) -> ServingRun;
+
     /// Execute a workload stream end-to-end: materialise it, run it, and
     /// derive the per-app metrics (no isolated baselines — see
     /// [`run_stream_triple`] for slowdown-aware runs).
@@ -236,6 +261,28 @@ impl ExecutionBackend for SimBackend {
         }
         BackendRun { result, ptt_samples: run.ptt_samples }
     }
+
+    fn run_serving(
+        &self,
+        multi: &MultiDag,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+        serving: &ServingOpts,
+    ) -> ServingRun {
+        run_serving_sim(
+            &multi.dag,
+            &multi.app_of,
+            multi.serving_apps(),
+            multi.app_qos(),
+            plat,
+            policy,
+            ptt,
+            &SimOpts { seed: opts.seed, ..Default::default() },
+            serving,
+        )
+    }
 }
 
 /// Real worker threads on the host ([`run_dag_real`]) — wall time. Uses
@@ -303,6 +350,33 @@ impl ExecutionBackend for RealBackend {
             result.records.clear();
         }
         BackendRun { result, ptt_samples: Vec::new() }
+    }
+
+    fn run_serving(
+        &self,
+        multi: &MultiDag,
+        plat: &Platform,
+        policy: &dyn Policy,
+        ptt: Option<&Ptt>,
+        opts: &RunOpts,
+        serving: &ServingOpts,
+    ) -> ServingRun {
+        run_serving_real(
+            &multi.dag,
+            &multi.app_of,
+            multi.serving_apps(),
+            multi.app_qos(),
+            &plat.topo,
+            policy,
+            ptt,
+            &RealEngineOpts {
+                pin_threads: opts.pin_threads,
+                seed: opts.seed,
+                episodes: plat.episodes.clone(),
+                ..Default::default()
+            },
+            serving,
+        )
     }
 }
 
@@ -382,6 +456,139 @@ pub fn run_stream_triple(
         run.result.records.clear();
     }
     Ok(StreamRun { result: run.result, apps, ptt_samples: run.ptt_samples })
+}
+
+/// Result of one serving-mode run with derived metrics: the raw engine
+/// outcome plus per-admitted-app accounting (shed apps never ran and have
+/// no metrics row) and the serving horizon the rates are normalised by.
+#[derive(Debug)]
+pub struct ServingReport {
+    pub run: ServingRun,
+    /// Metrics of the *admitted* apps, in `app_id` order.
+    pub apps: Vec<AppMetrics>,
+    /// QoS class per row of `apps`.
+    pub app_qos: Vec<QosClass>,
+    /// Serving window length (backend seconds).
+    pub horizon: f64,
+}
+
+impl ServingReport {
+    /// Sustained admission rate: apps actually admitted per horizon second.
+    pub fn admissions_per_sec(&self) -> f64 {
+        self.run.counters.admitted.iter().sum::<usize>() as f64 / self.horizon
+    }
+
+    /// Apps offered by the arrival process (admitted + shed; delay events
+    /// re-offer the same app and are not counted here).
+    pub fn offered(&self) -> usize {
+        self.run.counters.admitted.iter().sum::<usize>()
+            + self.run.counters.sheds.iter().sum::<usize>()
+    }
+
+    /// p99 per-app slowdown vs isolated baselines; `None` until a
+    /// baseline-aware driver filled the slowdowns.
+    pub fn p99_slowdown(&self) -> Option<f64> {
+        let xs: Vec<f64> = self.apps.iter().filter_map(|a| a.slowdown).collect();
+        if xs.is_empty() { None } else { Some(stats::percentile(&xs, 99.0)) }
+    }
+
+    /// Per-class SLO attainment: the fraction of the class's admitted apps
+    /// whose slowdown meets [`QosClass::slo_slowdown`], indexed by
+    /// [`QosClass::index`]. `None` for a class with no slowdown-bearing
+    /// apps (not offered, all shed, or no baselines attached).
+    pub fn slo_attainment(&self) -> [Option<f64>; 3] {
+        let mut met = [0usize; 3];
+        let mut total = [0usize; 3];
+        for (app, &qos) in self.apps.iter().zip(&self.app_qos) {
+            let Some(sd) = app.slowdown else { continue };
+            total[qos.index()] += 1;
+            if sd <= qos.slo_slowdown() {
+                met[qos.index()] += 1;
+            }
+        }
+        std::array::from_fn(|i| {
+            if total[i] == 0 { None } else { Some(met[i] as f64 / total[i] as f64) }
+        })
+    }
+
+    /// Jain fairness at the end of the run: the feedback loop's last
+    /// sample when it fired, else the total (non-panicking) index over
+    /// per-app throughput.
+    pub fn jain(&self) -> f64 {
+        if let Some(&(_, j)) = self.run.fairness.last() {
+            return j;
+        }
+        let xs: Vec<f64> = self
+            .apps
+            .iter()
+            .map(|a| a.n_tasks as f64 / a.makespan().max(1e-12))
+            .collect();
+        jain_fairness_total(&xs)
+    }
+}
+
+/// Run a `(backend × scenario × policy)` triple in serving mode: one
+/// bounded window of the open-loop [`ServingStream`], with backpressure on
+/// during `[0, horizon)` and a clean drain after. With `with_baseline`,
+/// every *admitted* app is additionally run alone (fresh policy instance,
+/// fresh PTT — same protocol as [`run_stream_triple`]) so slowdown-derived
+/// metrics ([`ServingReport::p99_slowdown`],
+/// [`ServingReport::slo_attainment`]) are available.
+///
+/// `serving.drain_after` is overridden to `horizon` unless the caller set
+/// a finite deadline of their own.
+#[allow(clippy::too_many_arguments)]
+pub fn run_serving_triple(
+    backend: &str,
+    scenario: &str,
+    policy: &str,
+    stream: &ServingStream,
+    horizon: f64,
+    opts: &RunOpts,
+    serving: &ServingOpts,
+    with_baseline: bool,
+) -> Result<ServingReport, String> {
+    if !(horizon > 0.0 && horizon.is_finite()) {
+        return Err(format!("serving horizon must be positive and finite, got {horizon}"));
+    }
+    let plat = scenarios::by_name(scenario)
+        .ok_or_else(|| format!("unknown platform scenario '{scenario}'"))?;
+    let policy_name = policy;
+    let policy = policy_by_name(policy_name, plat.topo.n_cores())
+        .ok_or_else(|| format!("unknown policy '{policy_name}'"))?;
+    let backend =
+        backend_by_name(backend).ok_or_else(|| format!("unknown backend '{backend}'"))?;
+    let multi = stream.window(horizon).build();
+    let serving = if serving.drain_after.is_finite() {
+        serving.clone()
+    } else {
+        ServingOpts { drain_after: horizon, ..serving.clone() }
+    };
+    let mut run = backend.run_serving(&multi, &plat, policy.as_ref(), None, opts, &serving);
+    let shed: HashSet<usize> = run.shed_apps.iter().copied().collect();
+    let admitted_index: Vec<(usize, String, f64)> = multi
+        .app_index()
+        .into_iter()
+        .filter(|(id, _, _)| !shed.contains(id))
+        .collect();
+    let mut apps = per_app_metrics(&run.result, &admitted_index);
+    let app_qos: Vec<QosClass> = apps.iter().map(|m| multi.apps[m.app_id].qos).collect();
+    if with_baseline {
+        for metrics in apps.iter_mut() {
+            // Fresh policy instance per baseline: stateful policies must
+            // not leak serving-run state into their isolated run.
+            let iso_policy = policy_by_name(policy_name, plat.topo.n_cores())
+                .expect("policy resolved above");
+            let (dag, _) = crate::dag_gen::generate(&multi.apps[metrics.app_id].params);
+            let iso_opts = RunOpts { trace: false, ptt_probe: None, ..opts.clone() };
+            let iso = backend.run(&dag, &plat, iso_policy.as_ref(), None, &iso_opts);
+            *metrics = metrics.clone().with_isolated(iso.result.makespan);
+        }
+    }
+    if !opts.trace {
+        run.result.records.clear();
+    }
+    Ok(ServingReport { run, apps, app_qos, horizon })
 }
 
 #[cfg(test)]
@@ -548,6 +755,68 @@ mod tests {
             run_stream_triple("sim", "stream-pois8", "nope", &stream, &RunOpts::default(), false)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn serving_triple_reports_rates_slos_and_fairness() {
+        use crate::workload::{ServingStream, TenantSpec};
+        let tenants = vec![
+            TenantSpec::new("rt", DagParams::mix(10, 2.0, 1), QosClass::Latency),
+            TenantSpec::new("bulk", DagParams::mix(20, 4.0, 2), QosClass::Batch),
+            TenantSpec::new("scav", DagParams::mix(10, 2.0, 3), QosClass::BestEffort),
+        ];
+        let stream = ServingStream::new(tenants, 40.0, 0xCAFE);
+        // Tight lanes so backpressure actually fires inside the window.
+        let serving = ServingOpts { max_lane_depth: 2, delay_step: 0.005, ..Default::default() };
+        let report = run_serving_triple(
+            "sim",
+            "hom4",
+            "ptt-serving",
+            &stream,
+            1.0,
+            &RunOpts::default(),
+            &serving,
+            true,
+        )
+        .unwrap();
+        // Every admitted app has a metrics row; shed apps have none.
+        let admitted: usize = report.run.counters.admitted.iter().sum();
+        assert_eq!(admitted, report.apps.len());
+        assert_eq!(report.apps.len() + report.run.shed_apps.len(), report.offered());
+        assert!(report.admissions_per_sec() > 0.0);
+        // QoS ordering invariant: the latency class is never delayed or
+        // shed, and batch is never shed (only delayed).
+        let c = &report.run.counters;
+        assert_eq!(c.delays[QosClass::Latency.index()], 0);
+        assert_eq!(c.sheds[QosClass::Latency.index()], 0);
+        assert_eq!(c.sheds[QosClass::Batch.index()], 0);
+        assert_eq!(c.delays[QosClass::BestEffort.index()], 0);
+        // Baselines attached: slowdown-derived metrics are available.
+        assert!(report.apps.iter().all(|a| a.slowdown.is_some()));
+        assert!(report.p99_slowdown().unwrap() > 0.0);
+        for slo in report.slo_attainment().into_iter().flatten() {
+            assert!((0.0..=1.0).contains(&slo));
+        }
+        let j = report.jain();
+        assert!(j > 0.0 && j <= 1.0, "{j}");
+        // Bit-identical on repeat: the serving sim is deterministic.
+        let again = run_serving_triple(
+            "sim",
+            "hom4",
+            "ptt-serving",
+            &stream,
+            1.0,
+            &RunOpts::default(),
+            &serving,
+            false,
+        )
+        .unwrap();
+        assert_eq!(
+            again.run.result.makespan.to_bits(),
+            report.run.result.makespan.to_bits()
+        );
+        assert_eq!(again.run.counters, report.run.counters);
+        assert_eq!(again.run.shed_apps, report.run.shed_apps);
     }
 
     #[test]

@@ -14,10 +14,14 @@
 //!                  --tasks 200 --parallelism 4 --mean-gap 0.02)
 //!   repro vgg16 [--threads 8] [--repeats 3] [--block-len 64]
 //!   repro vgg16-infer [--mode pipeline|whole|dag] [--hw 64] [--block-len 64]
+//!   repro serve [--backend sim|real] [--scenario hom4] [--policy ptt-serving]
+//!               [--tenants 3] [--rate 40] [--horizon 1.0] [--seed 42]
+//!               [--baseline] [--quick]
 //!   repro ptt-dump [--platform tx2] [--tasks 500] ...
 //!   repro scenarios                 # list platform + stream scenarios
 //!   repro policies                  # list scheduling policies + aliases
 //!   repro bench-overhead [--quick] [--json] [--compare]   # perf harness
+//!   repro bench-serving [--quick] [--json]                # serving ramp
 //!
 //! Platforms resolve through the scenario registry
 //! (`platform::scenarios`), execution substrates through the
@@ -36,8 +40,9 @@ use xitao::kernels::KernelSizes;
 use xitao::platform::{Platform, scenarios};
 use xitao::runtime::{PjrtService, VggWeights, build_real_dag, pipeline_infer, synthetic_image};
 use xitao::vgg::{VggConfig, build_dag as build_vgg_dag};
+use xitao::coordinator::{QosClass, ServingOpts};
 use xitao::workload::scenarios::{stream_by_name, stream_scenarios};
-use xitao::workload::WorkloadStream;
+use xitao::workload::{ServingStream, WorkloadStream};
 
 fn main() {
     let args = Args::from_env();
@@ -50,7 +55,9 @@ fn main() {
         "run-dag" => cmd_run_dag(&args),
         "bench-overhead" => cmd_bench_overhead(&args),
         "bench-interference" => cmd_bench_interference(&args),
+        "bench-serving" => cmd_bench_serving(&args),
         "stream" => cmd_stream(&args),
+        "serve" => cmd_serve(&args),
         "vgg16" => cmd_vgg16(&args),
         "vgg16-infer" => cmd_vgg16_infer(&args),
         "ptt-dump" => cmd_ptt_dump(&args),
@@ -83,6 +90,12 @@ streams:    stream [--scenario stream-pois8|duet-tx2|bg-interferer-haswell20]
                    [--baseline] [--quick]
             stream --scenario custom --platform hom8 --apps 4 --tasks 200
                    --parallelism 4 --mean-gap 0.02
+serving:    serve [--backend sim|real] [--scenario hom4]
+                  [--policy ptt-serving] [--tenants 3] [--rate 40]
+                  [--horizon 1.0] [--seed S] [--baseline] [--quick]
+            (continuous multi-tenant window: open-loop Poisson arrivals
+             over the tenants, QoS classes round-robin, admission
+             backpressure on, clean drain at the horizon)
 platforms:  run `repro scenarios` for the registered list; hom<N> for
             any homogeneous core count
 policies:   run `repro policies` for the registered list with aliases
@@ -98,6 +111,11 @@ perf:       bench-overhead [--quick] [--json] [--compare]
              values, change-detector flags and critical placements on the
              interfered cores, ptt vs ptt-adaptive, both backends; --json
              writes BENCH_interference_response.json at the repo root)
+            bench-serving [--quick] [--json] [--scenario hom4]
+            [--policy ptt-serving] [--seed S]
+            (serving tenant ramp on the sim backend: sustained
+             admissions/sec, p99 slowdown, per-QoS SLO attainment, Jain
+             fairness; --json writes BENCH_serving.json at the repo root)
 
 vgg:        vgg16 [--threads N] [--repeats R] [--block-len B] [--policy ...]
             vgg16-infer [--mode pipeline|whole|dag|validate] [--hw 64]
@@ -290,6 +308,120 @@ fn cmd_bench_interference(args: &Args) -> i32 {
         seed: args.get("seed", 7),
     };
     xitao::bench::emit_interference(&opts);
+    0
+}
+
+fn cmd_bench_serving(args: &Args) -> i32 {
+    let scenario = args.get_str("scenario", "hom4");
+    if scenarios::by_name(&scenario).is_none() {
+        eprintln!("unknown platform scenario '{scenario}'");
+        return 2;
+    }
+    let policy = args.get_str("policy", "ptt-serving");
+    let n_cores = scenarios::by_name(&scenario).expect("validated").topo.n_cores();
+    if policy_by_name(&policy, n_cores).is_none() {
+        eprintln!("unknown policy '{policy}'");
+        return 2;
+    }
+    let opts = xitao::bench::ServingBenchOpts {
+        quick: args.switch("quick"),
+        json: args.switch("json"),
+        scenario,
+        policy,
+        seed: args.get("seed", 11),
+    };
+    xitao::bench::emit_serving(&opts);
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let backend = args.get_str("backend", "sim");
+    let scenario = args.get_str("scenario", "hom4");
+    let policy = args.get_str("policy", "ptt-serving");
+    let tenants: usize = args.get("tenants", 3);
+    let rate: f64 = args.get("rate", 40.0);
+    let horizon: f64 = args.get("horizon", 1.0);
+    let seed: u64 = args.get("seed", 42);
+    let quick = args.switch("quick");
+    let baseline = args.switch("baseline");
+    if tenants == 0 {
+        eprintln!("serve needs --tenants ≥ 1");
+        return 2;
+    }
+    if !(rate > 0.0 && rate.is_finite()) || !(horizon > 0.0 && horizon.is_finite()) {
+        eprintln!("serve needs --rate > 0 and --horizon > 0");
+        return 2;
+    }
+    let resolved = match backend_by_name(&backend) {
+        Some(b) => b,
+        None => {
+            eprintln!("unknown backend '{backend}' (sim|real)");
+            return 2;
+        }
+    };
+    // Smoke scale: a window short enough for CI, same admission machinery.
+    let horizon = if quick { horizon.min(0.3) } else { horizon };
+    let mut mix = xitao::bench::serving::ramp_tenants(tenants, quick, seed);
+    // Real threads execute actual kernel payloads, as in run-dag/stream.
+    if resolved.name() == "real" {
+        for t in &mut mix {
+            t.params = t.params.clone().with_payloads(KernelSizes::small());
+        }
+    }
+    let stream = ServingStream::new(mix, rate, seed);
+    let report = match xitao::exec::run_serving_triple(
+        &backend,
+        &scenario,
+        &policy,
+        &stream,
+        horizon,
+        &RunOpts { seed, ..Default::default() },
+        &ServingOpts::default(),
+        baseline,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serve error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "serving window: {tenants} tenant(s) at {rate:.1} apps/s for {horizon}s on \
+         {scenario} — {} backend, policy {}",
+        resolved.name(),
+        report.run.result.policy
+    );
+    println!(
+        "offered {} apps, admitted {} ({:.1} apps/s sustained), drained in {:.4}s",
+        report.offered(),
+        report.apps.len(),
+        report.admissions_per_sec(),
+        report.run.result.makespan
+    );
+    println!("{:>12} {:>9} {:>7} {:>7} {:>9}", "class", "admitted", "delays", "sheds", "slo");
+    let slo = report.slo_attainment();
+    for q in QosClass::ALL {
+        let i = q.index();
+        println!(
+            "{:>12} {:>9} {:>7} {:>7} {:>9}",
+            q.name(),
+            report.run.counters.admitted[i],
+            report.run.counters.delays[i],
+            report.run.counters.sheds[i],
+            slo[i].map_or("-".into(), |v| format!("{v:.3}")),
+        );
+    }
+    println!(
+        "p99 slowdown: {}  Jain fairness: {:.4}",
+        report.p99_slowdown().map_or("- (run with --baseline)".into(), |v| format!("{v:.3}")),
+        report.jain()
+    );
+    println!(
+        "lane high-water: {}  wsq retired buffers: {}  fairness samples: {}",
+        report.run.lane_high_water,
+        report.run.wsq_retired,
+        report.run.fairness.len()
+    );
     0
 }
 

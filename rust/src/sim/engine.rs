@@ -43,13 +43,16 @@
 //! (one app, arrival 0), so the single-DAG path and the stream path are
 //! the same code — the parity the multi-app tests pin bit-for-bit.
 
-use crate::coordinator::core::{AdmissionSource, CommitInfo, SchedCore};
+use crate::coordinator::core::{
+    AdmissionSource, CommitInfo, SchedCore, ServingApp, ServingOpts, ServingRun, ServingSource,
+};
 use crate::coordinator::dag::{TaoDag, TaskId};
-use crate::coordinator::metrics::{RunResult, TraceRecord};
+use crate::coordinator::metrics::{RunResult, TraceRecord, jain_fairness_total};
 use crate::coordinator::ptt::Ptt;
-use crate::coordinator::scheduler::Policy;
+use crate::coordinator::scheduler::{Policy, QosClass};
 use crate::platform::{Partition, Platform, RunningTask};
 use crate::util::Pcg32;
+use std::cell::Cell;
 use std::collections::VecDeque;
 
 /// Simulation options.
@@ -528,6 +531,162 @@ pub fn run_stream_sim(
         },
         ptt_samples: sim.samples,
         interval_samples: sim.interval_samples,
+    }
+}
+
+/// Simulate a serving-mode workload in virtual time: the open-loop offer
+/// schedule in `apps` goes through [`ServingSource`] backpressure — the
+/// per-lane reading is the lane's work-stealing-queue backlog (the sim's
+/// stand-in for the real engine's admission-inbox depth), pressured offers
+/// are delayed (batch) or shed (best-effort, tasks cancelled so the run
+/// terminates), and the fairness feedback fires on virtual-time period
+/// boundaries. At `serving.drain_after` the source enters drain mode and
+/// the backlog quiesces.
+///
+/// Deterministic for a fixed `opts.seed`: admission, backpressure and the
+/// feedback loop are all driven by virtual time and draw no randomness,
+/// so two identical invocations produce bit-identical [`ServingRun`]s —
+/// the soak tests pin this.
+#[allow(clippy::too_many_arguments)]
+pub fn run_serving_sim(
+    dag: &TaoDag,
+    app_of: &[usize],
+    apps: Vec<ServingApp>,
+    app_qos: Vec<QosClass>,
+    plat: &Platform,
+    policy: &dyn Policy,
+    ptt: Option<&Ptt>,
+    opts: &SimOpts,
+    serving: &ServingOpts,
+) -> ServingRun {
+    // (arrival, n_tasks) per app id for the fairness sampler (∞ arrival =
+    // not part of the serving schedule, never sampled).
+    let n_apps = apps.iter().map(|a| a.app_id + 1).max().unwrap_or(1);
+    let mut app_meta = vec![(f64::INFINITY, 1usize); n_apps];
+    for a in &apps {
+        app_meta[a.app_id] = (a.arrival, a.n_tasks.max(1));
+    }
+    let mut source = ServingSource::new(apps, serving.max_lane_depth, serving.delay_step);
+    let mut shed = vec![false; n_apps];
+    let mut shed_apps: Vec<usize> = Vec::new();
+    let mut fairness: Vec<(f64, f64)> = Vec::new();
+    let mut last_feedback = 0.0f64;
+    let mut lane_high_water = 0usize;
+    let mut draining = false;
+    let fresh;
+    let ptt = match ptt {
+        Some(p) => p,
+        None => {
+            fresh = Ptt::new(dag.n_types(), &plat.topo);
+            &fresh
+        }
+    };
+    let n = plat.topo.n_cores();
+    let mut sim = Sim {
+        dag,
+        plat,
+        core: SchedCore::new(dag, app_of, &plat.topo, policy, ptt).with_app_qos(app_qos),
+        t: 0.0,
+        cores: vec![CoreState::Idle; n],
+        wsqs: (0..n).map(|_| VecDeque::new()).collect(),
+        aqs: (0..n).map(|_| VecDeque::new()).collect(),
+        insts: Vec::with_capacity(dag.len()),
+        running: Vec::new(),
+        running_pos: Vec::with_capacity(dag.len()),
+        running_live: 0,
+        records: Vec::with_capacity(dag.len()),
+        rng: Pcg32::seeded(opts.seed),
+        // PTT probes are stream-run machinery; ServingRun has no sample
+        // channel, so don't pay for sampling that would be discarded.
+        probe: None,
+        samples: Vec::new(),
+        interval_probe: None,
+        interval_samples: Vec::new(),
+        snapshot_buf: Vec::with_capacity(n),
+        done_buf: Vec::with_capacity(n),
+        order_buf: Vec::with_capacity(n),
+    };
+    while !sim.core.is_done() {
+        if !draining && sim.t >= serving.drain_after {
+            source.begin_drain();
+            draining = true;
+        }
+        // Offer everything due, under backpressure. The depth snapshot
+        // plus the `extra` cells give each offer in the batch an exact
+        // reading that includes the roots admitted just before it.
+        {
+            let (wsqs, core) = (&mut sim.wsqs, &sim.core);
+            let depths: Vec<usize> = wsqs.iter().map(VecDeque::len).collect();
+            let extra: Vec<Cell<usize>> = (0..n).map(|_| Cell::new(0)).collect();
+            source.admit_due(
+                sim.t,
+                n,
+                |lane| depths[lane] + extra[lane].get(),
+                |lane, root| {
+                    wsqs[lane].push_back(root);
+                    extra[lane].set(extra[lane].get() + 1);
+                },
+                |app| {
+                    shed[app.app_id] = true;
+                    shed_apps.push(app.app_id);
+                    // Shed roots were never pushed — the whole subgraph is
+                    // unreachable; account it done so the run terminates.
+                    core.cancel_tasks(app.n_tasks);
+                },
+            );
+            for lane in 0..n {
+                lane_high_water = lane_high_water.max(depths[lane] + extra[lane].get());
+            }
+        }
+        // Fairness feedback, gated on virtual-time period boundaries (no
+        // rng, no new events — a pure read of the core's counters).
+        if sim.t - last_feedback >= serving.fairness_period {
+            last_feedback = sim.t;
+            let xs: Vec<f64> = app_meta
+                .iter()
+                .enumerate()
+                .filter(|&(a, &(arrival, _))| arrival <= sim.t && !shed[a])
+                .map(|(a, &(_, nt))| sim.core.app_done(a) as f64 / nt as f64)
+                .collect();
+            if xs.len() >= 2 {
+                let jain = jain_fairness_total(&xs);
+                policy.on_fairness(jain, &sim.core.monopolists(serving.min_streak));
+                fairness.push((sim.t, jain));
+            }
+        }
+        sim.acquire_fixpoint();
+        if sim.core.is_done() {
+            break;
+        }
+        if sim.running_live == 0 {
+            // Everything admitted has drained; jump to the next offer.
+            let next = source.next_offer().unwrap_or_else(|| {
+                panic!(
+                    "no running tasks, no pending offers, but {} of {} incomplete — scheduler deadlock",
+                    dag.len() - sim.core.completed(),
+                    dag.len()
+                )
+            });
+            sim.t = next;
+            continue;
+        }
+        sim.rerate();
+        sim.advance(source.next_offer());
+    }
+    let mut records = sim.records;
+    records.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
+    ServingRun {
+        result: RunResult {
+            policy: policy.name().to_string(),
+            platform: plat.topo.name.clone(),
+            makespan: sim.t,
+            records,
+        },
+        counters: source.counters(),
+        shed_apps,
+        lane_high_water,
+        wsq_retired: 0,
+        fairness,
     }
 }
 

@@ -7,4 +7,6 @@
 
 pub mod engine;
 
-pub use engine::{PttIntervalSample, SimOpts, SimRun, run_dag_sim, run_stream_sim};
+pub use engine::{
+    PttIntervalSample, SimOpts, SimRun, run_dag_sim, run_serving_sim, run_stream_sim,
+};

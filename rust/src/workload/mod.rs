@@ -27,6 +27,7 @@
 pub mod scenarios;
 
 use crate::coordinator::dag::{TaoDag, TaskId};
+use crate::coordinator::scheduler::QosClass;
 use crate::dag_gen::{DagParams, generate};
 use crate::util::Pcg32;
 
@@ -45,12 +46,22 @@ pub struct AppSpec {
     pub period: Option<f64>,
     /// Total number of submissions (≥ 1; ignored unless `period` is set).
     pub copies: usize,
+    /// QoS class of every submission of this spec (serving mode; the
+    /// finite-stream paths ignore it). Defaults to [`QosClass::Batch`].
+    pub qos: QosClass,
 }
 
 impl AppSpec {
     pub fn new(name: impl Into<String>, params: DagParams, arrival: f64) -> AppSpec {
         assert!(arrival >= 0.0, "arrival times must be non-negative");
-        AppSpec { name: name.into(), params, arrival, period: None, copies: 1 }
+        AppSpec {
+            name: name.into(),
+            params,
+            arrival,
+            period: None,
+            copies: 1,
+            qos: QosClass::default(),
+        }
     }
 
     /// Make the app periodic: `copies` submissions spaced `period` apart,
@@ -60,6 +71,12 @@ impl AppSpec {
         assert!(copies >= 1, "at least one submission");
         self.period = Some(period);
         self.copies = copies;
+        self
+    }
+
+    /// Set the QoS class (serving mode backpressure + SLO accounting).
+    pub fn with_qos(mut self, qos: QosClass) -> AppSpec {
+        self.qos = qos;
         self
     }
 
@@ -186,6 +203,7 @@ impl WorkloadStream {
                 name,
                 arrival,
                 params,
+                qos: spec.qos,
                 task_range: (offset, offset + sub.len()),
                 roots: sub.roots().into_iter().map(|r| offset + r).collect(),
             });
@@ -206,6 +224,8 @@ pub struct AdmittedApp {
     /// differ in seed) — enough to regenerate the app's DAG for an
     /// isolated baseline run.
     pub params: DagParams,
+    /// QoS class inherited from the spec (serving-mode backpressure tier).
+    pub qos: QosClass,
     /// Global task-id range `[lo, hi)` of this app inside the combined DAG.
     pub task_range: (usize, usize),
     /// Global ids of the app's root tasks (admitted at `arrival`).
@@ -239,6 +259,134 @@ impl MultiDag {
     /// `(app_id, name, arrival)` triples for per-app metric assembly.
     pub fn app_index(&self) -> Vec<(usize, String, f64)> {
         self.apps.iter().map(|a| (a.app_id, a.name.clone(), a.arrival)).collect()
+    }
+
+    /// Per-app QoS classes in `app_id` order — the exact shape
+    /// [`crate::coordinator::SchedCore::with_app_qos`] consumes.
+    pub fn app_qos(&self) -> Vec<QosClass> {
+        self.apps.iter().map(|a| a.qos).collect()
+    }
+
+    /// The serving-mode offer schedule in the shape
+    /// [`crate::coordinator::ServingSource`] consumes.
+    pub fn serving_apps(&self) -> Vec<crate::coordinator::ServingApp> {
+        self.apps
+            .iter()
+            .map(|a| crate::coordinator::ServingApp {
+                app_id: a.app_id,
+                arrival: a.arrival,
+                qos: a.qos,
+                roots: a.roots.clone(),
+                n_tasks: a.n_tasks(),
+            })
+            .collect()
+    }
+}
+
+/// One tenant of a serving workload: a DAG template, a QoS class, and a
+/// relative share of the arrival stream.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// DAG template; each admitted instance rederives `params.seed` from
+    /// the stream rng so instances are distinct but reproducible.
+    pub params: DagParams,
+    pub qos: QosClass,
+    /// Relative arrival weight (> 0); a tenant with weight 2 receives
+    /// twice the arrivals of a tenant with weight 1.
+    pub weight: f64,
+}
+
+impl TenantSpec {
+    pub fn new(name: impl Into<String>, params: DagParams, qos: QosClass) -> TenantSpec {
+        TenantSpec { name: name.into(), params, qos, weight: 1.0 }
+    }
+
+    pub fn with_weight(mut self, weight: f64) -> TenantSpec {
+        assert!(weight > 0.0 && weight.is_finite(), "tenant weight must be positive");
+        self.weight = weight;
+        self
+    }
+}
+
+/// An open-loop multi-tenant arrival generator for serving mode.
+///
+/// Unlike [`WorkloadStream`] — a *finite* set of applications that the
+/// engines run to completion — a serving stream is conceptually unbounded:
+/// arrivals keep coming at a target aggregate `rate` regardless of whether
+/// the scheduler keeps up (that is what makes it open-loop, and why the
+/// serving engines need admission backpressure at all). [`window`]
+/// materialises a bounded horizon of the process into an ordinary
+/// [`WorkloadStream`], which is how both engines and the soak tests
+/// consume it: same seed + same horizon ⇒ bit-identical arrivals, tenants
+/// and instance seeds.
+///
+/// [`window`]: ServingStream::window
+#[derive(Debug, Clone)]
+pub struct ServingStream {
+    pub tenants: Vec<TenantSpec>,
+    /// Target aggregate admission rate, apps/second (virtual seconds on
+    /// the sim backend, wall seconds on the real backend).
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl ServingStream {
+    pub fn new(tenants: Vec<TenantSpec>, rate: f64, seed: u64) -> ServingStream {
+        assert!(!tenants.is_empty(), "a serving stream needs at least one tenant");
+        assert!(rate > 0.0 && rate.is_finite(), "admission rate must be positive");
+        ServingStream { tenants, rate, seed }
+    }
+
+    /// Materialise arrivals in `[0, horizon)`: a Poisson process at the
+    /// aggregate rate, each arrival assigned to a tenant by weighted draw,
+    /// each instance given a fresh generator seed. Always yields at least
+    /// one app (tenant 0 at t = 0) so a tiny horizon still runs.
+    pub fn window(&self, horizon: f64) -> WorkloadStream {
+        assert!(horizon > 0.0, "horizon must be positive");
+        let total_weight: f64 = self.tenants.iter().map(|t| t.weight).sum();
+        let mut rng = Pcg32::new(self.seed, 0x5e7e);
+        let mut apps: Vec<AppSpec> = Vec::new();
+        let mut per_tenant = vec![0usize; self.tenants.len()];
+        let mut t = 0.0f64;
+        loop {
+            // Exponential inter-arrival gap at the aggregate rate.
+            t += -(1.0 - rng.gen_f64()).ln() / self.rate;
+            if t >= horizon {
+                break;
+            }
+            // Weighted tenant pick (cumulative scan; tenant lists are short).
+            let mut u = rng.gen_f64() * total_weight;
+            let mut which = self.tenants.len() - 1;
+            for (i, tenant) in self.tenants.iter().enumerate() {
+                u -= tenant.weight;
+                if u < 0.0 {
+                    which = i;
+                    break;
+                }
+            }
+            let tenant = &self.tenants[which];
+            let mut params = tenant.params.clone();
+            params.seed = rng.next_u64();
+            let k = per_tenant[which];
+            per_tenant[which] += 1;
+            apps.push(
+                AppSpec::new(format!("{}#{k}", tenant.name), params, t)
+                    .with_qos(tenant.qos),
+            );
+        }
+        if apps.is_empty() {
+            let tenant = &self.tenants[0];
+            apps.push(
+                AppSpec::new(
+                    format!("{}#0", tenant.name),
+                    tenant.params.clone(),
+                    0.0,
+                )
+                .with_qos(tenant.qos),
+            );
+        }
+        WorkloadStream::fixed(apps, self.seed)
     }
 }
 
@@ -356,5 +504,79 @@ mod tests {
     #[should_panic]
     fn negative_arrival_rejected() {
         AppSpec::new("x", DagParams::mix(10, 2.0, 1), -1.0);
+    }
+
+    #[test]
+    fn qos_defaults_to_batch_and_flows_into_the_multidag() {
+        let stream = WorkloadStream::fixed(
+            vec![
+                AppSpec::new("plain", DagParams::mix(10, 2.0, 1), 0.0),
+                AppSpec::new("rt", DagParams::mix(10, 2.0, 2), 0.1)
+                    .with_qos(QosClass::Latency),
+                AppSpec::new("scav", DagParams::mix(10, 2.0, 3), 0.2)
+                    .with_qos(QosClass::BestEffort),
+            ],
+            0,
+        );
+        let multi = stream.build();
+        assert_eq!(
+            multi.app_qos(),
+            vec![QosClass::Batch, QosClass::Latency, QosClass::BestEffort]
+        );
+    }
+
+    #[test]
+    fn serving_window_is_deterministic_and_tracks_the_target_rate() {
+        let tenants = vec![
+            TenantSpec::new("rt", DagParams::mix(8, 2.0, 1), QosClass::Latency),
+            TenantSpec::new("bulk", DagParams::mix(16, 4.0, 2), QosClass::Batch)
+                .with_weight(2.0),
+            TenantSpec::new("scav", DagParams::mix(8, 2.0, 3), QosClass::BestEffort),
+        ];
+        let serving = ServingStream::new(tenants.clone(), 50.0, 42);
+        let w1 = serving.window(4.0);
+        let w2 = ServingStream::new(tenants, 50.0, 42).window(4.0);
+        assert_eq!(w1.arrivals(), w2.arrivals(), "same seed, same window");
+        assert_eq!(
+            w1.apps.iter().map(|a| a.name.clone()).collect::<Vec<_>>(),
+            w2.apps.iter().map(|a| a.name.clone()).collect::<Vec<_>>(),
+        );
+        // Poisson(rate * horizon) = Poisson(200): the count should land
+        // well within ±50% (≈ 7σ) of the mean — loose enough to never
+        // flake, tight enough to catch a rate bug.
+        let n = w1.apps.len() as f64;
+        assert!((100.0..=300.0).contains(&n), "got {n} arrivals, expected ≈ 200");
+        // Arrivals are monotone and inside the horizon.
+        let arr = w1.arrivals();
+        assert!(arr.iter().all(|&t| (0.0..4.0).contains(&t)));
+        for w in arr.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        // The weight-2 tenant should dominate; all three appear.
+        let count = |pat: &str| w1.apps.iter().filter(|a| a.name.starts_with(pat)).count();
+        let (rt, bulk, scav) = (count("rt#"), count("bulk#"), count("scav#"));
+        assert!(rt > 0 && bulk > 0 && scav > 0, "rt={rt} bulk={bulk} scav={scav}");
+        assert!(bulk > rt && bulk > scav, "rt={rt} bulk={bulk} scav={scav}");
+        // Instances of one tenant carry distinct generator seeds.
+        let seeds: std::collections::HashSet<u64> = w1
+            .apps
+            .iter()
+            .filter(|a| a.name.starts_with("bulk#"))
+            .map(|a| a.params.seed)
+            .collect();
+        assert_eq!(seeds.len(), bulk, "every instance reseeded");
+    }
+
+    #[test]
+    fn serving_window_never_comes_up_empty() {
+        let serving = ServingStream::new(
+            vec![TenantSpec::new("t", DagParams::mix(8, 2.0, 1), QosClass::Latency)],
+            0.001, // ~1 arrival per 1000 s: a short window draws none.
+            7,
+        );
+        let w = serving.window(0.01);
+        assert_eq!(w.apps.len(), 1);
+        assert_eq!(w.apps[0].arrival, 0.0);
+        assert_eq!(w.apps[0].qos, QosClass::Latency);
     }
 }

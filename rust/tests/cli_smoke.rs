@@ -212,3 +212,67 @@ fn stream_rejects_unknown_scenario_and_backend() {
         .expect("spawn repro");
     assert_eq!(st.code(), Some(2));
 }
+
+#[test]
+fn serve_quick_exits_zero_on_both_backends() {
+    for backend in ["sim", "real"] {
+        let out = repro()
+            .args([
+                "serve", "--quick", "--backend", backend, "--scenario", "hom2",
+                "--tenants", "3", "--rate", "50", "--horizon", "0.2", "--seed", "5",
+            ])
+            .output()
+            .expect("spawn repro");
+        assert!(
+            out.status.success(),
+            "serve on {backend} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("serving window"), "{text}");
+        assert!(text.contains("Jain fairness"), "{text}");
+        for class in ["latency", "batch", "besteffort"] {
+            assert!(text.contains(class), "missing {class} row in:\n{text}");
+        }
+    }
+}
+
+#[test]
+fn serve_rejects_bad_inputs() {
+    for bad in [
+        vec!["serve", "--backend", "quantum"],
+        vec!["serve", "--scenario", "riscv"],
+        vec!["serve", "--policy", "nope"],
+        vec!["serve", "--tenants", "0"],
+        vec!["serve", "--rate", "0"],
+        vec!["serve", "--horizon", "-1"],
+    ] {
+        let st = repro().args(&bad).status().expect("spawn repro");
+        assert_eq!(st.code(), Some(2), "{bad:?} should exit 2");
+    }
+}
+
+#[test]
+fn bench_serving_quick_exits_zero_and_prints_the_ramp() {
+    // No --json: the smoke must not clobber the committed
+    // BENCH_serving.json (CI's dedicated step regenerates it).
+    let out = repro().args(["bench-serving", "--quick"]).output().expect("spawn repro");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Serving ramp"), "{text}");
+    assert!(text.contains("jain"), "{text}");
+}
+
+#[test]
+fn bench_serving_rejects_bad_scenario_and_policy() {
+    let st = repro()
+        .args(["bench-serving", "--quick", "--scenario", "nope"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+    let st = repro()
+        .args(["bench-serving", "--quick", "--policy", "nope"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+}
