@@ -19,7 +19,7 @@ use xitao::bench::overhead::time_ns;
 use xitao::coordinator::aq::AssemblyQueue;
 use xitao::coordinator::dag::TaoDag;
 use xitao::coordinator::ptt::Ptt;
-use xitao::coordinator::scheduler::{PlaceCtx, policy_by_name};
+use xitao::coordinator::scheduler::{PlaceCtx, QosClass, policy_by_name};
 use xitao::coordinator::wsq::WsQueue;
 use xitao::coordinator::{NopPayload, RealEngineOpts, run_dag_real};
 use xitao::dag_gen::{DagParams, generate};
@@ -73,6 +73,7 @@ fn main() {
                     type_id: 0,
                     critical,
                     app_id: 0,
+                    qos: QosClass::default(),
                     ptt: &ptt,
                     topo: &topo,
                     now: 0.0,
