@@ -525,7 +525,7 @@ pub fn stream_interference(opts: &BenchOpts) -> Vec<Table> {
             for (i, app) in run.apps.iter().enumerate() {
                 sd[i].push(app.slowdown.expect("baseline attached"));
             }
-            jain.push(run.jain_fairness());
+            jain.push(run.jain_fairness().expect("stream admitted apps"));
             if policy == "performance" && s == 0 {
                 // Phase table from the first seed's trace.
                 let end = run.result.makespan;

@@ -144,7 +144,7 @@ fn step_json(s: &ServingStep) -> Json {
                 QosClass::ALL.iter().map(|q| (q.name(), opt_num(slo[q.index()]))).collect(),
             ),
         ),
-        ("jain", Json::Num(s.report.jain())),
+        ("jain", opt_num(s.report.jain())),
         ("admitted", counters_json(&s.report.run.counters.admitted)),
         ("delays", counters_json(&s.report.run.counters.delays)),
         ("sheds", counters_json(&s.report.run.counters.sheds)),
@@ -250,7 +250,10 @@ mod tests {
         for s in steps {
             let adm = s.get("admissions_per_sec").and_then(Json::as_f64).unwrap();
             assert!(adm > 0.0, "ramp step admitted nothing");
-            let jain = s.get("jain").and_then(Json::as_f64).unwrap();
+            // Ramp steps always admit apps (latency class cannot be shed),
+            // so jain must be a number here; `null` is reserved for empty
+            // windows.
+            let jain = s.get("jain").and_then(Json::as_f64).expect("step admitted apps");
             assert!((0.0..=1.0 + 1e-9).contains(&jain));
             // Latency apps are never shed or delayed — the whole point of
             // the QoS ladder.

@@ -110,9 +110,11 @@ impl StreamRun {
     /// every app carries an isolated baseline (the literature's metric),
     /// otherwise over per-app throughput (tasks per response-time second).
     /// 1.0 = perfectly fair; → `1/n` as one app monopolises the machine.
-    pub fn jain_fairness(&self) -> f64 {
+    /// `None` when no apps ran — an empty run has no fairness to report
+    /// (printing `1.00` for it would claim perfection for a no-op).
+    pub fn jain_fairness(&self) -> Option<f64> {
         if self.apps.is_empty() {
-            return 1.0;
+            return None;
         }
         let xs: Vec<f64> = if self.apps.iter().all(|a| a.slowdown.is_some()) {
             self.apps.iter().map(|a| 1.0 / a.slowdown.unwrap().max(1e-12)).collect()
@@ -131,7 +133,7 @@ impl StreamRun {
                 })
                 .collect()
         };
-        jain_fairness_index(&xs)
+        Some(jain_fairness_index(&xs))
     }
 }
 
@@ -513,17 +515,23 @@ impl ServingReport {
 
     /// Jain fairness at the end of the run: the feedback loop's last
     /// sample when it fired, else the total (non-panicking) index over
-    /// per-app throughput.
-    pub fn jain(&self) -> f64 {
+    /// per-app throughput. `None` when nothing was admitted — a window
+    /// that shed every offer must report `n/a`, not a perfect `1.00`
+    /// (`jain_fairness_index(&[]) == 1.0` is a documented total-function
+    /// contract for the in-loop feedback, not a claim about empty runs).
+    pub fn jain(&self) -> Option<f64> {
         if let Some(&(_, j)) = self.run.fairness.last() {
-            return j;
+            return Some(j);
+        }
+        if self.apps.is_empty() {
+            return None;
         }
         let xs: Vec<f64> = self
             .apps
             .iter()
             .map(|a| a.n_tasks as f64 / a.makespan().max(1e-12))
             .collect();
-        jain_fairness_total(&xs)
+        Some(jain_fairness_total(&xs))
     }
 }
 
@@ -715,8 +723,25 @@ mod tests {
             assert_eq!(app.n_tasks, 40);
             assert!(app.makespan() > 0.0 && app.makespan().is_finite());
         }
-        let j = run.jain_fairness();
+        let j = run.jain_fairness().expect("apps ran");
         assert!(j > 0.0 && j <= 1.0, "{j}");
+    }
+
+    #[test]
+    fn empty_run_reports_no_fairness() {
+        // A run that admitted nothing has no fairness index — it must be
+        // `None`/`n/a`, never a perfect 1.00.
+        let run = StreamRun {
+            result: RunResult {
+                policy: "test".into(),
+                platform: "test".into(),
+                makespan: 0.0,
+                records: Vec::new(),
+            },
+            apps: Vec::new(),
+            ptt_samples: Vec::new(),
+        };
+        assert_eq!(run.jain_fairness(), None);
     }
 
     #[test]
@@ -740,7 +765,7 @@ mod tests {
             // Co-running can only slow an app down (up to scheduler noise).
             assert!(sd > 0.5, "{sd}");
         }
-        let j = run.jain_fairness();
+        let j = run.jain_fairness().expect("apps ran");
         assert!(j > 0.0 && j <= 1.0, "{j}");
         // Unknown names surface the offending registry.
         assert!(
@@ -797,7 +822,7 @@ mod tests {
         for slo in report.slo_attainment().into_iter().flatten() {
             assert!((0.0..=1.0).contains(&slo));
         }
-        let j = report.jain();
+        let j = report.jain().expect("apps admitted");
         assert!(j > 0.0 && j <= 1.0, "{j}");
         // Bit-identical on repeat: the serving sim is deterministic.
         let again = run_serving_triple(

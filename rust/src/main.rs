@@ -412,9 +412,9 @@ fn cmd_serve(args: &Args) -> i32 {
         );
     }
     println!(
-        "p99 slowdown: {}  Jain fairness: {:.4}",
+        "p99 slowdown: {}  Jain fairness: {}",
         report.p99_slowdown().map_or("- (run with --baseline)".into(), |v| format!("{v:.3}")),
-        report.jain()
+        report.jain().map_or("n/a (nothing admitted)".into(), |j| format!("{j:.4}")),
     );
     println!(
         "lane high-water: {}  wsq retired buffers: {}  fairness samples: {}",
@@ -528,7 +528,10 @@ fn cmd_stream(args: &Args) -> i32 {
         total_tasks,
         run.result.throughput()
     );
-    println!("Jain fairness index: {:.4}", run.jain_fairness());
+    println!(
+        "Jain fairness index: {}",
+        run.jain_fairness().map_or("n/a (no apps ran)".into(), |j| format!("{j:.4}")),
+    );
     0
 }
 

@@ -40,7 +40,14 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    // NaN-last total order (same convention as `jain_fairness_total`): a
+    // single NaN slowdown must not abort an entire bench/serving report.
+    sorted.sort_by(|a, b| match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => a.partial_cmp(b).unwrap(),
+    });
     let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -152,5 +159,17 @@ mod tests {
     #[should_panic]
     fn geomean_rejects_nonpositive() {
         geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // NaN sorts last: low/mid percentiles are taken over the finite
+        // values, and only the extreme tail ever sees the NaN.
+        let xs = [10.0, f64::NAN, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 50.0), 30.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile(&all_nan, 50.0).is_nan());
     }
 }

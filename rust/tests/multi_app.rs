@@ -146,7 +146,7 @@ fn registered_stream_scenarios_complete_on_sim_with_fair_metrics() {
         .unwrap_or_else(|e| panic!("{name}: {e}"));
         let expected: usize = stream.build().dag.len();
         assert_eq!(run.result.records.len(), expected, "{name}");
-        let j = run.jain_fairness();
+        let j = run.jain_fairness().unwrap_or_else(|| panic!("{name}: no apps"));
         assert!(j > 0.0 && j <= 1.0, "{name}: Jain {j}");
     }
 }
