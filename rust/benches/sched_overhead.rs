@@ -70,6 +70,7 @@ fn main() {
             let ns = time_ns(iters, || {
                 let ctx = PlaceCtx {
                     core: 3,
+                    task: 0,
                     type_id: 0,
                     critical,
                     app_id: 0,

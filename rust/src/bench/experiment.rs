@@ -1,0 +1,263 @@
+//! The experiment matrix (`repro experiment`): every registered policy ×
+//! every platform scenario × stream seed, each cell anchored to its
+//! makespan lower bound.
+//!
+//! This is the repo's one-stop comparison table. Individual figure
+//! harnesses each sweep one axis; this harness sweeps the full cross
+//! product so a policy's behaviour can be read *across* scenarios (does
+//! the plan-ahead HEFT win on static heterogeneity but lose under
+//! episodes?) and anchored in absolute terms: every row reports
+//! `pct_of_bound` — the makespan as a percentage of the critical-path /
+//! area lower bound ([`crate::coordinator::metrics::lower_bound`]), so
+//! 100% is provably optimal and the slack above it upper-bounds what any
+//! scheduler could still recover.
+//!
+//! Protocol (documented in EXPERIMENTS.md):
+//! - per seed, *one* DAG (`DagParams::mix`) is shared by every
+//!   (backend, scenario, policy) cell, so cells differ only in the thing
+//!   under test; the real backend attaches small kernel payloads;
+//! - sim rows carry the analytic model bound (sound for the simulator's
+//!   performance model); real rows carry the trace-observed critical-path
+//!   bound (sound for wall time) — see the lower-bound module docs for
+//!   why the area argument is sim-only;
+//! - the table aggregates seeds per cell; the JSON keeps every row.
+//!
+//! `--json` writes `BENCH_experiment.json` at the repository root; CI
+//! runs `repro experiment --quick --json` and uploads it, and a
+//! seed-estimate copy is committed for schema stability
+//! (`tests/lower_bounds.rs` checks it).
+
+use crate::coordinator::scheduler::policy_names;
+use crate::dag_gen::{DagParams, generate};
+use crate::exec::{RunOpts, run_triple};
+use crate::kernels::KernelSizes;
+use crate::platform::scenarios;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Harness options.
+#[derive(Debug, Clone)]
+pub struct ExperimentOpts {
+    /// CI smoke scale: 1 seed, ≤ 40-task DAGs.
+    pub quick: bool,
+    /// Write `BENCH_experiment.json` at the repository root.
+    pub json: bool,
+    /// Execution backend(s): `sim`, `real` or `both`.
+    pub backend: String,
+    /// Stream seeds per cell (each seed generates one shared DAG).
+    pub seeds: usize,
+    /// Tasks per generated DAG.
+    pub tasks: usize,
+    /// Average-parallelism knob of the DAG generator.
+    pub parallelism: f64,
+    /// Base seed; cell seeds are `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for ExperimentOpts {
+    fn default() -> Self {
+        ExperimentOpts {
+            quick: false,
+            json: false,
+            backend: "both".to_string(),
+            seeds: 3,
+            tasks: 120,
+            parallelism: 4.0,
+            seed: 0xE1,
+        }
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+/// Assemble the machine-readable experiment matrix. Prints nothing — see
+/// [`emit_experiment`]. Panics on an unknown backend name (the CLI
+/// validates first) and on registry inconsistencies.
+pub fn run_experiment_json(opts: &ExperimentOpts) -> Json {
+    let seeds = if opts.quick { 1 } else { opts.seeds.max(1) };
+    let tasks = if opts.quick { opts.tasks.min(40) } else { opts.tasks };
+    let backends: Vec<&str> = match opts.backend.as_str() {
+        "both" => vec!["sim", "real"],
+        "sim" => vec!["sim"],
+        "real" => vec!["real"],
+        other => panic!("unknown backend '{other}' (sim|real|both)"),
+    };
+    let mut rows = Vec::new();
+    for be in &backends {
+        for scen in scenarios::names() {
+            let n_cores =
+                scenarios::by_name(scen).expect("registered scenario").topo.n_cores();
+            for pol in policy_names() {
+                for si in 0..seeds {
+                    let seed = opts.seed + si as u64;
+                    // One DAG per seed, shared across every cell: cells
+                    // differ only in (backend, scenario, policy).
+                    let mut params = DagParams::mix(tasks, opts.parallelism, seed);
+                    if *be == "real" {
+                        params = params.with_payloads(KernelSizes::small());
+                    }
+                    let (dag, _) = generate(&params);
+                    let run_opts = RunOpts { seed, ..Default::default() };
+                    let run = run_triple(be, scen, pol, &dag, &run_opts)
+                        .unwrap_or_else(|e| panic!("cell {be}/{scen}/{pol}: {e}"));
+                    let r = &run.result;
+                    let bound = r.bound.expect("triple drivers bound traced runs");
+                    rows.push(Json::obj(vec![
+                        ("backend", Json::Str(be.to_string())),
+                        ("scenario", Json::Str(scen.to_string())),
+                        ("policy", Json::Str(pol.to_string())),
+                        ("seed", Json::Num(seed as f64)),
+                        ("tasks", Json::Num(dag.len() as f64)),
+                        ("makespan", Json::Num(r.makespan)),
+                        ("bound_cp", Json::Num(bound.cp)),
+                        ("bound_area", Json::Num(bound.area)),
+                        ("bound", Json::Num(bound.combined())),
+                        ("pct_of_bound", opt_num(bound.pct_of(r.makespan))),
+                        ("throughput", Json::Num(r.throughput())),
+                        ("utilisation", Json::Num(r.utilisation(n_cores))),
+                    ]));
+                }
+            }
+        }
+    }
+    Json::obj(vec![
+        ("bench", Json::Str("experiment".into())),
+        ("schema", Json::Num(1.0)),
+        ("provenance", Json::Str("measured".into())),
+        ("quick", Json::Bool(opts.quick)),
+        ("tasks", Json::Num(tasks as f64)),
+        ("parallelism", Json::Num(opts.parallelism)),
+        ("seeds", Json::Num(seeds as f64)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+/// Render the human-readable matrix, averaging seeds per cell (the JSON
+/// keeps per-seed rows).
+pub fn render_experiment_table(result: &Json) -> Table {
+    let mut t = Table::new(
+        "Experiment matrix: policy × scenario × backend vs makespan lower bound",
+        &["backend", "scenario", "policy", "makespan", "bound", "% of bound", "tput", "util"],
+    );
+    let key = |r: &Json, k: &str| -> String {
+        r.get(k).and_then(Json::as_str).unwrap_or("").to_string()
+    };
+    if let Some(rows) = result.get("rows").and_then(Json::as_arr) {
+        let mut i = 0;
+        while i < rows.len() {
+            let (be, sc, po) =
+                (key(&rows[i], "backend"), key(&rows[i], "scenario"), key(&rows[i], "policy"));
+            let mut group: Vec<&Json> = Vec::new();
+            while i < rows.len()
+                && key(&rows[i], "backend") == be
+                && key(&rows[i], "scenario") == sc
+                && key(&rows[i], "policy") == po
+            {
+                group.push(&rows[i]);
+                i += 1;
+            }
+            let mean = |k: &str| -> Option<f64> {
+                let vals: Vec<f64> =
+                    group.iter().filter_map(|r| r.get(k).and_then(Json::as_f64)).collect();
+                if vals.is_empty() {
+                    None
+                } else {
+                    Some(vals.iter().sum::<f64>() / vals.len() as f64)
+                }
+            };
+            let num = |k: &str, digits: usize| -> String {
+                mean(k).map_or("-".to_string(), |v| format!("{v:.digits$}"))
+            };
+            t.row(vec![
+                be,
+                sc,
+                po,
+                num("makespan", 4),
+                num("bound", 4),
+                mean("pct_of_bound").map_or("-".to_string(), |p| format!("{p:.1}%")),
+                num("throughput", 0),
+                num("utilisation", 2),
+            ]);
+        }
+    }
+    t
+}
+
+/// CLI entry point: run, print, optionally write the JSON file.
+pub fn emit_experiment(opts: &ExperimentOpts) -> Json {
+    let result = run_experiment_json(opts);
+    println!("{}", render_experiment_table(&result).render());
+    if opts.json {
+        let path = super::overhead::repo_root_file("BENCH_experiment.json");
+        match std::fs::write(&path, result.to_pretty()) {
+            Ok(()) => println!("[json] {}", path.display()),
+            Err(e) => eprintln!("[json] write failed ({}): {e}", path.display()),
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sim_matrix_covers_every_cell_within_bounds() {
+        let opts =
+            ExperimentOpts { quick: true, backend: "sim".to_string(), ..Default::default() };
+        let result = run_experiment_json(&opts);
+        let rows = result.get("rows").and_then(Json::as_arr).expect("rows array");
+        let n_cells = scenarios::names().len() * policy_names().len();
+        assert_eq!(rows.len(), n_cells, "one row per (scenario × policy) cell");
+        for r in rows {
+            let cell = || {
+                format!(
+                    "{}/{}",
+                    r.get("scenario").and_then(Json::as_str).unwrap_or("?"),
+                    r.get("policy").and_then(Json::as_str).unwrap_or("?"),
+                )
+            };
+            let bound = r.get("bound").and_then(Json::as_f64).expect("bound");
+            assert!(bound > 0.0, "{}: degenerate bound", cell());
+            // The acceptance criterion: no cell may beat its lower bound.
+            let pct = r.get("pct_of_bound").and_then(Json::as_f64).expect("pct");
+            assert!(pct >= 100.0 - 1e-6, "{}: {pct}% of bound", cell());
+            let make = r.get("makespan").and_then(Json::as_f64).expect("makespan");
+            assert!(make.is_finite() && make > 0.0, "{}: makespan {make}", cell());
+        }
+        let rendered = render_experiment_table(&result).render();
+        assert!(rendered.contains("% of bound"));
+        assert!(rendered.contains("portfolio"), "new planners appear in the table");
+    }
+
+    #[test]
+    fn seeds_average_into_one_table_row_per_cell() {
+        // Hand-built payload: two seeds of one cell must collapse to one
+        // rendered row with the averaged pct.
+        let row = |seed: f64, pct: f64| {
+            Json::obj(vec![
+                ("backend", Json::Str("sim".into())),
+                ("scenario", Json::Str("tx2".into())),
+                ("policy", Json::Str("heft".into())),
+                ("seed", Json::Num(seed)),
+                ("makespan", Json::Num(1.0)),
+                ("bound", Json::Num(0.5)),
+                ("pct_of_bound", Json::Num(pct)),
+                ("throughput", Json::Num(10.0)),
+                ("utilisation", Json::Num(0.5)),
+            ])
+        };
+        let result = Json::obj(vec![(
+            "rows",
+            Json::Arr(vec![row(1.0, 110.0), row(2.0, 130.0)]),
+        )]);
+        let rendered = render_experiment_table(&result).render();
+        assert!(rendered.contains("120.0%"), "mean of 110 and 130:\n{rendered}");
+        assert_eq!(rendered.matches("tx2").count(), 1, "one aggregated row:\n{rendered}");
+    }
+}

@@ -525,6 +525,7 @@ mod tests {
                 rec(true, 2, 0.021),  // during, off
                 rec(true, 0, 0.041),  // post, on victim
             ],
+            bound: None,
         };
         let samples = vec![
             (vec![1.0, 1.0, 1.0, 1.0], vec![false, false, false, false]),

@@ -1,13 +1,19 @@
 //! Benchmark/figure harness: one regenerator per table and figure in the
 //! paper's evaluation (§5), plus the design ablations called out in
 //! DESIGN.md, the scheduler-overhead perf harness ([`overhead`]) and the
-//! §5.3 interference-response harness ([`interference_response`]).
+//! §5.3 interference-response harness ([`interference_response`]) and the
+//! policy × scenario experiment matrix ([`experiment`]).
 //! Used by the `repro` CLI and the `cargo bench` targets.
 
+pub mod experiment;
 pub mod figures;
 pub mod interference_response;
 pub mod overhead;
 pub mod serving;
+
+pub use experiment::{
+    ExperimentOpts, emit_experiment, render_experiment_table, run_experiment_json,
+};
 
 pub use figures::{
     BenchOpts, ablation_baselines, ablation_energy, ablation_ptt, emit, fig5, fig6, fig7, fig8,

@@ -266,6 +266,7 @@ impl<'a> SchedCore<'a> {
         let app_id = self.app_of(task);
         let ctx = PlaceCtx {
             core,
+            task,
             type_id: node.type_id,
             critical,
             app_id,

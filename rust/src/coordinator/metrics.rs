@@ -14,6 +14,8 @@
 //! here so both backends and the bench harnesses share one definition of
 //! per-app makespan, slowdown and fairness.
 
+pub mod lower_bound;
+
 use crate::platform::{KernelClass, Partition};
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -87,6 +89,12 @@ pub struct RunResult {
     /// Total run time, seconds (virtual or wall).
     pub makespan: f64,
     pub records: Vec<TraceRecord>,
+    /// Makespan lower bound for this run, filled by the exec-layer
+    /// drivers (`run_triple` and friends) with the variant that is sound
+    /// for the backend that produced the result — see
+    /// [`lower_bound`]. `None` for raw engine results and for untraced
+    /// wall-clock runs (nothing to bound from).
+    pub bound: Option<lower_bound::MakespanBound>,
 }
 
 impl RunResult {
@@ -237,12 +245,26 @@ pub struct AppMetrics {
     /// `makespan() / isolated_makespan` — ≥ 1 under contention (up to
     /// scheduler noise). `None` until a baseline run is attached.
     pub slowdown: Option<f64>,
+    /// Observed lower bound on this app's response time
+    /// ([`lower_bound::observed_app_bound`]); filled by the exec-layer
+    /// stream drivers, `None` for apps with no records.
+    pub bound: Option<f64>,
 }
 
 impl AppMetrics {
     /// Response time: completion − arrival, clamped at 0.
     pub fn makespan(&self) -> f64 {
         (self.completion - self.arrival).max(0.0)
+    }
+
+    /// Response time as a percentage of the observed lower bound
+    /// (`≥ 100` up to timer resolution); `None` without a bound or for a
+    /// degenerate (zero) bound.
+    pub fn pct_of_bound(&self) -> Option<f64> {
+        match self.bound {
+            Some(b) if b > 0.0 => Some(100.0 * self.makespan() / b),
+            _ => None,
+        }
     }
 
     /// Attach an isolated-run baseline and derive the slowdown.
@@ -277,6 +299,7 @@ pub fn per_app_metrics(result: &RunResult, apps: &[(usize, String, f64)]) -> Vec
                 completion,
                 isolated_makespan: None,
                 slowdown: None,
+                bound: None,
             }
         })
         .collect()
@@ -344,7 +367,7 @@ mod tests {
     }
 
     fn result(records: Vec<TraceRecord>, makespan: f64) -> RunResult {
-        RunResult { policy: "test".into(), platform: "test".into(), makespan, records }
+        RunResult { policy: "test".into(), platform: "test".into(), makespan, records, bound: None }
     }
 
     #[test]

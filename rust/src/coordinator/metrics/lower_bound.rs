@@ -1,0 +1,312 @@
+//! Makespan lower bounds: how far is a schedule from provably optimal?
+//!
+//! Raw makespans only rank policies against each other; a *lower bound*
+//! anchors them to the platform. Every bound here is the classical pair
+//! from scheduling theory:
+//!
+//! - **critical-path bound** — no schedule can finish before the longest
+//!   dependency chain, with every task charged its best-case cost;
+//! - **area bound** — `n` cores can retire at most `n` core-seconds of
+//!   work per second, so the makespan is at least the total work divided
+//!   by the core count.
+//!
+//! Neither dominates the other (a serial chain is CP-bound, an
+//! embarrassingly parallel bag is area-bound); [`MakespanBound::combined`]
+//! takes the max. Reports express a run as `pct_of_bound` — 100% means
+//! provably optimal, and the gap above 100% upper-bounds what *any*
+//! scheduler could still recover.
+//!
+//! Two cost sources, with different validity envelopes:
+//!
+//! - [`model_bound`] charges each task its cheapest partition under the
+//!   **episode-free, uncontended** analytic model
+//!   ([`Platform::ideal_exec_time`] with the episode schedule stripped).
+//!   Every dynamic effect the simulator models — episodes (DVFS,
+//!   interference), cache/bandwidth/co-run contention — only *slows*
+//!   execution (all factors ≤ 1), so this is a sound bound for the sim
+//!   backend. It says nothing about wall-clock runs on a host machine.
+//! - [`observed_bound`] / [`observed_cp_bound`] charge each task its
+//!   **measured** execution time from the run's own trace. The CP part is
+//!   sound on both backends: a child is released only at its parent's
+//!   commit, so the records along any dependency path occupy disjoint
+//!   sub-intervals of `[0, makespan]`. The area part additionally needs
+//!   record intervals to represent busy cores, which holds exactly in the
+//!   sim; real-engine records stretch to the last member's commit and may
+//!   include queue-wait gaps, so wall-clock callers use the CP-only
+//!   variant rather than risk an invalid "bound" above the makespan.
+//!
+//! The exec layer fills [`super::RunResult::bound`] with the appropriate
+//! variant per backend; `tests/lower_bounds.rs` property-checks
+//! `bound ≤ makespan` across random DAGs, every registered policy, every
+//! scenario and both backends.
+
+use super::TraceRecord;
+use crate::coordinator::dag::TaoDag;
+use crate::platform::{EpisodeSchedule, KernelClass, Platform};
+
+/// The critical-path / area bound pair for one DAG (or one app's
+/// component of a stream).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MakespanBound {
+    /// Longest dependency chain at best-case per-task cost.
+    pub cp: f64,
+    /// Total best-case core-seconds divided by the core count; `0.0` when
+    /// the area argument is not valid for the cost source (wall-clock
+    /// observed costs).
+    pub area: f64,
+}
+
+impl MakespanBound {
+    /// The binding constraint: max of the two bounds.
+    pub fn combined(&self) -> f64 {
+        self.cp.max(self.area)
+    }
+
+    /// `makespan` as a percentage of the bound (`≥ 100` for a sound
+    /// bound). `None` when the bound is degenerate (no costed tasks) or
+    /// the makespan is not finite — reports print `n/a` rather than a
+    /// fake ratio.
+    pub fn pct_of(&self, makespan: f64) -> Option<f64> {
+        let b = self.combined();
+        if b > 0.0 && makespan.is_finite() {
+            Some(100.0 * makespan / b)
+        } else {
+            None
+        }
+    }
+}
+
+/// Longest path through `dag` charging `cost[t]` per task: the standard
+/// reverse-topological DP, `down[t] = cost[t] + max over successors`.
+fn critical_path(dag: &TaoDag, cost: &[f64]) -> f64 {
+    let order = dag.topo_order().expect("bounds need an acyclic DAG");
+    let mut down = vec![0.0f64; dag.len()];
+    let mut cp = 0.0f64;
+    for &t in order.iter().rev() {
+        let succ_max =
+            dag.nodes[t].succs.iter().fold(0.0f64, |acc, &s| acc.max(down[s]));
+        down[t] = cost[t] + succ_max;
+        cp = cp.max(down[t]);
+    }
+    cp
+}
+
+/// Per-class best cost and best core-seconds over all partitions of the
+/// episode-free platform, indexed by [`KernelClass::index`].
+fn best_class_costs(plat: &Platform) -> ([f64; 4], [f64; 4]) {
+    let clean = Platform {
+        topo: plat.topo.clone(),
+        dram_bw_gbps: plat.dram_bw_gbps,
+        episodes: EpisodeSchedule::default(),
+    };
+    let mut best_cost = [f64::INFINITY; 4];
+    let mut best_core_secs = [f64::INFINITY; 4];
+    for p in clean.topo.all_partitions() {
+        for class in KernelClass::ALL {
+            let c = clean.ideal_exec_time(class, p);
+            let i = class.index();
+            best_cost[i] = best_cost[i].min(c);
+            best_core_secs[i] = best_core_secs[i].min(c * p.width as f64);
+        }
+    }
+    (best_cost, best_core_secs)
+}
+
+/// Analytic lower bound for running `dag` on `plat`'s *simulated*
+/// performance model: per-task best-case cost is the cheapest partition
+/// under the episode-free, uncontended model, scaled by `work_scale`.
+///
+/// The CP part charges best *time* per task; the area part charges best
+/// *core-seconds* per task (a wide partition finishes sooner but occupies
+/// more of the machine — the two minima can pick different partitions).
+pub fn model_bound(dag: &TaoDag, plat: &Platform) -> MakespanBound {
+    let (best_cost, best_core_secs) = best_class_costs(plat);
+    let costs: Vec<f64> = dag
+        .nodes
+        .iter()
+        .map(|n| best_cost[n.class.index()] * n.work_scale)
+        .collect();
+    let cp = critical_path(dag, &costs);
+    let total_core_secs: f64 = dag
+        .nodes
+        .iter()
+        .map(|n| best_core_secs[n.class.index()] * n.work_scale)
+        .sum();
+    MakespanBound { cp, area: total_core_secs / plat.topo.n_cores() as f64 }
+}
+
+/// Per-task measured execution times from a trace; tasks without a record
+/// cost 0 (keeping every variant a sound *lower* bound on partial
+/// traces).
+fn observed_costs(dag: &TaoDag, records: &[TraceRecord]) -> Vec<f64> {
+    let mut costs = vec![0.0f64; dag.len()];
+    for r in records {
+        if r.task < costs.len() {
+            costs[r.task] = r.exec_time().max(0.0);
+        }
+    }
+    costs
+}
+
+/// Observed bound from a *simulated* trace: CP over measured execution
+/// times plus the area bound `Σ exec / n_cores`. Sim records are exact
+/// busy intervals, so both parts are sound; for wall-clock traces use
+/// [`observed_cp_bound`].
+pub fn observed_bound(
+    dag: &TaoDag,
+    records: &[TraceRecord],
+    n_cores: usize,
+) -> MakespanBound {
+    let costs = observed_costs(dag, records);
+    let cp = critical_path(dag, &costs);
+    let area = costs.iter().sum::<f64>() / n_cores as f64;
+    MakespanBound { cp, area }
+}
+
+/// Observed bound from a *wall-clock* trace: CP only. Sound on the real
+/// engine because a child's record starts at or after its parent's commit
+/// (`t_end`), so path records occupy disjoint sub-intervals of the run.
+/// The area argument is *not* sound there — a record spans leader start
+/// to last-member commit, which can include queue-wait time on no core —
+/// so `area` is reported as 0.
+pub fn observed_cp_bound(dag: &TaoDag, records: &[TraceRecord]) -> MakespanBound {
+    let costs = observed_costs(dag, records);
+    MakespanBound { cp: critical_path(dag, &costs), area: 0.0 }
+}
+
+/// Observed lower bound on one application's makespan (completion −
+/// arrival) within a multi-app trace: the app's own records, CP'd over
+/// the shared DAG (apps are disjoint components, so other apps cost 0 and
+/// contribute nothing to any path). `with_area` adds `Σ exec / n_cores`
+/// — sound for sim traces only, same argument as [`observed_bound`].
+/// `None` when the app has no records.
+pub fn observed_app_bound(
+    dag: &TaoDag,
+    records: &[TraceRecord],
+    app_id: usize,
+    n_cores: usize,
+    with_area: bool,
+) -> Option<f64> {
+    let mut costs = vec![0.0f64; dag.len()];
+    let mut total = 0.0f64;
+    let mut any = false;
+    for r in records.iter().filter(|r| r.app_id == app_id) {
+        if r.task < costs.len() {
+            let e = r.exec_time().max(0.0);
+            costs[r.task] = e;
+            total += e;
+            any = true;
+        }
+    }
+    if !any {
+        return None;
+    }
+    let cp = critical_path(dag, &costs);
+    let area = if with_area { total / n_cores as f64 } else { 0.0 };
+    Some(cp.max(area))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dag::paper_figure1_dag;
+    use crate::dag_gen::fixtures::{chain_dag, independent_dag};
+    use crate::platform::{Partition, scenarios};
+
+    fn tx2() -> Platform {
+        scenarios::by_name("tx2").expect("tx2 is registered")
+    }
+
+    /// The tx2 platform has no episode schedule, so the module's
+    /// episode-free clone must agree with the platform's own
+    /// `ideal_exec_time` — pinning that `model_bound` really is "best
+    /// partition, nominal machine".
+    #[test]
+    fn figure1_model_bound_matches_per_class_minima() {
+        let plat = tx2();
+        let (dag, _) = paper_figure1_dag();
+        let b = model_bound(&dag, &plat);
+        let min_cost = |class: KernelClass| {
+            plat.topo
+                .all_partitions()
+                .into_iter()
+                .map(|p| plat.ideal_exec_time(class, p))
+                .fold(f64::INFINITY, f64::min)
+        };
+        // Critical path of Figure 1 is A→C→G→D→F: 3 MatMul + 2 Copy.
+        let expect_cp = 3.0 * min_cost(KernelClass::MatMul) + 2.0 * min_cost(KernelClass::Copy);
+        assert!((b.cp - expect_cp).abs() < 1e-15, "cp {} vs {expect_cp}", b.cp);
+        // Hand-computed pin (denver pair for MatMul, quad A57 for Copy):
+        // 3 × 2.3636e-4 + 2 × 1.4679e-3 ≈ 3.6449e-3 virtual seconds.
+        assert!((b.cp - 3.6449e-3).abs() < 1e-5, "cp drifted: {}", b.cp);
+        assert!(b.area > 0.0 && b.area < b.cp, "figure 1 is CP-bound, got {b:?}");
+        assert!((b.combined() - b.cp).abs() < 1e-18);
+    }
+
+    #[test]
+    fn chain_is_cp_bound_and_bag_is_area_bound() {
+        let plat = tx2();
+        let chain = chain_dag(8, KernelClass::MatMul);
+        let cb = model_bound(&chain, &plat);
+        assert!(cb.cp > cb.area, "serial chain must be CP-bound: {cb:?}");
+        let bag = independent_dag(64, KernelClass::MatMul);
+        let bb = model_bound(&bag, &plat);
+        assert!(bb.area > bb.cp, "64 independent tasks on 6 cores must be area-bound: {bb:?}");
+    }
+
+    fn rec(task: usize, app_id: usize, t_start: f64, t_end: f64) -> TraceRecord {
+        TraceRecord {
+            task,
+            app_id,
+            class: KernelClass::MatMul,
+            type_id: 0,
+            critical: false,
+            partition: Partition { leader: 0, width: 1 },
+            t_start,
+            t_end,
+        }
+    }
+
+    #[test]
+    fn observed_bounds_on_a_hand_built_trace() {
+        let dag = chain_dag(3, KernelClass::MatMul);
+        // Chain executed back-to-back with gaps: exec times 1, 2, 3.
+        let records =
+            vec![rec(0, 0, 0.0, 1.0), rec(1, 0, 1.5, 3.5), rec(2, 0, 4.0, 7.0)];
+        let b = observed_bound(&dag, &records, 4);
+        assert!((b.cp - 6.0).abs() < 1e-12, "cp {}", b.cp);
+        assert!((b.area - 1.5).abs() < 1e-12, "area {}", b.area);
+        let cp_only = observed_cp_bound(&dag, &records);
+        assert_eq!(cp_only.area, 0.0);
+        assert!((cp_only.cp - 6.0).abs() < 1e-12);
+        // 7.5 wall seconds against a bound of 6: 125%.
+        assert!((b.pct_of(7.5).unwrap() - 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_traces_yield_degenerate_bounds_not_fake_ratios() {
+        let dag = chain_dag(3, KernelClass::MatMul);
+        let b = observed_bound(&dag, &[], 4);
+        assert_eq!(b.combined(), 0.0);
+        assert_eq!(b.pct_of(1.0), None, "degenerate bound must not report a pct");
+        assert_eq!(observed_app_bound(&dag, &[], 0, 4, true), None);
+    }
+
+    #[test]
+    fn app_bound_ignores_other_apps_records() {
+        let dag = chain_dag(4, KernelClass::MatMul);
+        // Tasks 0-1 belong to app 0, tasks 2-3 to app 1 (edges 1→2 exist
+        // in the fixture chain but costs of the other app are zeroed, so
+        // each app's bound counts only its own work).
+        let records = vec![
+            rec(0, 0, 0.0, 1.0),
+            rec(1, 0, 1.0, 2.0),
+            rec(2, 1, 2.0, 5.0),
+            rec(3, 1, 5.0, 9.0),
+        ];
+        let a0 = observed_app_bound(&dag, &records, 0, 2, true).unwrap();
+        assert!((a0 - 2.0).abs() < 1e-12, "app0 cp 1+1, got {a0}");
+        let a1 = observed_app_bound(&dag, &records, 1, 2, true).unwrap();
+        assert!((a1 - 7.0).abs() < 1e-12, "app1 cp 3+4, got {a1}");
+    }
+}

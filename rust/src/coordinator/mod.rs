@@ -12,8 +12,11 @@
 //!   handoff into live workers; [`mutex_queues`] — the mutex baselines,
 //!   kept only for the `bench-overhead` comparison.
 //! - [`scheduler`] — the performance-based policy and the baselines (§3.3, §6).
+//! - [`list_sched`] — offline plan-ahead schedulers (HEFT/PEFT/DLS and a
+//!   portfolio meta-policy) replayed through the same [`Policy`] seam.
 //! - [`worker`] — the real-thread execution engine.
-//! - [`metrics`] — traces and derived run metrics.
+//! - [`metrics`] — traces and derived run metrics, plus
+//!   [`metrics::lower_bound`] (critical-path/area makespan bounds).
 //!
 //! The simulated engine that drives the paper-figure reproductions lives in
 //! [`crate::sim`] and reuses `core`, `dag`, `ptt`, `scheduler` and
@@ -25,6 +28,7 @@ pub mod core;
 pub mod dag;
 pub mod episodes_rt;
 pub mod inbox;
+pub mod list_sched;
 pub mod metrics;
 pub mod mutex_queues;
 pub mod ptt;
@@ -39,6 +43,10 @@ pub use self::core::{
 };
 pub use dag::{TaoDag, TaoNode, TaskId};
 pub use episodes_rt::EpisodeDriver;
+pub use list_sched::{PLANNER_NAMES, Plan, PlannedPolicy, plan_dag, planned_policy};
+pub use metrics::lower_bound::{
+    MakespanBound, model_bound, observed_app_bound, observed_bound, observed_cp_bound,
+};
 pub use metrics::{
     AppMetrics, RunResult, Trace, TraceRecord, jain_fairness_index, jain_fairness_total,
     per_app_metrics, sort_by_commit,

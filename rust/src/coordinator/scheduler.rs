@@ -90,6 +90,11 @@ impl QosClass {
 pub struct PlaceCtx<'a> {
     /// Core making the decision (the one that popped/stole the task).
     pub core: CoreId,
+    /// Task id within the running DAG (global id for multi-app streams).
+    /// Online policies ignore it; the plan-ahead policies
+    /// ([`super::list_sched::PlannedPolicy`]) use it to replay a
+    /// precomputed whole-DAG assignment.
+    pub task: usize,
     /// TAO type (PTT row group).
     pub type_id: usize,
     /// Criticality as determined at wake-up time (§3.3; initial tasks are
@@ -522,7 +527,7 @@ pub struct PolicyInfo {
 /// The policy registry, in presentation order. [`policy_by_name`] resolves
 /// through this same table, so the CLI listing and the accepted names
 /// cannot drift.
-pub const POLICIES: [PolicyInfo; 7] = [
+pub const POLICIES: [PolicyInfo; 11] = [
     PolicyInfo {
         name: "performance-based",
         aliases: &["performance", "ptt"],
@@ -566,6 +571,31 @@ pub const POLICIES: [PolicyInfo; 7] = [
         description: "§3.3's alternative objective: minimise exec_time × partition power \
                       (joules per task)",
     },
+    PolicyInfo {
+        name: "heft",
+        aliases: &["heft-static"],
+        description: "offline HEFT: whole-DAG upward-rank plan against the episode-free \
+                      analytic model, replayed at place() time (the online dheft-like \
+                      baseline stays separate)",
+    },
+    PolicyInfo {
+        name: "peft",
+        aliases: &["peft-static"],
+        description: "offline PEFT: optimistic-cost-table priorities with EFT placement \
+                      from a whole-DAG plan",
+    },
+    PolicyInfo {
+        name: "dls",
+        aliases: &["dls-static"],
+        description: "offline dynamic-level scheduling: joint (task, partition) argmax of \
+                      static level minus earliest start time",
+    },
+    PolicyInfo {
+        name: "portfolio",
+        aliases: &["plan-portfolio"],
+        description: "plans each DAG with every offline planner (heft/peft/dls) and keeps \
+                      the best predicted makespan",
+    },
 ];
 
 /// Canonical policy names, in registry order.
@@ -586,6 +616,13 @@ pub fn policy_by_name(name: &str, n_cores: usize) -> Option<Box<dyn Policy>> {
         "cats-like" => Box::new(CatsLike::default()),
         "dheft-like" => Box::new(DheftLike::new(n_cores)),
         "energy-minimizing" => Box::new(EnergyMinimizing),
+        // Plan-ahead policies: the registry cannot see a DAG, so these
+        // start planless (width-1 fallback) and the exec layer swaps in a
+        // planned instance per DAG via `list_sched::planned_policy`.
+        "heft" => Box::new(super::list_sched::PlannedPolicy::unplanned("heft")),
+        "peft" => Box::new(super::list_sched::PlannedPolicy::unplanned("peft")),
+        "dls" => Box::new(super::list_sched::PlannedPolicy::unplanned("dls")),
+        "portfolio" => Box::new(super::list_sched::PlannedPolicy::unplanned("portfolio")),
         _ => unreachable!("registry row without a constructor"),
     })
 }
@@ -607,6 +644,7 @@ mod tests {
     ) -> PlaceCtx<'a> {
         PlaceCtx {
             core,
+            task: 0,
             type_id: 0,
             critical,
             app_id: 0,

@@ -663,6 +663,7 @@ pub fn run_stream_real(
         platform: topo.name.clone(),
         makespan,
         records,
+        bound: None,
     }
 }
 
@@ -880,6 +881,7 @@ pub fn run_serving_real(
             platform: topo.name.clone(),
             makespan,
             records,
+            bound: None,
         },
         counters: st.source.counters(),
         shed_apps: st.shed_apps,

@@ -44,6 +44,10 @@
 
 use crate::coordinator::core::{ServingOpts, ServingRun};
 use crate::coordinator::dag::TaoDag;
+use crate::coordinator::list_sched::planned_policy;
+use crate::coordinator::metrics::lower_bound::{
+    model_bound, observed_app_bound, observed_bound, observed_cp_bound,
+};
 use crate::coordinator::metrics::{
     AppMetrics, RunResult, jain_fairness_index, jain_fairness_total, per_app_metrics,
 };
@@ -394,10 +398,40 @@ pub fn backend_by_name(name: &str) -> Option<Box<dyn ExecutionBackend>> {
     }
 }
 
+/// Whether a backend name (canonical or alias) selects the simulated
+/// backend — the one whose makespans the analytic model bounds apply to.
+fn is_sim_backend(name: &str) -> bool {
+    matches!(name, "sim" | "simulated" | "virtual")
+}
+
+/// Resolve a policy name for one specific `(platform, dag)` run.
+///
+/// Plan-ahead names (`heft`, `peft`, `dls`, `portfolio` — see
+/// [`crate::coordinator::list_sched`]) need to see the whole DAG before
+/// the first task runs, which the global registry cannot provide; they
+/// get a freshly planned instance here. Online names resolve through the
+/// ordinary [`policy_by_name`] registry. `None` for unknown names.
+pub fn policy_for_run(
+    name: &str,
+    plat: &Platform,
+    dag: &TaoDag,
+) -> Option<Box<dyn Policy>> {
+    if let Some(planned) = planned_policy(name, dag, plat) {
+        return Some(planned);
+    }
+    policy_by_name(name, plat.topo.n_cores())
+}
+
 /// Run any `(backend × scenario × policy)` triple in one call.
 ///
 /// Resolves all three registries and executes `dag`; errors name the
-/// offending registry so CLI surfaces stay helpful.
+/// offending registry so CLI surfaces stay helpful. Plan-ahead policies
+/// are planned against this DAG before the run ([`policy_for_run`]).
+///
+/// The result carries a makespan lower bound: the analytic
+/// [`model_bound`] for the simulated backend, the trace-derived
+/// [`observed_cp_bound`] for wall-clock runs (`None` when the trace was
+/// disabled — nothing to bound from).
 pub fn run_triple(
     backend: &str,
     scenario: &str,
@@ -407,11 +441,20 @@ pub fn run_triple(
 ) -> Result<BackendRun, String> {
     let plat = scenarios::by_name(scenario)
         .ok_or_else(|| format!("unknown platform scenario '{scenario}'"))?;
-    let policy = policy_by_name(policy, plat.topo.n_cores())
+    let policy = policy_for_run(policy, &plat, dag)
         .ok_or_else(|| format!("unknown policy '{policy}'"))?;
+    let backend_name = backend;
     let backend =
         backend_by_name(backend).ok_or_else(|| format!("unknown backend '{backend}'"))?;
-    Ok(backend.run(dag, &plat, policy.as_ref(), None, opts))
+    let mut run = backend.run(dag, &plat, policy.as_ref(), None, opts);
+    run.result.bound = if is_sim_backend(backend_name) {
+        Some(model_bound(dag, &plat))
+    } else if !run.result.records.is_empty() {
+        Some(observed_cp_bound(dag, &run.result.records))
+    } else {
+        None
+    };
+    Ok(run)
 }
 
 /// Run any `(backend × scenario × policy)` triple over a workload stream.
@@ -434,21 +477,43 @@ pub fn run_stream_triple(
     let plat = scenarios::by_name(scenario)
         .ok_or_else(|| format!("unknown platform scenario '{scenario}'"))?;
     let policy_name = policy;
-    let policy = policy_by_name(policy_name, plat.topo.n_cores())
-        .ok_or_else(|| format!("unknown policy '{policy_name}'"))?;
+    let backend_name = backend;
     let backend =
         backend_by_name(backend).ok_or_else(|| format!("unknown backend '{backend}'"))?;
     let multi = stream.build();
+    // Plan-ahead policies plan the *combined* stream DAG (all apps'
+    // components at once, arrivals unseen) — the honest translation of an
+    // offline planner to an online admission setting; their per-app
+    // baselines below plan each app's DAG alone, like the literature.
+    let policy = policy_for_run(policy_name, &plat, &multi.dag)
+        .ok_or_else(|| format!("unknown policy '{policy_name}'"))?;
     let traced = RunOpts { trace: true, ..opts.clone() };
     let mut run = backend.run_multi(&multi, &plat, policy.as_ref(), None, &traced);
+    // Observed bounds from the (always traced) combined run: CP+area on
+    // the sim's exact busy intervals, CP-only for wall-clock records.
+    let is_sim = is_sim_backend(backend_name);
+    run.result.bound = Some(if is_sim {
+        observed_bound(&multi.dag, &run.result.records, plat.topo.n_cores())
+    } else {
+        observed_cp_bound(&multi.dag, &run.result.records)
+    });
     let mut apps = per_app_metrics(&run.result, &multi.app_index());
+    for metrics in apps.iter_mut() {
+        metrics.bound = observed_app_bound(
+            &multi.dag,
+            &run.result.records,
+            metrics.app_id,
+            plat.topo.n_cores(),
+            is_sim,
+        );
+    }
     if with_baseline {
         for (metrics, app) in apps.iter_mut().zip(&multi.apps) {
             // Fresh policy instance per baseline: stateful baselines
             // (dHEFT's availability clocks) must not leak between runs.
-            let iso_policy = policy_by_name(policy_name, plat.topo.n_cores())
-                .expect("policy resolved above");
             let (dag, _) = crate::dag_gen::generate(&app.params);
+            let iso_policy =
+                policy_for_run(policy_name, &plat, &dag).expect("policy resolved above");
             let iso_opts = RunOpts { trace: false, ptt_probe: None, ..opts.clone() };
             let iso = backend.run(&dag, &plat, iso_policy.as_ref(), None, &iso_opts);
             *metrics = metrics.clone().with_isolated(iso.result.makespan);
@@ -562,17 +627,27 @@ pub fn run_serving_triple(
     let plat = scenarios::by_name(scenario)
         .ok_or_else(|| format!("unknown platform scenario '{scenario}'"))?;
     let policy_name = policy;
-    let policy = policy_by_name(policy_name, plat.topo.n_cores())
-        .ok_or_else(|| format!("unknown policy '{policy_name}'"))?;
+    let backend_name = backend;
     let backend =
         backend_by_name(backend).ok_or_else(|| format!("unknown backend '{backend}'"))?;
     let multi = stream.window(horizon).build();
+    // Plan-ahead policies plan the whole offered window up front (the
+    // admission layer may still shed some of it).
+    let policy = policy_for_run(policy_name, &plat, &multi.dag)
+        .ok_or_else(|| format!("unknown policy '{policy_name}'"))?;
     let serving = if serving.drain_after.is_finite() {
         serving.clone()
     } else {
         ServingOpts { drain_after: horizon, ..serving.clone() }
     };
     let mut run = backend.run_serving(&multi, &plat, policy.as_ref(), None, opts, &serving);
+    if !run.result.records.is_empty() {
+        run.result.bound = Some(if is_sim_backend(backend_name) {
+            observed_bound(&multi.dag, &run.result.records, plat.topo.n_cores())
+        } else {
+            observed_cp_bound(&multi.dag, &run.result.records)
+        });
+    }
     let shed: HashSet<usize> = run.shed_apps.iter().copied().collect();
     let admitted_index: Vec<(usize, String, f64)> = multi
         .app_index()
@@ -585,9 +660,9 @@ pub fn run_serving_triple(
         for metrics in apps.iter_mut() {
             // Fresh policy instance per baseline: stateful policies must
             // not leak serving-run state into their isolated run.
-            let iso_policy = policy_by_name(policy_name, plat.topo.n_cores())
-                .expect("policy resolved above");
             let (dag, _) = crate::dag_gen::generate(&multi.apps[metrics.app_id].params);
+            let iso_policy =
+                policy_for_run(policy_name, &plat, &dag).expect("policy resolved above");
             let iso_opts = RunOpts { trace: false, ptt_probe: None, ..opts.clone() };
             let iso = backend.run(&dag, &plat, iso_policy.as_ref(), None, &iso_opts);
             *metrics = metrics.clone().with_isolated(iso.result.makespan);
@@ -737,6 +812,7 @@ mod tests {
                 platform: "test".into(),
                 makespan: 0.0,
                 records: Vec::new(),
+                bound: None,
             },
             apps: Vec::new(),
             ptt_samples: Vec::new(),

@@ -22,6 +22,8 @@
 //!   repro policies                  # list scheduling policies + aliases
 //!   repro bench-overhead [--quick] [--json] [--compare]   # perf harness
 //!   repro bench-serving [--quick] [--json]                # serving ramp
+//!   repro experiment [--quick] [--json] [--backend sim|real|both]
+//!                                                         # policy × scenario matrix
 //!
 //! Platforms resolve through the scenario registry
 //! (`platform::scenarios`), execution substrates through the
@@ -35,7 +37,7 @@ use xitao::config::RunConfig;
 use xitao::coordinator::ptt::Ptt;
 use xitao::coordinator::scheduler::policy_by_name;
 use xitao::dag_gen::{DagParams, generate};
-use xitao::exec::{ExecutionBackend, RunOpts, backend_by_name};
+use xitao::exec::{ExecutionBackend, RunOpts, backend_by_name, policy_for_run};
 use xitao::kernels::KernelSizes;
 use xitao::platform::{Platform, scenarios};
 use xitao::runtime::{PjrtService, VggWeights, build_real_dag, pipeline_infer, synthetic_image};
@@ -56,6 +58,7 @@ fn main() {
         "bench-overhead" => cmd_bench_overhead(&args),
         "bench-interference" => cmd_bench_interference(&args),
         "bench-serving" => cmd_bench_serving(&args),
+        "experiment" => cmd_experiment(&args),
         "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
         "vgg16" => cmd_vgg16(&args),
@@ -82,7 +85,8 @@ figures:    fig5 fig6 fig7 fig8 fig9 fig10 ablation-ptt ablation-baselines
             ablation-energy stream-interference all
             options: --quick --seeds N
 single run: run-dag [--config f.json] [--platform <scenario>|hom<N>]
-                    [--policy performance|homogeneous|cats|dheft|energy]
+                    [--policy performance|homogeneous|cats|dheft|energy
+                              |heft|peft|dls|portfolio]
                     [--backend sim|real] [--tasks N] [--parallelism P]
                     [--kernel mix|matmul|sort|copy] [--seed S] [--quick]
 streams:    stream [--scenario stream-pois8|duet-tx2|bg-interferer-haswell20]
@@ -116,6 +120,12 @@ perf:       bench-overhead [--quick] [--json] [--compare]
             (serving tenant ramp on the sim backend: sustained
              admissions/sec, p99 slowdown, per-QoS SLO attainment, Jain
              fairness; --json writes BENCH_serving.json at the repo root)
+            experiment [--quick] [--json] [--backend sim|real|both]
+            [--seeds N] [--tasks N] [--parallelism P] [--seed S]
+            (the full policy × scenario matrix: every registered policy on
+             every platform scenario, each row anchored to its
+             critical-path/area makespan lower bound as pct_of_bound;
+             --json writes BENCH_experiment.json at the repo root)
 
 vgg:        vgg16 [--threads N] [--repeats R] [--block-len B] [--policy ...]
             vgg16-infer [--mode pipeline|whole|dag|validate] [--hw 64]
@@ -219,13 +229,10 @@ fn cmd_run_dag(args: &Args) -> i32 {
         Some(class) => DagParams::single(class, cfg.tasks, cfg.parallelism, cfg.seed),
         None => DagParams::mix(cfg.tasks, cfg.parallelism, cfg.seed),
     };
-    let policy = match policy_by_name(&cfg.policy, plat.topo.n_cores()) {
-        Some(p) => p,
-        None => {
-            eprintln!("unknown policy '{}'", cfg.policy);
-            return 2;
-        }
-    };
+    if policy_by_name(&cfg.policy, plat.topo.n_cores()).is_none() {
+        eprintln!("unknown policy '{}'", cfg.policy);
+        return 2;
+    }
     // Real threads execute actual kernel payloads; the simulator drives the
     // analytic model instead.
     let params = if backend.name() == "real" {
@@ -242,6 +249,9 @@ fn cmd_run_dag(args: &Args) -> i32 {
         backend.name(),
         plat.topo.name
     );
+    // Plan-ahead policies (heft/peft/dls/portfolio) rank the concrete DAG;
+    // everything else resolves straight from the registry.
+    let policy = policy_for_run(&cfg.policy, &plat, &dag).expect("validated above");
     let opts = RunOpts { seed: cfg.seed, ..Default::default() };
     let result = backend.run(&dag, &plat, policy.as_ref(), None, &opts).result;
     println!(
@@ -251,6 +261,21 @@ fn cmd_run_dag(args: &Args) -> i32 {
         result.throughput(),
         result.utilisation(plat.topo.n_cores()),
     );
+    let bound = if backend.name() == "real" {
+        xitao::coordinator::observed_cp_bound(&dag, &result.records)
+    } else {
+        xitao::coordinator::model_bound(&dag, &plat)
+    };
+    match bound.pct_of(result.makespan) {
+        Some(pct) => println!(
+            "lower bound: cp={:.4}s area={:.4}s combined={:.4}s → makespan at {:.1}% of bound",
+            bound.cp,
+            bound.area,
+            bound.combined(),
+            pct
+        ),
+        None => println!("lower bound: unavailable (no trace records)"),
+    }
     println!("width histogram: {:?}", result.width_histogram());
     let crit = result.critical_records().len();
     println!(
@@ -331,6 +356,25 @@ fn cmd_bench_serving(args: &Args) -> i32 {
         seed: args.get("seed", 11),
     };
     xitao::bench::emit_serving(&opts);
+    0
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let backend = args.get_str("backend", "both");
+    if !["sim", "real", "both"].contains(&backend.as_str()) {
+        eprintln!("unknown backend '{backend}' (sim|real|both)");
+        return 2;
+    }
+    let opts = xitao::bench::ExperimentOpts {
+        quick: args.switch("quick"),
+        json: args.switch("json"),
+        backend,
+        seeds: args.get("seeds", 3),
+        tasks: args.get("tasks", 120),
+        parallelism: args.get("parallelism", 4.0),
+        seed: args.get("seed", 0xE1),
+    };
+    xitao::bench::emit_experiment(&opts);
     0
 }
 

@@ -103,6 +103,7 @@ mod tests {
                 t_start: 0.0,
                 t_end: 10.0,
             }],
+            bound: None,
         };
         // Core 0 active 10 s at 2 W = 20 J; core 1 idle 10 s at 0.25 W;
         // cores 2-5 idle at 0.15 W.

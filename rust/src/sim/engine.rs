@@ -528,6 +528,7 @@ pub fn run_stream_sim(
             platform: plat.topo.name.clone(),
             makespan: sim.t,
             records,
+            bound: None,
         },
         ptt_samples: sim.samples,
         interval_samples: sim.interval_samples,
@@ -681,6 +682,7 @@ pub fn run_serving_sim(
             platform: plat.topo.name.clone(),
             makespan: sim.t,
             records,
+            bound: None,
         },
         counters: source.counters(),
         shed_apps,

@@ -1,0 +1,153 @@
+//! Soundness of the makespan lower bounds and the plan-ahead schedulers'
+//! predicted makespans, end-to-end through the exec-layer drivers.
+//!
+//! The load-bearing invariant: a *lower bound* must never exceed an
+//! actual makespan — on any scenario, under any policy, on either
+//! backend. A violation means either the bound or an engine is lying
+//! about time, so these properties double as cross-checks of both.
+
+use xitao::bench::overhead::repo_root_file;
+use xitao::coordinator::scheduler::policy_names;
+use xitao::coordinator::{model_bound, plan_dag};
+use xitao::dag_gen::{DagParams, generate};
+use xitao::exec::{RunOpts, run_triple};
+use xitao::kernels::KernelSizes;
+use xitao::platform::{Platform, scenarios};
+use xitao::util::json::Json;
+use xitao::util::prop::{Config, check};
+
+#[test]
+fn sim_makespan_never_beats_its_model_bound() {
+    // Random (dag, scenario, policy) triples through the sim driver: the
+    // analytic episode-free bound must hold even on episode-heavy
+    // scenarios (episodes only slow tasks down).
+    let scens = scenarios::names();
+    let pols = policy_names();
+    check(Config::cases(30), "sim makespan ≥ model bound for random triples",
+        |rng| {
+            (
+                rng.gen_usize(10, 60) as u64,
+                rng.next_u64(),
+                (rng.next_u64(), rng.next_u64()),
+            )
+        },
+        |&(n, seed, (si, pi))| {
+            let scen = scens[(si % scens.len() as u64) as usize];
+            let pol = pols[(pi % pols.len() as u64) as usize];
+            let (dag, _) = generate(&DagParams::mix(n.max(1) as usize, 4.0, seed));
+            let run =
+                run_triple("sim", scen, pol, &dag, &RunOpts { seed, ..Default::default() })?;
+            let bound = run
+                .result
+                .bound
+                .ok_or_else(|| "sim driver left bound unfilled".to_string())?;
+            let b = bound.combined();
+            if !(b > 0.0 && b.is_finite()) {
+                return Err(format!("{scen}/{pol}: degenerate bound {b}"));
+            }
+            if run.result.makespan + 1e-9 < b {
+                return Err(format!(
+                    "{scen}/{pol}: makespan {} beats lower bound {b}",
+                    run.result.makespan
+                ));
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn real_backend_cp_bound_holds_on_wall_clock() {
+    // The real engine reports wall time, so only the trace-observed
+    // critical-path bound is sound there (area is 0.0 by construction —
+    // records can span queue-wait gaps, see the lower_bound module docs).
+    for (i, (scen, pol)) in [
+        ("hom2", "performance"),
+        ("hom4", "heft"),
+        ("hom4", "portfolio"),
+        ("hom2", "homogeneous"),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let params =
+            DagParams::mix(30, 3.0, 0xB0 + i as u64).with_payloads(KernelSizes::small());
+        let (dag, _) = generate(&params);
+        let run = run_triple("real", scen, pol, &dag, &RunOpts::default())
+            .unwrap_or_else(|e| panic!("{scen}/{pol}: {e}"));
+        let bound = run.result.bound.expect("real driver fills the cp bound from the trace");
+        assert_eq!(bound.area, 0.0, "{scen}/{pol}: real bound must be cp-only");
+        assert!(bound.cp > 0.0, "{scen}/{pol}: degenerate cp bound");
+        assert!(
+            run.result.makespan + 1e-9 >= bound.combined(),
+            "{scen}/{pol}: wall makespan {} beats observed cp bound {}",
+            run.result.makespan,
+            bound.combined()
+        );
+    }
+}
+
+#[test]
+fn portfolio_prediction_is_the_family_minimum_and_above_model_bound() {
+    check(Config::cases(40), "portfolio = min(heft, peft, dls) ≥ model bound",
+        |rng| (rng.gen_usize(5, 80) as u64, rng.next_u64(), rng.next_u64() % 2),
+        |&(n, seed, plat_idx)| {
+            let plat =
+                if plat_idx == 0 { Platform::tx2() } else { Platform::haswell20() };
+            let (dag, _) = generate(&DagParams::mix(n.max(1) as usize, 4.0, seed));
+            let lb = model_bound(&dag, &plat).combined();
+            let mut best = f64::INFINITY;
+            for name in ["heft", "peft", "dls"] {
+                let plan = plan_dag(name, &dag, &plat)
+                    .ok_or_else(|| format!("{name} must plan a non-empty dag"))?;
+                if plan.assignment.len() != dag.len() {
+                    return Err(format!(
+                        "{name} planned {} of {} tasks",
+                        plan.assignment.len(),
+                        dag.len()
+                    ));
+                }
+                // No plan can promise better than the per-task minima.
+                if plan.predicted_makespan + 1e-9 < lb {
+                    return Err(format!(
+                        "{name} predicts {} below the model bound {lb}",
+                        plan.predicted_makespan
+                    ));
+                }
+                best = best.min(plan.predicted_makespan);
+            }
+            let port = plan_dag("portfolio", &dag, &plat)
+                .ok_or_else(|| "portfolio must plan a non-empty dag".to_string())?;
+            if (port.predicted_makespan - best).abs() > 1e-9 {
+                return Err(format!(
+                    "portfolio predicts {} but the family minimum is {best}",
+                    port.predicted_makespan
+                ));
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn committed_experiment_json_matches_schema() {
+    let path = repo_root_file("BENCH_experiment.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing committed {}: {e}", path.display()));
+    let j = Json::parse(&text).expect("committed experiment matrix must parse");
+    assert_eq!(j.get("bench").and_then(Json::as_str), Some("experiment"));
+    assert_eq!(j.get("schema").and_then(Json::as_f64), Some(1.0));
+    assert!(j.get("provenance").and_then(Json::as_str).is_some());
+    let rows = j.get("rows").and_then(Json::as_arr).expect("rows array");
+    assert!(!rows.is_empty());
+    for r in rows {
+        for k in ["backend", "scenario", "policy"] {
+            assert!(r.get(k).and_then(Json::as_str).is_some(), "row missing {k}");
+        }
+        for k in
+            ["seed", "makespan", "bound_cp", "bound_area", "bound", "throughput", "utilisation"]
+        {
+            assert!(r.get(k).and_then(Json::as_f64).is_some(), "row missing {k}");
+        }
+        let pct = r.get("pct_of_bound").and_then(Json::as_f64).expect("pct_of_bound");
+        assert!(pct >= 100.0 - 1e-6, "committed row beats its bound: {pct}%");
+    }
+}
