@@ -116,7 +116,8 @@ fn main() {
     for name in ["performance", "homogeneous"] {
         let policy = policy_by_name(name, topo_r.n_cores()).unwrap();
         let t = Instant::now();
-        let res = run_dag_real(&dag, &topo_r, policy.as_ref(), None, &RealEngineOpts::default());
+        let res = run_dag_real(&dag, &topo_r, policy.as_ref(), None, &RealEngineOpts::default())
+            .unwrap();
         let per_tao = t.elapsed().as_nanos() as f64 / res.n_tasks() as f64;
         println!(
             "[real-engine] {name:12}: {per_tao:8.1} ns/TAO over {} nop TAOs ({} workers)",
@@ -130,7 +131,7 @@ fn main() {
     let plat = Platform::tx2();
     let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
     let t = Instant::now();
-    let run = run_dag_sim(&sim_dag, &plat, policy.as_ref(), None, &SimOpts::default());
+    let run = run_dag_sim(&sim_dag, &plat, policy.as_ref(), None, &SimOpts::default()).unwrap();
     let dt = t.elapsed().as_secs_f64();
     println!(
         "[simulator] {:.0} simulated TAOs/s wall ({} TAOs in {dt:.2}s)",

@@ -1,0 +1,393 @@
+//! The chaos harness (`repro bench-faults`): fault-injection sweep over
+//! the registered fault scenarios × scheduling policy × execution
+//! backend, with every faulted cell baselined against its *fault-free
+//! twin* (same DAG, same seed, same platform with the fault episodes
+//! stripped — [`crate::platform::EpisodeSchedule::without_faults`]).
+//!
+//! Per cell the harness reports:
+//!
+//! - **tasks lost** — admitted tasks minus committed trace records. The
+//!   exactly-once reclamation guarantee says this is *always zero*: a
+//!   fail-stopped core's queued and in-flight work is re-admitted
+//!   elsewhere, and the shared core's commit latch absorbs any duplicate
+//!   the re-admission could produce. The CLI exits non-zero if a cell
+//!   loses (or duplicates) anything.
+//! - **makespan inflation** — faulted makespan as a percentage of the
+//!   fault-free twin's. The honest cost of the fault + recovery, not an
+//!   abstract recovery count.
+//! - **recovery latency** — for scenarios whose fail-stop episodes have a
+//!   finite recovery boundary: the gap between the recovery instant and
+//!   the first task that *starts* on a recovered core. Measures how fast
+//!   the scheduler folds a returning core back in (placement unmasking +
+//!   steal traffic), straight from the trace records.
+//!
+//! The DAG is a layered grid sized per scenario so the run provably
+//! outlives the fault window (`span ≈ 1.5 × latest fault boundary`):
+//! `n_cores` columns of equal ~2 ms tasks with a same-column and a
+//! neighbour-column edge into the next layer, so commits keep waking
+//! work across lanes while cores die and return. Real-backend tasks
+//! carry a sleep payload of the same duration, making wall-clock spans
+//! match virtual ones without burning CPU on oversubscribed hosts.
+//!
+//! `--json` writes `BENCH_fault_recovery.json` at the repository root;
+//! CI runs `repro bench-faults --quick --json` and uploads it, and a
+//! seed-estimate copy is committed for schema stability.
+
+use crate::coordinator::metrics::RunResult;
+use crate::coordinator::scheduler::policy_by_name;
+use crate::coordinator::{RealEngineOpts, TaoDag, payload_fn, run_dag_real};
+use crate::error::SchedError;
+use crate::platform::{EpisodeKind, KernelClass, Partition, Platform, scenarios};
+use crate::sim::{SimOpts, run_dag_sim};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use std::time::Duration;
+
+/// Policies the chaos harness sweeps. The dynamic (reactive) policies
+/// are the interesting axis — they are the ones that can *respond* to a
+/// mid-run outage; the plan-ahead planners meet the fault scenarios in
+/// the experiment matrix (`repro experiment`), where their stale plans
+/// are remapped off dead cores by the shared core. Quick mode keeps the
+/// first two.
+pub const FAULT_POLICIES: [&str; 4] = ["performance", "homogeneous", "cats", "dheft"];
+
+/// Harness options.
+#[derive(Debug, Clone)]
+pub struct FaultBenchOpts {
+    /// CI smoke scale: 1 seed, 2 policies, coarser (4 ms) tasks.
+    pub quick: bool,
+    /// Write `BENCH_fault_recovery.json` at the repository root.
+    pub json: bool,
+    /// Execution backend(s): `sim`, `real` or `both`.
+    pub backend: String,
+    /// Engine seeds per cell (victim selection / PTT noise draws).
+    pub seeds: usize,
+    /// Base seed; cell seeds are `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for FaultBenchOpts {
+    fn default() -> Self {
+        FaultBenchOpts {
+            quick: false,
+            json: false,
+            backend: "both".to_string(),
+            seeds: 2,
+            seed: 0xFA,
+        }
+    }
+}
+
+/// Names of every registered platform scenario that schedules at least
+/// one fault episode — the sweep axis, derived from the registry so new
+/// fault scenarios join the harness automatically.
+pub fn fault_scenario_names() -> Vec<&'static str> {
+    scenarios::scenarios()
+        .iter()
+        .filter(|s| s.platform().episodes.has_faults())
+        .map(|s| s.name)
+        .collect()
+}
+
+/// Latest fault boundary of the platform's schedule: the run must outlive
+/// this to exercise the whole fault (and observe any recovery).
+fn fault_horizon(plat: &Platform) -> f64 {
+    let mut h: f64 = 0.0;
+    for e in &plat.episodes.episodes {
+        if e.is_fault() {
+            h = h.max(e.t_start);
+            if e.t_end.is_finite() {
+                h = h.max(e.t_end);
+            }
+        }
+    }
+    h
+}
+
+/// Build the layered chaos DAG for `plat`: `layers × n_cores` tasks of
+/// `task_exec` seconds each (virtual via `work_scale`, wall via a sleep
+/// payload), each non-root depending on its own column and its left
+/// neighbour's in the previous layer. Sized from the platform's fault
+/// schedule so the run outlives every fault boundary; public because the
+/// fault integration tests (`tests/faults.rs`) drive the engines with
+/// the same workload directly.
+pub fn chaos_dag(plat: &Platform, task_exec: f64) -> TaoDag {
+    let n = plat.topo.n_cores();
+    let span = (1.5 * fault_horizon(plat)).max(0.3);
+    let layers = (span / task_exec).ceil() as usize;
+    // work_scale calibrates the *simulated* duration to task_exec on the
+    // scenario's core 0; the payload fixes the *wall* duration directly.
+    let scale =
+        task_exec / plat.ideal_exec_time(KernelClass::MatMul, Partition { leader: 0, width: 1 });
+    let sleep = Duration::from_secs_f64(task_exec);
+    let mut dag = TaoDag::new();
+    let mut prev: Vec<usize> = Vec::new();
+    for layer in 0..layers {
+        let mut cur = Vec::with_capacity(n);
+        for col in 0..n {
+            let t = dag.add_task_payload(
+                KernelClass::MatMul,
+                0,
+                scale,
+                Some(payload_fn(KernelClass::MatMul, move |_, _| std::thread::sleep(sleep))),
+            );
+            if layer > 0 {
+                dag.add_edge(prev[col], t);
+                dag.add_edge(prev[(col + 1) % n], t);
+            }
+            cur.push(t);
+        }
+        prev = cur;
+    }
+    dag.finalize().expect("layered grid is acyclic");
+    dag
+}
+
+/// Run one (backend, platform, policy) cell on the given DAG.
+fn run_cell(
+    be: &str,
+    plat: &Platform,
+    policy_name: &str,
+    dag: &TaoDag,
+    seed: u64,
+) -> Result<RunResult, SchedError> {
+    let policy = policy_by_name(policy_name, plat.topo.n_cores()).expect("registered policy");
+    match be {
+        "sim" => {
+            run_dag_sim(dag, plat, policy.as_ref(), None, &SimOpts { seed, ..Default::default() })
+                .map(|run| run.result)
+        }
+        "real" => {
+            let opts = RealEngineOpts {
+                seed,
+                episodes: plat.episodes.clone(),
+                ..Default::default()
+            };
+            run_dag_real(dag, &plat.topo, policy.as_ref(), None, &opts)
+        }
+        other => panic!("unknown backend '{other}' (sim|real|both)"),
+    }
+}
+
+/// Tasks that committed more than once (must be 0: the commit latch
+/// makes re-admitted duplicates no-ops).
+fn duplicates(res: &RunResult) -> usize {
+    let mut ids: Vec<usize> = res.records.iter().map(|r| r.task).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    res.records.len() - ids.len()
+}
+
+/// Recovery latency: for each fail-stop episode with a finite recovery
+/// boundary, the gap from that boundary to the first record *starting*
+/// on one of its cores; `None` if nothing ever recovers (or the run
+/// drained before touching a recovered core).
+fn recovery_latency(plat: &Platform, res: &RunResult) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for e in &plat.episodes.episodes {
+        if !matches!(e.kind, EpisodeKind::FailStop { .. }) || !e.t_end.is_finite() {
+            continue;
+        }
+        let first = res
+            .records
+            .iter()
+            .filter(|r| {
+                r.t_start >= e.t_end && r.partition.cores().any(|c| e.cores.contains(&c))
+            })
+            .map(|r| r.t_start - e.t_end)
+            .fold(f64::INFINITY, f64::min);
+        if first.is_finite() {
+            best = Some(best.map_or(first, |b: f64| b.min(first)));
+        }
+    }
+    best
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+/// Assemble the machine-readable fault-recovery matrix. Prints nothing —
+/// see [`emit_faults`]. Panics on an unknown backend name (the CLI
+/// validates first) and on a cell that errors out: every registered
+/// fault scenario leaves live cores, so a `SchedError` here is a bug.
+pub fn run_faults_json(opts: &FaultBenchOpts) -> Json {
+    let seeds = if opts.quick { 1 } else { opts.seeds.max(1) };
+    let task_exec = if opts.quick { 4e-3 } else { 2e-3 };
+    let policies: &[&str] =
+        if opts.quick { &FAULT_POLICIES[..2] } else { &FAULT_POLICIES };
+    let backends: Vec<&str> = match opts.backend.as_str() {
+        "both" => vec!["sim", "real"],
+        "sim" => vec!["sim"],
+        "real" => vec!["real"],
+        other => panic!("unknown backend '{other}' (sim|real|both)"),
+    };
+    let mut rows = Vec::new();
+    for scen in fault_scenario_names() {
+        let plat = scenarios::by_name(scen).expect("registered scenario");
+        let twin = Platform { episodes: plat.episodes.without_faults(), ..plat.clone() };
+        // One DAG per scenario, shared by every cell: cells differ only
+        // in (backend, policy, seed, faults on/off).
+        let dag = chaos_dag(&plat, task_exec);
+        for be in &backends {
+            for pol in policies {
+                for si in 0..seeds {
+                    let seed = opts.seed + si as u64;
+                    let cell = |p: &Platform| {
+                        run_cell(be, p, pol, &dag, seed)
+                            .unwrap_or_else(|e| panic!("cell {be}/{scen}/{pol}: {e}"))
+                    };
+                    let faulted = cell(&plat);
+                    let free = cell(&twin);
+                    let lost = dag.len() - {
+                        let mut ids: Vec<usize> =
+                            faulted.records.iter().map(|r| r.task).collect();
+                        ids.sort_unstable();
+                        ids.dedup();
+                        ids.len()
+                    };
+                    rows.push(Json::obj(vec![
+                        ("backend", Json::Str(be.to_string())),
+                        ("scenario", Json::Str(scen.to_string())),
+                        ("policy", Json::Str(pol.to_string())),
+                        ("seed", Json::Num(seed as f64)),
+                        ("tasks", Json::Num(dag.len() as f64)),
+                        ("makespan", Json::Num(faulted.makespan)),
+                        ("makespan_fault_free", Json::Num(free.makespan)),
+                        (
+                            "inflation_pct",
+                            Json::Num(100.0 * faulted.makespan / free.makespan),
+                        ),
+                        ("recovery_latency", opt_num(recovery_latency(&plat, &faulted))),
+                        ("tasks_lost", Json::Num(lost as f64)),
+                        ("duplicates", Json::Num(duplicates(&faulted) as f64)),
+                    ]));
+                }
+            }
+        }
+    }
+    Json::obj(vec![
+        ("bench", Json::Str("fault_recovery".into())),
+        ("schema", Json::Num(1.0)),
+        ("provenance", Json::Str("measured".into())),
+        ("quick", Json::Bool(opts.quick)),
+        ("task_exec", Json::Num(task_exec)),
+        ("seeds", Json::Num(seeds as f64)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+/// Render the human-readable fault matrix (one row per JSON row — the
+/// sweep is small enough that per-seed rows read fine).
+pub fn render_faults_table(result: &Json) -> Table {
+    let mut t = Table::new(
+        "Chaos harness: fault scenario × policy × backend vs fault-free twin",
+        &["backend", "scenario", "policy", "makespan", "vs fault-free", "recovery", "lost", "dup"],
+    );
+    if let Some(rows) = result.get("rows").and_then(Json::as_arr) {
+        for r in rows {
+            let s = |k: &str| r.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+            let f = |k: &str| r.get(k).and_then(Json::as_f64);
+            t.row(vec![
+                s("backend"),
+                s("scenario"),
+                s("policy"),
+                f("makespan").map_or("-".into(), |v| format!("{v:.4}")),
+                f("inflation_pct").map_or("-".into(), |v| format!("{v:.1}%")),
+                f("recovery_latency").map_or("-".into(), |v| format!("{:.1} ms", v * 1e3)),
+                f("tasks_lost").map_or("-".into(), |v| format!("{v:.0}")),
+                f("duplicates").map_or("-".into(), |v| format!("{v:.0}")),
+            ]);
+        }
+    }
+    t
+}
+
+/// CLI entry point: run, print, optionally write the JSON file.
+pub fn emit_faults(opts: &FaultBenchOpts) -> Json {
+    let result = run_faults_json(opts);
+    println!("{}", render_faults_table(&result).render());
+    if opts.json {
+        let path = super::overhead::repo_root_file("BENCH_fault_recovery.json");
+        match std::fs::write(&path, result.to_pretty()) {
+            Ok(()) => println!("[json] {}", path.display()),
+            Err(e) => eprintln!("[json] write failed ({}): {e}", path.display()),
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_exposes_the_three_fault_scenarios() {
+        let names = fault_scenario_names();
+        for expect in ["failstop20", "failstop-recover8", "failslow-biglittle44"] {
+            assert!(names.contains(&expect), "{expect} missing from {names:?}");
+        }
+    }
+
+    #[test]
+    fn quick_sim_sweep_loses_nothing_and_degrades_gracefully() {
+        let opts = FaultBenchOpts {
+            quick: true,
+            backend: "sim".to_string(),
+            ..Default::default()
+        };
+        let result = run_faults_json(&opts);
+        let rows = result.get("rows").and_then(Json::as_arr).expect("rows array");
+        assert_eq!(
+            rows.len(),
+            fault_scenario_names().len() * 2,
+            "one row per (fault scenario × quick policy)"
+        );
+        for r in rows {
+            let cell = || {
+                format!(
+                    "{}/{}",
+                    r.get("scenario").and_then(Json::as_str).unwrap_or("?"),
+                    r.get("policy").and_then(Json::as_str).unwrap_or("?"),
+                )
+            };
+            let f = |k: &str| r.get(k).and_then(Json::as_f64);
+            // The exactly-once acceptance criterion.
+            assert_eq!(f("tasks_lost"), Some(0.0), "{}: lost tasks", cell());
+            assert_eq!(f("duplicates"), Some(0.0), "{}: duplicate commits", cell());
+            let make = f("makespan").expect("makespan");
+            assert!(make.is_finite() && make > 0.0, "{}: makespan {make}", cell());
+            // Faults can only hurt (small tolerance for rng divergence
+            // between the faulted run and its twin).
+            let infl = f("inflation_pct").expect("inflation");
+            assert!(infl >= 99.0, "{}: inflation {infl}% — fault sped the run up?", cell());
+            // A recovered half-machine must be folded back in.
+            if r.get("scenario").and_then(Json::as_str) == Some("failstop-recover8") {
+                let lat = f("recovery_latency")
+                    .unwrap_or_else(|| panic!("{}: no recovery observed", cell()));
+                assert!(
+                    (0.0..0.2).contains(&lat),
+                    "{}: recovery latency {lat}s",
+                    cell()
+                );
+            }
+        }
+        let rendered = render_faults_table(&result).render();
+        assert!(rendered.contains("vs fault-free"));
+        assert!(rendered.contains("failstop20"));
+    }
+
+    #[test]
+    fn chaos_dag_outlives_the_fault_window() {
+        let plat = scenarios::by_name("failstop20").unwrap();
+        let dag = chaos_dag(&plat, 4e-3);
+        // 20 columns, span ≥ 1.5 × 0.25 s at 4 ms per task.
+        assert_eq!(dag.len() % 20, 0);
+        assert!(dag.len() / 20 >= (0.375f64 / 4e-3) as usize);
+        // Serial work per column alone already exceeds the horizon.
+        assert!(dag.len() as f64 / 20.0 * 4e-3 > fault_horizon(&plat));
+    }
+}

@@ -72,7 +72,7 @@ fn mean_throughput(
         .map(|s| {
             let (dag, _) = generate(&make_params(1000 + s));
             let opts = RunOpts { seed: 42 + s, ..Default::default() };
-            backend.run(&dag, plat, policy, None, &opts).result.throughput()
+            backend.run(&dag, plat, policy, None, &opts).unwrap().result.throughput()
         })
         .collect();
     stats::mean(&tps)
@@ -217,7 +217,7 @@ pub fn fig8_run(with_interference: bool, seed: u64) -> (RunResult, Vec<(f64, f64
         ptt_probe: Some((KernelClass::MatMul.index(), 1, 1)),
         ..Default::default()
     };
-    let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts);
+    let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts).unwrap();
     (run.result, run.ptt_samples)
 }
 
@@ -303,8 +303,8 @@ pub fn fig9_run(n_threads: usize, repeats: usize) -> RunResult {
     let warm = fig9_dag(2);
     let dag = fig9_dag(repeats);
     let ptt = Ptt::new(dag.n_types(), &plat.topo);
-    SimBackend.run(&warm, &plat, &PerformanceBased, Some(&ptt), &RunOpts::default());
-    SimBackend.run(&dag, &plat, &PerformanceBased, Some(&ptt), &RunOpts::default()).result
+    SimBackend.run(&warm, &plat, &PerformanceBased, Some(&ptt), &RunOpts::default()).unwrap();
+    SimBackend.run(&dag, &plat, &PerformanceBased, Some(&ptt), &RunOpts::default()).unwrap().result
 }
 
 /// **Fig 9** — VGG-16 strong scaling (paper: ≈0.69 parallel efficiency,
@@ -345,7 +345,10 @@ pub fn fig10(opts: &BenchOpts) -> Vec<Table> {
         // the bootstrap phase, whose exploration is mostly width 1.
         let plat = Platform::homogeneous(n);
         let dag = fig9_dag(repeats);
-        let res = SimBackend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default()).result;
+        let res = SimBackend
+            .run(&dag, &plat, &PerformanceBased, None, &RunOpts::default())
+            .unwrap()
+            .result;
         let pct = res.width_percentages();
         let mut row = vec![n.to_string()];
         for &w in &all_widths {
@@ -372,13 +375,15 @@ pub fn ablation_ptt(opts: &BenchOpts) -> Vec<Table> {
                 let (dag, _) = generate(&DagParams::mix(tasks, 4.0, 500 + s));
                 let ptt = Ptt::new(dag.n_types(), &plat.topo);
                 ptt.set_history_weight(weight);
-                let run = backend.run(
-                    &dag,
-                    &plat,
-                    &PerformanceBased,
-                    Some(&ptt),
-                    &RunOpts { seed: s, ..Default::default() },
-                );
+                let run = backend
+                    .run(
+                        &dag,
+                        &plat,
+                        &PerformanceBased,
+                        Some(&ptt),
+                        &RunOpts { seed: s, ..Default::default() },
+                    )
+                    .unwrap();
                 run.result.makespan
             })
             .collect();
@@ -420,6 +425,7 @@ pub fn ablation_baselines(opts: &BenchOpts) -> Vec<Table> {
                                 None,
                                 &RunOpts { seed: s, ..Default::default() },
                             )
+                            .unwrap()
                             .result
                             .throughput()
                     })
@@ -459,6 +465,7 @@ pub fn ablation_energy(opts: &BenchOpts) -> Vec<Table> {
                         None,
                         &RunOpts { seed: s, ..Default::default() },
                     )
+                    .unwrap()
                     .result;
                 tps.push(run.throughput());
                 ens.push(run_energy(&plat.topo, &run));

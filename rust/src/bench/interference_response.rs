@@ -260,7 +260,8 @@ pub fn run_response(
                     ptt_probe: None,
                     probe_interval: Some(SAMPLE_INTERVAL),
                 },
-            );
+            )
+            .unwrap();
             let samples: Vec<(Vec<f64>, Vec<bool>)> = run
                 .interval_samples
                 .into_iter()
@@ -324,17 +325,20 @@ pub fn run_response(
                     }
                     out
                 });
-                result = Some(run_dag_real(
-                    &dag,
-                    &plat.topo,
-                    policy.as_ref(),
-                    Some(&ptt),
-                    &RealEngineOpts {
-                        seed: opts.seed,
-                        episodes: plat.episodes.clone(),
-                        ..Default::default()
-                    },
-                ));
+                result = Some(
+                    run_dag_real(
+                        &dag,
+                        &plat.topo,
+                        policy.as_ref(),
+                        Some(&ptt),
+                        &RealEngineOpts {
+                            seed: opts.seed,
+                            episodes: plat.episodes.clone(),
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap(),
+                );
                 stop.store(true, Ordering::Release);
                 samples = sampler.join().expect("sampler thread");
             });

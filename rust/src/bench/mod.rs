@@ -2,10 +2,12 @@
 //! paper's evaluation (§5), plus the design ablations called out in
 //! DESIGN.md, the scheduler-overhead perf harness ([`overhead`]) and the
 //! §5.3 interference-response harness ([`interference_response`]) and the
-//! policy × scenario experiment matrix ([`experiment`]).
+//! policy × scenario experiment matrix ([`experiment`]) and the
+//! fault-injection chaos harness ([`faults`]).
 //! Used by the `repro` CLI and the `cargo bench` targets.
 
 pub mod experiment;
+pub mod faults;
 pub mod figures;
 pub mod interference_response;
 pub mod overhead;
@@ -15,6 +17,10 @@ pub use experiment::{
     ExperimentOpts, emit_experiment, render_experiment_table, run_experiment_json,
 };
 
+pub use faults::{
+    FAULT_POLICIES, FaultBenchOpts, emit_faults, fault_scenario_names, render_faults_table,
+    run_faults_json,
+};
 pub use figures::{
     BenchOpts, ablation_baselines, ablation_energy, ablation_ptt, emit, fig5, fig6, fig7, fig8,
     fig9, fig10, stream_interference,

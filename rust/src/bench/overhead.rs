@@ -270,7 +270,8 @@ pub fn run_overhead(opts: &OverheadOpts) -> Json {
         let plat = scenarios::by_name(name).expect("registered overhead scenario");
         let policy = policy_by_name("performance", plat.topo.n_cores()).expect("policy");
         let t = Instant::now();
-        let res = run_dag_real(&dag, &plat.topo, policy.as_ref(), None, &RealEngineOpts::default());
+        let res = run_dag_real(&dag, &plat.topo, policy.as_ref(), None, &RealEngineOpts::default())
+            .unwrap();
         let secs = t.elapsed().as_secs_f64();
         let tps = res.n_tasks() as f64 / secs.max(1e-9);
         scen_objs.push((
@@ -289,7 +290,7 @@ pub fn run_overhead(opts: &OverheadOpts) -> Json {
     let plat = scenarios::by_name("tx2").unwrap();
     let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
     let t = Instant::now();
-    let run = run_dag_sim(&sim_dag, &plat, policy.as_ref(), None, &SimOpts::default());
+    let run = run_dag_sim(&sim_dag, &plat, policy.as_ref(), None, &SimOpts::default()).unwrap();
     let sim_secs = t.elapsed().as_secs_f64();
     let sim_tps = run.result.n_tasks() as f64 / sim_secs.max(1e-9);
 

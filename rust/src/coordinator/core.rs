@@ -118,7 +118,20 @@ pub struct SchedCore<'a> {
     /// Critical-path membership, seeded per application
     /// ([`TaoDag::cp_root_seeds`]) and propagated at commit time.
     on_cp: Vec<AtomicBool>,
+    /// Per-task commit latch: the CAS that makes commits idempotent. Work
+    /// reclamation may re-admit a task whose first execution already
+    /// landed (the failure raced the commit); the latch turns the second
+    /// commit into a counted no-op instead of double-releasing children.
+    committed: Vec<AtomicBool>,
     completed: AtomicUsize,
+    /// Commits refused by the latch (must stay 0 in a correct run — the
+    /// chaos harness asserts it; a reclamation bug shows up here instead
+    /// of as corrupted dependency counters).
+    duplicates: AtomicUsize,
+    /// Tasks whose payload panicked (caught by the real engine's
+    /// `catch_unwind`); they still commit — a failed task is a *terminal*
+    /// state, not a lost one — but the count is surfaced.
+    failed: AtomicUsize,
     /// Per-application QoS class (empty ⇒ every app is
     /// [`QosClass::default`]); set by [`SchedCore::with_app_qos`].
     qos_of: Vec<QosClass>,
@@ -158,7 +171,10 @@ impl<'a> SchedCore<'a> {
             pending: dag.nodes.iter().map(|n| AtomicUsize::new(n.preds.len())).collect(),
             critical: dag.nodes.iter().map(|_| AtomicBool::new(false)).collect(),
             on_cp: dag.cp_root_seeds(app_of).into_iter().map(AtomicBool::new).collect(),
+            committed: dag.nodes.iter().map(|_| AtomicBool::new(false)).collect(),
             completed: AtomicUsize::new(0),
+            duplicates: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
             qos_of: Vec::new(),
             app_done: (0..n_apps).map(|_| AtomicUsize::new(0)).collect(),
             core_last_app: (0..n_cores).map(|_| AtomicUsize::new(usize::MAX)).collect(),
@@ -247,6 +263,45 @@ impl<'a> SchedCore<'a> {
         self.completed.load(Ordering::Acquire)
     }
 
+    /// Commits refused by the idempotency latch (0 in a correct run).
+    pub fn n_duplicates(&self) -> usize {
+        self.duplicates.load(Ordering::Acquire)
+    }
+
+    /// Tasks whose payload panicked (caught and committed as failed).
+    pub fn n_failed(&self) -> usize {
+        self.failed.load(Ordering::Acquire)
+    }
+
+    /// Record one caught payload panic ([`SchedCore::n_failed`]).
+    pub fn note_failed(&self, _task: TaskId) {
+        self.failed.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Has `task` already committed? Reclamation uses this to drop
+    /// re-admitted work whose first execution landed after all.
+    pub fn already_committed(&self, task: TaskId) -> bool {
+        self.committed[task].load(Ordering::Acquire)
+    }
+
+    /// Mark `core` fail-stopped (or recovered). Delegates to the PTT's
+    /// dead mask so both the placement searches and the final
+    /// [`SchedCore::place`] remap read one source of truth.
+    pub fn set_core_dead(&self, core: CoreId, dead: bool) {
+        self.ptt.set_core_dead(core, dead);
+    }
+
+    /// Is `core` currently fail-stopped?
+    pub fn is_core_dead(&self, core: CoreId) -> bool {
+        self.ptt.core_dead(core)
+    }
+
+    /// Lowest-numbered live core, if any (queue-redirect target for work
+    /// that would otherwise land on a dead core).
+    pub fn first_live_core(&self) -> Option<CoreId> {
+        (0..self.topo.n_cores()).find(|&c| !self.ptt.core_dead(c))
+    }
+
     /// Whether every task of the run has committed.
     pub fn is_done(&self) -> bool {
         self.completed() == self.dag.len()
@@ -277,7 +332,33 @@ impl<'a> SchedCore<'a> {
         };
         let partition = self.policy.place(&ctx);
         debug_assert!(self.topo.is_valid_partition(partition), "{partition:?}");
+        let partition = self.remap_off_dead_cores(partition, node.type_id);
         Placement { partition, critical }
+    }
+
+    /// Belt-and-braces fail-stop guard: whatever the policy chose, a
+    /// partition touching a dead core is remapped to the best live
+    /// partition before the substrate ever queues a share there. The
+    /// adaptive policy already treats dead cores like flagged ones in its
+    /// avoiding searches; this covers the PTT-blind baselines and replayed
+    /// offline plans, whose decisions predate the failure.
+    fn remap_off_dead_cores(&self, partition: Partition, type_id: usize) -> Partition {
+        if !self.ptt.any_core_dead() || !partition.cores().any(|c| self.ptt.core_dead(c)) {
+            return partition;
+        }
+        if let Some((p, _)) =
+            self.ptt.best_global_avoiding(type_id, self.topo, |c| self.ptt.core_dead(c))
+        {
+            return p;
+        }
+        // Every partition touches a dead core but some single core is
+        // still alive: degrade to width 1 there. With no live core at all
+        // the original choice stands — the substrate reports the wedge
+        // ([`crate::error::SchedError::AllCoresDead`]); placement cannot.
+        match self.first_live_core() {
+            Some(c) => Partition { leader: c, width: 1 },
+            None => partition,
+        }
     }
 
     /// The leader-side PTT update (§3.2): record the leader share's
@@ -318,8 +399,16 @@ impl<'a> SchedCore<'a> {
     ///    its ready tasks live (the committer's deque on real threads, the
     ///    leader's queue in virtual time).
     ///
-    /// Returns the record plus `done == true` on the run's final commit.
-    pub fn commit(&self, info: &CommitInfo, mut wake: impl FnMut(TaskId)) -> CommitOutcome {
+    /// Returns the record plus `done == true` on the run's final commit —
+    /// or `None` when `task` already committed: the idempotency latch
+    /// makes a duplicate commit (re-executed reclaimed work whose first
+    /// run landed after all) a counted no-op instead of a
+    /// double-release of children and a corrupted completion count.
+    pub fn commit(&self, info: &CommitInfo, mut wake: impl FnMut(TaskId)) -> Option<CommitOutcome> {
+        if self.committed[info.task].swap(true, Ordering::AcqRel) {
+            self.duplicates.fetch_add(1, Ordering::AcqRel);
+            return None;
+        }
         let node = &self.dag.nodes[info.task];
         let app_id = self.app_of(info.task);
         let record = TraceRecord {
@@ -362,7 +451,7 @@ impl<'a> SchedCore<'a> {
             }
         }
         let done = self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.dag.len();
-        CommitOutcome { record, done }
+        Some(CommitOutcome { record, done })
     }
 }
 
@@ -667,7 +756,7 @@ mod tests {
             now: 1.0,
         };
         let mut woken = Vec::new();
-        let out = core.commit(&info, |child| woken.push(child));
+        let out = core.commit(&info, |child| woken.push(child)).expect("first commit");
         assert_eq!(woken, vec![c, e]);
         assert!(core.is_critical(c), "C continues the critical path");
         assert!(!core.is_critical(e), "E is off the path");
@@ -697,9 +786,74 @@ mod tests {
             exec: 1.0,
             now: 1.0,
         };
-        assert!(!core.commit(&mk(x), |_| {}).done);
-        assert!(core.commit(&mk(y), |_| {}).done);
+        assert!(!core.commit(&mk(x), |_| {}).expect("first commit").done);
+        assert!(core.commit(&mk(y), |_| {}).expect("first commit").done);
         assert!(core.is_done());
+    }
+
+    #[test]
+    fn duplicate_commit_is_a_counted_noop() {
+        // The exactly-once latch: re-committing a task (reclaimed work
+        // whose first execution landed) must not release children again,
+        // must not advance the completion counter, and must be counted.
+        let (dag, [a, ..]) = paper_figure1_dag();
+        let topo = topo4();
+        let ptt = Ptt::new(dag.n_types(), &topo);
+        let core = SchedCore::new(&dag, &[], &topo, &PerformanceBased, &ptt);
+        let place = core.place(0, a, 0.0);
+        let info = CommitInfo {
+            task: a,
+            partition: place.partition,
+            critical: place.critical,
+            t_start: 0.0,
+            t_end: 1.0,
+            exec: 1.0,
+            now: 1.0,
+        };
+        let mut woken = Vec::new();
+        assert!(core.commit(&info, |c| woken.push(c)).is_some());
+        assert!(core.already_committed(a));
+        let first_wakes = woken.len();
+        let completed = core.completed();
+        assert!(core.commit(&info, |c| woken.push(c)).is_none(), "duplicate must refuse");
+        assert_eq!(woken.len(), first_wakes, "no child released twice");
+        assert_eq!(core.completed(), completed, "completion count unchanged");
+        assert_eq!(core.n_duplicates(), 1);
+    }
+
+    #[test]
+    fn dead_core_mask_remaps_placements_to_live_partitions() {
+        let (dag, _) = paper_figure1_dag();
+        let topo = topo4();
+        let ptt = Ptt::new(dag.n_types(), &topo);
+        let core = SchedCore::new(&dag, &[], &topo, &HomogeneousWs, &ptt);
+        // HomogeneousWs places width-1 on the acquiring core; kill core 2
+        // and place "from" it (a thief that stole core 2's work after the
+        // failure would do exactly this).
+        core.set_core_dead(2, true);
+        assert!(core.is_core_dead(2));
+        let p = core.place(2, 0, 0.0);
+        assert!(
+            !p.partition.cores().any(|c| core.is_core_dead(c)),
+            "placement must avoid the dead core: {:?}",
+            p.partition
+        );
+        // Recovery restores the core as a valid target.
+        core.set_core_dead(2, false);
+        assert_eq!(core.first_live_core(), Some(0));
+        let p = core.place(2, 0, 0.0);
+        assert_eq!(p.partition, Partition { leader: 2, width: 1 });
+    }
+
+    #[test]
+    fn failed_task_accounting() {
+        let (dag, _) = paper_figure1_dag();
+        let topo = topo4();
+        let ptt = Ptt::new(dag.n_types(), &topo);
+        let core = SchedCore::new(&dag, &[], &topo, &HomogeneousWs, &ptt);
+        assert_eq!(core.n_failed(), 0);
+        core.note_failed(0);
+        assert_eq!(core.n_failed(), 1);
     }
 
     #[test]
@@ -814,7 +968,7 @@ mod tests {
             exec: 1.0,
             now: 1.0,
         };
-        assert!(!core.commit(&info, |_| {}).done);
+        assert!(!core.commit(&info, |_| {}).expect("first commit").done);
         assert!(core.cancel_tasks(1), "final cancellation reports done");
         assert!(core.is_done());
     }

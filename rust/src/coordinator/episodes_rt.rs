@@ -107,6 +107,34 @@ impl EpisodeDriver {
         !self.schedule.is_empty()
     }
 
+    /// Is `core` fail-stopped at run time `t`? The worker loop checks this
+    /// at its top and parks the core for the episode's duration — a dead
+    /// core executes nothing, it does not merely slow down.
+    pub fn fail_stopped(&self, core: CoreId, t: f64) -> bool {
+        self.schedule.fail_stopped(core, t)
+    }
+
+    /// Earliest recovery time among fail-stop episodes holding `core` dead
+    /// at `t`: `Some(t_recover)` for a finite outage, `None` when the core
+    /// never comes back (or is not fail-stopped at all — callers gate on
+    /// [`EpisodeDriver::fail_stopped`] first).
+    pub fn fail_stop_recovery(&self, core: CoreId, t: f64) -> Option<f64> {
+        self.schedule
+            .episodes
+            .iter()
+            .filter(|e| {
+                matches!(e.kind, EpisodeKind::FailStop { .. }) && e.active_at(t) && e.affects(core)
+            })
+            .map(|e| e.t_end)
+            .max_by(|a, b| a.partial_cmp(b).unwrap())
+            .filter(|t| t.is_finite())
+    }
+
+    /// Does any fail-stop episode exist in the schedule (watchdog arming)?
+    pub fn any_fail_stop(&self) -> bool {
+        self.schedule.episodes.iter().any(|e| matches!(e.kind, EpisodeKind::FailStop { .. }))
+    }
+
     /// Composed speed factor the *throttle* honours on `core` at `t`:
     /// like [`EpisodeSchedule::speed_factor`], but interference episodes
     /// are excluded when the driver was built with the interference
@@ -116,7 +144,7 @@ impl EpisodeDriver {
             .episodes
             .iter()
             .filter(|e| e.active_at(t) && e.affects(core))
-            .filter(|e| self.throttle_interference || e.kind != EpisodeKind::Interference)
+            .filter(|e| self.throttle_interference || !matches!(e.kind, EpisodeKind::Interference))
             .map(|e| e.speed_factor)
             .product()
     }
@@ -173,7 +201,7 @@ impl EpisodeDriver {
         self.schedule
             .episodes
             .iter()
-            .filter(|e| e.kind == EpisodeKind::Interference)
+            .filter(|e| matches!(e.kind, EpisodeKind::Interference))
             .flat_map(|e| {
                 e.cores
                     .iter()
@@ -309,6 +337,25 @@ mod tests {
         let before = now();
         d.throttle_share(3, start, now);
         assert!(now() - before < 0.05, "unaffected core must not be throttled");
+    }
+
+    #[test]
+    fn fail_stop_queries_track_outage_and_recovery() {
+        let d = EpisodeDriver::new(EpisodeSchedule::new(vec![
+            Episode::fail_stop(vec![1], 0.1, Some(0.3)),
+            Episode::fail_stop(vec![2], 0.2, None),
+        ]));
+        assert!(d.any_fail_stop());
+        assert!(!d.fail_stopped(1, 0.05));
+        assert!(d.fail_stopped(1, 0.2));
+        assert!(!d.fail_stopped(1, 0.3));
+        assert_eq!(d.fail_stop_recovery(1, 0.2), Some(0.3));
+        // Permanent outage: dead, and no recovery time to wait for.
+        assert!(d.fail_stopped(2, 5.0));
+        assert_eq!(d.fail_stop_recovery(2, 5.0), None);
+        // A fail-stopped core is not *stretched* — death is absence.
+        assert_eq!(d.stretch_factor(1, 0.2), 1.0);
+        assert!(!EpisodeDriver::new(sched()).any_fail_stop());
     }
 
     #[test]

@@ -113,6 +113,16 @@ pub struct Ptt {
     /// itself — only core `c` leads partitions whose rows are `c`). A core
     /// is *flagged* while any of its cells is diverged.
     n_diverged: Vec<CachePadded<AtomicUsize>>,
+    /// Per-core fail-stop mask: a dead core reads as infinite latency —
+    /// never chosen by any avoiding search, remapped away by
+    /// [`crate::coordinator::SchedCore::place`]'s final guard. Written by
+    /// the substrate at failure/recovery boundaries (sim) or by the dying
+    /// worker itself (real engine).
+    dead: Vec<CachePadded<AtomicBool>>,
+    /// Number of set bits in `dead` (cheap `any_core_dead` for the hot
+    /// placement path; maintained by `swap`, so concurrent idempotent
+    /// writes cannot drift the count).
+    n_dead: AtomicUsize,
     /// Tunable history weight (paper default 4.0 = 4:1). Stored bit-cast so
     /// the table stays `Sync` without locks.
     weight: AtomicU64,
@@ -141,6 +151,8 @@ impl Ptt {
             n_types: n_types.max(1),
             rows,
             n_diverged: (0..n_cores).map(|_| CachePadded::new(AtomicUsize::new(0))).collect(),
+            dead: (0..n_cores).map(|_| CachePadded::new(AtomicBool::new(false))).collect(),
+            n_dead: AtomicUsize::new(0),
             weight: AtomicU64::new(HISTORY_WEIGHT.to_bits()),
         }
     }
@@ -212,6 +224,33 @@ impl Ptt {
     /// Number of currently flagged cores (diagnostics / bench summaries).
     pub fn n_flagged(&self) -> usize {
         self.n_diverged.iter().filter(|n| n.load(Ordering::Relaxed) > 0).count()
+    }
+
+    /// Mark `core` fail-stopped (`true`) or recovered (`false`). A dead
+    /// core behaves like infinite latency: the avoiding searches treat it
+    /// like a flagged core and the scheduling core's placement guard
+    /// remaps any partition that still touches it. Idempotent — `swap`
+    /// keeps the count exact under repeated writes.
+    pub fn set_core_dead(&self, core: CoreId, dead: bool) {
+        let was = self.dead[core].swap(dead, Ordering::AcqRel);
+        if was != dead {
+            if dead {
+                self.n_dead.fetch_add(1, Ordering::AcqRel);
+            } else {
+                self.n_dead.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+
+    /// Is `core` currently fail-stopped?
+    pub fn core_dead(&self, core: CoreId) -> bool {
+        self.dead[core].load(Ordering::Acquire)
+    }
+
+    /// Is any core currently fail-stopped? (One load — the fault-free hot
+    /// path pays nothing beyond it.)
+    pub fn any_core_dead(&self) -> bool {
+        self.n_dead.load(Ordering::Acquire) > 0
     }
 
     /// Leader-side update with an observed execution time (seconds).
@@ -424,6 +463,21 @@ mod tests {
 
     fn tx2() -> Topology {
         Topology::from_clusters("tx2", &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)])
+    }
+
+    #[test]
+    fn dead_mask_tracks_transitions_idempotently() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        assert!(!ptt.any_core_dead());
+        ptt.set_core_dead(2, true);
+        ptt.set_core_dead(2, true); // repeat must not double-count
+        assert!(ptt.core_dead(2));
+        assert!(!ptt.core_dead(0));
+        assert!(ptt.any_core_dead());
+        ptt.set_core_dead(2, false);
+        assert!(!ptt.core_dead(2));
+        assert!(!ptt.any_core_dead(), "count must return to zero after recovery");
     }
 
     #[test]

@@ -222,19 +222,26 @@ impl Policy for PttAdaptive {
     }
 
     fn place(&self, ctx: &PlaceCtx<'_>) -> Partition {
-        let flagged = |c: crate::platform::CoreId| ctx.ptt.core_flagged(c);
+        // A fail-stopped core is the degenerate flagged core: avoid it in
+        // every search. (The universal safety net lives in `SchedCore::
+        // place`, which remaps any partition touching a dead core; this
+        // keeps the adaptive policy's *first choice* off it.)
+        let flagged =
+            |c: crate::platform::CoreId| ctx.ptt.core_flagged(c) || ctx.ptt.core_dead(c);
         if ctx.critical {
             if let Some((p, _)) = ctx.ptt.best_global_avoiding(ctx.type_id, ctx.topo, flagged) {
                 return p;
             }
             ctx.ptt.best_global(ctx.type_id, ctx.topo).0
         } else {
-            if ctx.ptt.core_flagged(ctx.core) {
+            let dead_here = ctx.ptt.core_dead(ctx.core);
+            if ctx.ptt.core_flagged(ctx.core) || dead_here {
                 // Counts 0..PERIOD-2 escape (the urgent case at an episode
                 // edge); every PERIOD-th stays as a local probe so the
-                // flagged core's rows keep learning.
+                // flagged core's rows keep learning. A *dead* core never
+                // probes — there is nothing left there to learn about.
                 let count = self.probe[ctx.core].fetch_add(1, Ordering::Relaxed);
-                let stay = count % PROBE_PERIOD == PROBE_PERIOD - 1;
+                let stay = !dead_here && count % PROBE_PERIOD == PROBE_PERIOD - 1;
                 if !stay {
                     if let Some((p, _)) = ctx.ptt.best_in_cluster_avoiding(
                         ctx.type_id,
@@ -864,6 +871,37 @@ mod tests {
         assert!(!p.contains(0), "critical task placed onto flagged core: {p:?}");
         // The plain policy keeps trusting the (still attractive) stale row.
         assert_eq!(PerformanceBased.place(&ctx(5, true, &ptt, &topo)).leader, 0);
+    }
+
+    #[test]
+    fn adaptive_treats_dead_cores_as_permanently_flagged() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        // Denver core 0 stays the trained winner — only the fault mask
+        // (not any latency shift) makes the adaptive policy shun it.
+        for _ in 0..50 {
+            ptt.update(0, 0, 1, 0.01);
+        }
+        ptt.set_core_dead(0, true);
+        assert!(!ptt.core_flagged(0), "death is not a divergence flag");
+        let adaptive = PttAdaptive::new(topo.n_cores());
+        let p = adaptive.place(&ctx(5, true, &ptt, &topo));
+        assert!(!p.contains(0), "critical task placed onto dead core: {p:?}");
+        // Non-critical decisions *on* the dead core always escape — no
+        // local probe cycle, a dead core has nothing to re-learn.
+        for round in 0..2 * PROBE_PERIOD {
+            let p = adaptive.place(&ctx(0, false, &ptt, &topo));
+            assert!(!p.contains(0), "round {round} probed a dead core: {p:?}");
+        }
+        // Recovery restores plain behaviour.
+        ptt.set_core_dead(0, false);
+        assert_eq!(
+            adaptive.place(&ctx(5, true, &ptt, &topo)),
+            PerformanceBased.place(&ctx(5, true, &ptt, &topo))
+        );
     }
 
     #[test]

@@ -72,6 +72,30 @@
 //! and admitted roots and the engine's deadlock-freedom argument is
 //! unchanged. [`run_dag_real`] is the degenerate stream (one app,
 //! arrival 0).
+//!
+//! ## Fault tolerance
+//!
+//! Three independent mechanisms (see DESIGN.md §Fault tolerance):
+//!
+//! - **Panic isolation**: every payload runs under `catch_unwind`. A
+//!   panicking TAO is counted failed ([`SchedCore::note_failed`]), its
+//!   timing never reaches the PTT, but its instance still commits — a
+//!   failed task is a *terminal* state, not a wedge, so dependents release
+//!   and the run completes.
+//! - **Cooperative fail-stop**: fail-stop episodes are served by the dying
+//!   worker itself — it publishes its death through the core's dead mask,
+//!   drains its own inbox/AQ/deque to live cores (owner-side drains are
+//!   the only safe ones on live single-consumer structures) and naps
+//!   outside the park handshake until its recovery boundary. Strays that
+//!   race into its queues around the failure edge are re-routed on every
+//!   nap slice.
+//! - **Watchdog**: a supervisor thread reclaims the queues of *departed*
+//!   workers (a panic that escaped a worker loop — caught at the thread
+//!   boundary so the scope's join doesn't propagate it) and steal-drains
+//!   the deque of workers whose heartbeat goes stale (hung or crawling) —
+//!   the only thief-safe operation on a live worker. Reclaimed tasks
+//!   re-enter through live inboxes; the shared core's commit latch makes
+//!   re-admission idempotent, so every task commits exactly once.
 
 use super::aq::AssemblyQueue;
 use super::core::{
@@ -84,7 +108,8 @@ use super::metrics::{RunResult, TraceRecord, jain_fairness_total, sort_by_commit
 use super::ptt::Ptt;
 use super::scheduler::{Policy, QosClass};
 use super::wsq::WsQueue;
-use crate::platform::{EpisodeSchedule, Topology};
+use crate::error::SchedError;
+use crate::platform::{EpisodeKind, EpisodeSchedule, Topology};
 use crate::util::Pcg32;
 use crossbeam_utils::CachePadded;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering, fence};
@@ -184,6 +209,13 @@ struct Shared<'a> {
     /// Run-termination flag, observed by the worker loops. Set by the
     /// worker whose commit the core reports as the run's last.
     done: AtomicBool,
+    /// Per-worker wall-clock heartbeat (f64 bits), stored at the top of
+    /// every loop iteration. The watchdog reads it to spot hung workers.
+    hearts: Vec<CachePadded<AtomicU64>>,
+    /// Per-worker departed flag: set at the thread boundary when a panic
+    /// escapes the worker loop. Once set, the worker will never touch its
+    /// queues again, so the watchdog may act as their owner.
+    departed: Vec<CachePadded<AtomicBool>>,
     t0: Instant,
 }
 
@@ -296,17 +328,143 @@ impl<'a> Shared<'a> {
         self.insert_into_aqs(core, inst);
     }
 
+    /// First live lane at or after `lane` (wrapping); `None` when every
+    /// core is currently dead. Used by the submitters to keep admissions
+    /// off fail-stopped cores.
+    fn live_lane(&self, lane: usize) -> Option<usize> {
+        let n = self.n_cores();
+        (0..n).map(|k| (lane + k) % n).find(|&c| !self.core.is_core_dead(c))
+    }
+
+    /// First live core other than `this`, preferring neighbours (and, for
+    /// the watchdog, skipping departed workers — their inboxes have no
+    /// owner left to drain them).
+    fn live_target(&self, this: usize) -> Option<usize> {
+        let n = self.n_cores();
+        (1..n).map(|off| (this + off) % n).find(|&c| {
+            !self.core.is_core_dead(c) && !self.departed[c].load(Ordering::Acquire)
+        })
+    }
+
+    /// Owner-side drain of `core`'s inbox, AQ and deque into a live
+    /// neighbour's inbox. Only the owning worker may call this (the inbox
+    /// `take_all`, AQ `pop` and deque `pop` bottom end are single-consumer);
+    /// the watchdog gets the same rights for *departed* workers, whose
+    /// owner provably never touches the queues again.
+    fn reclaim_own(&self, core: usize) {
+        let Some(target) = self.live_target(core) else {
+            // Nowhere to put the work: hold it. Either a recovery boundary
+            // revives someone (the nap loop re-drains every slice) or the
+            // schedule was rejected up front by `check_substrate`.
+            return;
+        };
+        let mut moved = 0usize;
+        for task in self.inboxes[core].take_all() {
+            self.inboxes[target].push(task);
+            moved += 1;
+        }
+        while let Some(task) = self.wsqs[core].pop() {
+            self.inboxes[target].push(task);
+            moved += 1;
+        }
+        // Re-route whole instances: members claim ranks on AQ arrival, so
+        // pushing the same `Arc` into the target's AQ lets the target run
+        // this core's share (ranks are claimed per-arrival, not per-core).
+        while let Some(inst) = self.aqs[core].pop() {
+            self.aqs[target].push(inst);
+            moved += 1;
+        }
+        if moved > 0 {
+            self.wake_after_publish(|s| {
+                s.wake_core(target);
+                s.wake_thieves(target, moved);
+            });
+        }
+    }
+
+    /// Thief-side drain of a *live* worker's deque — steal is the only
+    /// operation a non-owner may perform on a Chase–Lev deque, so this is
+    /// all the watchdog can safely take from a hung-but-alive worker.
+    fn drain_wsq_of(&self, victim: usize) {
+        let Some(target) = self.live_target(victim) else { return };
+        let mut moved = 0usize;
+        while let Some(task) = self.wsqs[victim].steal() {
+            self.inboxes[target].push(task);
+            moved += 1;
+        }
+        if moved > 0 {
+            self.wake_after_publish(|s| {
+                s.wake_core(target);
+                s.wake_thieves(target, moved);
+            });
+        }
+    }
+
+    /// Full reclamation of a departed worker's queues. The departed flag
+    /// is set only after the worker's loop has unwound, so the watchdog is
+    /// now the sole consumer of its inbox/AQ/deque and the owner-side
+    /// drain is safe. Re-run on every watchdog tick: placers may still
+    /// route shares into a departed core's AQ until its death is noticed.
+    fn reclaim_departed(&self, core: usize) {
+        if !self.core.is_core_dead(core) {
+            self.core.set_core_dead(core, true);
+        }
+        self.reclaim_own(core);
+    }
+
+    /// Serve a fail-stop episode covering `core` at the current time, if
+    /// any: publish death through the shared core's dead mask (placement
+    /// remaps off dead cores — `SchedCore::place`), drain our queues to a
+    /// live neighbour, then nap until the recovery boundary — *outside*
+    /// the park handshake, so producers never count us as wakeable.
+    /// Returns whether an episode was served (the caller re-enters its
+    /// loop to re-read the clock).
+    fn fail_stop_nap(&self, core: usize) -> bool {
+        if !self.episodes.fail_stopped(core, self.now()) {
+            return false;
+        }
+        self.core.set_core_dead(core, true);
+        loop {
+            // Every slice: re-drain strays that raced into our queues
+            // around the failure edge (a placer that read the dead mask
+            // just before we set it may still push to our AQ).
+            self.reclaim_own(core);
+            if self.done.load(Ordering::Acquire) {
+                break;
+            }
+            if !self.episodes.fail_stopped(core, self.now()) {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(500));
+            // Keep the heartbeat fresh: a fail-stopped worker is dead to
+            // the scheduler but the *thread* is healthy — the watchdog
+            // must not steal-drain on top of our own drains.
+            self.hearts[core].store(self.now().to_bits(), Ordering::Relaxed);
+        }
+        self.core.set_core_dead(core, false);
+        true
+    }
+
     /// Execute this core's share of a TAO instance; commit if last.
     /// `sink` is this worker's private trace shard.
+    ///
+    /// The payload runs under `catch_unwind`: a panicking TAO is counted
+    /// failed and its timing never reaches the PTT, but the share still
+    /// completes — failure is a terminal state, dependents must release,
+    /// and the worker thread survives to run the next share.
     fn execute_share(&self, core: usize, inst: &Arc<TaoInstance>, sink: &mut Vec<TraceRecord>) {
         let rank = inst.arrivals.fetch_add(1, Ordering::AcqRel);
         debug_assert!(rank < inst.partition.width);
         let node = &self.core.dag().nodes[inst.task];
         let is_leader = core == inst.partition.leader;
         let t_start = self.now();
-        if let Some(p) = &node.payload {
-            p.execute(rank, inst.partition.width);
-        }
+        let ok = match &node.payload {
+            Some(p) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                p.execute(rank, inst.partition.width)
+            }))
+            .is_ok(),
+            None => true,
+        };
         // Realize dynamic heterogeneity: a share on an episode-affected
         // core is stretched *before* t_end is taken, so the leader's own
         // timing — the only PTT write — observes the slowdown exactly as
@@ -315,13 +473,19 @@ impl<'a> Shared<'a> {
             self.episodes.throttle_share(core, t_start, || self.now());
         }
         let t_end = self.now();
+        if !ok {
+            self.core.note_failed(inst.task);
+        }
         if is_leader {
             inst.leader_start.store(t_start.to_bits(), Ordering::Relaxed);
             inst.leader_end.store(t_end.to_bits(), Ordering::Release);
             // §3.2: the leader records its own execution time from its own
             // thread (no PTT cache-line migration); the 4:1 moving average
-            // absorbs rank-imbalance skew.
-            self.core.record_leader_share(inst.task, inst.partition, t_end - t_start);
+            // absorbs rank-imbalance skew. An aborted share's duration is
+            // not a latency observation — keep it out of the table.
+            if ok {
+                self.core.record_leader_share(inst.task, inst.partition, t_end - t_start);
+            }
         }
         if inst.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             self.commit_and_wake(core, inst, t_end, sink);
@@ -355,10 +519,15 @@ impl<'a> Shared<'a> {
             now: t_end,
         };
         let mut woken = 0usize;
-        let out = self.core.commit(&info, |child| {
+        // The commit latch absorbs duplicates (a task reclaimed by the
+        // watchdog *and* finished by its original instance): the second
+        // commit is a counted no-op whose callback never runs.
+        let Some(out) = self.core.commit(&info, |child| {
             self.wsqs[core].push(child);
             woken += 1;
-        });
+        }) else {
+            return;
+        };
         sink.push(out.record);
         if woken > 0 {
             // New stealable work on our deque: offer it to as many parked
@@ -389,15 +558,53 @@ const YIELD_LIMIT: u32 = 32;
 /// how late it notices work.
 const PARK_BACKOFF_CAP: Duration = Duration::from_millis(100);
 
+/// Watchdog sweep period.
+const WATCHDOG_PERIOD: Duration = Duration::from_millis(2);
+
+/// A worker whose heartbeat is older than this is treated as hung and has
+/// its deque steal-drained. Parked workers refresh their heartbeat at
+/// least every `PARK_BACKOFF_CAP` (100 ms), so this must sit well above
+/// the cap to avoid draining a healthy sleeper — stale tasks would still
+/// complete (the inbox re-route is harmless), but the drain churn isn't
+/// free.
+const HUNG_AFTER: f64 = 0.25;
+
+/// Supervisor loop: reclaim the queues of departed workers (owner-side
+/// drain — the owner is gone) and steal-drain the deques of workers whose
+/// heartbeat went stale (thief-side — the owner may still be alive).
+/// Module docs, "Fault tolerance".
+fn watchdog_loop(shared: &Shared<'_>) {
+    while !shared.done.load(Ordering::Acquire) {
+        std::thread::sleep(WATCHDOG_PERIOD);
+        let now = shared.now();
+        for c in 0..shared.n_cores() {
+            if shared.departed[c].load(Ordering::Acquire) {
+                shared.reclaim_departed(c);
+            } else if !shared.core.is_core_dead(c) {
+                let beat = f64::from_bits(shared.hearts[c].load(Ordering::Relaxed));
+                if now - beat > HUNG_AFTER {
+                    shared.drain_wsq_of(c);
+                }
+            }
+        }
+    }
+}
+
 fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32, sink: &mut Vec<TraceRecord>) {
     let _ = shared.parkers[core].thread.set(std::thread::current());
     let n = shared.n_cores();
     let mut idle = 0u32;
+    let fail_stops = shared.episodes.any_fail_stop();
     // Tests stretch `park_timeout` past the cap to prove the handshake
     // (not the timeout) delivers wakeups; the backoff must not shrink it.
     let park_cap = shared.park_timeout.max(PARK_BACKOFF_CAP);
     let mut park_backoff = shared.park_timeout;
     while !shared.done.load(Ordering::Acquire) {
+        shared.hearts[core].store(shared.now().to_bits(), Ordering::Relaxed);
+        if fail_stops && shared.fail_stop_nap(core) {
+            idle = 0;
+            continue;
+        }
         if idle == 0 {
             park_backoff = shared.park_timeout;
         }
@@ -515,6 +722,31 @@ fn pinning_available() -> bool {
     false
 }
 
+/// Reject episode schedules this engine cannot survive: one that
+/// fail-stops *every* core with no recovery leaves no live worker to
+/// finish the run, and unlike the sim engine (which detects the wedge at
+/// its event horizon) a wall-clock engine would simply hang. Checked up
+/// front so the failure is an error, not a deadlock.
+fn check_substrate(topo: &Topology, episodes: &EpisodeSchedule) -> Result<(), SchedError> {
+    let forever_dead = |c: usize| {
+        episodes.episodes.iter().any(|e| {
+            matches!(e.kind, EpisodeKind::FailStop { .. })
+                && e.cores.contains(&c)
+                && e.t_end.is_infinite()
+        })
+    };
+    if (0..topo.n_cores()).all(forever_dead) {
+        let t = episodes
+            .episodes
+            .iter()
+            .filter(|e| matches!(e.kind, EpisodeKind::FailStop { .. }))
+            .map(|e| e.t_start)
+            .fold(0.0, f64::max);
+        return Err(SchedError::AllCoresDead { t });
+    }
+    Ok(())
+}
+
 /// Execute `dag` with `policy` on `topo.n_cores()` worker threads.
 ///
 /// The PTT is created fresh unless `ptt` is provided (warm-started PTTs let
@@ -528,7 +760,7 @@ pub fn run_dag_real(
     policy: &dyn Policy,
     ptt: Option<&Ptt>,
     opts: &RealEngineOpts,
-) -> RunResult {
+) -> Result<RunResult, SchedError> {
     run_stream_real(dag, &[], &[(0.0, dag.roots())], topo, policy, ptt, opts)
 }
 
@@ -552,7 +784,8 @@ pub fn run_stream_real(
     policy: &dyn Policy,
     ptt: Option<&Ptt>,
     opts: &RealEngineOpts,
-) -> RunResult {
+) -> Result<RunResult, SchedError> {
+    check_substrate(topo, &opts.episodes)?;
     let source = AdmissionSource::new(dag, app_of, admissions);
     let fresh;
     let ptt = match ptt {
@@ -578,6 +811,10 @@ pub fn run_stream_real(
             !(pinning_available() && opts.pin_threads),
         ),
         done: AtomicBool::new(false),
+        hearts: (0..topo.n_cores())
+            .map(|_| CachePadded::new(AtomicU64::new(0f64.to_bits())))
+            .collect(),
+        departed: (0..topo.n_cores()).map(|_| CachePadded::new(AtomicBool::new(false))).collect(),
         t0: Instant::now(),
     };
     // One private, cache-padded trace shard per worker: commits are plain
@@ -613,8 +850,23 @@ pub fn run_stream_real(
                 if pin {
                     pin_to_cpu(core % online);
                 }
-                worker_loop(shared, core, rng, shard);
+                // Thread boundary of panic isolation: a panic that escapes
+                // the worker loop (engine-internal, not a sandboxed
+                // payload) must not tear down the run through the scope's
+                // join. Mark the worker departed; the watchdog becomes the
+                // owner of its queues.
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    worker_loop(shared, core, rng, shard);
+                }));
+                if caught.is_err() {
+                    shared.departed[core].store(true, Ordering::Release);
+                    fence(Ordering::SeqCst);
+                }
             });
+        }
+        {
+            let shared = &shared;
+            s.spawn(move || watchdog_loop(shared));
         }
         if !source.is_exhausted() {
             let (shared, source) = (&shared, &source);
@@ -635,13 +887,22 @@ pub fn run_stream_real(
                         ));
                     }
                     let pushed = source.admit_due(shared.now(), n_cores, |lane, root| {
+                        // Admissions avoid fail-stopped lanes: a dead
+                        // worker's own drain would bounce the root anyway,
+                        // but routing straight to a live lane is cheaper
+                        // and keeps arrival latency flat through a fault.
+                        let lane = shared.live_lane(lane).unwrap_or(lane);
                         shared.inboxes[lane].push(root);
                     });
                     // Producer half of the park handshake: wake every
                     // core that received a root (each due batch fills
-                    // lanes from 0, so the prefix covers them all).
+                    // lanes from 0, so the prefix covers them all —
+                    // unless the dead-lane redirect scattered them, in
+                    // which case wake everyone; a spurious unpark is one
+                    // cheap re-scan).
                     shared.wake_after_publish(|sh| {
-                        for c in 0..n_cores.min(pushed) {
+                        let k = if sh.episodes.any_fail_stop() { n_cores } else { pushed };
+                        for c in 0..n_cores.min(k) {
                             sh.wake_core(c);
                         }
                     });
@@ -658,13 +919,13 @@ pub fn run_stream_real(
     let mut records: Vec<TraceRecord> =
         trace_shards.into_iter().flat_map(CachePadded::into_inner).collect();
     sort_by_commit(&mut records);
-    RunResult {
+    Ok(RunResult {
         policy: policy.name().to_string(),
         platform: topo.name.clone(),
         makespan,
         records,
         bound: None,
-    }
+    })
 }
 
 /// Serving-mode admission state owned by the submitter thread. Boxed in a
@@ -735,7 +996,8 @@ pub fn run_serving_real(
     ptt: Option<&Ptt>,
     opts: &RealEngineOpts,
     serving: &ServingOpts,
-) -> ServingRun {
+) -> Result<ServingRun, SchedError> {
+    check_substrate(topo, &opts.episodes)?;
     // (arrival, n_tasks) per app id, for the fairness sampler. Apps not in
     // the serving schedule keep arrival = ∞ and are never sampled.
     let n_apps = apps.iter().map(|a| a.app_id + 1).max().unwrap_or(1);
@@ -771,6 +1033,10 @@ pub fn run_serving_real(
             !(pinning_available() && opts.pin_threads),
         ),
         done: AtomicBool::new(false),
+        hearts: (0..topo.n_cores())
+            .map(|_| CachePadded::new(AtomicU64::new(0f64.to_bits())))
+            .collect(),
+        departed: (0..topo.n_cores()).map(|_| CachePadded::new(AtomicBool::new(false))).collect(),
         t0: Instant::now(),
     };
     let mut trace_shards: Vec<CachePadded<Vec<TraceRecord>>> =
@@ -778,7 +1044,12 @@ pub fn run_serving_real(
     let n_cores = topo.n_cores();
     // Bootstrap: apps due at t ≤ 0 go straight into the deques. No worker
     // is running yet, so every lane is empty and no offer can be pressured.
-    state.lock().unwrap().source.admit_due(
+    // A poisoned mutex here means a *previous* holder panicked mid-update;
+    // the admission source's state is a monotonic cursor (never left
+    // half-written), so recovering the inner value is sound — and aborting
+    // the whole serving run over a submitter panic is exactly the fragility
+    // this engine is built to avoid.
+    state.lock().unwrap_or_else(std::sync::PoisonError::into_inner).source.admit_due(
         0.0,
         n_cores,
         |_lane| 0,
@@ -805,8 +1076,23 @@ pub fn run_serving_real(
                 if pin {
                     pin_to_cpu(core % online);
                 }
-                worker_loop(shared, core, rng, shard);
+                // Thread boundary of panic isolation: a panic that escapes
+                // the worker loop (engine-internal, not a sandboxed
+                // payload) must not tear down the run through the scope's
+                // join. Mark the worker departed; the watchdog becomes the
+                // owner of its queues.
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    worker_loop(shared, core, rng, shard);
+                }));
+                if caught.is_err() {
+                    shared.departed[core].store(true, Ordering::Release);
+                    fence(Ordering::SeqCst);
+                }
             });
+        }
+        {
+            let shared = &shared;
+            s.spawn(move || watchdog_loop(shared));
         }
         let (shared, state) = (&shared, &state);
         s.spawn(move || {
@@ -815,7 +1101,7 @@ pub fn run_serving_real(
             // offer, but it also drives the fairness feedback from the
             // same naps and flips the source into drain mode at the
             // quiesce deadline.
-            let st = &mut *state.lock().unwrap();
+            let st = &mut *state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             let ServingState { source, shed, shed_apps, fairness, last_feedback } = st;
             let mut draining = false;
             while let Some(offer) = source.next_offer() {
@@ -842,8 +1128,18 @@ pub fn run_serving_real(
                 let pushed = source.admit_due(
                     shared.now(),
                     n_cores,
-                    |lane| shared.inboxes[lane].depth(),
-                    |lane, root| shared.inboxes[lane].push(root),
+                    // Graceful degradation under core loss: a dead lane
+                    // reads as its live stand-in's depth, so fewer live
+                    // cores ⇒ deeper readings ⇒ QoS backpressure sheds
+                    // best-effort apps first instead of wedging.
+                    |lane| {
+                        let lane = shared.live_lane(lane).unwrap_or(lane);
+                        shared.inboxes[lane].depth()
+                    },
+                    |lane, root| {
+                        let lane = shared.live_lane(lane).unwrap_or(lane);
+                        shared.inboxes[lane].push(root)
+                    },
                     |app| {
                         shed[app.app_id] = true;
                         shed_apps.push(app.app_id);
@@ -857,7 +1153,8 @@ pub fn run_serving_real(
                 );
                 if pushed > 0 {
                     shared.wake_after_publish(|sh| {
-                        for c in 0..n_cores.min(pushed) {
+                        let k = if sh.episodes.any_fail_stop() { n_cores } else { pushed };
+                        for c in 0..n_cores.min(k) {
                             sh.wake_core(c);
                         }
                     });
@@ -874,8 +1171,8 @@ pub fn run_serving_real(
     sort_by_commit(&mut records);
     let lane_high_water = shared.inboxes.iter().map(Inbox::high_water).max().unwrap_or(0);
     let wsq_retired = shared.wsqs.iter().map(WsQueue::retired_len).max().unwrap_or(0);
-    let st = state.into_inner().unwrap();
-    ServingRun {
+    let st = state.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+    Ok(ServingRun {
         result: RunResult {
             policy: policy.name().to_string(),
             platform: topo.name.clone(),
@@ -888,7 +1185,7 @@ pub fn run_serving_real(
         lane_high_water,
         wsq_retired,
         fairness: st.fairness,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -904,7 +1201,7 @@ mod tests {
     fn executes_every_task_exactly_width_times() {
         let topo = Topology::homogeneous(4);
         let (dag, hits) = counting_dag(40, false);
-        let res = run_dag_real(&dag, &topo, &HomogeneousWs, None, &Default::default());
+        let res = run_dag_real(&dag, &topo, &HomogeneousWs, None, &Default::default()).unwrap();
         assert_eq!(res.n_tasks(), 40);
         // HomogeneousWs is width-1: exactly one execute() per task.
         assert_eq!(hits.load(Ordering::SeqCst), 40);
@@ -936,7 +1233,7 @@ mod tests {
             d.add_edge(w[0], w[1]);
         }
         d.finalize().unwrap();
-        run_dag_real(&d, &topo, &PerformanceBased, None, &Default::default());
+        run_dag_real(&d, &topo, &PerformanceBased, None, &Default::default()).unwrap();
         let got = order.lock().unwrap().clone();
         assert_eq!(got, (0..10).collect::<Vec<_>>());
     }
@@ -946,7 +1243,8 @@ mod tests {
         let topo =
             Topology::from_clusters("tx2", &[(2, "denver2", 2 << 20), (4, "a57", 2 << 20)]);
         let (dag, _) = paper_figure1_dag();
-        let res = run_dag_real(&dag, &topo, &PerformanceBased, None, &Default::default());
+        let res =
+            run_dag_real(&dag, &topo, &PerformanceBased, None, &Default::default()).unwrap();
         assert_eq!(res.n_tasks(), 7);
         // Initial tasks are non-critical; at least one woken task on the
         // critical path must be tagged critical.
@@ -982,7 +1280,8 @@ mod tests {
         }
         // Mark critical? Roots are non-critical; local search from any core
         // in the single cluster can still pick width 4.
-        let res = run_dag_real(&d, &topo, &PerformanceBased, Some(&ptt), &Default::default());
+        let res =
+            run_dag_real(&d, &topo, &PerformanceBased, Some(&ptt), &Default::default()).unwrap();
         assert_eq!(res.records[0].partition.width, 4);
         let mut seen = ranks_seen.lock().unwrap().clone();
         seen.sort();
@@ -994,7 +1293,7 @@ mod tests {
         let topo = Topology::homogeneous(2);
         let (dag, _) = counting_dag(30, false);
         let ptt = Ptt::new(1, &topo);
-        run_dag_real(&dag, &topo, &PerformanceBased, Some(&ptt), &Default::default());
+        run_dag_real(&dag, &topo, &PerformanceBased, Some(&ptt), &Default::default()).unwrap();
         // After 30 width-free placements at least one entry is trained.
         assert!(ptt.untrained_fraction(&topo) < 1.0);
     }
@@ -1003,7 +1302,7 @@ mod tests {
     fn single_core_topology_works() {
         let topo = Topology::homogeneous(1);
         let (dag, hits) = counting_dag(10, true);
-        let res = run_dag_real(&dag, &topo, &HomogeneousWs, None, &Default::default());
+        let res = run_dag_real(&dag, &topo, &HomogeneousWs, None, &Default::default()).unwrap();
         assert_eq!(res.n_tasks(), 10);
         assert_eq!(hits.load(Ordering::SeqCst), 10);
         assert!(res.makespan > 0.0);
@@ -1037,7 +1336,7 @@ mod tests {
             )]),
             ..Default::default()
         };
-        let res = run_dag_real(&d, &topo, &HomogeneousWs, None, &opts);
+        let res = run_dag_real(&d, &topo, &HomogeneousWs, None, &opts).unwrap();
         assert_eq!(res.n_tasks(), 16);
         let mean_on = |leader: usize| -> f64 {
             let v: Vec<f64> = res
@@ -1074,12 +1373,91 @@ mod tests {
             ..Default::default()
         };
         let t = Instant::now();
-        let res = run_dag_real(&dag, &topo, &HomogeneousWs, None, &opts);
+        let res = run_dag_real(&dag, &topo, &HomogeneousWs, None, &opts).unwrap();
         assert_eq!(res.n_tasks(), 8);
         assert!(
             t.elapsed() < Duration::from_secs(10),
             "spinners outlived the run: {:?}",
             t.elapsed()
         );
+    }
+
+    #[test]
+    fn panicking_payload_does_not_wedge_the_run() {
+        let topo = Topology::homogeneous(2);
+        let mut d = TaoDag::new();
+        let a = d.add_task_payload(
+            KernelClass::MatMul,
+            0,
+            1.0,
+            Some(payload_fn(KernelClass::MatMul, |_r, _w| panic!("injected TAO fault"))),
+        );
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let b = d.add_task_payload(
+            KernelClass::MatMul,
+            0,
+            1.0,
+            Some(payload_fn(KernelClass::MatMul, move |_r, _w| {
+                h.fetch_add(1, Ordering::SeqCst);
+            })),
+        );
+        d.add_edge(a, b);
+        d.finalize().unwrap();
+        let res = run_dag_real(&d, &topo, &HomogeneousWs, None, &Default::default()).unwrap();
+        // Failure is terminal, not a wedge: the panicking task commits,
+        // releasing its dependent, which then runs normally.
+        assert_eq!(res.n_tasks(), 2);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn fail_stop_episode_loses_no_tasks() {
+        // Cores 0–1 die at t=0 and recover at 50 ms; the 1 ms payloads
+        // force the run through the fault window. Every task must commit
+        // exactly once regardless of which side of the edge placed it.
+        let topo = Topology::homogeneous(4);
+        let mut d = TaoDag::new();
+        for _ in 0..32 {
+            d.add_task_payload(
+                KernelClass::MatMul,
+                0,
+                1.0,
+                Some(payload_fn(KernelClass::MatMul, |_r, _w| {
+                    std::thread::sleep(Duration::from_millis(1));
+                })),
+            );
+        }
+        d.finalize().unwrap();
+        let opts = RealEngineOpts {
+            episodes: EpisodeSchedule::new(vec![crate::platform::Episode::fail_stop(
+                vec![0, 1],
+                0.0,
+                Some(0.05),
+            )]),
+            ..Default::default()
+        };
+        let res = run_dag_real(&d, &topo, &HomogeneousWs, None, &opts).unwrap();
+        assert_eq!(res.n_tasks(), 32);
+        let mut tasks: Vec<_> = res.records.iter().map(|r| r.task).collect();
+        tasks.sort_unstable();
+        tasks.dedup();
+        assert_eq!(tasks.len(), 32, "a task committed twice or not at all");
+    }
+
+    #[test]
+    fn schedule_killing_every_core_forever_is_rejected() {
+        let topo = Topology::homogeneous(2);
+        let (dag, _) = counting_dag(4, false);
+        let opts = RealEngineOpts {
+            episodes: EpisodeSchedule::new(vec![crate::platform::Episode::fail_stop(
+                vec![0, 1],
+                0.0,
+                None,
+            )]),
+            ..Default::default()
+        };
+        let err = run_dag_real(&dag, &topo, &HomogeneousWs, None, &opts).unwrap_err();
+        assert!(matches!(err, SchedError::AllCoresDead { .. }), "got {err}");
     }
 }

@@ -1,0 +1,74 @@
+//! Structured scheduler errors.
+//!
+//! A wedged run used to abort the whole process: the simulator's deadlock
+//! checks were `panic!`s, so one bad policy/scenario combination inside a
+//! bench sweep or a long serving session killed everything around it.
+//! [`SchedError`] turns those states into values that flow out through
+//! [`crate::exec::ExecutionBackend`]; the CLI prints them and exits
+//! non-zero, harnesses decide per-cell what to do.
+
+use std::fmt;
+
+/// A scheduling run that cannot make progress.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedError {
+    /// No task is running and no arrival is pending, but the DAG is not
+    /// complete: a true scheduler deadlock (lost wakeup, unreleased
+    /// dependency, or work stranded on a failed core that nobody
+    /// reclaimed).
+    Deadlock {
+        /// Tasks committed before the wedge.
+        completed: usize,
+        /// Tasks admitted in total.
+        total: usize,
+        /// Virtual time at which progress stopped.
+        t: f64,
+        /// Which driver detected it (`dag`, `stream`, `serving`).
+        phase: &'static str,
+    },
+    /// Every core of the machine is fail-stopped with no recovery in
+    /// sight: there is no substrate left to run on.
+    AllCoresDead {
+        /// Virtual time at which the last core died.
+        t: f64,
+    },
+}
+
+impl fmt::Display for SchedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchedError::Deadlock { completed, total, t, phase } => write!(
+                f,
+                "scheduler deadlock ({phase}): no running tasks and no pending arrivals, \
+                 but {completed} of {total} tasks complete at t={t:.6}"
+            ),
+            SchedError::AllCoresDead { t } => {
+                write!(f, "every core is fail-stopped at t={t:.6} with no recovery scheduled")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SchedError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_wedge() {
+        let e = SchedError::Deadlock { completed: 3, total: 10, t: 0.5, phase: "stream" };
+        let s = e.to_string();
+        assert!(s.contains("deadlock"), "{s}");
+        assert!(s.contains("3 of 10"), "{s}");
+        assert!(s.contains("stream"), "{s}");
+        let s = SchedError::AllCoresDead { t: 1.0 }.to_string();
+        assert!(s.contains("fail-stopped"), "{s}");
+    }
+
+    #[test]
+    fn is_a_std_error() {
+        fn takes_err(_: &dyn std::error::Error) {}
+        takes_err(&SchedError::AllCoresDead { t: 0.0 });
+    }
+}

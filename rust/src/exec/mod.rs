@@ -41,6 +41,11 @@
 //! is bit-for-bit deterministic under a fixed seed; the real backend runs
 //! `topo.n_cores()` worker threads on the host in wall time, so makespans
 //! are host-dependent (and `ptt_probe` sampling is sim-only).
+//!
+//! Every entry point returns `Result<_, SchedError>`: a wedged run (true
+//! scheduler deadlock, or a fault schedule that fail-stops every core with
+//! no recovery) is a reportable value, not a process abort — the CLI
+//! prints it and exits non-zero, bench harnesses decide per-cell.
 
 use crate::coordinator::core::{ServingOpts, ServingRun};
 use crate::coordinator::dag::TaoDag;
@@ -56,6 +61,7 @@ use crate::coordinator::scheduler::{Policy, QosClass, policy_by_name};
 use crate::coordinator::worker::{
     RealEngineOpts, run_dag_real, run_serving_real, run_stream_real,
 };
+use crate::error::SchedError;
 use crate::platform::{Platform, scenarios};
 use crate::sim::{SimOpts, run_dag_sim, run_serving_sim, run_stream_sim};
 use crate::util::stats;
@@ -154,7 +160,7 @@ pub trait ExecutionBackend: Send + Sync {
         policy: &dyn Policy,
         ptt: Option<&Ptt>,
         opts: &RunOpts,
-    ) -> BackendRun;
+    ) -> Result<BackendRun, SchedError>;
 
     /// Execute a materialised multi-app stream ([`MultiDag`]): every app's
     /// roots are admitted at their arrival time, records are tagged with
@@ -167,7 +173,7 @@ pub trait ExecutionBackend: Send + Sync {
         policy: &dyn Policy,
         ptt: Option<&Ptt>,
         opts: &RunOpts,
-    ) -> BackendRun;
+    ) -> Result<BackendRun, SchedError>;
 
     /// Execute a serving-mode workload ([`MultiDag`] built from a
     /// [`ServingStream`] window): offers go through [`ServingSource`]
@@ -185,7 +191,7 @@ pub trait ExecutionBackend: Send + Sync {
         ptt: Option<&Ptt>,
         opts: &RunOpts,
         serving: &ServingOpts,
-    ) -> ServingRun;
+    ) -> Result<ServingRun, SchedError>;
 
     /// Execute a workload stream end-to-end: materialise it, run it, and
     /// derive the per-app metrics (no isolated baselines — see
@@ -197,18 +203,18 @@ pub trait ExecutionBackend: Send + Sync {
         policy: &dyn Policy,
         ptt: Option<&Ptt>,
         opts: &RunOpts,
-    ) -> StreamRun {
+    ) -> Result<StreamRun, SchedError> {
         let multi = stream.build();
         // Per-app accounting needs the tagged records even when the caller
         // wants a trace-free result, so honour `trace: false` only after
         // the metrics are derived.
         let traced = RunOpts { trace: true, ..opts.clone() };
-        let mut run = self.run_multi(&multi, plat, policy, ptt, &traced);
+        let mut run = self.run_multi(&multi, plat, policy, ptt, &traced)?;
         let apps = per_app_metrics(&run.result, &multi.app_index());
         if !opts.trace {
             run.result.records.clear();
         }
-        StreamRun { result: run.result, apps, ptt_samples: run.ptt_samples }
+        Ok(StreamRun { result: run.result, apps, ptt_samples: run.ptt_samples })
     }
 }
 
@@ -229,19 +235,19 @@ impl ExecutionBackend for SimBackend {
         policy: &dyn Policy,
         ptt: Option<&Ptt>,
         opts: &RunOpts,
-    ) -> BackendRun {
+    ) -> Result<BackendRun, SchedError> {
         let run = run_dag_sim(
             dag,
             plat,
             policy,
             ptt,
             &SimOpts { seed: opts.seed, ptt_probe: opts.ptt_probe, ..Default::default() },
-        );
+        )?;
         let mut result = run.result;
         if !opts.trace {
             result.records.clear();
         }
-        BackendRun { result, ptt_samples: run.ptt_samples }
+        Ok(BackendRun { result, ptt_samples: run.ptt_samples })
     }
 
     fn run_multi(
@@ -251,7 +257,7 @@ impl ExecutionBackend for SimBackend {
         policy: &dyn Policy,
         ptt: Option<&Ptt>,
         opts: &RunOpts,
-    ) -> BackendRun {
+    ) -> Result<BackendRun, SchedError> {
         let run = run_stream_sim(
             &multi.dag,
             &multi.app_of,
@@ -260,12 +266,12 @@ impl ExecutionBackend for SimBackend {
             policy,
             ptt,
             &SimOpts { seed: opts.seed, ptt_probe: opts.ptt_probe, ..Default::default() },
-        );
+        )?;
         let mut result = run.result;
         if !opts.trace {
             result.records.clear();
         }
-        BackendRun { result, ptt_samples: run.ptt_samples }
+        Ok(BackendRun { result, ptt_samples: run.ptt_samples })
     }
 
     fn run_serving(
@@ -276,7 +282,7 @@ impl ExecutionBackend for SimBackend {
         ptt: Option<&Ptt>,
         opts: &RunOpts,
         serving: &ServingOpts,
-    ) -> ServingRun {
+    ) -> Result<ServingRun, SchedError> {
         run_serving_sim(
             &multi.dag,
             &multi.app_of,
@@ -311,7 +317,7 @@ impl ExecutionBackend for RealBackend {
         policy: &dyn Policy,
         ptt: Option<&Ptt>,
         opts: &RunOpts,
-    ) -> BackendRun {
+    ) -> Result<BackendRun, SchedError> {
         let mut result = run_dag_real(
             dag,
             &plat.topo,
@@ -323,11 +329,11 @@ impl ExecutionBackend for RealBackend {
                 episodes: plat.episodes.clone(),
                 ..Default::default()
             },
-        );
+        )?;
         if !opts.trace {
             result.records.clear();
         }
-        BackendRun { result, ptt_samples: Vec::new() }
+        Ok(BackendRun { result, ptt_samples: Vec::new() })
     }
 
     fn run_multi(
@@ -337,7 +343,7 @@ impl ExecutionBackend for RealBackend {
         policy: &dyn Policy,
         ptt: Option<&Ptt>,
         opts: &RunOpts,
-    ) -> BackendRun {
+    ) -> Result<BackendRun, SchedError> {
         let mut result = run_stream_real(
             &multi.dag,
             &multi.app_of,
@@ -351,11 +357,11 @@ impl ExecutionBackend for RealBackend {
                 episodes: plat.episodes.clone(),
                 ..Default::default()
             },
-        );
+        )?;
         if !opts.trace {
             result.records.clear();
         }
-        BackendRun { result, ptt_samples: Vec::new() }
+        Ok(BackendRun { result, ptt_samples: Vec::new() })
     }
 
     fn run_serving(
@@ -366,7 +372,7 @@ impl ExecutionBackend for RealBackend {
         ptt: Option<&Ptt>,
         opts: &RunOpts,
         serving: &ServingOpts,
-    ) -> ServingRun {
+    ) -> Result<ServingRun, SchedError> {
         run_serving_real(
             &multi.dag,
             &multi.app_of,
@@ -446,7 +452,8 @@ pub fn run_triple(
     let backend_name = backend;
     let backend =
         backend_by_name(backend).ok_or_else(|| format!("unknown backend '{backend}'"))?;
-    let mut run = backend.run(dag, &plat, policy.as_ref(), None, opts);
+    let mut run =
+        backend.run(dag, &plat, policy.as_ref(), None, opts).map_err(|e| e.to_string())?;
     run.result.bound = if is_sim_backend(backend_name) {
         Some(model_bound(dag, &plat))
     } else if !run.result.records.is_empty() {
@@ -488,7 +495,9 @@ pub fn run_stream_triple(
     let policy = policy_for_run(policy_name, &plat, &multi.dag)
         .ok_or_else(|| format!("unknown policy '{policy_name}'"))?;
     let traced = RunOpts { trace: true, ..opts.clone() };
-    let mut run = backend.run_multi(&multi, &plat, policy.as_ref(), None, &traced);
+    let mut run = backend
+        .run_multi(&multi, &plat, policy.as_ref(), None, &traced)
+        .map_err(|e| e.to_string())?;
     // Observed bounds from the (always traced) combined run: CP+area on
     // the sim's exact busy intervals, CP-only for wall-clock records.
     let is_sim = is_sim_backend(backend_name);
@@ -515,7 +524,9 @@ pub fn run_stream_triple(
             let iso_policy =
                 policy_for_run(policy_name, &plat, &dag).expect("policy resolved above");
             let iso_opts = RunOpts { trace: false, ptt_probe: None, ..opts.clone() };
-            let iso = backend.run(&dag, &plat, iso_policy.as_ref(), None, &iso_opts);
+            let iso = backend
+                .run(&dag, &plat, iso_policy.as_ref(), None, &iso_opts)
+                .map_err(|e| e.to_string())?;
             *metrics = metrics.clone().with_isolated(iso.result.makespan);
         }
     }
@@ -640,7 +651,9 @@ pub fn run_serving_triple(
     } else {
         ServingOpts { drain_after: horizon, ..serving.clone() }
     };
-    let mut run = backend.run_serving(&multi, &plat, policy.as_ref(), None, opts, &serving);
+    let mut run = backend
+        .run_serving(&multi, &plat, policy.as_ref(), None, opts, &serving)
+        .map_err(|e| e.to_string())?;
     if !run.result.records.is_empty() {
         run.result.bound = Some(if is_sim_backend(backend_name) {
             observed_bound(&multi.dag, &run.result.records, plat.topo.n_cores())
@@ -664,7 +677,9 @@ pub fn run_serving_triple(
             let iso_policy =
                 policy_for_run(policy_name, &plat, &dag).expect("policy resolved above");
             let iso_opts = RunOpts { trace: false, ptt_probe: None, ..opts.clone() };
-            let iso = backend.run(&dag, &plat, iso_policy.as_ref(), None, &iso_opts);
+            let iso = backend
+                .run(&dag, &plat, iso_policy.as_ref(), None, &iso_opts)
+                .map_err(|e| e.to_string())?;
             *metrics = metrics.clone().with_isolated(iso.result.makespan);
         }
     }
@@ -698,8 +713,10 @@ mod tests {
     fn sim_backend_is_equivalent_to_direct_sim_call() {
         let (dag, _) = generate(&DagParams::mix(50, 4.0, 5));
         let plat = scenarios::by_name("tx2").unwrap();
-        let via = SimBackend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default());
-        let direct = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+        let via =
+            SimBackend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default()).unwrap();
+        let direct =
+            run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default()).unwrap();
         assert_eq!(via.result.makespan.to_bits(), direct.result.makespan.to_bits());
         assert_eq!(via.result.records.len(), direct.result.records.len());
     }
@@ -710,7 +727,7 @@ mod tests {
         let plat = scenarios::by_name("hom2").unwrap();
         let backend = RealBackend;
         assert_eq!(backend.name(), "real");
-        let run = backend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default());
+        let run = backend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default()).unwrap();
         assert_eq!(run.result.n_tasks(), 30);
         assert!(run.result.makespan > 0.0);
         assert!(run.ptt_samples.is_empty());
@@ -721,7 +738,7 @@ mod tests {
         let (dag, _) = generate(&DagParams::mix(40, 4.0, 2));
         let plat = scenarios::by_name("tx2").unwrap();
         let opts = RunOpts { trace: false, ..Default::default() };
-        let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts);
+        let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts).unwrap();
         assert!(run.result.records.is_empty());
         assert!(run.result.makespan > 0.0);
     }
@@ -736,7 +753,7 @@ mod tests {
         ));
         let plat = scenarios::by_name("tx2").unwrap();
         let opts = RunOpts { ptt_probe: Some((0, 0, 1)), ..Default::default() };
-        let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts);
+        let run = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts).unwrap();
         assert_eq!(run.ptt_samples.len(), 30);
     }
 
@@ -752,9 +769,9 @@ mod tests {
         let plat = scenarios::by_name("tx2").unwrap();
         let opts = RunOpts { seed: 99, ..Default::default() };
         let via_stream =
-            SimBackend.run_stream(&stream, &plat, &PerformanceBased, None, &opts);
+            SimBackend.run_stream(&stream, &plat, &PerformanceBased, None, &opts).unwrap();
         let (dag, _) = generate(&params);
-        let direct = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts);
+        let direct = SimBackend.run(&dag, &plat, &PerformanceBased, None, &opts).unwrap();
         assert_eq!(
             via_stream.result.makespan.to_bits(),
             direct.result.makespan.to_bits()
@@ -789,8 +806,9 @@ mod tests {
             3,
         );
         let plat = scenarios::by_name("hom4").unwrap();
-        let run =
-            SimBackend.run_stream(&stream, &plat, &PerformanceBased, None, &RunOpts::default());
+        let run = SimBackend
+            .run_stream(&stream, &plat, &PerformanceBased, None, &RunOpts::default())
+            .unwrap();
         assert_eq!(run.result.records.len(), 80);
         assert_eq!(run.result.app_ids(), vec![0, 1]);
         assert_eq!(run.apps.len(), 2);

@@ -32,6 +32,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod dag_gen;
+pub mod error;
 pub mod exec;
 pub mod kernels;
 pub mod platform;
@@ -40,3 +41,5 @@ pub mod sim;
 pub mod util;
 pub mod vgg;
 pub mod workload;
+
+pub use error::SchedError;

@@ -22,6 +22,8 @@
 //!   repro policies                  # list scheduling policies + aliases
 //!   repro bench-overhead [--quick] [--json] [--compare]   # perf harness
 //!   repro bench-serving [--quick] [--json]                # serving ramp
+//!   repro bench-faults [--quick] [--json] [--backend sim|real|both]
+//!                                                         # fault-injection chaos harness
 //!   repro experiment [--quick] [--json] [--backend sim|real|both]
 //!                                                         # policy × scenario matrix
 //!
@@ -58,6 +60,7 @@ fn main() {
         "bench-overhead" => cmd_bench_overhead(&args),
         "bench-interference" => cmd_bench_interference(&args),
         "bench-serving" => cmd_bench_serving(&args),
+        "bench-faults" => cmd_bench_faults(&args),
         "experiment" => cmd_experiment(&args),
         "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
@@ -120,6 +123,14 @@ perf:       bench-overhead [--quick] [--json] [--compare]
             (serving tenant ramp on the sim backend: sustained
              admissions/sec, p99 slowdown, per-QoS SLO attainment, Jain
              fairness; --json writes BENCH_serving.json at the repo root)
+            bench-faults [--quick] [--json] [--backend sim|real|both]
+            [--seeds N] [--seed S]
+            (chaos harness: every registered fault scenario — core
+             fail-stop with and without recovery, fail-slow — × policy ×
+             backend, each cell against its fault-free twin; reports
+             makespan inflation, recovery latency and tasks lost (must be
+             0, exits non-zero otherwise); --json writes
+             BENCH_fault_recovery.json at the repo root)
             experiment [--quick] [--json] [--backend sim|real|both]
             [--seeds N] [--tasks N] [--parallelism P] [--seed S]
             (the full policy × scenario matrix: every registered policy on
@@ -253,7 +264,15 @@ fn cmd_run_dag(args: &Args) -> i32 {
     // everything else resolves straight from the registry.
     let policy = policy_for_run(&cfg.policy, &plat, &dag).expect("validated above");
     let opts = RunOpts { seed: cfg.seed, ..Default::default() };
-    let result = backend.run(&dag, &plat, policy.as_ref(), None, &opts).result;
+    // Scheduling errors (deadlock, all cores fail-stopped) surface as a
+    // message and a non-zero exit, not a panic.
+    let result = match backend.run(&dag, &plat, policy.as_ref(), None, &opts) {
+        Ok(run) => run.result,
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            return 1;
+        }
+    };
     println!(
         "policy={} makespan={:.4}s throughput={:.1} tasks/s utilisation={:.2}",
         result.policy,
@@ -356,6 +375,39 @@ fn cmd_bench_serving(args: &Args) -> i32 {
         seed: args.get("seed", 11),
     };
     xitao::bench::emit_serving(&opts);
+    0
+}
+
+fn cmd_bench_faults(args: &Args) -> i32 {
+    let backend = args.get_str("backend", "both");
+    if !["sim", "real", "both"].contains(&backend.as_str()) {
+        eprintln!("unknown backend '{backend}' (sim|real|both)");
+        return 2;
+    }
+    let opts = xitao::bench::FaultBenchOpts {
+        quick: args.switch("quick"),
+        json: args.switch("json"),
+        backend,
+        seeds: args.get("seeds", 2),
+        seed: args.get("seed", 0xFA),
+    };
+    let result = xitao::bench::emit_faults(&opts);
+    // The exactly-once reclamation guarantee is the acceptance criterion:
+    // any lost or duplicated task fails the harness, not just the report.
+    let (mut lost, mut dup) = (0.0, 0.0);
+    if let Some(rows) = result.get("rows").and_then(xitao::util::json::Json::as_arr) {
+        for r in rows {
+            lost += r.get("tasks_lost").and_then(xitao::util::json::Json::as_f64).unwrap_or(0.0);
+            dup += r.get("duplicates").and_then(xitao::util::json::Json::as_f64).unwrap_or(0.0);
+        }
+    }
+    if lost > 0.0 || dup > 0.0 {
+        eprintln!(
+            "bench-faults: exactly-once violated — {lost:.0} task(s) lost, {dup:.0} duplicate \
+             commit(s) (details above)"
+        );
+        return 1;
+    }
     0
 }
 
@@ -595,7 +647,13 @@ fn cmd_vgg16(args: &Args) -> i32 {
     let dag = build_vgg_dag(&VggConfig { input_hw: 224, block_len, repeats }, None);
     println!("VGG-16 DAG: {} TAOs, critical path {}", dag.len(), dag.critical_path_len());
     let backend = backend_by_name("sim").expect("registered backend");
-    let run = backend.run(&dag, &plat, policy.as_ref(), None, &RunOpts::default());
+    let run = match backend.run(&dag, &plat, policy.as_ref(), None, &RunOpts::default()) {
+        Ok(run) => run,
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            return 1;
+        }
+    };
     println!(
         "threads={} makespan={:.4}s throughput={:.1} TAO/s",
         threads,
@@ -649,6 +707,7 @@ fn cmd_vgg16_infer(args: &Args) -> i32 {
         let t = std::time::Instant::now();
         let res = backend
             .run(&dag, &plat, &xitao::coordinator::PerformanceBased, None, &RunOpts::default())
+            .expect("fault-free DAG run")
             .result;
         let dt = t.elapsed().as_secs_f64();
         println!(
@@ -720,13 +779,16 @@ fn cmd_ptt_dump(args: &Args) -> i32 {
     let (dag, _) = generate(&params);
     let ptt = Ptt::new(dag.n_types(), &plat.topo);
     let backend = backend_by_name("sim").expect("registered backend");
-    backend.run(
+    if let Err(e) = backend.run(
         &dag,
         &plat,
         &xitao::coordinator::PerformanceBased,
         Some(&ptt),
         &RunOpts { seed: cfg.seed, ..Default::default() },
-    );
+    ) {
+        eprintln!("run failed: {e}");
+        return 1;
+    }
     for ty in 0..dag.n_types() {
         println!("== PTT type {ty} ==");
         for (core, width, val) in ptt.dump(ty, &plat.topo) {

@@ -9,15 +9,28 @@
 //! - **DVFS** (§1): frequency changes scale a core's speed for *all* kernel
 //!   classes.
 //!
-//! Both are modelled as multiplicative speed factors active on a core during
-//! `[t_start, t_end)` of simulated time, plus an optional extra memory
-//! bandwidth demand, and both are invisible to the scheduler — only the PTT
-//! observes their effect through inflated execution times.
+//! And two fault families beyond the paper (the chaos-harness extension):
+//! - **FailStop**: the core dies at `t_start` — it executes nothing until
+//!   the optional recovery time. Not a speed factor (a rate of 0 would
+//!   break the DES re-rate invariant); substrates query
+//!   [`EpisodeSchedule::fail_stopped`] instead and park/skip the core.
+//! - **FailSlow**: the core keeps running but permanently (or until
+//!   `t_end`) degrades to `factor` of nominal — a sick-but-alive core.
+//!   Composes exactly like DVFS through `speed_factor`, so the PTT's
+//!   change detector is the sensor that discovers it.
+//!
+//! Performance episodes are modelled as multiplicative speed factors active
+//! on a core during `[t_start, t_end)` of simulated time, plus an optional
+//! extra memory bandwidth demand, and are invisible to the scheduler — only
+//! the PTT observes their effect through inflated execution times.
 
 use super::topology::CoreId;
 
 /// Kind of episode; affects how the performance model composes factors.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// Carries `f64` payloads, so `Eq` cannot be derived — compare with
+/// `matches!` when only the discriminant matters.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EpisodeKind {
     /// Time-sharing with another process: the runtime gets `speed_factor`
     /// of each affected core, and the other process adds `extra_bw_gbps`
@@ -25,6 +38,13 @@ pub enum EpisodeKind {
     Interference,
     /// Frequency scaling: the core runs at `speed_factor` of nominal.
     Dvfs,
+    /// Fail-stop: the core executes nothing from `t_start` until `recover`
+    /// (absolute time), or forever when `recover` is `None`.
+    FailStop { recover: Option<f64> },
+    /// Fail-slow: the core degrades to `factor` of nominal speed — the
+    /// same payload also lives in `speed_factor` so the composition path
+    /// is shared with DVFS.
+    FailSlow { factor: f64 },
 }
 
 /// One episode of dynamic heterogeneity.
@@ -33,10 +53,13 @@ pub struct Episode {
     pub kind: EpisodeKind,
     /// Affected cores.
     pub cores: Vec<CoreId>,
-    /// Simulated-seconds window `[t_start, t_end)`.
+    /// Simulated-seconds window `[t_start, t_end)`. Unrecovered fail-stop
+    /// episodes have `t_end == f64::INFINITY`.
     pub t_start: f64,
     pub t_end: f64,
-    /// Multiplicative speed factor in `(0, 1]` while active.
+    /// Multiplicative speed factor in `(0, 1]` while active. Fail-stop
+    /// episodes keep this at 1.0 — a dead core has no rate, it has no
+    /// execution at all (see [`EpisodeSchedule::fail_stopped`]).
     pub speed_factor: f64,
     /// Additional memory-bandwidth demand (GB/s) while active.
     pub extra_bw_gbps: f64,
@@ -71,12 +94,48 @@ impl Episode {
         }
     }
 
+    /// `cores` fail-stop at `t0`; with `Some(t1)` they come back at `t1`,
+    /// with `None` they are gone for the rest of the run.
+    pub fn fail_stop(cores: Vec<CoreId>, t0: f64, recover: Option<f64>) -> Episode {
+        if let Some(t1) = recover {
+            assert!(t1 > t0, "recovery must come after the failure");
+        }
+        Episode {
+            kind: EpisodeKind::FailStop { recover },
+            cores,
+            t_start: t0,
+            t_end: recover.unwrap_or(f64::INFINITY),
+            speed_factor: 1.0,
+            extra_bw_gbps: 0.0,
+        }
+    }
+
+    /// `cores` fail-slow to `factor` of nominal during `[t0, t1)` (pass
+    /// `f64::INFINITY` for a permanent degradation).
+    pub fn fail_slow(cores: Vec<CoreId>, t0: f64, t1: f64, factor: f64) -> Episode {
+        assert!(t1 > t0 && factor > 0.0 && factor < 1.0);
+        Episode {
+            kind: EpisodeKind::FailSlow { factor },
+            cores,
+            t_start: t0,
+            t_end: t1,
+            speed_factor: factor,
+            extra_bw_gbps: 0.0,
+        }
+    }
+
     pub fn active_at(&self, t: f64) -> bool {
         t >= self.t_start && t < self.t_end
     }
 
     pub fn affects(&self, core: CoreId) -> bool {
         self.cores.contains(&core)
+    }
+
+    /// Is this a fault-injection episode (fail-stop or fail-slow), as
+    /// opposed to a performance episode from the paper?
+    pub fn is_fault(&self) -> bool {
+        matches!(self.kind, EpisodeKind::FailStop { .. } | EpisodeKind::FailSlow { .. })
     }
 }
 
@@ -97,13 +156,43 @@ impl EpisodeSchedule {
     }
 
     /// Combined speed factor on `core` at time `t` (product of active
-    /// episodes touching the core).
+    /// episodes touching the core). Fail-stop episodes are excluded — a
+    /// dead core is not "slow", it is absent; see [`Self::fail_stopped`].
     pub fn speed_factor(&self, core: CoreId, t: f64) -> f64 {
         self.episodes
             .iter()
-            .filter(|e| e.active_at(t) && e.affects(core))
+            .filter(|e| {
+                !matches!(e.kind, EpisodeKind::FailStop { .. })
+                    && e.active_at(t)
+                    && e.affects(core)
+            })
             .map(|e| e.speed_factor)
             .product()
+    }
+
+    /// Is `core` fail-stopped (dead) at time `t`?
+    pub fn fail_stopped(&self, core: CoreId, t: f64) -> bool {
+        self.episodes.iter().any(|e| {
+            matches!(e.kind, EpisodeKind::FailStop { .. }) && e.active_at(t) && e.affects(core)
+        })
+    }
+
+    /// Does any fail-stop episode touch `core` at any time?
+    pub fn has_fail_stop(&self, core: CoreId) -> bool {
+        self.episodes
+            .iter()
+            .any(|e| matches!(e.kind, EpisodeKind::FailStop { .. }) && e.affects(core))
+    }
+
+    /// Does the schedule inject any fault (fail-stop or fail-slow)?
+    pub fn has_faults(&self) -> bool {
+        self.episodes.iter().any(Episode::is_fault)
+    }
+
+    /// The same schedule with every fault episode stripped — the fault-free
+    /// twin the chaos harness baselines against.
+    pub fn without_faults(&self) -> EpisodeSchedule {
+        EpisodeSchedule::new(self.episodes.iter().filter(|e| !e.is_fault()).cloned().collect())
     }
 
     /// Extra bandwidth demand from active episodes at `t`.
@@ -111,13 +200,15 @@ impl EpisodeSchedule {
         self.episodes.iter().filter(|e| e.active_at(t)).map(|e| e.extra_bw_gbps).sum()
     }
 
-    /// The earliest episode boundary strictly after `t`, if any. The DES
-    /// schedules a re-rate event at each boundary.
+    /// The earliest *finite* episode boundary strictly after `t`, if any.
+    /// The DES schedules a re-rate event at each boundary; an unrecovered
+    /// fail-stop has `t_end == ∞`, which is not a boundary — nothing
+    /// changes there, so it must not produce an infinite-dt event.
     pub fn next_boundary_after(&self, t: f64) -> Option<f64> {
         self.episodes
             .iter()
             .flat_map(|e| [e.t_start, e.t_end])
-            .filter(|&b| b > t)
+            .filter(|&b| b > t && b.is_finite())
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 }
@@ -171,5 +262,73 @@ mod tests {
     #[should_panic]
     fn rejects_empty_window() {
         Episode::dvfs(vec![0], 3.0, 3.0, 0.5);
+    }
+
+    // ----- fault episodes -------------------------------------------------
+
+    #[test]
+    fn fail_stop_is_dead_not_slow() {
+        let s = EpisodeSchedule::new(vec![Episode::fail_stop(vec![2], 1.0, None)]);
+        // Dead from t=1.0 forever…
+        assert!(!s.fail_stopped(2, 0.5));
+        assert!(s.fail_stopped(2, 1.0));
+        assert!(s.fail_stopped(2, 1e9));
+        assert!(!s.fail_stopped(0, 1.0));
+        // …but never a speed factor: rate stays 1.0 (substrates must not
+        // model death as slowness — the DES asserts rate > 0).
+        assert_eq!(s.speed_factor(2, 5.0), 1.0);
+        assert!(s.has_fail_stop(2));
+        assert!(!s.has_fail_stop(0));
+    }
+
+    #[test]
+    fn fail_stop_with_recovery_ends_at_recover_time() {
+        let s = EpisodeSchedule::new(vec![Episode::fail_stop(vec![0], 1.0, Some(3.0))]);
+        assert!(s.fail_stopped(0, 2.0));
+        assert!(!s.fail_stopped(0, 3.0)); // half-open: back at recovery
+        assert_eq!(s.next_boundary_after(0.0), Some(1.0));
+        assert_eq!(s.next_boundary_after(1.0), Some(3.0));
+        assert_eq!(s.next_boundary_after(3.0), None);
+    }
+
+    #[test]
+    fn unrecovered_fail_stop_has_no_end_boundary() {
+        // t_end = ∞ must not surface as a boundary (the DES would compute
+        // an infinite dt and wedge virtual time).
+        let s = EpisodeSchedule::new(vec![Episode::fail_stop(vec![0], 2.0, None)]);
+        assert_eq!(s.next_boundary_after(0.0), Some(2.0));
+        assert_eq!(s.next_boundary_after(2.0), None);
+    }
+
+    #[test]
+    fn fail_slow_composes_like_dvfs() {
+        let s = EpisodeSchedule::new(vec![Episode::fail_slow(vec![1], 0.5, f64::INFINITY, 0.25)]);
+        assert_eq!(s.speed_factor(1, 0.0), 1.0);
+        assert_eq!(s.speed_factor(1, 1.0), 0.25);
+        assert!(!s.fail_stopped(1, 1.0), "fail-slow is alive");
+        // Permanent degradation: the onset is the only finite boundary.
+        assert_eq!(s.next_boundary_after(0.0), Some(0.5));
+        assert_eq!(s.next_boundary_after(0.5), None);
+    }
+
+    #[test]
+    fn without_faults_strips_only_faults() {
+        let s = EpisodeSchedule::new(vec![
+            Episode::dvfs(vec![0], 1.0, 2.0, 0.5),
+            Episode::fail_stop(vec![1], 1.0, None),
+            Episode::fail_slow(vec![2], 1.0, 2.0, 0.5),
+        ]);
+        assert!(s.has_faults());
+        let clean = s.without_faults();
+        assert!(!clean.has_faults());
+        assert_eq!(clean.episodes.len(), 1);
+        assert!(matches!(clean.episodes[0].kind, EpisodeKind::Dvfs));
+        assert!(!EpisodeSchedule::default().has_faults());
+    }
+
+    #[test]
+    #[should_panic]
+    fn fail_stop_rejects_recovery_before_failure() {
+        Episode::fail_stop(vec![0], 3.0, Some(2.0));
     }
 }

@@ -20,6 +20,10 @@
 //!   platform substrates of the multi-application workload streams
 //!   registered under the same names in [`crate::workload::scenarios`]
 //!   (the last one adds a heavy 0.05–0.45 s squeeze of cores 0–1).
+//! - `failstop20` / `failstop-recover8` / `failslow-biglittle44` — the
+//!   fault-injection scenarios behind the chaos harness
+//!   (`repro bench-faults`): cores dying mid-run (with and without
+//!   recovery) and a permanent fail-slow degradation of the big cluster.
 //!
 //! The dynamic `hom<N>` family (N homogeneous cores) is also resolved by
 //! [`by_name`] for arbitrary N ≥ 1. Episode schedules drive **both**
@@ -107,6 +111,63 @@ fn bg_interferer_haswell20() -> Platform {
     )]))
 }
 
+/// Cores that die *permanently* in `failstop20` (never recover). Exported
+/// like the `BG_INTERFERER_*` consts so the chaos harness and the fault
+/// tests measure exactly the outage the scenario schedules.
+pub const FAILSTOP_CORES: [usize; 2] = [0, 1];
+/// Core in `failstop20` that blips out and comes back.
+pub const FAILSTOP_RECOVERING_CORE: usize = 2;
+/// Failure time of every `failstop20` outage (seconds of run time).
+pub const FAILSTOP_AT: f64 = 0.05;
+/// Recovery time of [`FAILSTOP_RECOVERING_CORE`].
+pub const FAILSTOP_RECOVER_AT: f64 = 0.25;
+
+fn failstop20() -> Platform {
+    // Three cores die at the same instant mid-run; cores 0-1 stay dead,
+    // core 2 returns at 0.25 s. Any task queued on or running on them at
+    // the failure instant must be reclaimed and re-executed elsewhere
+    // exactly once.
+    Platform::haswell20().with_episodes(EpisodeSchedule::new(vec![
+        Episode::fail_stop(FAILSTOP_CORES.to_vec(), FAILSTOP_AT, None),
+        Episode::fail_stop(vec![FAILSTOP_RECOVERING_CORE], FAILSTOP_AT, Some(FAILSTOP_RECOVER_AT)),
+    ]))
+}
+
+/// Cores of `failstop-recover8` that blip out together.
+pub const FAILSTOP_RECOVER8_CORES: [usize; 4] = [4, 5, 6, 7];
+/// `[failure, recovery)` window of the `failstop-recover8` outage.
+pub const FAILSTOP_RECOVER8_WINDOW: (f64, f64) = (0.05, 0.20);
+
+fn failstop_recover8() -> Platform {
+    // Half the machine loses power for 150 ms and comes back — the
+    // transient-outage case: capacity halves, nothing may be lost, and the
+    // recovered cores must be used again afterwards.
+    Platform::homogeneous(8).with_episodes(EpisodeSchedule::new(vec![Episode::fail_stop(
+        FAILSTOP_RECOVER8_CORES.to_vec(),
+        FAILSTOP_RECOVER8_WINDOW.0,
+        Some(FAILSTOP_RECOVER8_WINDOW.1),
+    )]))
+}
+
+/// Big-cluster cores degraded in `failslow-biglittle44`.
+pub const FAILSLOW_CORES: [usize; 2] = [0, 1];
+/// Residual speed of the degraded cores (fraction of nominal).
+pub const FAILSLOW_FACTOR: f64 = 0.3;
+/// Onset of the permanent degradation (seconds of run time).
+pub const FAILSLOW_AT: f64 = 0.06;
+
+fn failslow_biglittle44() -> Platform {
+    // Two of the four big cores silently degrade below LITTLE speed and
+    // never recover. No event announces it — the PTT's change detector is
+    // the only sensor, and `ptt-adaptive` must steer off the sick cores.
+    biglittle44().with_episodes(EpisodeSchedule::new(vec![Episode::fail_slow(
+        FAILSLOW_CORES.to_vec(),
+        FAILSLOW_AT,
+        f64::INFINITY,
+        FAILSLOW_FACTOR,
+    )]))
+}
+
 /// The static scenario registry.
 pub fn scenarios() -> &'static [Scenario] {
     static SCENARIOS: &[Scenario] = &[
@@ -150,6 +211,21 @@ pub fn scenarios() -> &'static [Scenario] {
             description: "haswell20 with a heavy background process on cores 0-1 (multi-app §5.3)",
             build: bg_interferer_haswell20,
         },
+        Scenario {
+            name: "failstop20",
+            description: "haswell20 where cores 0-2 die at 0.05 s (core 2 recovers at 0.25 s)",
+            build: failstop20,
+        },
+        Scenario {
+            name: "failstop-recover8",
+            description: "8 homogeneous cores; cores 4-7 fail-stop during [0.05, 0.20)",
+            build: failstop_recover8,
+        },
+        Scenario {
+            name: "failslow-biglittle44",
+            description: "biglittle44 where big cores 0-1 permanently degrade to 30% at 0.06 s",
+            build: failslow_biglittle44,
+        },
     ];
     SCENARIOS
 }
@@ -192,10 +268,13 @@ mod tests {
             "stream-pois8",
             "duet-tx2",
             "bg-interferer-haswell20",
+            "failstop20",
+            "failstop-recover8",
+            "failslow-biglittle44",
         ] {
             assert!(names.contains(&expected), "missing scenario {expected}");
         }
-        assert!(names.len() >= 8);
+        assert!(names.len() >= 11);
     }
 
     #[test]
@@ -243,5 +322,42 @@ mod tests {
         let p = by_name("interference20").unwrap();
         assert!(p.episodes.extra_bw(0.10) > 0.0);
         assert_eq!(p.episodes.extra_bw(0.30), 0.0);
+    }
+
+    #[test]
+    fn failstop_scenarios_schedule_the_exported_outages() {
+        let p = by_name("failstop20").unwrap();
+        assert!(p.episodes.has_faults());
+        for &c in &FAILSTOP_CORES {
+            assert!(!p.episodes.fail_stopped(c, FAILSTOP_AT - 0.01));
+            assert!(p.episodes.fail_stopped(c, FAILSTOP_AT));
+            assert!(p.episodes.fail_stopped(c, 1e6), "permanent outage");
+        }
+        assert!(p.episodes.fail_stopped(FAILSTOP_RECOVERING_CORE, FAILSTOP_AT));
+        assert!(!p.episodes.fail_stopped(FAILSTOP_RECOVERING_CORE, FAILSTOP_RECOVER_AT));
+        // Core 3 onward untouched.
+        assert!(!p.episodes.fail_stopped(3, FAILSTOP_AT));
+
+        let p = by_name("failstop-recover8").unwrap();
+        let (t0, t1) = FAILSTOP_RECOVER8_WINDOW;
+        for &c in &FAILSTOP_RECOVER8_CORES {
+            assert!(p.episodes.fail_stopped(c, t0));
+            assert!(!p.episodes.fail_stopped(c, t1), "all cores recover");
+        }
+        assert!(!p.episodes.fail_stopped(0, t0));
+    }
+
+    #[test]
+    fn failslow_scenario_degrades_without_killing() {
+        let p = by_name("failslow-biglittle44").unwrap();
+        assert!(p.episodes.has_faults());
+        for &c in &FAILSLOW_CORES {
+            assert_eq!(p.episodes.speed_factor(c, FAILSLOW_AT - 0.01), 1.0);
+            assert!((p.episodes.speed_factor(c, FAILSLOW_AT) - FAILSLOW_FACTOR).abs() < 1e-12);
+            assert!((p.episodes.speed_factor(c, 1e6) - FAILSLOW_FACTOR).abs() < 1e-12);
+            assert!(!p.episodes.fail_stopped(c, 1.0), "fail-slow cores stay alive");
+        }
+        // Stripping faults recovers the plain biglittle44 platform.
+        assert!(!p.episodes.without_faults().has_faults());
     }
 }

@@ -42,6 +42,21 @@
 //! time jumps directly to it. [`run_dag_sim`] is the degenerate stream
 //! (one app, arrival 0), so the single-DAG path and the stream path are
 //! the same code — the parity the multi-app tests pin bit-for-bit.
+//!
+//! ## Fault realization
+//!
+//! Fail-slow episodes need no machinery here: they flow through the
+//! platform's composed `speed_factor` like interference does, and the PTT
+//! observes the slowdown. Fail-stop is realised as discrete events: every
+//! fault boundary is a simulation event (via `next_boundary_after`), and
+//! at each one the engine applies *transitions* — a newly dead core aborts
+//! whatever instance it was part of (never committed, so the task
+//! re-enters placement exactly once), hands its queued work to live cores
+//! through an orphan buffer, and is masked out of acquisition and
+//! placement (the shared core's dead mask) until its recovery boundary.
+//! All of it is gated on `EpisodeSchedule::has_faults`, so fault-free runs
+//! make bit-for-bit the same rng draws as before. A wedged run returns a
+//! structured [`SchedError`] instead of panicking.
 
 use crate::coordinator::core::{
     AdmissionSource, CommitInfo, SchedCore, ServingApp, ServingOpts, ServingRun, ServingSource,
@@ -50,6 +65,7 @@ use crate::coordinator::dag::{TaoDag, TaskId};
 use crate::coordinator::metrics::{RunResult, TraceRecord, jain_fairness_total};
 use crate::coordinator::ptt::Ptt;
 use crate::coordinator::scheduler::{Policy, QosClass};
+use crate::error::SchedError;
 use crate::platform::{Partition, Platform, RunningTask};
 use crate::util::Pcg32;
 use std::cell::Cell;
@@ -119,6 +135,9 @@ struct Inst {
     t_start: f64,
     remaining_work: f64,
     rate: f64,
+    /// Slot is inert: the instance committed, or a fail-stop aborted it
+    /// (its task re-entered placement under a fresh instance).
+    gone: bool,
 }
 
 struct Sim<'a> {
@@ -157,6 +176,15 @@ struct Sim<'a> {
     done_buf: Vec<usize>,
     /// Reusable `acquire_fixpoint` scan-order buffer.
     order_buf: Vec<usize>,
+    /// Fault substrate, only exercised when the schedule carries fault
+    /// episodes ([`crate::platform::EpisodeSchedule::has_faults`]) — the
+    /// gate that keeps fault-free runs bit-for-bit identical to before.
+    faults: bool,
+    /// Realised fail-stop state per core (tracks episode boundaries).
+    dead_mask: Vec<bool>,
+    /// Tasks reclaimed from dead cores (and admissions that found no live
+    /// lane), awaiting re-placement on live cores.
+    orphans: VecDeque<TaskId>,
 }
 
 /// Tombstone marker in `running` / `running_pos`.
@@ -207,6 +235,7 @@ impl<'a> Sim<'a> {
             t_start: 0.0,
             remaining_work: node.class.traits().base_work * node.work_scale,
             rate: 0.0,
+            gone: false,
         });
         self.running_pos.push(TOMB); // parallel to insts; set in start_tao
         for c in placed.partition.cores() {
@@ -233,7 +262,7 @@ impl<'a> Sim<'a> {
             self.rng.shuffle(&mut order);
             for oi in 0..order.len() {
                 let core = order[oi];
-                if self.cores[core] != CoreState::Idle {
+                if self.dead_mask[core] || self.cores[core] != CoreState::Idle {
                     continue;
                 }
                 // 1. AQ head — arrive at the next committed TAO.
@@ -315,13 +344,20 @@ impl<'a> Sim<'a> {
     /// application arrival (arrivals re-rate running TAOs like episode
     /// boundaries do — admission changes nothing mid-flight, but the
     /// admitted roots must be placed at exactly their arrival time).
-    fn advance(&mut self, next_arrival: Option<f64>) {
-        assert!(
-            self.running_live > 0,
-            "no running tasks but {} of {} incomplete — scheduler deadlock",
-            self.dag.len() - self.core.completed(),
-            self.dag.len()
-        );
+    ///
+    /// Returns [`SchedError::Deadlock`] when called with nothing running:
+    /// the drivers only reach this after establishing that no arrival (or
+    /// recovery boundary) can unblock the run, so it *is* a wedge — but a
+    /// reportable one, not a process abort.
+    fn advance(&mut self, next_arrival: Option<f64>, phase: &'static str) -> Result<(), SchedError> {
+        if self.running_live == 0 {
+            return Err(SchedError::Deadlock {
+                completed: self.core.completed(),
+                total: self.dag.len(),
+                t: self.t,
+                phase,
+            });
+        }
         let dt_complete = self
             .running
             .iter()
@@ -361,6 +397,7 @@ impl<'a> Sim<'a> {
             self.complete(idx);
         }
         self.done_buf = done;
+        Ok(())
     }
 
     /// O(1) removal from `running`: tombstone the slot found through the
@@ -412,14 +449,108 @@ impl<'a> Sim<'a> {
             now: self.t,
         };
         let (core, wsqs) = (&self.core, &mut self.wsqs);
-        let out = core.commit(&info, |child| wsqs[partition.leader].push_back(child));
-        self.records.push(out.record);
+        // A duplicate commit cannot happen here by construction (instances
+        // abort *before* their commit under fail-stop); if it ever does,
+        // the shared core's latch absorbs it and counts it — no abort
+        // path, and the fault tests assert the counter stays zero.
+        if let Some(out) = core.commit(&info, |child| wsqs[partition.leader].push_back(child)) {
+            self.records.push(out.record);
+        }
+        self.insts[idx].gone = true;
         for c in partition.cores() {
             debug_assert_eq!(self.cores[c], CoreState::Running(idx));
             self.cores[c] = CoreState::Idle;
         }
         self.sample_probe();
     }
+
+    /// Realise fail-stop transitions at the current virtual time: newly
+    /// dead cores abort their in-flight instances, hand their queued work
+    /// to live cores, and are masked out of placement and acquisition
+    /// until recovery. No-op (and no extra rng draws) on fault-free
+    /// schedules.
+    fn apply_fault_transitions(&mut self) -> Result<(), SchedError> {
+        if !self.faults {
+            return Ok(());
+        }
+        for c in 0..self.n() {
+            let dead = self.plat.episodes.fail_stopped(c, self.t);
+            if dead == self.dead_mask[c] {
+                continue;
+            }
+            self.dead_mask[c] = dead;
+            self.core.set_core_dead(c, dead);
+            if !dead {
+                continue; // recovered: re-enters acquisition next fixpoint
+            }
+            // Kill core `c`: abort whatever it was part of, orphan its
+            // queued work. Its committed history (records, PTT rows) stays
+            // — only uncommitted state is reclaimed.
+            while let Some(idx) = self.aqs[c].pop_front() {
+                self.abort_inst(idx);
+            }
+            if let CoreState::Arrived(idx) | CoreState::Running(idx) = self.cores[c] {
+                self.abort_inst(idx);
+            }
+            self.cores[c] = CoreState::Idle;
+            while let Some(task) = self.wsqs[c].pop_front() {
+                self.orphans.push_back(task);
+            }
+        }
+        self.flush_orphans()
+    }
+
+    /// Abort a placed-but-uncommitted instance: its progress is lost,
+    /// every member core returns to idle, and the task re-enters placement
+    /// through the orphan buffer. Exactly-once holds because the commit
+    /// only ever happens from whichever instance *finishes* — this one no
+    /// longer can.
+    fn abort_inst(&mut self, idx: usize) {
+        if self.insts[idx].gone {
+            return;
+        }
+        self.insts[idx].gone = true;
+        let partition = self.insts[idx].partition;
+        for m in partition.cores() {
+            if matches!(self.cores[m], CoreState::Arrived(i) | CoreState::Running(i) if i == idx) {
+                self.cores[m] = CoreState::Idle;
+            }
+            self.aqs[m].retain(|&e| e != idx);
+        }
+        if self.insts[idx].started {
+            self.unrun(idx);
+        }
+        self.orphans.push_back(self.insts[idx].task);
+    }
+
+    /// Re-admit orphaned tasks onto live cores (round-robin over the live
+    /// set). With every core dead they stay parked for the next recovery
+    /// boundary; if none is scheduled the machine is gone for good.
+    fn flush_orphans(&mut self) -> Result<(), SchedError> {
+        if self.orphans.is_empty() {
+            return Ok(());
+        }
+        let live: Vec<usize> = (0..self.n()).filter(|&c| !self.dead_mask[c]).collect();
+        if live.is_empty() {
+            if self.plat.episodes.next_boundary_after(self.t).is_none() {
+                return Err(SchedError::AllCoresDead { t: self.t });
+            }
+            return Ok(()); // a recovery is scheduled — hold until then
+        }
+        let mut i = 0;
+        while let Some(task) = self.orphans.pop_front() {
+            self.wsqs[live[i % live.len()]].push_back(task);
+            i += 1;
+        }
+        Ok(())
+    }
+}
+
+/// First live lane at or after `lane` (wrapping), or `None` when every
+/// core is fail-stopped. Identity on a fault-free run (`dead` all false).
+fn live_lane(dead: &[bool], lane: usize) -> Option<usize> {
+    let n = dead.len();
+    (0..n).map(|k| (lane + k) % n).find(|&c| !dead[c])
 }
 
 /// Simulate `dag` under `policy` on `plat`, returning the trace in virtual
@@ -433,7 +564,7 @@ pub fn run_dag_sim(
     policy: &dyn Policy,
     ptt: Option<&Ptt>,
     opts: &SimOpts,
-) -> SimRun {
+) -> Result<SimRun, SchedError> {
     run_stream_sim(dag, &[], &[(0.0, dag.roots())], plat, policy, ptt, opts)
 }
 
@@ -457,7 +588,7 @@ pub fn run_stream_sim(
     policy: &dyn Policy,
     ptt: Option<&Ptt>,
     opts: &SimOpts,
-) -> SimRun {
+) -> Result<SimRun, SchedError> {
     let source = AdmissionSource::new(dag, app_of, admissions);
     let fresh;
     let ptt = match ptt {
@@ -492,37 +623,59 @@ pub fn run_stream_sim(
         snapshot_buf: Vec::with_capacity(n),
         done_buf: Vec::with_capacity(n),
         order_buf: Vec::with_capacity(n),
+        faults: plat.episodes.has_faults(),
+        dead_mask: vec![false; n],
+        orphans: VecDeque::new(),
     };
     while !sim.core.is_done() {
+        sim.apply_fault_transitions()?;
         // Admit every application whose arrival time has been reached,
         // through the shared source (round-robin per batch; initial tasks
-        // are non-critical, §3.3).
+        // are non-critical, §3.3). Lanes on fail-stopped cores redirect to
+        // the next live one.
         {
-            let wsqs = &mut sim.wsqs;
-            source.admit_due(sim.t, n, |lane, root| wsqs[lane].push_back(root));
+            let (wsqs, mask, orphans) = (&mut sim.wsqs, &sim.dead_mask, &mut sim.orphans);
+            source.admit_due(sim.t, n, |lane, root| match live_lane(mask, lane) {
+                Some(lane) => wsqs[lane].push_back(root),
+                None => orphans.push_back(root),
+            });
         }
         sim.acquire_fixpoint();
         if sim.core.is_done() {
             break;
         }
         if sim.running_live == 0 {
-            // Everything admitted has drained; jump to the next arrival.
-            let next = source.next_arrival().unwrap_or_else(|| {
-                panic!(
-                    "no running tasks, no pending arrivals, but {} of {} incomplete — scheduler deadlock",
-                    dag.len() - sim.core.completed(),
-                    dag.len()
-                )
-            });
-            sim.t = next;
-            continue;
+            // Everything admitted has drained (or is parked behind a
+            // fail-stop); jump to whatever comes next — an arrival, or,
+            // under a fault schedule, the next episode boundary (a
+            // recovery may be what unblocks the parked orphans).
+            let boundary =
+                if sim.faults { plat.episodes.next_boundary_after(sim.t) } else { None };
+            let next = match (source.next_arrival(), boundary) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            match next {
+                Some(t) => {
+                    sim.t = t;
+                    continue;
+                }
+                None => {
+                    return Err(SchedError::Deadlock {
+                        completed: sim.core.completed(),
+                        total: dag.len(),
+                        t: sim.t,
+                        phase: "stream",
+                    });
+                }
+            }
         }
         sim.rerate();
-        sim.advance(source.next_arrival());
+        sim.advance(source.next_arrival(), "stream")?;
     }
     let mut records = sim.records;
     records.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
-    SimRun {
+    Ok(SimRun {
         result: RunResult {
             policy: policy.name().to_string(),
             platform: plat.topo.name.clone(),
@@ -532,7 +685,7 @@ pub fn run_stream_sim(
         },
         ptt_samples: sim.samples,
         interval_samples: sim.interval_samples,
-    }
+    })
 }
 
 /// Simulate a serving-mode workload in virtual time: the open-loop offer
@@ -559,7 +712,7 @@ pub fn run_serving_sim(
     ptt: Option<&Ptt>,
     opts: &SimOpts,
     serving: &ServingOpts,
-) -> ServingRun {
+) -> Result<ServingRun, SchedError> {
     // (arrival, n_tasks) per app id for the fairness sampler (∞ arrival =
     // not part of the serving schedule, never sampled).
     let n_apps = apps.iter().map(|a| a.app_id + 1).max().unwrap_or(1);
@@ -606,26 +759,41 @@ pub fn run_serving_sim(
         snapshot_buf: Vec::with_capacity(n),
         done_buf: Vec::with_capacity(n),
         order_buf: Vec::with_capacity(n),
+        faults: plat.episodes.has_faults(),
+        dead_mask: vec![false; n],
+        orphans: VecDeque::new(),
     };
     while !sim.core.is_done() {
+        sim.apply_fault_transitions()?;
         if !draining && sim.t >= serving.drain_after {
             source.begin_drain();
             draining = true;
         }
         // Offer everything due, under backpressure. The depth snapshot
         // plus the `extra` cells give each offer in the batch an exact
-        // reading that includes the roots admitted just before it.
+        // reading that includes the roots admitted just before it. Lanes
+        // on fail-stopped cores redirect to the next live one — both the
+        // reading and the push, so fewer live cores means deeper lanes and
+        // the QoS backpressure sheds best-effort work first (graceful
+        // degradation instead of queueing into the void).
         {
             let (wsqs, core) = (&mut sim.wsqs, &sim.core);
+            let (mask, orphans) = (&sim.dead_mask, &mut sim.orphans);
             let depths: Vec<usize> = wsqs.iter().map(VecDeque::len).collect();
             let extra: Vec<Cell<usize>> = (0..n).map(|_| Cell::new(0)).collect();
             source.admit_due(
                 sim.t,
                 n,
-                |lane| depths[lane] + extra[lane].get(),
-                |lane, root| {
-                    wsqs[lane].push_back(root);
-                    extra[lane].set(extra[lane].get() + 1);
+                |lane| match live_lane(mask, lane) {
+                    Some(lane) => depths[lane] + extra[lane].get(),
+                    None => usize::MAX, // machine fully dead: saturated
+                },
+                |lane, root| match live_lane(mask, lane) {
+                    Some(lane) => {
+                        wsqs[lane].push_back(root);
+                        extra[lane].set(extra[lane].get() + 1);
+                    }
+                    None => orphans.push_back(root),
                 },
                 |app| {
                     shed[app.app_id] = true;
@@ -660,23 +828,36 @@ pub fn run_serving_sim(
             break;
         }
         if sim.running_live == 0 {
-            // Everything admitted has drained; jump to the next offer.
-            let next = source.next_offer().unwrap_or_else(|| {
-                panic!(
-                    "no running tasks, no pending offers, but {} of {} incomplete — scheduler deadlock",
-                    dag.len() - sim.core.completed(),
-                    dag.len()
-                )
-            });
-            sim.t = next;
-            continue;
+            // Everything admitted has drained (or is parked behind a
+            // fail-stop); jump to the next offer or, under a fault
+            // schedule, the next episode boundary.
+            let boundary =
+                if sim.faults { plat.episodes.next_boundary_after(sim.t) } else { None };
+            let next = match (source.next_offer(), boundary) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            match next {
+                Some(t) => {
+                    sim.t = t;
+                    continue;
+                }
+                None => {
+                    return Err(SchedError::Deadlock {
+                        completed: sim.core.completed(),
+                        total: dag.len(),
+                        t: sim.t,
+                        phase: "serving",
+                    });
+                }
+            }
         }
         sim.rerate();
-        sim.advance(source.next_offer());
+        sim.advance(source.next_offer(), "serving")?;
     }
     let mut records = sim.records;
     records.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
-    ServingRun {
+    Ok(ServingRun {
         result: RunResult {
             policy: policy.name().to_string(),
             platform: plat.topo.name.clone(),
@@ -689,7 +870,7 @@ pub fn run_serving_sim(
         lane_high_water,
         wsq_retired: 0,
         fairness,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -703,7 +884,7 @@ mod tests {
     fn completes_all_tasks() {
         let plat = Platform::tx2();
         let dag = independent_dag(100, KernelClass::MatMul);
-        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default());
+        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default()).unwrap();
         assert_eq!(run.result.n_tasks(), 100);
         assert!(run.result.makespan > 0.0);
     }
@@ -712,8 +893,8 @@ mod tests {
     fn deterministic_under_seed() {
         let plat = Platform::tx2();
         let dag = independent_dag(60, KernelClass::Sort);
-        let a = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default());
-        let b = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default());
+        let a = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default()).unwrap();
+        let b = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default()).unwrap();
         assert_eq!(a.result.makespan, b.result.makespan);
         assert_eq!(a.result.records.len(), b.result.records.len());
     }
@@ -722,7 +903,7 @@ mod tests {
     fn chain_is_sequential_in_virtual_time() {
         let plat = Platform::homogeneous(4);
         let d = chain_dag(5, KernelClass::MatMul);
-        let run = run_dag_sim(&d, &plat, &HomogeneousWs, None, &Default::default());
+        let run = run_dag_sim(&d, &plat, &HomogeneousWs, None, &Default::default()).unwrap();
         let recs = &run.result.records;
         for w in recs.windows(2) {
             assert!(w[1].t_start >= w[0].t_end - 1e-12);
@@ -736,7 +917,7 @@ mod tests {
     fn parallel_tasks_overlap() {
         let plat = Platform::homogeneous(4);
         let dag = independent_dag(4, KernelClass::MatMul);
-        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default());
+        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default()).unwrap();
         // Four independent width-1 tasks on four cores: makespan ≈ one task.
         let single = plat.ideal_exec_time(KernelClass::MatMul, Partition { leader: 0, width: 1 });
         assert!(run.result.makespan < 1.5 * single, "{}", run.result.makespan);
@@ -746,7 +927,7 @@ mod tests {
     fn figure1_dag_critical_tagging() {
         let plat = Platform::tx2();
         let (dag, _) = paper_figure1_dag();
-        let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default());
+        let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default()).unwrap();
         let crit_tasks: Vec<usize> =
             run.result.records.iter().filter(|r| r.critical).map(|r| r.task).collect();
         // C (id 2), G (4), D (5), F (6) are woken over critical edges;
@@ -765,7 +946,7 @@ mod tests {
         let plat = Platform::tx2();
         let dag = independent_dag(300, KernelClass::MatMul);
         let ptt = Ptt::new(1, &plat.topo);
-        run_dag_sim(&dag, &plat, &PerformanceBased, Some(&ptt), &Default::default());
+        run_dag_sim(&dag, &plat, &PerformanceBased, Some(&ptt), &Default::default()).unwrap();
         let denver = ptt.read(0, 0, 1);
         let a57 = ptt.read(0, 2, 1);
         assert!(denver > 0.0 && a57 > 0.0, "both trained");
@@ -778,8 +959,8 @@ mod tests {
         // critical work to fast cores and picks useful widths.
         let plat = Platform::tx2();
         let d = chain_dag(200, KernelClass::MatMul); // parallelism = 1
-        let perf = run_dag_sim(&d, &plat, &PerformanceBased, None, &Default::default());
-        let homo = run_dag_sim(&d, &plat, &HomogeneousWs, None, &Default::default());
+        let perf = run_dag_sim(&d, &plat, &PerformanceBased, None, &Default::default()).unwrap();
+        let homo = run_dag_sim(&d, &plat, &HomogeneousWs, None, &Default::default()).unwrap();
         let speedup = homo.result.makespan / perf.result.makespan;
         assert!(speedup > 1.3, "expected clear win, got {speedup:.2}×");
     }
@@ -789,7 +970,7 @@ mod tests {
         let plat = Platform::tx2();
         let dag = independent_dag(50, KernelClass::MatMul);
         let opts = SimOpts { ptt_probe: Some((0, 1, 1)), ..Default::default() };
-        let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &opts);
+        let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &opts).unwrap();
         assert_eq!(run.ptt_samples.len(), 50);
         for w in run.ptt_samples.windows(2) {
             assert!(w[1].0 >= w[0].0);
@@ -801,7 +982,7 @@ mod tests {
         let plat = Platform::tx2();
         let dag = independent_dag(80, KernelClass::MatMul);
         let opts = SimOpts { probe_interval: Some(0.005), ..Default::default() };
-        let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &opts);
+        let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &opts).unwrap();
         assert!(!run.interval_samples.is_empty());
         for s in &run.interval_samples {
             assert_eq!(s.w1.len(), 6);
@@ -812,7 +993,7 @@ mod tests {
         }
         // Off by default: existing callers see no samples and identical
         // runs (the probe only reads).
-        let plain = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default());
+        let plain = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default()).unwrap();
         assert!(plain.interval_samples.is_empty());
         assert_eq!(plain.result.makespan.to_bits(), run.result.makespan.to_bits());
     }
@@ -824,7 +1005,7 @@ mod tests {
             Episode::interference(vec![0], 0.0, 1e9, 0.25, 0.0),
         ]));
         let dag = independent_dag(200, KernelClass::MatMul);
-        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default());
+        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default()).unwrap();
         let on0: Vec<f64> = run
             .result
             .records
@@ -843,5 +1024,88 @@ mod tests {
         let m0 = crate::util::stats::mean(&on0);
         let m1 = crate::util::stats::mean(&on1);
         assert!((m0 / m1 - 4.0).abs() < 0.5, "interfered core ~4× slower, got {}", m0 / m1);
+    }
+
+    #[test]
+    fn fail_stop_mid_run_loses_no_tasks() {
+        use crate::platform::{Episode, EpisodeSchedule};
+        let base = Platform::homogeneous(4);
+        let fault_free =
+            run_dag_sim(&independent_dag(120, KernelClass::MatMul), &base, &HomogeneousWs, None, &Default::default())
+                .unwrap();
+        // Kill half the machine partway through, permanently.
+        let t_fail = fault_free.result.makespan * 0.3;
+        let plat = Platform::homogeneous(4).with_episodes(EpisodeSchedule::new(vec![
+            Episode::fail_stop(vec![0], t_fail, None),
+            Episode::fail_stop(vec![1], t_fail, None),
+        ]));
+        let dag = independent_dag(120, KernelClass::MatMul);
+        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default()).unwrap();
+        // Exactly once: every task committed, none twice.
+        assert_eq!(run.result.n_tasks(), 120, "tasks lost to the fail-stop");
+        let mut tasks: Vec<usize> = run.result.records.iter().map(|r| r.task).collect();
+        tasks.sort_unstable();
+        tasks.dedup();
+        assert_eq!(tasks.len(), 120, "a task committed twice");
+        // Nothing lands on a dead core after the failure instant.
+        for r in &run.result.records {
+            if r.t_start >= t_fail {
+                assert!(
+                    r.partition.cores().all(|c| c >= 2),
+                    "task {} started on a dead core at t={}",
+                    r.task,
+                    r.t_start
+                );
+            }
+        }
+        // Losing half the cores must cost wall-clock.
+        assert!(run.result.makespan > fault_free.result.makespan);
+    }
+
+    #[test]
+    fn fail_stop_recovery_restores_the_core() {
+        use crate::platform::{Episode, EpisodeSchedule};
+        let base = Platform::homogeneous(2);
+        let ff = run_dag_sim(&chain_dag(40, KernelClass::Copy), &base, &HomogeneousWs, None, &Default::default())
+            .unwrap();
+        let mid = ff.result.makespan * 0.5;
+        // Both cores down for a window mid-run: the run must stall through
+        // the outage and finish after recovery — no deadlock error.
+        let plat = Platform::homogeneous(2).with_episodes(EpisodeSchedule::new(vec![
+            Episode::fail_stop(vec![0, 1], mid, Some(mid * 1.5)),
+        ]));
+        let dag = chain_dag(40, KernelClass::Copy);
+        let run = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default()).unwrap();
+        assert_eq!(run.result.n_tasks(), 40);
+        assert!(run.result.makespan >= ff.result.makespan, "outage cannot speed the run up");
+    }
+
+    #[test]
+    fn all_cores_dead_without_recovery_is_an_error() {
+        use crate::platform::{Episode, EpisodeSchedule};
+        let plat = Platform::homogeneous(2).with_episodes(EpisodeSchedule::new(vec![
+            Episode::fail_stop(vec![0, 1], 1e-6, None),
+        ]));
+        let dag = independent_dag(50, KernelClass::MatMul);
+        let err = run_dag_sim(&dag, &plat, &HomogeneousWs, None, &Default::default()).unwrap_err();
+        assert!(
+            matches!(err, SchedError::AllCoresDead { .. } | SchedError::Deadlock { .. }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn fault_free_schedules_unchanged_by_fault_machinery() {
+        // The fault substrate is gated on has_faults(): a schedule with
+        // only interference episodes must reproduce the exact historical
+        // virtual-time trace (rng draw-order parity).
+        use crate::platform::{Episode, EpisodeSchedule};
+        let plat = Platform::tx2().with_episodes(EpisodeSchedule::new(vec![
+            Episode::interference(vec![0], 0.01, 0.05, 0.25, 0.0),
+        ]));
+        let dag = independent_dag(90, KernelClass::Sort);
+        let a = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default()).unwrap();
+        let b = run_dag_sim(&dag, &plat, &PerformanceBased, None, &Default::default()).unwrap();
+        assert_eq!(a.result.makespan.to_bits(), b.result.makespan.to_bits());
     }
 }

@@ -32,7 +32,8 @@ fn every_policy_completes_the_same_dag_on_both_backends() {
                     policy.as_ref(),
                     None,
                     &RunOpts { seed: 7, ..Default::default() },
-                );
+                )
+                .unwrap();
                 // Every task executed exactly once, every placement valid.
                 let mut seen = vec![0u32; dag.len()];
                 for r in &run.result.records {
@@ -69,6 +70,7 @@ fn criticality_tagging_is_backend_independent() {
         let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
         backend
             .run(&dag, &plat, policy.as_ref(), None, &RunOpts::default())
+            .unwrap()
             .result
             .records
             .iter()
@@ -107,9 +109,9 @@ fn payload_execution_counts_match_across_backends() {
 
     let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
     let sim = backend_by_name("sim").unwrap();
-    let sim_run = sim.run(&dag, &plat, policy.as_ref(), None, &RunOpts::default());
+    let sim_run = sim.run(&dag, &plat, policy.as_ref(), None, &RunOpts::default()).unwrap();
     let real = backend_by_name("real").unwrap();
-    let real_run = real.run(&dag, &plat, policy.as_ref(), None, &RunOpts::default());
+    let real_run = real.run(&dag, &plat, policy.as_ref(), None, &RunOpts::default()).unwrap();
 
     assert_eq!(sim_run.result.n_tasks(), real_run.result.n_tasks());
     assert_eq!(hits.load(Ordering::SeqCst), 30, "each TAO ran exactly once for real");

@@ -264,6 +264,34 @@ fn bench_serving_quick_exits_zero_and_prints_the_ramp() {
 }
 
 #[test]
+fn bench_faults_quick_exits_zero_and_reports_the_fault_matrix() {
+    // Sim backend only (CI's dedicated step runs the real engine): the
+    // smoke pins the chaos-harness wiring and the exactly-once exit code
+    // path. No --json: must not clobber the committed
+    // BENCH_fault_recovery.json.
+    let out = repro()
+        .args(["bench-faults", "--quick", "--backend", "sim"])
+        .output()
+        .expect("spawn repro");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Chaos harness"), "{text}");
+    assert!(text.contains("vs fault-free"), "{text}");
+    for scen in xitao::bench::fault_scenario_names() {
+        assert!(text.contains(scen), "missing {scen} in:\n{text}");
+    }
+}
+
+#[test]
+fn bench_faults_rejects_bad_backend() {
+    let st = repro()
+        .args(["bench-faults", "--quick", "--backend", "quantum"])
+        .status()
+        .expect("spawn repro");
+    assert_eq!(st.code(), Some(2));
+}
+
+#[test]
 fn bench_serving_rejects_bad_scenario_and_policy() {
     let st = repro()
         .args(["bench-serving", "--quick", "--scenario", "nope"])

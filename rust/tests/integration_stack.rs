@@ -21,7 +21,8 @@ fn real_engine_runs_generated_dag_with_kernel_payloads() {
     let topo = xitao::platform::Topology::homogeneous(3);
     for policy_name in ["performance", "homogeneous", "cats", "dheft"] {
         let policy = policy_by_name(policy_name, 3).unwrap();
-        let res = run_dag_real(&dag, &topo, policy.as_ref(), None, &RealEngineOpts::default());
+        let res =
+            run_dag_real(&dag, &topo, policy.as_ref(), None, &RealEngineOpts::default()).unwrap();
         assert_eq!(res.n_tasks(), 60, "{policy_name}");
         assert!(res.makespan > 0.0);
     }
@@ -34,7 +35,7 @@ fn real_engine_executes_payload_work_correctly_under_scheduling() {
     // fixture's payloads assert they run at their chain position).
     let (dag, counter) = xitao::dag_gen::fixtures::rank0_counting_chain(20, true);
     let topo = xitao::platform::Topology::homogeneous(2);
-    run_dag_real(&dag, &topo, &PerformanceBased, None, &RealEngineOpts::default());
+    run_dag_real(&dag, &topo, &PerformanceBased, None, &RealEngineOpts::default()).unwrap();
     assert_eq!(counter.load(Ordering::SeqCst), 20);
 }
 
@@ -43,9 +44,10 @@ fn sim_and_real_agree_on_task_accounting() {
     let params = DagParams::mix(80, 8.0, 9);
     let (dag, _) = generate(&params);
     let plat = Platform::homogeneous(4);
-    let sim = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+    let sim = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default()).unwrap();
     let (dag2, _) = generate(&params.clone().with_payloads(KernelSizes::small()));
-    let real = run_dag_real(&dag2, &plat.topo, &PerformanceBased, None, &RealEngineOpts::default());
+    let real = run_dag_real(&dag2, &plat.topo, &PerformanceBased, None, &RealEngineOpts::default())
+        .unwrap();
     assert_eq!(sim.result.n_tasks(), real.n_tasks());
     // Same DAG shape ⇒ same criticality structure: identical sets of
     // critical task ids.
@@ -66,14 +68,16 @@ fn claim_low_parallelism_speedup_on_tx2() {
     let plat = Platform::tx2();
     for class in [KernelClass::MatMul, KernelClass::Sort, KernelClass::Copy] {
         let (dag, _) = generate(&DagParams::single(class, 600, 1.0, 17));
-        let perf = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+        let perf =
+            run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default()).unwrap();
         let homo = run_dag_sim(
             &dag,
             &plat,
             &xitao::coordinator::HomogeneousWs,
             None,
             &SimOpts::default(),
-        );
+        )
+        .unwrap();
         let speedup = homo.result.makespan / perf.result.makespan;
         assert!(speedup > 1.5, "{class:?}: {speedup:.2}× (paper: 2.2–3.3×)");
     }
@@ -85,14 +89,16 @@ fn claim_speedup_decays_with_parallelism() {
     let plat = Platform::tx2();
     let sp = |par: f64| {
         let (dag, _) = generate(&DagParams::mix(900, par, 23));
-        let perf = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+        let perf =
+            run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default()).unwrap();
         let homo = run_dag_sim(
             &dag,
             &plat,
             &xitao::coordinator::HomogeneousWs,
             None,
             &SimOpts::default(),
-        );
+        )
+        .unwrap();
         homo.result.makespan / perf.result.makespan
     };
     let s1 = sp(1.0);
@@ -110,7 +116,7 @@ fn claim_interference_redirects_critical_tasks() {
         Episode::interference(victims.clone(), 0.02, 1e9, 0.3, 0.0),
     ]));
     let (dag, _) = generate(&DagParams::mix(2500, 16.0, 29));
-    let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+    let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default()).unwrap();
     let late_crit: Vec<_> = run
         .result
         .records
@@ -140,8 +146,10 @@ fn claim_vgg_scales_and_uses_wide_taos() {
     // Fig 9/10 in miniature: 8 threads beat 2 threads clearly, and the
     // width histogram contains widths > 1.
     let dag = build_vgg_dag(&VggConfig { input_hw: 224, block_len: 8, repeats: 1 }, None);
-    let t2 = run_dag_sim(&dag, &Platform::homogeneous(2), &PerformanceBased, None, &SimOpts::default());
-    let t8 = run_dag_sim(&dag, &Platform::homogeneous(8), &PerformanceBased, None, &SimOpts::default());
+    let t2 = run_dag_sim(&dag, &Platform::homogeneous(2), &PerformanceBased, None, &SimOpts::default())
+        .unwrap();
+    let t8 = run_dag_sim(&dag, &Platform::homogeneous(8), &PerformanceBased, None, &SimOpts::default())
+        .unwrap();
     let speedup = t2.result.makespan / t8.result.makespan;
     assert!(speedup > 2.0, "8 vs 2 threads: {speedup:.2}×");
     let widths = t8.result.width_histogram();
@@ -156,7 +164,7 @@ fn claim_dvfs_is_learned_without_being_told() {
         Episode::dvfs(vec![0, 1, 2], 0.0, 1e9, 0.3),
     ]));
     let (dag, _) = generate(&DagParams::single(KernelClass::MatMul, 800, 1.0, 31));
-    let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default());
+    let run = run_dag_sim(&dag, &plat, &PerformanceBased, None, &SimOpts::default()).unwrap();
     // Critical chain should converge to the un-throttled cores 3-5.
     let late: Vec<_> = run
         .result
@@ -193,7 +201,7 @@ fn baselines_are_competitive_but_not_better_overall() {
     let (dag, _) = generate(&DagParams::mix(900, 2.0, 37));
     let mk = |name: &str| {
         let p = policy_by_name(name, 6).unwrap();
-        run_dag_sim(&dag, &plat, p.as_ref(), None, &SimOpts::default()).result.makespan
+        run_dag_sim(&dag, &plat, p.as_ref(), None, &SimOpts::default()).unwrap().result.makespan
     };
     let perf = mk("performance");
     let cats = mk("cats");

@@ -87,7 +87,7 @@ fn tao_dag_inference_matches_pipeline() {
     let (dag, out) = build_real_dag(weights.clone(), image, h, 128);
     let plat = Platform::homogeneous(2);
     let backend = backend_by_name("real").unwrap();
-    let res = backend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default()).result;
+    let res = backend.run(&dag, &plat, &PerformanceBased, None, &RunOpts::default()).unwrap().result;
     assert_eq!(res.n_tasks(), dag.len());
     let logits = out.snapshot();
     let scale = pipe.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);

@@ -154,6 +154,7 @@ fn coincident_episode_edge_and_arrival_is_deterministic() {
                     None,
                     &SimOpts { seed, ..Default::default() },
                 )
+                .unwrap()
             };
             let a = run();
             let b = run();

@@ -57,7 +57,8 @@ fn every_policy_runs_concurrent_apps_on_both_backends_exactly_once() {
                     policy.as_ref(),
                     None,
                     &RunOpts { seed: 5, ..Default::default() },
-                );
+                )
+                .unwrap();
                 // Exactly-once execution per app: each global task id seen
                 // once, attributed to the app owning its id range.
                 let mut seen = vec![0u32; multi.dag.len()];
@@ -117,7 +118,8 @@ fn sim_stream_metrics_are_deterministic_under_seed() {
             policy.as_ref(),
             None,
             &RunOpts { seed: 13, ..Default::default() },
-        );
+        )
+        .unwrap();
         let apps: Vec<(usize, usize, u64, u64)> = run
             .apps
             .iter()
@@ -259,7 +261,8 @@ fn parked_workers_wake_for_admission_after_idle_gap() {
         policy.as_ref(),
         None,
         &opts,
-    );
+    )
+    .unwrap();
     assert_eq!(result.records.len(), 48, "both apps must complete");
     let first_late = result
         .records
@@ -293,7 +296,7 @@ fn real_backend_admits_late_arrivals_and_accounts_them() {
     let backend = backend_by_name("real").unwrap();
     let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
     let run =
-        backend.run_stream(&stream, &plat, policy.as_ref(), None, &RunOpts::default());
+        backend.run_stream(&stream, &plat, policy.as_ref(), None, &RunOpts::default()).unwrap();
     assert_eq!(run.result.records.len(), 60);
     let later = run.apps.iter().find(|a| a.name == "later").unwrap();
     assert_eq!(later.n_tasks, 30);

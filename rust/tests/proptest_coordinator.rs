@@ -103,7 +103,7 @@ fn sim_executes_every_task_exactly_once() {
                 _ => Platform::homogeneous(8),
             };
             let policy = policy_by_name("performance", plat.topo.n_cores()).unwrap();
-            let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default());
+            let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default()).unwrap();
             let mut seen = vec![0u32; dag.len()];
             for r in &run.result.records {
                 seen[r.task] += 1;
@@ -126,7 +126,7 @@ fn sim_placements_are_always_valid_partitions() {
             let plat = Platform::tx2();
             for policy_name in ["performance", "homogeneous", "cats", "dheft"] {
                 let policy = policy_by_name(policy_name, 6).unwrap();
-                let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts { seed, ..Default::default() });
+                let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts { seed, ..Default::default() }).unwrap();
                 for r in &run.result.records {
                     if !plat.topo.is_valid_partition(r.partition) {
                         return Err(format!("{policy_name}: invalid {:?}", r.partition));
@@ -146,7 +146,7 @@ fn sim_respects_dependencies() {
             let dag = random_dag(&mut rng, n as usize);
             let plat = Platform::tx2();
             let policy = policy_by_name("performance", 6).unwrap();
-            let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default());
+            let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default()).unwrap();
             let mut end = vec![0.0f64; dag.len()];
             let mut start = vec![0.0f64; dag.len()];
             for r in &run.result.records {
@@ -175,7 +175,7 @@ fn makespan_at_least_critical_path_work() {
             let dag = random_dag(&mut rng, n as usize);
             let plat = Platform::homogeneous(4);
             let policy = policy_by_name("performance", 4).unwrap();
-            let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default());
+            let run = run_dag_sim(&dag, &plat, policy.as_ref(), None, &SimOpts::default()).unwrap();
             let path = dag.critical_path();
             let mut bound = 0.0;
             for &t in &path {
@@ -286,7 +286,8 @@ fn random_workload_streams_never_deadlock() {
                 policy.as_ref(),
                 None,
                 &SimOpts::default(),
-            );
+            )
+            .unwrap();
             if run.result.records.len() != total {
                 return Err(format!(
                     "executed {} of {total} tasks",

@@ -115,8 +115,8 @@ fn same_seed_reproduces_dag_and_sim_makespan() {
     let plat = scenarios::by_name("tx2").unwrap();
     let backend = backend_by_name("sim").unwrap();
     let opts = RunOpts { seed: 99, ..Default::default() };
-    let r1 = backend.run(&d1, &plat, &PerformanceBased, None, &opts);
-    let r2 = backend.run(&d2, &plat, &PerformanceBased, None, &opts);
+    let r1 = backend.run(&d1, &plat, &PerformanceBased, None, &opts).unwrap();
+    let r2 = backend.run(&d2, &plat, &PerformanceBased, None, &opts).unwrap();
     assert_eq!(
         r1.result.makespan.to_bits(),
         r2.result.makespan.to_bits(),
@@ -131,7 +131,15 @@ fn different_seeds_change_the_outcome() {
     let backend = backend_by_name("sim").unwrap();
     let (d1, _) = generate(&DagParams::mix(400, 4.0, 1));
     let (d2, _) = generate(&DagParams::mix(400, 4.0, 2));
-    let m1 = backend.run(&d1, &plat, &PerformanceBased, None, &RunOpts::default()).result.makespan;
-    let m2 = backend.run(&d2, &plat, &PerformanceBased, None, &RunOpts::default()).result.makespan;
+    let m1 = backend
+        .run(&d1, &plat, &PerformanceBased, None, &RunOpts::default())
+        .unwrap()
+        .result
+        .makespan;
+    let m2 = backend
+        .run(&d2, &plat, &PerformanceBased, None, &RunOpts::default())
+        .unwrap()
+        .result
+        .makespan;
     assert_ne!(m1.to_bits(), m2.to_bits(), "different DAG seeds should not collide exactly");
 }

@@ -146,8 +146,8 @@ fn commit_attributes_records_to_the_owning_app() {
     let topo = Topology::homogeneous(2);
     let ptt = Ptt::new(d.n_types(), &topo);
     let core = SchedCore::new(&d, &app_of, &topo, &HomogeneousWs, &ptt);
-    assert_eq!(core.commit(&commit_info(t0, 1.0), |_| {}).record.app_id, 0);
-    assert_eq!(core.commit(&commit_info(t1, 2.0), |_| {}).record.app_id, 1);
+    assert_eq!(core.commit(&commit_info(t0, 1.0), |_| {}).expect("first commit").record.app_id, 0);
+    assert_eq!(core.commit(&commit_info(t1, 2.0), |_| {}).expect("first commit").record.app_id, 1);
 }
 
 #[test]
