@@ -146,6 +146,6 @@ fn main() {
     xitao::bench::emit_overhead(&xitao::bench::OverheadOpts {
         quick,
         compare: true,
-        json: false,
+        ..Default::default()
     });
 }

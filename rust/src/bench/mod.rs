@@ -29,5 +29,7 @@ pub use interference_response::{
     INTERFERENCE_POLICIES, InterferenceOpts, ResponseRun, emit_interference, run_interference,
     run_response,
 };
-pub use overhead::{OverheadOpts, OverheadRun, emit_overhead, run_overhead};
+pub use overhead::{
+    OverheadOpts, OverheadRun, emit_overhead, render_pressure_sweep, run_overhead,
+};
 pub use serving::{RATE_PER_TENANT, ServingBenchOpts, ServingStep, emit_serving, run_serving_bench};

@@ -11,9 +11,14 @@
 //!    lock-free and mutex WSQ/AQ variants.
 //! 3. **End-to-end engine overhead**: tasks/sec of the real-thread engine
 //!    on nop payloads (pure runtime overhead, no kernel work) across the
-//!    `hom4` / `hom20` / `biglittle44` scenarios.
+//!    `hom4` / `hom20` / `biglittle44` / `hom64` scenarios (`hom128` too
+//!    in full mode — 128 worker threads is too heavy for a CI smoke).
 //! 4. **Simulator event rate**: simulated TAOs per wall second (tracks the
 //!    O(n²)→O(n) bookkeeping fix in `sim::engine`).
+//! 5. **Steal pressure**: the same steal-heavy workload under a thief
+//!    *pack*, single-steal vs batched [`WsQueue::steal_half`] — the
+//!    within-run speedup is this PR's trajectory point (`--pressure`
+//!    additionally prints a thief-count sweep of the two modes).
 //!
 //! `--json` writes the machine-readable result to
 //! `BENCH_sched_overhead.json` at the repository root; `--compare` prints
@@ -50,10 +55,27 @@ pub struct OverheadOpts {
     pub compare: bool,
     /// Write `BENCH_sched_overhead.json` at the repository root.
     pub json: bool,
+    /// Print the steal-pressure sweep (single vs batched stealing across
+    /// thief-pack sizes) on top of the always-measured fixed-pack point.
+    pub pressure: bool,
 }
 
-/// Scenarios the end-to-end overhead is measured on.
-pub const OVERHEAD_SCENARIOS: [&str; 3] = ["hom4", "hom20", "biglittle44"];
+/// Scenarios the end-to-end overhead is measured on at every scale.
+pub const OVERHEAD_SCENARIOS: [&str; 4] = ["hom4", "hom20", "biglittle44", "hom64"];
+
+/// Scenarios measured only in full (non-`--quick`) mode: spawning 128
+/// worker threads dwarfs a CI smoke's budget and tells us nothing hom64
+/// doesn't on a shared runner.
+pub const OVERHEAD_SCENARIOS_FULL: [&str; 1] = ["hom128"];
+
+/// The end-to-end scenario list for a given scale.
+pub fn overhead_scenarios(quick: bool) -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = OVERHEAD_SCENARIOS.to_vec();
+    if !quick {
+        v.extend(OVERHEAD_SCENARIOS_FULL);
+    }
+    v
+}
 
 /// Resolve `name` at the repository root: the nearest ancestor of the
 /// current directory whose `Cargo.toml` declares a `[workspace]` (this
@@ -99,6 +121,9 @@ trait StealQueue<T>: Sync {
     fn push(&self, v: T);
     fn pop(&self) -> Option<T>;
     fn steal(&self) -> Option<T>;
+    /// Batched steal (`steal_half` policy on both variants); returns the
+    /// number of items passed to `sink`.
+    fn steal_some(&self, sink: &mut dyn FnMut(T)) -> usize;
 }
 
 impl<T: Copy + Send> StealQueue<T> for WsQueue<T> {
@@ -111,6 +136,9 @@ impl<T: Copy + Send> StealQueue<T> for WsQueue<T> {
     fn steal(&self) -> Option<T> {
         WsQueue::steal(self)
     }
+    fn steal_some(&self, sink: &mut dyn FnMut(T)) -> usize {
+        WsQueue::steal_half(self, sink)
+    }
 }
 
 impl<T: Send> StealQueue<T> for MutexWsQueue<T> {
@@ -122,6 +150,9 @@ impl<T: Send> StealQueue<T> for MutexWsQueue<T> {
     }
     fn steal(&self) -> Option<T> {
         MutexWsQueue::steal(self)
+    }
+    fn steal_some(&self, sink: &mut dyn FnMut(T)) -> usize {
+        MutexWsQueue::steal_half(self, sink)
     }
 }
 
@@ -136,10 +167,16 @@ struct StealStats {
 
 /// Steal-heavy workload: the owner pushes `items` in DAG-commit-sized
 /// batches and pops a quarter back (the LIFO half of the hot path) while
-/// `n_thieves` thieves drain the rest. Every item is consumed exactly once
-/// — the consumed counter doubles as a correctness check (the run would
-/// hang on a lost item).
-fn run_steal_bench<Q: StealQueue<usize>>(q: &Q, items: usize, n_thieves: usize) -> StealStats {
+/// `n_thieves` thieves drain the rest — one [`StealQueue::steal`] per item
+/// or, with `batched`, a [`StealQueue::steal_some`] half-queue grab per
+/// visit. Every item is consumed exactly once — the consumed counter
+/// doubles as a correctness check (the run would hang on a lost item).
+fn run_steal_bench<Q: StealQueue<usize>>(
+    q: &Q,
+    items: usize,
+    n_thieves: usize,
+    batched: bool,
+) -> StealStats {
     let consumed = AtomicUsize::new(0);
     let stolen = AtomicUsize::new(0);
     let steal_ns_total = AtomicU64::new(0);
@@ -152,10 +189,19 @@ fn run_steal_bench<Q: StealQueue<usize>>(q: &Q, items: usize, n_thieves: usize) 
                 let mut local_stolen = 0usize;
                 while consumed.load(Ordering::Relaxed) < items {
                     let t = Instant::now();
-                    if q.steal().is_some() {
+                    let got = if batched {
+                        q.steal_some(&mut |v| {
+                            std::hint::black_box(v);
+                        })
+                    } else {
+                        usize::from(q.steal().is_some())
+                    };
+                    if got > 0 {
+                        // Amortized per-item latency: a batch pays one
+                        // visit for `got` items.
                         local_ns += t.elapsed().as_nanos() as u64;
-                        local_stolen += 1;
-                        consumed.fetch_add(1, Ordering::Relaxed);
+                        local_stolen += got;
+                        consumed.fetch_add(got, Ordering::Relaxed);
                     } else {
                         std::hint::spin_loop();
                     }
@@ -229,12 +275,27 @@ pub fn run_overhead(opts: &OverheadOpts) -> Json {
     // --- 1. steal-heavy queue benchmark ---------------------------------
     let lf = {
         let q: WsQueue<usize> = WsQueue::new();
-        run_steal_bench(&q, steal_items, n_thieves)
+        run_steal_bench(&q, steal_items, n_thieves, false)
     };
     let mx = with_compare.then(|| {
         let q: MutexWsQueue<usize> = MutexWsQueue::new();
-        run_steal_bench(&q, steal_items, n_thieves)
+        run_steal_bench(&q, steal_items, n_thieves, false)
     });
+
+    // --- 1b. steal pressure: single vs batched under a thief pack --------
+    // Oversubscribed on small hosts by design — the contention on the
+    // victim's `top` cache line is the thing being measured. The within-
+    // run single→batched speedup is host-independent in *shape* and is
+    // recorded as this PR's trajectory point.
+    let pressure_thieves = if opts.quick { 4 } else { 8 };
+    let ps_single = {
+        let q: WsQueue<usize> = WsQueue::new();
+        run_steal_bench(&q, steal_items, pressure_thieves, false)
+    };
+    let ps_batch = {
+        let q: WsQueue<usize> = WsQueue::new();
+        run_steal_bench(&q, steal_items, pressure_thieves, true)
+    };
 
     // --- 2. uncontended micro-ops ----------------------------------------
     let wsq: WsQueue<usize> = WsQueue::new();
@@ -266,7 +327,7 @@ pub fn run_overhead(opts: &OverheadOpts) -> Json {
     // --- 3. end-to-end engine overhead per scenario ----------------------
     let dag = nop_dag(engine_tasks);
     let mut scen_objs: Vec<(&str, Json)> = Vec::new();
-    for name in OVERHEAD_SCENARIOS {
+    for name in overhead_scenarios(opts.quick) {
         let plat = scenarios::by_name(name).expect("registered overhead scenario");
         let policy = policy_by_name("performance", plat.topo.n_cores()).expect("policy");
         let t = Instant::now();
@@ -318,6 +379,7 @@ pub fn run_overhead(opts: &OverheadOpts) -> Json {
         queue_pairs.push(("mutex_wsq_push_pop_ns", Json::Num(a)));
         queue_pairs.push(("mutex_aq_push_pop_ns", Json::Num(b)));
     }
+    let batch_speedup = ps_batch.ops_per_sec / ps_single.ops_per_sec.max(1e-9);
     Json::obj(vec![
         ("bench", Json::Str("sched_overhead".into())),
         ("schema", Json::Num(1.0)),
@@ -326,12 +388,39 @@ pub fn run_overhead(opts: &OverheadOpts) -> Json {
         ("host_cores", Json::Num(host_cores as f64)),
         ("scenarios", Json::obj(scen_objs)),
         ("steal", Json::obj(steal_pairs)),
+        (
+            "steal_pressure",
+            Json::obj(vec![
+                ("thieves", Json::Num(pressure_thieves as f64)),
+                ("items", Json::Num(steal_items as f64)),
+                ("single_ops_per_sec", Json::Num(ps_single.ops_per_sec)),
+                ("batch_ops_per_sec", Json::Num(ps_batch.ops_per_sec)),
+                ("batch_speedup", Json::Num(batch_speedup)),
+            ]),
+        ),
         ("queues", Json::obj(queue_pairs)),
         (
             "sim",
             Json::obj(vec![
                 ("tasks", Json::Num(sim_tasks as f64)),
                 ("sim_tao_per_sec", Json::Num(sim_tps)),
+            ]),
+        ),
+        // The recorded perf trajectory: both points measured in THIS run
+        // (same host, same scale), so the speedup survives a CI `--json`
+        // regeneration instead of comparing across machines.
+        (
+            "trajectory",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("point", Json::Str("pr3-single-steal".into())),
+                    ("steal_ops_per_sec", Json::Num(ps_single.ops_per_sec)),
+                ]),
+                Json::obj(vec![
+                    ("point", Json::Str("pr9-batched-steal".into())),
+                    ("steal_ops_per_sec", Json::Num(ps_batch.ops_per_sec)),
+                    ("speedup_over_single", Json::Num(batch_speedup)),
+                ]),
             ]),
         ),
     ])
@@ -354,11 +443,13 @@ pub const REGRESSION_FLOOR: f64 = 0.5;
 
 /// Hot-path throughput metrics compared against the committed baseline:
 /// `(json path, human label)`. Higher is better for all of them.
-const TRACKED: [(&[&str], &str); 5] = [
+const TRACKED: [(&[&str], &str); 7] = [
     (&["scenarios", "hom4", "tasks_per_sec"], "hom4 tasks/s"),
     (&["scenarios", "hom20", "tasks_per_sec"], "hom20 tasks/s"),
     (&["scenarios", "biglittle44", "tasks_per_sec"], "biglittle44 tasks/s"),
+    (&["scenarios", "hom64", "tasks_per_sec"], "hom64 tasks/s"),
     (&["steal", "lockfree_ops_per_sec"], "steal-heavy ops/s"),
+    (&["steal_pressure", "batch_ops_per_sec"], "batched steal ops/s"),
     (&["sim", "sim_tao_per_sec"], "sim TAO/s"),
 ];
 
@@ -434,7 +525,7 @@ pub fn render_tables(result: &Json, opts: &OverheadOpts) -> Vec<Table> {
         "Scheduler overhead: real engine, nop payloads (pure runtime cost)",
         &["scenario", "workers", "tasks/s", "ns/TAO"],
     );
-    for name in OVERHEAD_SCENARIOS {
+    for name in overhead_scenarios(opts.quick) {
         let base = ["scenarios", name];
         let row = |field: &str| get_f64(result, &[base[0], base[1], field]).unwrap_or(f64::NAN);
         t.row(vec![
@@ -506,6 +597,25 @@ pub fn render_tables(result: &Json, opts: &OverheadOpts) -> Vec<Table> {
         }
     }
 
+    let mut t = Table::new(
+        "Steal pressure: single vs batched stealing (thief pack on one victim)",
+        &["mode", "thieves", "ops/s", "speedup"],
+    );
+    let ps = |f: &str| get_f64(result, &["steal_pressure", f]).unwrap_or(f64::NAN);
+    t.row(vec![
+        "single-steal".into(),
+        format!("{:.0}", ps("thieves")),
+        format!("{:.0}", ps("single_ops_per_sec")),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "steal_half".into(),
+        format!("{:.0}", ps("thieves")),
+        format!("{:.0}", ps("batch_ops_per_sec")),
+        format!("{:.2}x", ps("batch_speedup")),
+    ]);
+    out.push(t);
+
     let mut t = Table::new("Simulator event rate", &["metric", "value"]);
     t.row(vec![
         "simulated TAO/s (wall)".into(),
@@ -513,6 +623,36 @@ pub fn render_tables(result: &Json, opts: &OverheadOpts) -> Vec<Table> {
     ]);
     out.push(t);
     out
+}
+
+/// `--pressure`: sweep the thief-pack size and pit single-steal against
+/// batched [`WsQueue::steal_half`] at each point. Run on demand (it spawns
+/// up to 17 threads), printed only — the fixed-pack point in the JSON is
+/// the tracked metric; this sweep is for eyeballing where the crossover
+/// sits on a given host.
+pub fn render_pressure_sweep(opts: &OverheadOpts) -> Table {
+    let items = if opts.quick { 30_000 } else { 200_000 };
+    let mut t = Table::new(
+        "Steal-pressure sweep: single vs batched stealing (WsQueue, 1 owner)",
+        &["thieves", "single ops/s", "batched ops/s", "batch speedup"],
+    );
+    for nt in [1usize, 2, 4, 8, 16] {
+        let single = {
+            let q: WsQueue<usize> = WsQueue::new();
+            run_steal_bench(&q, items, nt, false)
+        };
+        let batch = {
+            let q: WsQueue<usize> = WsQueue::new();
+            run_steal_bench(&q, items, nt, true)
+        };
+        t.row(vec![
+            nt.to_string(),
+            format!("{:.0}", single.ops_per_sec),
+            format!("{:.0}", batch.ops_per_sec),
+            format!("{:.2}x", batch.ops_per_sec / single.ops_per_sec.max(1e-9)),
+        ]);
+    }
+    t
 }
 
 /// What [`emit_overhead`] produced: the machine-readable result plus the
@@ -531,6 +671,9 @@ pub fn emit_overhead(opts: &OverheadOpts) -> OverheadRun {
     let result = run_overhead(opts);
     for t in render_tables(&result, opts) {
         println!("{}", t.render());
+    }
+    if opts.pressure {
+        println!("{}", render_pressure_sweep(opts).render());
     }
     let mut regressions = 0usize;
     if opts.compare {
@@ -574,9 +717,9 @@ mod tests {
 
     #[test]
     fn quick_overhead_run_is_well_formed() {
-        let opts = OverheadOpts { quick: true, compare: true, json: false };
+        let opts = OverheadOpts { quick: true, compare: true, ..Default::default() };
         let j = run_overhead(&opts);
-        // ≥ 3 scenarios, each with a positive tasks/sec.
+        // Every quick-scale scenario (incl. hom64) has a positive tasks/sec.
         for name in OVERHEAD_SCENARIOS {
             let tps = get_f64(&j, &["scenarios", name, "tasks_per_sec"]).unwrap();
             assert!(tps > 0.0 && tps.is_finite(), "{name}: {tps}");
@@ -596,9 +739,23 @@ mod tests {
         let lf = get_f64(&j, &["steal", "lockfree_ops_per_sec"]).unwrap();
         assert!(lf > 0.0);
         assert!(get_f64(&j, &["sim", "sim_tao_per_sec"]).unwrap() > 0.0);
+        // Steal-pressure block: both modes measured, speedup consistent.
+        let single = get_f64(&j, &["steal_pressure", "single_ops_per_sec"]).unwrap();
+        let batch = get_f64(&j, &["steal_pressure", "batch_ops_per_sec"]).unwrap();
+        let sp_batch = get_f64(&j, &["steal_pressure", "batch_speedup"]).unwrap();
+        assert!(single > 0.0 && batch > 0.0);
+        assert!((sp_batch - batch / single).abs() < 1e-6);
+        // The trajectory records both points from THIS run.
+        let traj = j.get("trajectory").and_then(Json::as_arr).unwrap();
+        assert_eq!(traj.len(), 2);
+        assert_eq!(traj[0].get("point").and_then(Json::as_str), Some("pr3-single-steal"));
+        assert_eq!(traj[1].get("point").and_then(Json::as_str), Some("pr9-batched-steal"));
+        assert!(traj[1].get("speedup_over_single").and_then(Json::as_f64).unwrap() > 0.0);
+        // hom128 is full-mode only: a quick run must not have spawned it.
+        assert!(j.get("scenarios").and_then(|s| s.get("hom128")).is_none());
         // Tables render without panicking.
         let tables = render_tables(&j, &opts);
-        assert!(tables.len() >= 3);
+        assert!(tables.len() >= 4);
         for t in tables {
             assert!(!t.render().is_empty());
         }
@@ -615,11 +772,16 @@ mod tests {
                     ("hom4", scen(300_000.0)),
                     ("hom20", scen(120_000.0)),
                     ("biglittle44", scen(200_000.0)),
+                    ("hom64", scen(60_000.0)),
                 ]),
             ),
             (
                 "steal",
                 Json::obj(vec![("lockfree_ops_per_sec", Json::Num(18e6 * scale))]),
+            ),
+            (
+                "steal_pressure",
+                Json::obj(vec![("batch_ops_per_sec", Json::Num(17e6 * scale))]),
             ),
             ("sim", Json::obj(vec![("sim_tao_per_sec", Json::Num(250_000.0 * scale))])),
         ])

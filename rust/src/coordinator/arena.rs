@@ -1,0 +1,264 @@
+//! Per-run frame arena: allocation-free task frames for the real engine.
+//!
+//! PR 8 removed the locks from the hot path; this removes the allocator.
+//! Every placement used to heap-allocate an `Arc<TaoInstance>` and every
+//! member AQ push cloned it (refcount RMW), with the final member's
+//! commit paying the deallocation — three allocator/refcount touches per
+//! task on the execute/commit path. The arena replaces all of that with
+//! one relaxed `fetch_add` per placement and a word-sized [`FrameId`]
+//! flowing through the queues.
+//!
+//! # Design
+//!
+//! - **Chunked bump allocation.** The arena owns up to [`MAX_CHUNKS`]
+//!   lazily-created chunks; chunk `k` holds `base << k` frames and starts
+//!   at global index `base * (2^k - 1)`, so the chunk of id `i` is
+//!   `log2(i / base + 1)` — a divide and a `leading_zeros`, no search.
+//!   Frames are never moved: a `FrameId` handed out stays valid (at a
+//!   stable address) until the arena is dropped, even while other threads
+//!   trigger chunk growth. That per-chunk stability is what lets
+//!   [`FrameArena::frame`] return a plain `&Frame` with no guard.
+//! - **No reuse, no ABA, no reclamation protocol.** Ids are handed out by
+//!   a monotone `fetch_add` and frames are freed only when the run's
+//!   `Shared` is dropped (after every worker has joined). A stale
+//!   `FrameId` rattling around a queue can therefore never alias a
+//!   *different* task's frame, and the execute/commit path needs no
+//!   epoch/hazard machinery — the quiescence argument is the thread
+//!   scope's join, full stop.
+//! - **Relaxed field stores, Release publication by the queue.** Frame
+//!   fields are initialised with `Relaxed` stores because every handoff
+//!   of a `FrameId` between threads already rides an Acquire/Release
+//!   edge: the assembly queue's `push` publishes with a `Release` link
+//!   store and `pop` reads it `Acquire` (see `aq.rs`), and the same holds
+//!   for inbox and deque transfers. The arena itself only needs its
+//!   `OnceLock` chunks' internal synchronisation.
+//! - **All-atomic frames, wholly safe Rust.** Concurrent rank claims and
+//!   completion countdowns were already atomic in the `Arc` era; keeping
+//!   *every* field atomic means the arena contains no `unsafe` at all —
+//!   Miri checks it for free alongside the lock-free queues.
+//!
+//! The honest trade-off: the Vyukov assembly queue still boxes one
+//! intrusive node per push (documented in `aq.rs`). The arena removes the
+//! frame allocation, the per-member refcount churn, and the commit-time
+//! deallocation; the AQ node is the remaining allocator touch.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use super::dag::TaskId;
+use crate::platform::Partition;
+
+/// Index-based handle to a [`Frame`] in a [`FrameArena`]. Word-sized and
+/// `Copy`, so it satisfies the lock-free queues' relaxed-slot contract
+/// (`wsq.rs` bit-casts `T: Copy` word-sized values through `AtomicU64`
+/// slots) as well as the boxed assembly-queue links.
+pub type FrameId = usize;
+
+/// Explicit "leader timing not yet published" sentinel for
+/// [`Frame::leader_start`]/[`Frame::leader_end`]. `u64::MAX` is the bit
+/// pattern of an f64 NaN, which no `Instant`-derived timestamp can
+/// produce — unlike a `0` sentinel, which would be indistinguishable from
+/// a legitimate `0.0`-second leader timestamp and could silently
+/// misattribute a zero-duration leader share to the committer.
+pub const LEADER_UNSET: u64 = u64::MAX;
+
+/// Chunk count bound: with `base ≥ 64`, 32 doubling chunks exceed 2^37
+/// frames — a run would exhaust memory long before the arena.
+const MAX_CHUNKS: usize = 32;
+
+/// Floor on the first chunk's capacity (frames); tiny DAGs still get a
+/// chunk big enough that watchdog re-placements rarely grow.
+const MIN_BASE: usize = 64;
+
+/// One placed TAO: the per-run state shared by every member of its
+/// partition. The all-atomic layout mirrors the retired
+/// `Arc<TaoInstance>`: `task`/`leader`/`width`/`critical` are written
+/// once at [`FrameArena::alloc`] and read-only afterwards; the rank
+/// dispenser and completion countdown are genuinely concurrent.
+#[derive(Debug)]
+pub struct Frame {
+    task: AtomicUsize,
+    leader: AtomicUsize,
+    width: AtomicUsize,
+    critical: AtomicBool,
+    /// Rank dispenser: arrival order claims ranks `0..width`.
+    pub arrivals: AtomicUsize,
+    /// Completion countdown; the rank that drops it to zero commits.
+    pub remaining: AtomicUsize,
+    /// Wall-clock start/end of the leader's share, f64 bits
+    /// ([`LEADER_UNSET`] until the leader publishes them).
+    pub leader_start: AtomicU64,
+    pub leader_end: AtomicU64,
+}
+
+impl Frame {
+    fn blank() -> Frame {
+        Frame {
+            task: AtomicUsize::new(0),
+            leader: AtomicUsize::new(0),
+            width: AtomicUsize::new(0),
+            critical: AtomicBool::new(false),
+            arrivals: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(0),
+            leader_start: AtomicU64::new(LEADER_UNSET),
+            leader_end: AtomicU64::new(LEADER_UNSET),
+        }
+    }
+
+    pub fn task(&self) -> TaskId {
+        self.task.load(Ordering::Relaxed)
+    }
+
+    pub fn partition(&self) -> Partition {
+        Partition {
+            leader: self.leader.load(Ordering::Relaxed),
+            width: self.width.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn critical(&self) -> bool {
+        self.critical.load(Ordering::Relaxed)
+    }
+}
+
+/// Chunked bump arena of [`Frame`]s. See the module docs for the
+/// geometry, lifetime and memory-ordering arguments.
+#[derive(Debug)]
+pub struct FrameArena {
+    base: usize,
+    next: AtomicUsize,
+    chunks: [OnceLock<Box<[Frame]>>; MAX_CHUNKS],
+}
+
+impl FrameArena {
+    /// Arena sized for roughly `hint` placements before the first growth
+    /// (callers pass the DAG's node count; watchdog re-placements and
+    /// serving re-admissions may allocate past it, which just fills
+    /// later chunks).
+    pub fn with_capacity(hint: usize) -> FrameArena {
+        FrameArena {
+            base: hint.max(MIN_BASE),
+            next: AtomicUsize::new(0),
+            chunks: std::array::from_fn(|_| OnceLock::new()),
+        }
+    }
+
+    /// `(chunk, slot)` of a global frame index. Chunk `k` spans
+    /// `[base·(2^k − 1), base·(2^{k+1} − 1))`, so `id / base + 1` lies in
+    /// `[2^k, 2^{k+1})` and its bit length recovers `k` for any base.
+    fn locate(&self, id: FrameId) -> (usize, usize) {
+        let q = id / self.base + 1;
+        let k = (usize::BITS - 1 - q.leading_zeros()) as usize;
+        (k, id - self.base * ((1 << k) - 1))
+    }
+
+    /// Allocate and initialise a fresh frame. The `Relaxed` stores are
+    /// published to other threads by the queue edge that carries the
+    /// returned id (module docs).
+    pub fn alloc(&self, task: TaskId, partition: Partition, critical: bool) -> FrameId {
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        let (k, slot) = self.locate(id);
+        assert!(k < MAX_CHUNKS, "frame arena exhausted ({id} frames)");
+        let cap = self.base << k;
+        let chunk = self.chunks[k]
+            .get_or_init(|| (0..cap).map(|_| Frame::blank()).collect::<Vec<_>>().into());
+        let f = &chunk[slot];
+        f.task.store(task, Ordering::Relaxed);
+        f.leader.store(partition.leader, Ordering::Relaxed);
+        f.width.store(partition.width, Ordering::Relaxed);
+        f.critical.store(critical, Ordering::Relaxed);
+        f.arrivals.store(0, Ordering::Relaxed);
+        f.remaining.store(partition.width, Ordering::Relaxed);
+        f.leader_start.store(LEADER_UNSET, Ordering::Relaxed);
+        f.leader_end.store(LEADER_UNSET, Ordering::Relaxed);
+        id
+    }
+
+    /// The frame behind `id`. Panics on an id never handed out by
+    /// [`FrameArena::alloc`] (an engine bug, not a recoverable state).
+    pub fn frame(&self, id: FrameId) -> &Frame {
+        let (k, slot) = self.locate(id);
+        &self.chunks[k].get().expect("frame id from a foreign arena")[slot]
+    }
+
+    /// Frames allocated so far (monotone; nothing is ever freed early).
+    pub fn allocated(&self) -> usize {
+        self.next.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_maps_chunk_boundaries() {
+        let a = FrameArena::with_capacity(64);
+        // Chunk k spans [64·(2^k − 1), 64·(2^{k+1} − 1)).
+        assert_eq!(a.locate(0), (0, 0));
+        assert_eq!(a.locate(63), (0, 63));
+        assert_eq!(a.locate(64), (1, 0));
+        assert_eq!(a.locate(191), (1, 127));
+        assert_eq!(a.locate(192), (2, 0));
+        assert_eq!(a.locate(64 * 7), (3, 0));
+        // Non-power-of-two base works the same way.
+        let b = FrameArena::with_capacity(100);
+        assert_eq!(b.locate(99), (0, 99));
+        assert_eq!(b.locate(100), (1, 0));
+        assert_eq!(b.locate(299), (1, 199));
+        assert_eq!(b.locate(300), (2, 0));
+    }
+
+    #[test]
+    fn alloc_survives_growth_with_stable_frames() {
+        let a = FrameArena::with_capacity(1); // base clamps to MIN_BASE
+        let n = MIN_BASE * 5; // forces several chunk growths
+        let ids: Vec<FrameId> = (0..n)
+            .map(|i| a.alloc(i, Partition { leader: i % 7, width: 1 + i % 3 }, i % 2 == 0))
+            .collect();
+        assert_eq!(a.allocated(), n);
+        // Take addresses before more growth, re-check after: frames must
+        // never move.
+        let addrs: Vec<*const Frame> = ids.iter().map(|&id| a.frame(id) as *const _).collect();
+        for i in n..n * 2 {
+            a.alloc(i, Partition { leader: 0, width: 1 }, false);
+        }
+        for (i, &id) in ids.iter().enumerate() {
+            let f = a.frame(id);
+            assert_eq!(f as *const _, addrs[i]);
+            assert_eq!(f.task(), i);
+            assert_eq!(f.partition(), Partition { leader: i % 7, width: 1 + i % 3 });
+            assert_eq!(f.critical(), i % 2 == 0);
+            assert_eq!(f.remaining.load(Ordering::Relaxed), 1 + i % 3);
+            assert_eq!(f.leader_end.load(Ordering::Relaxed), LEADER_UNSET);
+        }
+    }
+
+    #[test]
+    fn concurrent_allocs_get_distinct_live_ids() {
+        let a = FrameArena::with_capacity(4);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    let a = &a;
+                    s.spawn(move || {
+                        (0..64)
+                            .map(|i| {
+                                a.alloc(t * 1000 + i, Partition { leader: t, width: 1 }, false)
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            let mut all: Vec<FrameId> =
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), 4 * 64, "duplicate frame ids under concurrent alloc");
+            for &id in &all {
+                let f = a.frame(id);
+                assert_eq!(f.task() / 1000, f.partition().leader);
+            }
+        });
+    }
+}

@@ -11,6 +11,8 @@
 //!   assembly (MPSC) queues (§3.1); [`inbox`] — lock-free admission
 //!   handoff into live workers; [`mutex_queues`] — the mutex baselines,
 //!   kept only for the `bench-overhead` comparison.
+//! - [`arena`] — per-run bump arena of task frames: word-sized
+//!   [`FrameId`] handles through the queues instead of `Arc` churn.
 //! - [`scheduler`] — the performance-based policy and the baselines (§3.3, §6).
 //! - [`list_sched`] — offline plan-ahead schedulers (HEFT/PEFT/DLS and a
 //!   portfolio meta-policy) replayed through the same [`Policy`] seam.
@@ -24,6 +26,7 @@
 //! objects in both engines, so sim/real conformance holds by construction.
 
 pub mod aq;
+pub mod arena;
 pub mod core;
 pub mod dag;
 pub mod episodes_rt;
@@ -41,6 +44,7 @@ pub use self::core::{
     AdmissionSource, CommitInfo, CommitOutcome, Placement, SchedCore, ServingApp,
     ServingCounters, ServingOpts, ServingRun, ServingSource,
 };
+pub use arena::{Frame, FrameArena, FrameId};
 pub use dag::{TaoDag, TaoNode, TaskId};
 pub use episodes_rt::EpisodeDriver;
 pub use list_sched::{PLANNER_NAMES, Plan, PlannedPolicy, plan_dag, planned_policy};

@@ -44,6 +44,19 @@ impl<T> MutexWsQueue<T> {
         self.q.lock().unwrap().pop_front()
     }
 
+    /// Batched thief-side steal: take half of the queue (rounded up,
+    /// capped at [`super::wsq::MAX_BATCH_STEAL`]) from the front, FIFO.
+    /// Same window policy as [`super::wsq::WsQueue::steal_half`], so the
+    /// lockstep conformance tests can compare the two batch-for-batch.
+    pub fn steal_half(&self, mut sink: impl FnMut(T)) -> usize {
+        let mut q = self.q.lock().unwrap();
+        let want = q.len().div_ceil(2).min(super::wsq::MAX_BATCH_STEAL);
+        for _ in 0..want {
+            sink(q.pop_front().unwrap());
+        }
+        want
+    }
+
     pub fn len(&self) -> usize {
         self.q.lock().unwrap().len()
     }
@@ -98,6 +111,21 @@ mod tests {
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn mutex_wsq_steal_half_matches_policy() {
+        let q = MutexWsQueue::new();
+        for i in 0..7 {
+            q.push(i);
+        }
+        let mut got = Vec::new();
+        assert_eq!(q.steal_half(|v| got.push(v)), 4);
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.steal_half(|_: i32| ()), 2);
+        let empty = MutexWsQueue::<i32>::new();
+        assert_eq!(empty.steal_half(|_| panic!("empty queue yielded items")), 0);
     }
 
     #[test]

@@ -6,8 +6,12 @@
 //! 2. otherwise pop the own **work-stealing queue**, decide the placement
 //!    with the active [`Policy`] and insert the TAO into the AQs of the
 //!    chosen partition;
-//! 3. otherwise **steal** from a random victim's WSQ (the thief becomes the
-//!    deciding core — §3.3's "locally executed or randomly stolen").
+//! 3. otherwise **steal** from a victim's WSQ (the thief becomes the
+//!    deciding core — §3.3's "locally executed or randomly stolen");
+//!    victims are probed in topology order — random picks inside the own
+//!    cluster first, the cross-cluster full sweep only as a last resort
+//!    before parking, and that sweep takes half the victim's queue in one
+//!    batched visit ([`super::wsq::WsQueue::steal_half`]).
 //!
 //! TAO instances are executed cooperatively: each member core claims a rank
 //! on arrival at its AQ head and runs `payload.execute(rank, width)`
@@ -37,9 +41,22 @@
 //! no scheduling operation takes a lock:
 //!
 //! - **WSQs** are Chase–Lev deques ([`super::wsq`]): owner LIFO push/pop,
-//!   thief FIFO steal via one CAS on `top`.
+//!   thief FIFO steal via one CAS on `top`; starving thieves use the
+//!   batched [`super::wsq::WsQueue::steal_half`] to amortize the CAS
+//!   cache-line traffic across up to half the victim's queue.
+//! - **Steal order is topology-aware**: each core's victim order is built
+//!   once from [`Topology`] — own cluster first, then by cluster
+//!   distance, rotated within each tier so core 0 isn't everyone's first
+//!   guess. The cheap random probe stays inside the near (same-cluster)
+//!   tier, bounded-retried before the O(n) sweep; only the sweep crosses
+//!   clusters, so steals stay cache-local until locality has provably
+//!   nothing left to offer.
 //! - **AQs** are Vyukov MPSC queues ([`super::aq`]): any placer pushes,
-//!   only the owning core pops.
+//!   only the owning core pops. They carry word-sized [`FrameId`]s into a
+//!   per-run [`FrameArena`] ([`super::arena`]) — placement bump-allocates
+//!   a frame, nothing on the execute/commit path touches the allocator,
+//!   and frames are freed wholesale when the run's `Shared` drops (after
+//!   the thread scope joins — the whole reclamation argument).
 //! - **Trace commits** go to per-worker cache-padded shards: each worker
 //!   owns a disjoint `&mut Vec<TraceRecord>` (no sharing, no unsafe),
 //!   merged once after the workers join and sorted by the deterministic
@@ -98,6 +115,7 @@
 //!   re-admission idempotent, so every task commits exactly once.
 
 use super::aq::AssemblyQueue;
+use super::arena::{FrameArena, FrameId, LEADER_UNSET};
 use super::core::{
     AdmissionSource, CommitInfo, SchedCore, ServingApp, ServingOpts, ServingRun, ServingSource,
 };
@@ -113,7 +131,7 @@ use crate::platform::{EpisodeKind, EpisodeSchedule, Topology};
 use crate::util::Pcg32;
 use crossbeam_utils::CachePadded;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering, fence};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Engine options.
@@ -147,29 +165,6 @@ impl Default for RealEngineOpts {
     }
 }
 
-/// Explicit "leader timing not yet published" sentinel for
-/// [`TaoInstance::leader_start`]/[`TaoInstance::leader_end`]. `u64::MAX`
-/// is the bit pattern of an f64 NaN, which no `Instant`-derived timestamp
-/// can produce — unlike the old `0` sentinel, which was indistinguishable
-/// from a legitimate `0.0`-second leader timestamp and could silently
-/// misattribute a zero-duration leader share to the committer.
-const LEADER_UNSET: u64 = u64::MAX;
-
-/// A TAO that has been placed on a partition and sits in member AQs.
-struct TaoInstance {
-    task: TaskId,
-    partition: crate::platform::Partition,
-    critical: bool,
-    /// Rank dispenser: arrival order claims ranks 0..width.
-    arrivals: AtomicUsize,
-    /// Completion countdown; the rank that drops it to zero commits.
-    remaining: AtomicUsize,
-    /// Wall-clock start/end of the leader's share, f64 bits
-    /// ([`LEADER_UNSET`] until the leader publishes them).
-    leader_start: AtomicU64,
-    leader_end: AtomicU64,
-}
-
 /// Park/unpark state of one worker (cache-padded in `Shared` so flag
 /// traffic never false-shares between workers).
 #[derive(Default)]
@@ -188,7 +183,17 @@ struct Shared<'a> {
     /// `&self` with no locks.
     core: SchedCore<'a>,
     wsqs: Vec<WsQueue<TaskId>>,
-    aqs: Vec<AssemblyQueue<Arc<TaoInstance>>>,
+    aqs: Vec<AssemblyQueue<FrameId>>,
+    /// Per-run task-frame arena: placement bump-allocates, queues carry
+    /// word-sized ids, everything is freed when this struct drops
+    /// ([`super::arena`] — no allocator traffic on the execute path).
+    frames: FrameArena,
+    /// `victim_order[c]` — every core but `c`, own cluster first, then by
+    /// cluster distance, rotated within each tier (module docs).
+    victim_order: Vec<Vec<usize>>,
+    /// `near[c]` — length of the same-cluster prefix of `victim_order[c]`
+    /// (the random-probe tier).
+    near: Vec<usize>,
     /// Per-core admission inboxes: late roots may not be pushed into a
     /// live worker's deque (owner-only bottom end), so the submitter puts
     /// them here and the owner drains them into its own WSQ.
@@ -297,10 +302,10 @@ impl<'a> Shared<'a> {
     /// their share immediately on arrival (asynchronous entry, no
     /// barrier), so inconsistent interleavings cannot produce a circular
     /// wait.
-    fn insert_into_aqs(&self, placer: usize, inst: Arc<TaoInstance>) {
-        let partition = inst.partition;
+    fn insert_into_aqs(&self, placer: usize, frame: FrameId) {
+        let partition = self.frames.frame(frame).partition();
         for c in partition.cores() {
-            self.aqs[c].push(inst.clone());
+            self.aqs[c].push(frame);
         }
         self.wake_after_publish(|s| {
             for c in partition.cores() {
@@ -316,16 +321,8 @@ impl<'a> Shared<'a> {
     /// only materialises the instance and routes it into the member AQs.
     fn place_task(&self, core: usize, task: TaskId) {
         let placed = self.core.place(core, task, self.now());
-        let inst = Arc::new(TaoInstance {
-            task,
-            partition: placed.partition,
-            critical: placed.critical,
-            arrivals: AtomicUsize::new(0),
-            remaining: AtomicUsize::new(placed.partition.width),
-            leader_start: AtomicU64::new(LEADER_UNSET),
-            leader_end: AtomicU64::new(LEADER_UNSET),
-        });
-        self.insert_into_aqs(core, inst);
+        let frame = self.frames.alloc(task, placed.partition, placed.critical);
+        self.insert_into_aqs(core, frame);
     }
 
     /// First live lane at or after `lane` (wrapping); `None` when every
@@ -368,10 +365,11 @@ impl<'a> Shared<'a> {
             moved += 1;
         }
         // Re-route whole instances: members claim ranks on AQ arrival, so
-        // pushing the same `Arc` into the target's AQ lets the target run
-        // this core's share (ranks are claimed per-arrival, not per-core).
-        while let Some(inst) = self.aqs[core].pop() {
-            self.aqs[target].push(inst);
+        // pushing the same frame id into the target's AQ lets the target
+        // run this core's share (ranks are claimed per-arrival, not
+        // per-core).
+        while let Some(frame) = self.aqs[core].pop() {
+            self.aqs[target].push(frame);
             moved += 1;
         }
         if moved > 0 {
@@ -388,9 +386,17 @@ impl<'a> Shared<'a> {
     fn drain_wsq_of(&self, victim: usize) {
         let Some(target) = self.live_target(victim) else { return };
         let mut moved = 0usize;
-        while let Some(task) = self.wsqs[victim].steal() {
-            self.inboxes[target].push(task);
-            moved += 1;
+        // Batched: one `thieves` bracket and one victim visit per half-
+        // queue instead of per task — the watchdog contends with the hung
+        // worker's own (possibly crawling) pops as little as possible.
+        loop {
+            let got = self.wsqs[victim].steal_half(|task| {
+                self.inboxes[target].push(task);
+            });
+            if got == 0 {
+                break;
+            }
+            moved += got;
         }
         if moved > 0 {
             self.wake_after_publish(|s| {
@@ -452,15 +458,18 @@ impl<'a> Shared<'a> {
     /// failed and its timing never reaches the PTT, but the share still
     /// completes — failure is a terminal state, dependents must release,
     /// and the worker thread survives to run the next share.
-    fn execute_share(&self, core: usize, inst: &Arc<TaoInstance>, sink: &mut Vec<TraceRecord>) {
+    fn execute_share(&self, core: usize, frame: FrameId, sink: &mut Vec<TraceRecord>) {
+        let inst = self.frames.frame(frame);
+        let task = inst.task();
+        let partition = inst.partition();
         let rank = inst.arrivals.fetch_add(1, Ordering::AcqRel);
-        debug_assert!(rank < inst.partition.width);
-        let node = &self.core.dag().nodes[inst.task];
-        let is_leader = core == inst.partition.leader;
+        debug_assert!(rank < partition.width);
+        let node = &self.core.dag().nodes[task];
+        let is_leader = core == partition.leader;
         let t_start = self.now();
         let ok = match &node.payload {
             Some(p) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                p.execute(rank, inst.partition.width)
+                p.execute(rank, partition.width)
             }))
             .is_ok(),
             None => true,
@@ -474,7 +483,7 @@ impl<'a> Shared<'a> {
         }
         let t_end = self.now();
         if !ok {
-            self.core.note_failed(inst.task);
+            self.core.note_failed(task);
         }
         if is_leader {
             inst.leader_start.store(t_start.to_bits(), Ordering::Relaxed);
@@ -484,11 +493,11 @@ impl<'a> Shared<'a> {
             // absorbs rank-imbalance skew. An aborted share's duration is
             // not a latency observation — keep it out of the table.
             if ok {
-                self.core.record_leader_share(inst.task, inst.partition, t_end - t_start);
+                self.core.record_leader_share(task, partition, t_end - t_start);
             }
         }
         if inst.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            self.commit_and_wake(core, inst, t_end, sink);
+            self.commit_and_wake(core, frame, t_end, sink);
         }
     }
 
@@ -499,10 +508,11 @@ impl<'a> Shared<'a> {
     fn commit_and_wake(
         &self,
         core: usize,
-        inst: &Arc<TaoInstance>,
+        frame: FrameId,
         t_end: f64,
         sink: &mut Vec<TraceRecord>,
     ) {
+        let inst = self.frames.frame(frame);
         let le_bits = inst.leader_end.load(Ordering::Acquire);
         let (ls, le) = if le_bits == LEADER_UNSET {
             (t_end, t_end) // leader still mid-share; attribute to committer
@@ -510,9 +520,9 @@ impl<'a> Shared<'a> {
             (f64::from_bits(inst.leader_start.load(Ordering::Relaxed)), f64::from_bits(le_bits))
         };
         let info = CommitInfo {
-            task: inst.task,
-            partition: inst.partition,
-            critical: inst.critical,
+            task: inst.task(),
+            partition: inst.partition(),
+            critical: inst.critical(),
             t_start: ls,
             t_end: le.max(t_end),
             exec: le - ls,
@@ -546,6 +556,34 @@ impl<'a> Shared<'a> {
 /// then to the full-sweep-and-park regime.
 const SPIN_LIMIT: u32 = 16;
 const YIELD_LIMIT: u32 = 32;
+
+/// Random-steal attempts per loop iteration before conceding the probe
+/// tier. One probe (the old behaviour) made a single CAS race
+/// indistinguishable from "the tier is empty" and escalated straight to
+/// the O(n) sweep; three keeps the probe cheap while making a false
+/// empty-verdict need three independent misses.
+const STEAL_PROBES: u32 = 3;
+
+/// Per-core victim orders for topology-aware stealing. Returns
+/// `(victim_order, near)`: `victim_order[c]` lists every core but `c`
+/// sorted by `(cluster distance, rotation)` — the same-cluster tier
+/// first, each tier rotated by the prober's index so `n` simultaneous
+/// sweeps don't all hammer the lowest-numbered victim — and `near[c]` is
+/// the length of the same-cluster prefix (the random-probe tier).
+fn build_victim_orders(topo: &Topology) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let n = topo.n_cores();
+    let mut orders = Vec::with_capacity(n);
+    let mut nears = Vec::with_capacity(n);
+    for c in 0..n {
+        let own = topo.cores[c].cluster;
+        let mut order: Vec<usize> = (0..n).filter(|&v| v != c).collect();
+        order.sort_by_key(|&v| (topo.cores[v].cluster.abs_diff(own), (v + n - c) % n));
+        let near = order.iter().take_while(|&&v| topo.cores[v].cluster == own).count();
+        orders.push(order);
+        nears.push(near);
+    }
+    (orders, nears)
+}
 
 /// Cap on the parked-worker sleep backoff. A serving run can hold workers
 /// idle for long stretches (admission gaps, drained lanes); re-waking
@@ -623,8 +661,8 @@ fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32, sink: &mut Vec<
             continue;
         }
         // 1. Assembly queue: committed work for this core.
-        if let Some(inst) = shared.aqs[core].pop() {
-            shared.execute_share(core, &inst, sink);
+        if let Some(frame) = shared.aqs[core].pop() {
+            shared.execute_share(core, frame, sink);
             idle = 0;
             continue;
         }
@@ -634,11 +672,29 @@ fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32, sink: &mut Vec<
             idle = 0;
             continue;
         }
-        // 3. Random steal (one probe — cheap, keeps victim choice fair).
+        // 3. Random steal probes in the near (same-cluster) tier: cheap,
+        // keeps victim choice fair, and keeps the stolen task's working
+        // set inside the cluster's shared cache. Bounded retries — one
+        // missed probe used to fall straight through to the O(n) sweep
+        // even when the victim had merely raced; a couple of re-picks are
+        // far cheaper than scanning every deque. Cores whose cluster has
+        // no other member probe the global order instead.
         if n > 1 {
-            let victim = rng.gen_usize(0, n - 1);
-            let victim = if victim >= core { victim + 1 } else { victim };
-            if let Some(task) = shared.wsqs[victim].steal() {
+            let near = shared.near[core];
+            let tier: &[usize] = if near > 0 {
+                &shared.victim_order[core][..near]
+            } else {
+                &shared.victim_order[core]
+            };
+            let mut stolen = None;
+            for _ in 0..STEAL_PROBES {
+                let victim = tier[rng.gen_usize(0, tier.len())];
+                if let Some(task) = shared.wsqs[victim].steal() {
+                    stolen = Some(task);
+                    break;
+                }
+            }
+            if let Some(task) = stolen {
                 shared.place_task(core, task);
                 idle = 0;
                 continue;
@@ -655,20 +711,39 @@ fn worker_loop(shared: &Shared<'_>, core: usize, mut rng: Pcg32, sink: &mut Vec<
             std::thread::yield_now();
             continue;
         }
-        // 5. Full steal sweep: the single random probe above may simply
-        // have missed the one victim holding work — never park on a
-        // sampling miss.
+        // 5. Full steal sweep: the near-tier probes above may simply have
+        // missed the one victim holding work — never park on a sampling
+        // miss. The sweep walks the topology order (own cluster first, so
+        // a cross-socket steal happens only when the whole near tier is
+        // provably empty) and takes *half* the first non-empty victim's
+        // queue in one batched visit: a worker that reached the sweep is
+        // starving, so grabbing one task just to sweep again per task
+        // would pay the O(n) scan and the `top` CAS line transfer per
+        // task. The first stolen task is placed right away; the rest land
+        // on our own deque (owner push) where near-tier thieves can
+        // re-share them.
         if n > 1 {
-            let mut found = false;
-            for off in 1..n {
-                let v = (core + off) % n;
-                if let Some(task) = shared.wsqs[v].steal() {
-                    shared.place_task(core, task);
-                    found = true;
+            let mut first = None;
+            let mut kept = 0usize;
+            for &v in &shared.victim_order[core] {
+                let got = shared.wsqs[v].steal_half(|task| {
+                    if first.is_none() {
+                        first = Some(task);
+                    } else {
+                        shared.wsqs[core].push(task);
+                        kept += 1;
+                    }
+                });
+                if got > 0 {
                     break;
                 }
             }
-            if found {
+            if let Some(task) = first {
+                if kept > 0 {
+                    // The surplus is stealable from our deque now.
+                    shared.wake_after_publish(|s| s.wake_thieves(core, kept));
+                }
+                shared.place_task(core, task);
                 idle = 0;
                 continue;
             }
@@ -795,10 +870,14 @@ pub fn run_stream_real(
             &fresh
         }
     };
+    let (victim_order, near) = build_victim_orders(topo);
     let shared = Shared {
         core: SchedCore::new(dag, app_of, topo, policy, ptt),
         wsqs: (0..topo.n_cores()).map(|_| WsQueue::new()).collect(),
         aqs: (0..topo.n_cores()).map(|_| AssemblyQueue::new()).collect(),
+        frames: FrameArena::with_capacity(dag.nodes.len()),
+        victim_order,
+        near,
         inboxes: (0..topo.n_cores()).map(|_| Inbox::new()).collect(),
         parkers: (0..topo.n_cores()).map(|_| CachePadded::new(Parker::default())).collect(),
         n_parked: AtomicUsize::new(0),
@@ -1020,10 +1099,14 @@ pub fn run_serving_real(
             &fresh
         }
     };
+    let (victim_order, near) = build_victim_orders(topo);
     let shared = Shared {
         core: SchedCore::new(dag, app_of, topo, policy, ptt).with_app_qos(app_qos),
         wsqs: (0..topo.n_cores()).map(|_| WsQueue::new()).collect(),
         aqs: (0..topo.n_cores()).map(|_| AssemblyQueue::new()).collect(),
+        frames: FrameArena::with_capacity(dag.nodes.len()),
+        victim_order,
+        near,
         inboxes: (0..topo.n_cores()).map(|_| Inbox::new()).collect(),
         parkers: (0..topo.n_cores()).map(|_| CachePadded::new(Parker::default())).collect(),
         n_parked: AtomicUsize::new(0),
@@ -1191,11 +1274,34 @@ pub fn run_serving_real(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Mutex;
+    use std::sync::{Arc, Mutex};
     use crate::coordinator::scheduler::{HomogeneousWs, PerformanceBased};
     use crate::coordinator::tao::payload_fn;
     use crate::dag_gen::fixtures::{counting_dag, paper_figure1_dag};
     use crate::platform::KernelClass;
+
+    #[test]
+    fn victim_orders_put_own_cluster_first_and_rotate() {
+        // big.LITTLE-ish: clusters {0,1} and {2,3,4,5}.
+        let topo = Topology::from_clusters("bl", &[(2, "big", 2 << 20), (4, "little", 2 << 20)]);
+        let (orders, near) = build_victim_orders(&topo);
+        // Core 0's near tier is its lone cluster-mate; the far tier holds
+        // the whole little cluster.
+        assert_eq!(near[0], 1);
+        assert_eq!(orders[0], vec![1, 2, 3, 4, 5]);
+        // Core 3: near tier {2,4,5} rotated from 3's vantage → 4,5,2.
+        assert_eq!(near[3], 3);
+        assert_eq!(&orders[3][..3], &[4, 5, 2]);
+        // Homogeneous: everyone is near, rotation starts at the neighbour
+        // (no shared first victim across cores).
+        let hom = Topology::homogeneous(4);
+        let (o, nr) = build_victim_orders(&hom);
+        for c in 0..4 {
+            assert_eq!(nr[c], 3);
+            assert_eq!(o[c][0], (c + 1) % 4);
+            assert_eq!(o[c].len(), 3);
+        }
+    }
 
     #[test]
     fn executes_every_task_exactly_width_times() {

@@ -65,6 +65,42 @@
 //! opportunistically inside `grow` and from [`WsQueue::maintain`], which
 //! the real engine's workers call before parking — exactly when thieves
 //! are likeliest to be quiescent.
+//!
+//! ## Batched steals (`steal_half`)
+//!
+//! A starving worker that resorts to the full victim sweep takes *half*
+//! of the first non-empty victim's window in one call ([`steal_half`](
+//! WsQueue::steal_half)), bounded by [`MAX_BATCH_STEAL`] — the classic
+//! work-stealing result that migrating half the victim's backlog spreads
+//! load in O(log n) rounds instead of one-task-per-probe trickles.
+//!
+//! **Why the batch is a bounded loop of single-item CAS claims and not one
+//! wide `top: t → t+k` CAS.** The wide claim is *unsound* against this
+//! deque's owner. A thief that reads `t`, `b`, copies slots `t..t+k` and
+//! then CASes `top` from `t` to `t+k` has validated only that `top` never
+//! moved — but the owner's non-racing pop path consumes index `b-1`
+//! *without touching `top`* (it CASes only for the last element). Concrete
+//! interleaving: `t = 0`, `b = 6`; a thief copies slots `0..3`; the owner
+//! pops indices 5, 4, 3, 2 (each time `t < b-1` from its stale view, so
+//! no CAS); the thief's CAS `0 → 3` still succeeds, and index 2 is
+//! consumed twice. Repairing that by re-reading `bottom` *after* the wide
+//! CAS and shrinking the claim fixes duplication but opens a lost-item
+//! window instead: if the owner popped into the claimed range and then
+//! *pushed* again, the new item sits at an index below the advanced `top`
+//! and is never live — and un-publishing `top` backwards is unsound with
+//! a second thief in flight. So each claimed item re-runs the full proven
+//! single-steal protocol (`top` load, `SeqCst` fence, `bottom` load,
+//! emptiness check, `SeqCst` buffer load, slot read, one CAS on `top`);
+//! exactly-once and the stale-read argument hold per item by the
+//! unchanged Lê et al. argument, and the retired-buffer discipline holds
+//! because the *whole batch* sits inside a single `thieves`-refcount
+//! bracket. What the batch amortizes is everything around the CAS: the
+//! refcount bracket, the victim-selection probe, the call overhead, and —
+//! decisively under contention — the cache-line transfer of `top`, which
+//! a burst of back-to-back CAS claims keeps in the thief's cache instead
+//! of re-acquiring it per probe round. A lost CAS mid-batch ends the
+//! batch (another consumer owns the line now); the items already claimed
+//! are kept.
 
 use std::fmt;
 use std::marker::PhantomData;
@@ -136,6 +172,14 @@ impl<T: Copy> Buffer<T> {
 }
 
 const INITIAL_CAP: usize = 64;
+
+/// Upper bound on one [`WsQueue::steal_half`] batch. Keeps a single batch
+/// from emptying a deep victim queue wholesale (other thieves deserve a
+/// share, and the thief must not hoard more than it can start soon) while
+/// still amortizing the per-steal overhead ~30x. The mutex reference in
+/// [`super::mutex_queues`] uses the same cap so the lockstep conformance
+/// tests can compare batch-for-batch.
+pub const MAX_BATCH_STEAL: usize = 32;
 
 /// Lock-free work-stealing deque. See the module docs for the ownership
 /// contract (`push`/`pop` owner-only, `steal` from anywhere).
@@ -239,6 +283,68 @@ impl<T: Copy> WsQueue<T> {
                 return Some(item);
             }
             // Lost to the owner or another thief; re-read and retry.
+        }
+    }
+
+    /// Batched thief-side steal: take up to half of the first observed
+    /// window (rounded up, capped at [`MAX_BATCH_STEAL`]), passing each
+    /// item to `sink` in FIFO (oldest-first) order. Returns the number of
+    /// items taken; `0` only when the deque was observed empty (or another
+    /// consumer won every race before we claimed anything).
+    ///
+    /// Each item is claimed by the full single-steal protocol — see the
+    /// module docs ("Batched steals") for why a wide one-CAS claim is
+    /// unsound here. A lost CAS after ≥ 1 item ends the batch early; the
+    /// whole call sits inside one `thieves` quiescence bracket.
+    pub fn steal_half(&self, mut sink: impl FnMut(T)) -> usize {
+        self.thieves.fetch_add(1, Ordering::SeqCst);
+        let taken = self.steal_batch_inner(MAX_BATCH_STEAL, &mut sink);
+        self.thieves.fetch_sub(1, Ordering::SeqCst);
+        taken
+    }
+
+    fn steal_batch_inner(&self, limit: usize, sink: &mut impl FnMut(T)) -> usize {
+        let mut taken = 0usize;
+        // Fixed after the first successful window observation: half of
+        // what the victim had *then*, not a re-halving treadmill over the
+        // shrinking remainder.
+        let mut want = 0usize;
+        loop {
+            // Per-item protocol — identical to `steal_inner`, orderings
+            // and all. The emptiness re-check each round is load-bearing:
+            // claiming an index ≥ `bottom` would let an owner push land
+            // below `top` and strand the item forever.
+            let t = self.top.load(Ordering::Acquire);
+            fence(Ordering::SeqCst);
+            let b = self.bottom.load(Ordering::Acquire);
+            if t >= b {
+                return taken;
+            }
+            if want == 0 {
+                // Half the first observed window, rounded up (t < b here,
+                // so the cast is lossless).
+                want = ((b - t) as usize).div_ceil(2).clamp(1, limit);
+            }
+            let buf = self.buf.load(Ordering::SeqCst);
+            let item = unsafe { (*buf).get(t) };
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok()
+            {
+                sink(item);
+                taken += 1;
+                if taken >= want {
+                    return taken;
+                }
+            } else if taken > 0 {
+                // Mid-batch contention: another consumer owns the `top`
+                // line now — keep what we have instead of fighting for
+                // the rest of the window.
+                return taken;
+            }
+            // taken == 0: lost the race before claiming anything; retry
+            // like `steal` does.
         }
     }
 
@@ -391,6 +497,65 @@ mod tests {
             assert_eq!(q.pop(), Some(i));
         }
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn steal_half_takes_half_rounded_up_fifo() {
+        let q = WsQueue::new();
+        for i in 0..7 {
+            q.push(i);
+        }
+        let mut got = Vec::new();
+        let n = q.steal_half(|v| got.push(v));
+        // (7 + 1) / 2 = 4, oldest first.
+        assert_eq!(n, 4);
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 3);
+        // Owner still sees LIFO over the remainder.
+        assert_eq!(q.pop(), Some(6));
+        assert_eq!(q.pop(), Some(5));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn steal_half_caps_at_max_batch() {
+        let q = WsQueue::new();
+        let n = (MAX_BATCH_STEAL * 4) as i64;
+        for i in 0..n {
+            q.push(i);
+        }
+        let mut got = Vec::new();
+        assert_eq!(q.steal_half(|v| got.push(v)), MAX_BATCH_STEAL);
+        assert_eq!(got, (0..MAX_BATCH_STEAL as i64).collect::<Vec<_>>());
+        assert_eq!(q.len(), (n as usize) - MAX_BATCH_STEAL);
+    }
+
+    #[test]
+    fn steal_half_on_empty_and_singleton() {
+        let q = WsQueue::new();
+        assert_eq!(q.steal_half(|_: i32| panic!("empty deque yielded items")), 0);
+        q.push(42);
+        let mut got = Vec::new();
+        assert_eq!(q.steal_half(|v| got.push(v)), 1);
+        assert_eq!(got, vec![42]);
+        assert_eq!(q.steal_half(|_| panic!("drained deque yielded items")), 0);
+    }
+
+    #[test]
+    fn steal_half_leaves_queue_usable_for_mixed_ops() {
+        let q = WsQueue::new();
+        for i in 0..10 {
+            q.push(i);
+        }
+        let mut got = Vec::new();
+        assert_eq!(q.steal_half(|v| got.push(v)), 5);
+        q.push(10);
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.steal(), Some(5));
+        let mut rest = Vec::new();
+        q.steal_half(|v| rest.push(v));
+        assert_eq!(rest, vec![6, 7]);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //!   repro ptt-dump [--platform tx2] [--tasks 500] ...
 //!   repro scenarios                 # list platform + stream scenarios
 //!   repro policies                  # list scheduling policies + aliases
-//!   repro bench-overhead [--quick] [--json] [--compare]   # perf harness
+//!   repro bench-overhead [--quick] [--json] [--compare] [--pressure]  # perf harness
 //!   repro bench-serving [--quick] [--json]                # serving ramp
 //!   repro bench-faults [--quick] [--json] [--backend sim|real|both]
 //!                                                         # fault-injection chaos harness
@@ -108,10 +108,12 @@ platforms:  run `repro scenarios` for the registered list; hom<N> for
 policies:   run `repro policies` for the registered list with aliases
             and descriptions
 
-perf:       bench-overhead [--quick] [--json] [--compare]
-            (lock-free hot-path overhead; --json writes
+perf:       bench-overhead [--quick] [--json] [--compare] [--pressure]
+            (lock-free hot-path overhead incl. many-core hom64/hom128 and
+             single-vs-batched steal pressure; --json writes
              BENCH_sched_overhead.json at the repo root, --compare prints
-             the mutex-vs-lockfree speedup)
+             the mutex-vs-lockfree speedup, --pressure sweeps thief-pack
+             sizes against the batched steal_half path)
             bench-interference [--quick] [--json] [--backend sim|real|both]
             [--scenario interference20] [--seed S]
             (the §5.3 dynamic-heterogeneity response: per-interval PTT
@@ -313,6 +315,7 @@ fn cmd_bench_overhead(args: &Args) -> i32 {
         quick: args.switch("quick"),
         compare: args.switch("compare"),
         json: args.switch("json"),
+        pressure: args.switch("pressure"),
     };
     let run = bench::emit_overhead(&opts);
     if run.regressions > 0 {

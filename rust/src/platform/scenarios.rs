@@ -24,6 +24,12 @@
 //!   fault-injection scenarios behind the chaos harness
 //!   (`repro bench-faults`): cores dying mid-run (with and without
 //!   recovery) and a permanent fail-slow degradation of the big cluster.
+//! - `hom64` / `hom128` — many-core steal-pressure stress for
+//!   `bench-overhead`: 64/128 homogeneous cores, far past the paper's
+//!   4–44-core platforms, where queue contention (not placement quality)
+//!   dominates scheduler overhead. Registered explicitly (identical to
+//!   the dynamic `hom<N>` resolution) so they show up in `--list` and the
+//!   experiment matrix.
 //!
 //! The dynamic `hom<N>` family (N homogeneous cores) is also resolved by
 //! [`by_name`] for arbitrary N ≥ 1. Episode schedules drive **both**
@@ -168,6 +174,19 @@ fn failslow_biglittle44() -> Platform {
     )]))
 }
 
+fn hom64() -> Platform {
+    // Many-core steal-pressure stress (bench-overhead's scaling scenario):
+    // identical to the dynamic `hom64` resolution by construction — the
+    // registration only makes the scenario enumerable.
+    Platform::homogeneous(64)
+}
+
+fn hom128() -> Platform {
+    // Two doublings past one socket; full-mode bench-overhead only (128
+    // worker threads is too heavy for the quick CI smoke).
+    Platform::homogeneous(128)
+}
+
 /// The static scenario registry.
 pub fn scenarios() -> &'static [Scenario] {
     static SCENARIOS: &[Scenario] = &[
@@ -226,6 +245,16 @@ pub fn scenarios() -> &'static [Scenario] {
             description: "biglittle44 where big cores 0-1 permanently degrade to 30% at 0.06 s",
             build: failslow_biglittle44,
         },
+        Scenario {
+            name: "hom64",
+            description: "64 homogeneous cores: many-core steal-pressure stress (bench-overhead)",
+            build: hom64,
+        },
+        Scenario {
+            name: "hom128",
+            description: "128 homogeneous cores: steal-pressure stress, full-mode bench only",
+            build: hom128,
+        },
     ];
     SCENARIOS
 }
@@ -271,10 +300,12 @@ mod tests {
             "failstop20",
             "failstop-recover8",
             "failslow-biglittle44",
+            "hom64",
+            "hom128",
         ] {
             assert!(names.contains(&expected), "missing scenario {expected}");
         }
-        assert!(names.len() >= 11);
+        assert!(names.len() >= 13);
     }
 
     #[test]
@@ -295,6 +326,12 @@ mod tests {
         assert_eq!(by_name("tx2").unwrap().topo.n_cores(), 6);
         assert_eq!(by_name("haswell20").unwrap().topo.n_cores(), 20);
         assert_eq!(by_name("hom8").unwrap().topo.n_cores(), 8);
+        // Registered many-core entries resolve identically to the dynamic
+        // family (single 64/128-core cluster) — the registration must not
+        // change semantics.
+        assert_eq!(by_name("hom64").unwrap().topo.n_cores(), 64);
+        assert_eq!(by_name("hom64").unwrap().topo.clusters.len(), 1);
+        assert_eq!(by_name("hom128").unwrap().topo.n_cores(), 128);
         assert!(by_name("hom0").is_none());
         assert!(by_name("homX").is_none());
         assert!(by_name("riscv").is_none());

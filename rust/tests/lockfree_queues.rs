@@ -10,9 +10,11 @@
 //! - **Stress**: one owner + several thieves hammer a single deque; every
 //!   pushed item must be consumed exactly once (a lost or duplicated item
 //!   fails the count/set assertions; a lost wake would hang the loop and
-//!   fail by timeout). CI additionally runs this file under
-//!   `cargo test --release` so the atomics are exercised with
-//!   optimizations on.
+//!   fail by timeout). Both the single-item `steal` path and the batched
+//!   `steal_half` path get their own exactly-once pins, plus a small
+//!   batch variant sized so the Miri job can run it. CI additionally runs
+//!   this file under `cargo test --release` so the atomics are exercised
+//!   with optimizations on.
 //! - **MPSC/inbox stress**: concurrent producers against a single
 //!   consumer preserve per-producer FIFO order and lose nothing.
 
@@ -112,6 +114,195 @@ fn wsq_stress_every_item_seen_exactly_once() {
             })
             .collect();
         // Owner: push everything, popping a share along the way.
+        let mut popped = Vec::new();
+        for i in 0..ITEMS {
+            q.push(i);
+            if i % 4 == 0 {
+                if let Some(v) = q.pop() {
+                    popped.push(v);
+                    consumed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        while consumed.load(Ordering::Relaxed) < ITEMS {
+            if let Some(v) = q.pop() {
+                popped.push(v);
+                consumed.fetch_add(1, Ordering::Relaxed);
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        all.extend(popped);
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+    });
+    assert_eq!(all.len(), ITEMS, "exactly-once count");
+    all.sort_unstable();
+    for (i, &v) in all.iter().enumerate() {
+        assert_eq!(v, i, "item {i} lost or duplicated");
+    }
+    assert!(q.is_empty());
+    assert_eq!(q.pop(), None);
+    assert_eq!(q.steal(), None);
+}
+
+#[test]
+fn wsq_steal_half_conformance_matches_mutex_reference() {
+    // Lockstep over a 4-way op mix including batched steals: uncontended,
+    // the lock-free `steal_half` observes the true queue length, so its
+    // window policy — half of it, rounded up, capped at MAX_BATCH_STEAL —
+    // must match the mutex reference batch-for-batch, in content and
+    // order, not just in count.
+    let lf: WsQueue<u64> = WsQueue::new();
+    let mx: MutexWsQueue<u64> = MutexWsQueue::new();
+    let mut rng = Lcg(0x5EA1);
+    let mut next_val = 0u64;
+    for step in 0..10_000 {
+        match rng.next() % 4 {
+            0 | 1 => {
+                // Push twice as often so batches regularly see depth > 1.
+                lf.push(next_val);
+                mx.push(next_val);
+                next_val += 1;
+            }
+            2 => {
+                assert_eq!(lf.pop(), mx.pop(), "pop diverged at step {step}");
+            }
+            _ => {
+                let mut a = Vec::new();
+                let mut b = Vec::new();
+                let na = lf.steal_half(|v| a.push(v));
+                let nb = mx.steal_half(|v| b.push(v));
+                assert_eq!(na, nb, "batch size diverged at step {step}");
+                assert_eq!(a, b, "batch content diverged at step {step}");
+                assert_eq!(na, a.len());
+            }
+        }
+        assert_eq!(lf.len(), mx.len(), "len diverged at step {step}");
+    }
+    loop {
+        let (a, b) = (lf.pop(), mx.pop());
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn wsq_steal_half_window_policy_pins() {
+    use xitao::coordinator::wsq::MAX_BATCH_STEAL;
+    // Half rounded up, FIFO, from a cold queue.
+    let q = WsQueue::new();
+    for i in 0..9 {
+        q.push(i);
+    }
+    let mut got = Vec::new();
+    assert_eq!(q.steal_half(|v| got.push(v)), 5);
+    assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    // Cap at MAX_BATCH_STEAL no matter the depth.
+    let q = WsQueue::new();
+    for i in 0..(MAX_BATCH_STEAL * 3) {
+        q.push(i);
+    }
+    let mut got = Vec::new();
+    assert_eq!(q.steal_half(|v| got.push(v)), MAX_BATCH_STEAL);
+    assert_eq!(got, (0..MAX_BATCH_STEAL).collect::<Vec<_>>());
+    // Empty queue: zero items, sink never called.
+    let q = WsQueue::new();
+    assert_eq!(q.steal_half(|_: usize| panic!("sink on empty queue")), 0);
+}
+
+#[test]
+fn wsq_batch_steal_two_thieves_exactly_once() {
+    // Small-scale batch exactly-once — deliberately tiny (and free of the
+    // "stress"/"concurrent" name markers) so the Miri job runs it over
+    // the new `steal_half` path; the 100k-item version below is the
+    // native-only stress pin.
+    const ITEMS: usize = 200;
+    let q: WsQueue<usize> = WsQueue::new();
+    let consumed = AtomicUsize::new(0);
+    let mut all: Vec<usize> = Vec::with_capacity(ITEMS);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let (q, consumed) = (&q, &consumed);
+                s.spawn(move || {
+                    let mut got = Vec::new();
+                    while consumed.load(Ordering::Relaxed) < ITEMS {
+                        let n = q.steal_half(|v| got.push(v));
+                        if n > 0 {
+                            consumed.fetch_add(n, Ordering::Relaxed);
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        let mut popped = Vec::new();
+        for i in 0..ITEMS {
+            q.push(i);
+            if i % 8 == 0 {
+                if let Some(v) = q.pop() {
+                    popped.push(v);
+                    consumed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        while consumed.load(Ordering::Relaxed) < ITEMS {
+            if let Some(v) = q.pop() {
+                popped.push(v);
+                consumed.fetch_add(1, Ordering::Relaxed);
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        all.extend(popped);
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+    });
+    assert_eq!(all.len(), ITEMS, "exactly-once count");
+    all.sort_unstable();
+    for (i, &v) in all.iter().enumerate() {
+        assert_eq!(v, i, "item {i} lost or duplicated");
+    }
+    assert!(q.is_empty());
+}
+
+#[test]
+fn wsq_stress_batch_steal_every_item_seen_exactly_once() {
+    // The batch analogue of the single-steal stress pin: 1 owner
+    // (push + occasional pop) vs 3 batch-stealing thieves, far past the
+    // initial capacity so `grow` retires buffers while `steal_half`
+    // brackets are live. Every item must surface exactly once — a double
+    // CAS-claim would duplicate, a claim past `bottom` would lose.
+    const ITEMS: usize = 100_000;
+    let n_thieves = 3;
+    let q: WsQueue<usize> = WsQueue::new();
+    let consumed = AtomicUsize::new(0);
+    let mut all: Vec<usize> = Vec::with_capacity(ITEMS);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_thieves)
+            .map(|_| {
+                let (q, consumed) = (&q, &consumed);
+                s.spawn(move || {
+                    let mut got = Vec::new();
+                    while consumed.load(Ordering::Relaxed) < ITEMS {
+                        let n = q.steal_half(|v| got.push(v));
+                        if n > 0 {
+                            consumed.fetch_add(n, Ordering::Relaxed);
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
         let mut popped = Vec::new();
         for i in 0..ITEMS {
             q.push(i);
