@@ -19,7 +19,7 @@ use xitao::bench::overhead::time_ns;
 use xitao::coordinator::aq::AssemblyQueue;
 use xitao::coordinator::dag::TaoDag;
 use xitao::coordinator::ptt::Ptt;
-use xitao::coordinator::scheduler::{PlaceCtx, QosClass, policy_by_name};
+use xitao::coordinator::scheduler::{EngineView, PlaceCtx, QosClass, TaskView, policy_by_name};
 use xitao::coordinator::wsq::WsQueue;
 use xitao::coordinator::{NopPayload, RealEngineOpts, run_dag_real};
 use xitao::dag_gen::{DagParams, generate};
@@ -64,21 +64,21 @@ fn main() {
     for p in topo.all_partitions() {
         ptt.update(0, p.leader, p.width, 1.0);
     }
-    for name in ["performance", "homogeneous", "cats", "dheft"] {
+    for name in ["performance", "homogeneous", "cats", "dheft", "elastic"] {
         let policy = policy_by_name(name, topo.n_cores()).unwrap();
         for critical in [true, false] {
             let ns = time_ns(iters, || {
-                let ctx = PlaceCtx {
-                    core: 3,
-                    task: 0,
-                    type_id: 0,
-                    critical,
-                    app_id: 0,
-                    qos: QosClass::default(),
-                    ptt: &ptt,
-                    topo: &topo,
-                    now: 0.0,
-                };
+                let ctx = PlaceCtx::new(
+                    TaskView {
+                        task: 0,
+                        type_id: 0,
+                        critical,
+                        max_width: 4,
+                        app_id: 0,
+                        qos: QosClass::default(),
+                    },
+                    EngineView { core: 3, ptt: &ptt, topo: &topo, now: 0.0 },
+                );
                 std::hint::black_box(policy.place(&ctx));
             });
             println!("[place] {name:12} critical={critical:5}: {ns:7.1} ns");

@@ -3,9 +3,11 @@
 //! DESIGN.md, the scheduler-overhead perf harness ([`overhead`]) and the
 //! §5.3 interference-response harness ([`interference_response`]) and the
 //! policy × scenario experiment matrix ([`experiment`]) and the
-//! fault-injection chaos harness ([`faults`]).
+//! fault-injection chaos harness ([`faults`]) and the moldable-width
+//! ablation ([`elastic`]).
 //! Used by the `repro` CLI and the `cargo bench` targets.
 
+pub mod elastic;
 pub mod experiment;
 pub mod faults;
 pub mod figures;
@@ -13,6 +15,9 @@ pub mod interference_response;
 pub mod overhead;
 pub mod serving;
 
+pub use elastic::{
+    ELASTIC_CELLS, ElasticOpts, emit_elastic, render_elastic_table, run_elastic_json,
+};
 pub use experiment::{
     ExperimentOpts, emit_experiment, render_experiment_table, run_experiment_json,
 };

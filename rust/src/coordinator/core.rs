@@ -51,7 +51,7 @@
 use super::dag::{TaoDag, TaskId};
 use super::metrics::{RunResult, TraceRecord};
 use super::ptt::Ptt;
-use super::scheduler::{PlaceCtx, Policy, QosClass};
+use super::scheduler::{EngineView, PlaceCtx, Policy, QosClass, TaskView};
 use crate::platform::{CoreId, Partition, Topology};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -319,17 +319,17 @@ impl<'a> SchedCore<'a> {
         let node = &self.dag.nodes[task];
         let critical = self.critical[task].load(Ordering::Relaxed);
         let app_id = self.app_of(task);
-        let ctx = PlaceCtx {
-            core,
-            task,
-            type_id: node.type_id,
-            critical,
-            app_id,
-            qos: self.qos_of_app(app_id),
-            ptt: self.ptt,
-            topo: self.topo,
-            now,
-        };
+        let ctx = PlaceCtx::new(
+            TaskView {
+                task,
+                type_id: node.type_id,
+                critical,
+                max_width: node.max_width,
+                app_id,
+                qos: self.qos_of_app(app_id),
+            },
+            EngineView { core, ptt: self.ptt, topo: self.topo, now },
+        );
         let partition = self.policy.place(&ctx);
         debug_assert!(self.topo.is_valid_partition(partition), "{partition:?}");
         let partition = self.remap_off_dead_cores(partition, node.type_id);
@@ -432,7 +432,7 @@ impl<'a> SchedCore<'a> {
             self.core_last_app[leader].store(app_id, Ordering::Relaxed);
             self.core_streak[leader].store(1, Ordering::Relaxed);
         }
-        self.policy.on_complete(info.partition.leader, info.partition.width, info.exec, info.now);
+        self.policy.on_complete(info.partition, info.exec, info.now);
         // Critical-path hand-off: a task on the path marks the one child
         // whose criticality is exactly one less (§2: critical tasks are
         // the tasks *of the critical path*; the diff-by-1 check alone

@@ -29,8 +29,18 @@ pub struct TaoNode {
     pub work_scale: f64,
     /// Real-mode body; `None` for simulation-only DAGs.
     pub payload: Option<Arc<dyn TaoPayload>>,
+    /// Moldability descriptor: the widest resource partition this TAO's
+    /// kernel can exploit (its internal parallelism cap). Policies clamp
+    /// their width choice to `min(max_width, cluster width)`; the default
+    /// is the class's [`crate::platform::ClassTraits::max_parallelism`].
+    /// A value of 1 marks the task inelastic (always width-1).
+    pub max_width: usize,
     /// Successor task ids (edges point forward in execution order).
     pub succs: Vec<TaskId>,
+    /// Bytes the producer hands each successor (data item per edge),
+    /// parallel to `succs`. 0 = control dependency only. Placement and the
+    /// offline planners weigh cluster-crossing transfers by this.
+    pub succ_bytes: Vec<u64>,
     /// Predecessor task ids.
     pub preds: Vec<TaskId>,
     /// Bottom-up criticality; valid after [`TaoDag::finalize`].
@@ -86,7 +96,9 @@ impl TaoDag {
             type_id,
             work_scale,
             payload,
+            max_width: class.traits().max_parallelism,
             succs: Vec::new(),
+            succ_bytes: Vec::new(),
             preds: Vec::new(),
             criticality: 0,
             cp_child: None,
@@ -94,16 +106,85 @@ impl TaoDag {
         id
     }
 
-    /// Add a dependency edge `from → to` (`to` runs after `from`).
+    /// Override a task's moldability cap (see [`TaoNode::max_width`]).
+    /// `max_width` must be at least 1 — width 0 is not a partition.
+    pub fn set_max_width(&mut self, task: TaskId, max_width: usize) {
+        assert!(!self.finalized, "cannot change moldability after finalize()");
+        assert!(max_width >= 1, "max_width must be at least 1");
+        self.nodes[task].max_width = max_width;
+    }
+
+    /// A copy of this DAG with every task's moldability clamped to
+    /// `min(max_width, cap)`: identical structure, criticalities and
+    /// payloads. Unlike [`TaoDag::set_max_width`] this works on a
+    /// *finalized* DAG — the cap is a placement hint, not structure — so
+    /// benchmark twins (`bench-elastic`'s width-1-forced runs) can be
+    /// derived from an already-generated DAG without re-rolling the seed.
+    pub fn with_max_width_cap(&self, cap: usize) -> TaoDag {
+        assert!(cap >= 1, "cap must be at least 1");
+        TaoDag {
+            nodes: self
+                .nodes
+                .iter()
+                .map(|n| TaoNode {
+                    id: n.id,
+                    class: n.class,
+                    type_id: n.type_id,
+                    work_scale: n.work_scale,
+                    payload: n.payload.clone(),
+                    max_width: n.max_width.min(cap),
+                    succs: n.succs.clone(),
+                    succ_bytes: n.succ_bytes.clone(),
+                    preds: n.preds.clone(),
+                    criticality: n.criticality,
+                    cp_child: n.cp_child,
+                })
+                .collect(),
+            finalized: self.finalized,
+        }
+    }
+
+    /// Add a control-only dependency edge `from → to` (`to` runs after
+    /// `from`, no data item attached).
     pub fn add_edge(&mut self, from: TaskId, to: TaskId) {
+        self.add_edge_bytes(from, to, 0);
+    }
+
+    /// Add a dependency edge carrying a data item of `bytes` bytes (the
+    /// producer's output consumed by `to`). A duplicate edge keeps the
+    /// larger byte count — re-proposing an edge can only add data, never
+    /// silently drop it.
+    pub fn add_edge_bytes(&mut self, from: TaskId, to: TaskId, bytes: u64) {
         assert!(!self.finalized, "cannot add edges after finalize()");
         assert!(from < self.nodes.len() && to < self.nodes.len(), "edge endpoints must exist");
         assert_ne!(from, to, "self-edges are cycles");
         // Ignore duplicate edges (the random generator can propose repeats).
-        if !self.nodes[from].succs.contains(&to) {
-            self.nodes[from].succs.push(to);
-            self.nodes[to].preds.push(from);
+        match self.nodes[from].succs.iter().position(|&s| s == to) {
+            Some(i) => {
+                let cell = &mut self.nodes[from].succ_bytes[i];
+                *cell = (*cell).max(bytes);
+            }
+            None => {
+                self.nodes[from].succs.push(to);
+                self.nodes[from].succ_bytes.push(bytes);
+                self.nodes[to].preds.push(from);
+            }
         }
+    }
+
+    /// Bytes carried by the edge `from → to`; `None` when no such edge
+    /// exists, `Some(0)` for a control-only dependency.
+    pub fn edge_bytes(&self, from: TaskId, to: TaskId) -> Option<u64> {
+        self.nodes[from]
+            .succs
+            .iter()
+            .position(|&s| s == to)
+            .map(|i| self.nodes[from].succ_bytes[i])
+    }
+
+    /// Total bytes over all data edges (comm-bound scenario diagnostics).
+    pub fn total_edge_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.succ_bytes.iter().sum::<u64>()).sum()
     }
 
     pub fn len(&self) -> usize {
@@ -460,6 +541,60 @@ mod tests {
         d.add_task(KernelClass::MatMul, 0, 1.0);
         d.add_task(KernelClass::Sort, 3, 1.0);
         assert_eq!(d.n_types(), 4);
+    }
+
+    #[test]
+    fn max_width_defaults_to_class_parallelism_and_overrides() {
+        let mut d = TaoDag::new();
+        let m = d.add_task(KernelClass::MatMul, 0, 1.0);
+        let s = d.add_task(KernelClass::Sort, 1, 1.0);
+        assert_eq!(d.nodes[m].max_width, KernelClass::MatMul.traits().max_parallelism);
+        assert_eq!(d.nodes[s].max_width, KernelClass::Sort.traits().max_parallelism);
+        d.set_max_width(s, 1);
+        assert_eq!(d.nodes[s].max_width, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1")]
+    fn zero_max_width_rejected() {
+        let mut d = TaoDag::new();
+        let x = d.add_task(KernelClass::MatMul, 0, 1.0);
+        d.set_max_width(x, 0);
+    }
+
+    #[test]
+    fn max_width_cap_twin_preserves_structure() {
+        let mut d = TaoDag::new();
+        let m = d.add_task(KernelClass::MatMul, 0, 1.0); // class cap 8
+        let s = d.add_task(KernelClass::Sort, 1, 2.0); // class cap 4
+        d.add_edge_bytes(m, s, 512);
+        d.finalize().unwrap();
+        let narrow = d.with_max_width_cap(1);
+        assert!(narrow.is_finalized());
+        assert!(narrow.nodes.iter().all(|n| n.max_width == 1));
+        assert_eq!(narrow.edge_bytes(m, s), Some(512));
+        assert_eq!(narrow.nodes[m].criticality, d.nodes[m].criticality);
+        assert_eq!(narrow.nodes[s].work_scale, 2.0);
+        // A cap above the class defaults changes nothing.
+        let same = d.with_max_width_cap(64);
+        assert_eq!(same.nodes[m].max_width, d.nodes[m].max_width);
+        assert_eq!(same.nodes[s].max_width, d.nodes[s].max_width);
+    }
+
+    #[test]
+    fn edge_bytes_recorded_and_duplicates_keep_max() {
+        let mut d = TaoDag::new();
+        let x = d.add_task(KernelClass::MatMul, 0, 1.0);
+        let y = d.add_task(KernelClass::MatMul, 0, 1.0);
+        let z = d.add_task(KernelClass::MatMul, 0, 1.0);
+        d.add_edge(x, y); // control-only
+        d.add_edge_bytes(x, z, 4096);
+        d.add_edge_bytes(x, z, 1024); // duplicate keeps the larger item
+        assert_eq!(d.edge_bytes(x, y), Some(0));
+        assert_eq!(d.edge_bytes(x, z), Some(4096));
+        assert_eq!(d.edge_bytes(y, z), None);
+        assert_eq!(d.total_edge_bytes(), 4096);
+        assert_eq!(d.nodes[x].succs.len(), d.nodes[x].succ_bytes.len());
     }
 
     #[test]

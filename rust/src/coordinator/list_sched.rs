@@ -10,13 +10,15 @@
 //! (`repro experiment`) can quantify what whole-DAG lookahead buys (or
 //! costs) relative to the PTT's measured-online approach:
 //!
-//! - **HEFT** (Topcuoglu et al.): upward-rank priority, earliest-finish-
+//! - **HEFT** (Topcuoglu et al.): upward-rank priority (mean compute +
+//!   mean communication along the heaviest child chain), earliest-finish-
 //!   time placement;
-//! - **PEFT** (Arabnejad & Barbosa): optimistic-cost-table priority.
-//!   Without communication costs the OCT is partition-independent, so
-//!   PEFT here degenerates to EFT placement under a different priority
-//!   order than HEFT — documented rather than papered over with invented
-//!   network costs;
+//! - **PEFT** (Arabnejad & Barbosa): optimistic-cost-table priority with
+//!   `EFT + OCT(task, partition)` placement. The OCT is
+//!   partition-dependent here because DAG edges carry data bytes
+//!   ([`TaoDag::edge_bytes`]) priced by the platform transfer model
+//!   ([`Platform::edge_transfer_time`]) — on byte-free DAGs it
+//!   degenerates to EFT under a different priority order, as before;
 //! - **DLS** (Sih & Lee): joint `(task, partition)` argmax of the dynamic
 //!   level — static level minus earliest start time, with a Δ term
 //!   rewarding partitions faster than the task's average;
@@ -44,7 +46,7 @@
 //! priority order says.
 
 use super::dag::{TaoDag, TaskId};
-use super::scheduler::{PlaceCtx, Policy};
+use super::scheduler::{EngineView, PlaceCtx, Policy, TaskView};
 use crate::platform::{EpisodeSchedule, KernelClass, Partition, Platform};
 
 /// Canonical planner names, in registry (and portfolio tie-break) order.
@@ -70,6 +72,9 @@ struct CostModel {
     /// `cost[part_idx][class.index()]` — uncontended, episode-free
     /// execution time of one unit of work (`work_scale == 1.0`).
     cost: Vec<[f64; 4]>,
+    /// The episode-free platform, kept for the data-transfer model
+    /// ([`Platform::edge_transfer_time`]).
+    plat: Platform,
 }
 
 impl CostModel {
@@ -94,7 +99,7 @@ impl CostModel {
                 row
             })
             .collect();
-        CostModel { parts, cost }
+        CostModel { parts, cost, plat: clean }
     }
 
     fn node_cost(&self, dag: &TaoDag, t: TaskId, pi: usize) -> f64 {
@@ -113,6 +118,45 @@ impl CostModel {
             .map(|pi| self.node_cost(dag, t, pi))
             .fold(f64::INFINITY, f64::min)
     }
+
+    /// Communication cost of the `from → to` edge when the producer ran
+    /// on `from_part` and the consumer is placed on `to_part`. Zero for
+    /// control-only edges (no bytes) and when both partitions share a
+    /// leader (the data never moves).
+    fn edge_cost(
+        &self,
+        dag: &TaoDag,
+        from: TaskId,
+        to: TaskId,
+        from_part: Partition,
+        to_part: Partition,
+    ) -> f64 {
+        let bytes = dag.edge_bytes(from, to).unwrap_or(0);
+        if bytes == 0 || from_part.leader == to_part.leader {
+            return 0.0;
+        }
+        self.plat.edge_transfer_time(bytes, from_part, to_part)
+    }
+
+    /// Mean communication cost of `from → to` over cluster pairs — the
+    /// `c̄(i,j)` of the HEFT rank (partition-agnostic by definition).
+    fn mean_edge_cost(&self, dag: &TaoDag, from: TaskId, to: TaskId) -> f64 {
+        let bytes = dag.edge_bytes(from, to).unwrap_or(0);
+        if bytes == 0 {
+            return 0.0;
+        }
+        let clusters = &self.plat.topo.clusters;
+        let n = clusters.len() as f64;
+        let sum: f64 = clusters
+            .iter()
+            .flat_map(|a| {
+                clusters.iter().map(move |b| {
+                    self.plat.transfer_time(bytes, a.id == b.id, b.cache_bytes)
+                })
+            })
+            .sum();
+        sum / (n * n)
+    }
 }
 
 /// Mutable state of one list-scheduling pass: per-core availability
@@ -121,7 +165,9 @@ struct ListState<'a> {
     dag: &'a TaoDag,
     model: &'a CostModel,
     avail: Vec<f64>,
-    ready_time: Vec<f64>,
+    /// Model finish time of each committed task (data-arrival input for
+    /// the per-partition EST below).
+    finish: Vec<f64>,
     indeg: Vec<usize>,
     ready: Vec<TaskId>,
     assignment: Vec<Partition>,
@@ -138,7 +184,7 @@ impl<'a> ListState<'a> {
             dag,
             model,
             avail: vec![0.0; n_cores],
-            ready_time: vec![0.0; n],
+            finish: vec![0.0; n],
             indeg,
             ready,
             assignment: vec![Partition { leader: 0, width: 1 }; n],
@@ -146,24 +192,41 @@ impl<'a> ListState<'a> {
         }
     }
 
-    /// Earliest start of `t` on partition `pi`: data-ready time vs the
-    /// latest availability clock among the partition's cores
+    /// Earliest start of `t` on partition `pi`: data-arrival time (each
+    /// predecessor's finish plus the edge's transfer cost from where it
+    /// actually ran — `t` is ready, so every predecessor is committed) vs
+    /// the latest availability clock among the partition's cores
     /// (non-insertion variant — gaps are not back-filled, matching the
     /// runtime's work-conserving queues).
     fn est(&self, t: TaskId, pi: usize) -> f64 {
-        self.model.parts[pi]
-            .cores()
-            .fold(self.ready_time[t], |acc, c| acc.max(self.avail[c]))
+        let part = self.model.parts[pi];
+        let data_ready = self.dag.nodes[t].preds.iter().fold(0.0f64, |acc, &p| {
+            acc.max(
+                self.finish[p]
+                    + self.model.edge_cost(self.dag, p, t, self.assignment[p], part),
+            )
+        });
+        part.cores().fold(data_ready, |acc, c| acc.max(self.avail[c]))
     }
 
     /// Min-EFT partition for `t`; strict `<` keeps the first (smallest
     /// leader, then narrowest width — `all_partitions` order) on ties,
     /// so plans are deterministic.
     fn best_eft(&self, t: TaskId) -> (usize, f64) {
+        self.best_eft_biased(t, |_| 0.0)
+    }
+
+    /// Min of `EFT + bias(partition)` for `t`, returning the *actual* EFT
+    /// of the argmin (PEFT's `O_EFT = EFT + OCT` selection rule; a zero
+    /// bias is plain EFT).
+    fn best_eft_biased(&self, t: TaskId, bias: impl Fn(usize) -> f64) -> (usize, f64) {
         let mut best = (0usize, f64::INFINITY);
+        let mut best_score = f64::INFINITY;
         for pi in 0..self.model.parts.len() {
             let eft = self.est(t, pi) + self.model.node_cost(self.dag, t, pi);
-            if eft < best.1 {
+            let score = eft + bias(pi);
+            if score < best_score {
+                best_score = score;
                 best = (pi, eft);
             }
         }
@@ -175,6 +238,7 @@ impl<'a> ListState<'a> {
     fn commit(&mut self, t: TaskId, pi: usize, eft: f64) {
         let part = self.model.parts[pi];
         self.assignment[t] = part;
+        self.finish[t] = eft;
         for c in part.cores() {
             self.avail[c] = eft;
         }
@@ -183,7 +247,6 @@ impl<'a> ListState<'a> {
         self.ready.swap_remove(pos);
         let succs = self.dag.nodes[t].succs.clone();
         for succ in succs {
-            self.ready_time[succ] = self.ready_time[succ].max(eft);
             self.indeg[succ] -= 1;
             if self.indeg[succ] == 0 {
                 self.ready.push(succ);
@@ -194,13 +257,15 @@ impl<'a> ListState<'a> {
 
 /// Shared loop of the rank-based planners (HEFT, PEFT): repeatedly take
 /// the ready task with the highest `priority` (ties: lowest task id) and
-/// place it on its min-EFT partition.
+/// place it on the partition minimising `EFT + bias(task, partition)`
+/// (HEFT passes a zero bias — plain min-EFT; PEFT passes its OCT).
 fn schedule_by_priority(
     planner: &'static str,
     dag: &TaoDag,
     model: &CostModel,
     n_cores: usize,
     priority: &[f64],
+    bias: impl Fn(TaskId, usize) -> f64,
 ) -> Plan {
     let mut st = ListState::new(dag, model, n_cores);
     while !st.ready.is_empty() {
@@ -211,49 +276,67 @@ fn schedule_by_priority(
                 pick = t;
             }
         }
-        let (pi, eft) = st.best_eft(pick);
+        let (pi, eft) = st.best_eft_biased(pick, |p| bias(pick, p));
         st.commit(pick, pi, eft);
     }
     Plan { planner, assignment: st.assignment, predicted_makespan: st.makespan }
 }
 
-/// HEFT/DLS upward rank (a.k.a. static level without communication):
-/// `rank[i] = w̄(i) + max over successors rank`, computed in reverse
-/// topological order.
+/// HEFT/DLS upward rank (static level): `rank[i] = w̄(i) + max over
+/// successors (c̄(i,s) + rank[s])`, computed in reverse topological order
+/// with the mean transfer cost `c̄` over cluster pairs.
 fn upward_rank(dag: &TaoDag, model: &CostModel) -> Vec<f64> {
     let order = dag.topo_order().expect("planner needs an acyclic DAG");
     let mut rank = vec![0.0f64; dag.len()];
     for &t in order.iter().rev() {
-        let succ_max =
-            dag.nodes[t].succs.iter().fold(0.0f64, |acc, &s| acc.max(rank[s]));
+        let succ_max = dag.nodes[t]
+            .succs
+            .iter()
+            .fold(0.0f64, |acc, &s| acc.max(model.mean_edge_cost(dag, t, s) + rank[s]));
         rank[t] = model.mean_cost(dag, t) + succ_max;
     }
     rank
 }
 
-/// PEFT optimistic cost table. With no communication costs the OCT is
-/// partition-independent: `OCT(i) = max over successors
-/// (OCT(s) + min_cost(s))`, 0 at exits.
-fn optimistic_cost(dag: &TaoDag, model: &CostModel) -> Vec<f64> {
+/// PEFT optimistic cost table, per `(task, partition)`:
+/// `OCT(i, p) = max over successors s of min over partitions q of
+/// (OCT(s, q) + cost(s, q) + c(i→s, p, q))`, 0 at exits. With byte-free
+/// edges every column is identical (the historical degenerate case).
+fn optimistic_cost(dag: &TaoDag, model: &CostModel) -> Vec<Vec<f64>> {
     let order = dag.topo_order().expect("planner needs an acyclic DAG");
-    let mut oct = vec![0.0f64; dag.len()];
+    let np = model.parts.len();
+    let mut oct = vec![vec![0.0f64; np]; dag.len()];
     for &t in order.iter().rev() {
-        oct[t] = dag.nodes[t]
-            .succs
-            .iter()
-            .fold(0.0f64, |acc, &s| acc.max(oct[s] + model.min_cost(dag, s)));
+        for pi in 0..np {
+            let from_part = model.parts[pi];
+            oct[t][pi] = dag.nodes[t].succs.iter().fold(0.0f64, |acc, &s| {
+                let best = (0..np)
+                    .map(|pj| {
+                        oct[s][pj]
+                            + model.node_cost(dag, s, pj)
+                            + model.edge_cost(dag, t, s, from_part, model.parts[pj])
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                acc.max(best)
+            });
+        }
     }
     oct
 }
 
 fn heft(dag: &TaoDag, model: &CostModel, n_cores: usize) -> Plan {
     let rank = upward_rank(dag, model);
-    schedule_by_priority("heft", dag, model, n_cores, &rank)
+    schedule_by_priority("heft", dag, model, n_cores, &rank, |_, _| 0.0)
 }
 
 fn peft(dag: &TaoDag, model: &CostModel, n_cores: usize) -> Plan {
     let oct = optimistic_cost(dag, model);
-    schedule_by_priority("peft", dag, model, n_cores, &oct)
+    // Priority = mean OCT over partitions (the paper's rank_oct).
+    let rank: Vec<f64> = oct
+        .iter()
+        .map(|row| row.iter().sum::<f64>() / row.len().max(1) as f64)
+        .collect();
+    schedule_by_priority("peft", dag, model, n_cores, &rank, |t, pi| oct[t][pi])
 }
 
 /// DLS: at every step pick the `(ready task, partition)` pair maximising
@@ -443,6 +526,57 @@ mod tests {
     }
 
     #[test]
+    fn est_charges_cross_cluster_data_movement() {
+        let plat = tx2();
+        let mut dag = TaoDag::new();
+        let a = dag.add_task(KernelClass::MatMul, 0, 1.0);
+        let b = dag.add_task(KernelClass::MatMul, 0, 1.0);
+        dag.add_edge_bytes(a, b, 64 << 20);
+        dag.finalize().unwrap();
+        let model = CostModel::new(&plat);
+        let mut st = ListState::new(&dag, &model, plat.topo.n_cores());
+        let part_idx = |leader: usize| {
+            model.parts.iter().position(|p| p.leader == leader && p.width == 1).unwrap()
+        };
+        // Commit A on denver core 0, finishing at t = 1.
+        st.commit(a, part_idx(0), 1.0);
+        // Consuming on the producer's leader is free; a sibling core in
+        // the same cluster pays cache-to-cache bandwidth; the other
+        // cluster pays the hop plus (spilled) DRAM bandwidth.
+        let local = st.est(b, part_idx(0));
+        let same_cluster = st.est(b, part_idx(1));
+        let cross = st.est(b, part_idx(2));
+        assert!((local - 1.0).abs() < 1e-12, "co-located data must be free: {local}");
+        assert!(same_cluster > 1.0);
+        assert!(cross > same_cluster, "{cross} vs {same_cluster}");
+    }
+
+    #[test]
+    fn peft_oct_is_partition_dependent_with_data_bytes() {
+        let plat = tx2();
+        let mut dag = TaoDag::new();
+        let a = dag.add_task(KernelClass::MatMul, 0, 1.0);
+        let b = dag.add_task(KernelClass::MatMul, 0, 1.0);
+        dag.add_edge_bytes(a, b, 64 << 20);
+        dag.finalize().unwrap();
+        let model = CostModel::new(&plat);
+        let oct = optimistic_cost(&dag, &model);
+        assert!(
+            oct[a].iter().any(|&v| (v - oct[a][0]).abs() > 1e-12),
+            "with data bytes the OCT must vary by partition: {:?}",
+            oct[a]
+        );
+        // Byte-free edges keep the historical degenerate (uniform) OCT.
+        let mut dag0 = TaoDag::new();
+        let a0 = dag0.add_task(KernelClass::MatMul, 0, 1.0);
+        let b0 = dag0.add_task(KernelClass::MatMul, 0, 1.0);
+        dag0.add_edge(a0, b0);
+        dag0.finalize().unwrap();
+        let oct0 = optimistic_cost(&dag0, &model);
+        assert!(oct0[a0].iter().all(|&v| (v - oct0[a0][0]).abs() < 1e-15));
+    }
+
+    #[test]
     fn independent_tasks_spread_across_the_machine() {
         // 12 independent tasks on 6 cores: any planner must beat the
         // serial schedule by a wide margin.
@@ -511,17 +645,17 @@ mod tests {
         assert_eq!(pol.name(), "heft");
         assert_eq!(pol.planned_tasks(), 0);
         assert!(!pol.uses_ptt());
-        let ctx = PlaceCtx {
-            core: 3,
-            task: 17,
-            type_id: 0,
-            critical: true,
-            app_id: 0,
-            qos: Default::default(),
-            ptt: &ptt,
-            topo: &plat.topo,
-            now: 0.0,
-        };
+        let ctx = PlaceCtx::new(
+            TaskView {
+                task: 17,
+                type_id: 0,
+                critical: true,
+                max_width: usize::MAX,
+                app_id: 0,
+                qos: Default::default(),
+            },
+            EngineView { core: 3, ptt: &ptt, topo: &plat.topo, now: 0.0 },
+        );
         assert_eq!(pol.place(&ctx), Partition { leader: 3, width: 1 });
     }
 }

@@ -244,6 +244,45 @@ mod tests {
     }
 
     #[test]
+    fn per_class_minima_cover_wide_partitions() {
+        // Soundness under moldable (width > 1) placements: the bound
+        // charges each class the minimum over *all* partitions, so it can
+        // never exceed what a width-1-only bound would charge — and for
+        // bandwidth-heavy classes the wide partition is strictly cheaper
+        // (Copy's tx2 winner is the quad A57, pinned in the figure-1 test
+        // above), so elastic schedules that go wide stay above the bound
+        // by construction rather than by luck.
+        let plat = tx2();
+        let (best_cost, best_core_secs) = best_class_costs(&plat);
+        let mut some_class_wins_wide = false;
+        for class in KernelClass::ALL {
+            let w1_best = plat
+                .topo
+                .all_partitions()
+                .into_iter()
+                .filter(|p| p.width == 1)
+                .map(|p| plat.ideal_exec_time(class, p))
+                .fold(f64::INFINITY, f64::min);
+            let i = class.index();
+            assert!(
+                best_cost[i] <= w1_best + 1e-18,
+                "{class:?}: all-width min {} above width-1 min {w1_best}",
+                best_cost[i]
+            );
+            // Width-1 core-seconds equal width-1 time, so the area charge
+            // is also no worse than a width-1-only bound's.
+            assert!(best_core_secs[i] <= w1_best + 1e-18);
+            if best_cost[i] < w1_best - 1e-15 {
+                some_class_wins_wide = true;
+            }
+        }
+        assert!(
+            some_class_wins_wide,
+            "no class prefers a wide partition on tx2 — the width>1 case is untested"
+        );
+    }
+
+    #[test]
     fn chain_is_cp_bound_and_bag_is_area_bound() {
         let plat = tx2();
         let chain = chain_dag(8, KernelClass::MatMul);

@@ -57,9 +57,9 @@ pub use metrics::{
 };
 pub use ptt::Ptt;
 pub use scheduler::{
-    CatsLike, DheftLike, EnergyMinimizing, FAIRNESS_SETPOINT, HomogeneousWs, POLICIES,
-    PerformanceBased, PlaceCtx, Policy, PolicyInfo, PttAdaptive, PttServing, QosClass,
-    policy_by_name, policy_names,
+    CatsLike, DheftLike, EnergyMinimizing, EngineView, FAIRNESS_SETPOINT, HomogeneousWs,
+    POLICIES, PerformanceBased, PlaceCtx, Policy, PolicyInfo, PttAdaptive, PttElastic,
+    PttServing, QosClass, TaskView, policy_by_name, policy_names,
 };
 pub use tao::{NopPayload, TaoPayload, payload_fn};
 pub use worker::{RealEngineOpts, run_dag_real, run_serving_real, run_stream_real};

@@ -354,18 +354,46 @@ impl Ptt {
     /// forcing exploration. Deterministic tie-break: first in
     /// `Topology::all_partitions` order.
     pub fn best_global(&self, type_id: usize, topo: &Topology) -> (Partition, f64) {
-        self.best_over(type_id, topo.all_partitions())
-            .expect("topology has at least one partition")
+        self.best_global_capped(type_id, topo, usize::MAX)
+    }
+
+    /// [`Ptt::best_global`] restricted to partitions no wider than
+    /// `max_width` — the moldability cap of the task being placed
+    /// ([`crate::coordinator::dag::TaoNode::max_width`]). Width 1 always
+    /// survives the cap, so the search stays total.
+    pub fn best_global_capped(
+        &self,
+        type_id: usize,
+        topo: &Topology,
+        max_width: usize,
+    ) -> (Partition, f64) {
+        self.best_over(
+            type_id,
+            topo.all_partitions().into_iter().filter(|p| p.width <= max_width),
+        )
+        .expect("topology has at least one width-1 partition")
     }
 
     /// **Local width search** (non-critical tasks, §3.3): the task stays
     /// near `core`; only the width of the partition *containing* `core` is
     /// chosen, reading the leader's entries. Minimises `time × width`.
     pub fn best_width_for(&self, type_id: usize, core: CoreId, topo: &Topology) -> (Partition, f64) {
+        self.best_width_for_capped(type_id, core, topo, usize::MAX)
+    }
+
+    /// [`Ptt::best_width_for`] restricted to enclosing partitions no wider
+    /// than `max_width` (the task's moldability cap).
+    pub fn best_width_for_capped(
+        &self,
+        type_id: usize,
+        core: CoreId,
+        topo: &Topology,
+        max_width: usize,
+    ) -> (Partition, f64) {
         let cluster = topo.cluster_of(core);
         self.best_over(
             type_id,
-            cluster.valid_widths().into_iter().map(|w| {
+            cluster.valid_widths().into_iter().filter(|&w| w <= max_width).map(|w| {
                 topo.enclosing_partition(core, w)
                     .expect("cluster width must yield an enclosing partition")
             }),
@@ -385,9 +413,22 @@ impl Ptt {
         topo: &Topology,
         avoid: impl Fn(CoreId) -> bool,
     ) -> Option<(Partition, f64)> {
+        self.best_global_capped_avoiding(type_id, topo, usize::MAX, avoid)
+    }
+
+    /// [`Ptt::best_global_avoiding`] with a moldability cap on the width.
+    pub fn best_global_capped_avoiding(
+        &self,
+        type_id: usize,
+        topo: &Topology,
+        max_width: usize,
+        avoid: impl Fn(CoreId) -> bool,
+    ) -> Option<(Partition, f64)> {
         self.best_over(
             type_id,
-            topo.all_partitions().into_iter().filter(|p| !p.cores().any(&avoid)),
+            topo.all_partitions()
+                .into_iter()
+                .filter(|p| p.width <= max_width && !p.cores().any(&avoid)),
         )
     }
 
@@ -405,12 +446,27 @@ impl Ptt {
         topo: &Topology,
         avoid: impl Fn(CoreId) -> bool,
     ) -> Option<(Partition, f64)> {
+        self.best_in_cluster_capped_avoiding(type_id, core, topo, usize::MAX, avoid)
+    }
+
+    /// [`Ptt::best_in_cluster_avoiding`] with a moldability cap on the
+    /// width.
+    pub fn best_in_cluster_capped_avoiding(
+        &self,
+        type_id: usize,
+        core: CoreId,
+        topo: &Topology,
+        max_width: usize,
+        avoid: impl Fn(CoreId) -> bool,
+    ) -> Option<(Partition, f64)> {
         let cluster = topo.cluster_of(core).id;
         self.best_over(
             type_id,
-            topo.all_partitions()
-                .into_iter()
-                .filter(|p| topo.cluster_of(p.leader).id == cluster && !p.cores().any(&avoid)),
+            topo.all_partitions().into_iter().filter(|p| {
+                p.width <= max_width
+                    && topo.cluster_of(p.leader).id == cluster
+                    && !p.cores().any(&avoid)
+            }),
         )
     }
 

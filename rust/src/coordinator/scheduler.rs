@@ -86,10 +86,14 @@ impl QosClass {
     }
 }
 
-/// Everything a policy may consult when placing one task.
-pub struct PlaceCtx<'a> {
-    /// Core making the decision (the one that popped/stole the task).
-    pub core: CoreId,
+/// Task-side half of a placement decision: *what* is being placed.
+///
+/// Grouped so [`PlaceCtx::new`] is the single construction seam for the
+/// policy input — adding a field here breaks every call site at compile
+/// time instead of silently defaulting through a struct literal (the
+/// literal churn that caused the missing-`qos` bug fixed in 6a05946).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskView {
     /// Task id within the running DAG (global id for multi-app streams).
     /// Online policies ignore it; the plan-ahead policies
     /// ([`super::list_sched::PlannedPolicy`]) use it to replay a
@@ -100,6 +104,10 @@ pub struct PlaceCtx<'a> {
     /// Criticality as determined at wake-up time (§3.3; initial tasks are
     /// non-critical).
     pub critical: bool,
+    /// Moldability cap ([`super::dag::TaoNode::max_width`]): the widest
+    /// partition the kernel can exploit. Elastic policies never choose a
+    /// wider one; width-1 policies ignore it.
+    pub max_width: usize,
     /// Submitting application (0 for single-DAG runs). Policies may use
     /// the app dimension to reason about co-running workloads — e.g. to
     /// compare how [`PerformanceBased`] isolates a foreground app from an
@@ -108,10 +116,62 @@ pub struct PlaceCtx<'a> {
     /// The submitting application's QoS class ([`QosClass::default`] for
     /// finite experiment runs — only the serving layer assigns classes).
     pub qos: QosClass,
+}
+
+/// Engine-side half of a placement decision: *who* decides, with what
+/// learned state, at what time.
+pub struct EngineView<'a> {
+    /// Core making the decision (the one that popped/stole the task).
+    pub core: CoreId,
     pub ptt: &'a Ptt,
     pub topo: &'a Topology,
     /// Engine time in seconds (virtual in sim, wall in real mode).
     pub now: f64,
+}
+
+/// Everything a policy may consult when placing one task. Built **only**
+/// through [`PlaceCtx::new`] — no struct literals at call sites (the
+/// repo's tests grep-enforce this), so the two grouped views stay the
+/// whole construction vocabulary.
+pub struct PlaceCtx<'a> {
+    /// Core making the decision (the one that popped/stole the task).
+    pub core: CoreId,
+    /// See [`TaskView::task`].
+    pub task: usize,
+    /// TAO type (PTT row group).
+    pub type_id: usize,
+    /// See [`TaskView::critical`].
+    pub critical: bool,
+    /// See [`TaskView::max_width`].
+    pub max_width: usize,
+    /// See [`TaskView::app_id`].
+    pub app_id: usize,
+    /// See [`TaskView::qos`].
+    pub qos: QosClass,
+    pub ptt: &'a Ptt,
+    pub topo: &'a Topology,
+    /// Engine time in seconds (virtual in sim, wall in real mode).
+    pub now: f64,
+}
+
+impl<'a> PlaceCtx<'a> {
+    /// The required constructor: the task half and the engine half, no
+    /// field soup. Keep this the only `PlaceCtx { .. }` literal in the
+    /// tree.
+    pub fn new(task: TaskView, engine: EngineView<'a>) -> PlaceCtx<'a> {
+        PlaceCtx {
+            core: engine.core,
+            task: task.task,
+            type_id: task.type_id,
+            critical: task.critical,
+            max_width: task.max_width.max(1),
+            app_id: task.app_id,
+            qos: task.qos,
+            ptt: engine.ptt,
+            topo: engine.topo,
+            now: engine.now,
+        }
+    }
 }
 
 /// A placement policy.
@@ -121,8 +181,10 @@ pub trait Policy: Send + Sync {
     /// Decide the partition for one ready task.
     fn place(&self, ctx: &PlaceCtx<'_>) -> Partition;
 
-    /// Completion hook (time bookkeeping for EFT-style baselines).
-    fn on_complete(&self, _leader: CoreId, _width: usize, _exec_time: f64, _now: f64) {}
+    /// Completion hook (time bookkeeping for EFT-style baselines). Speaks
+    /// the same placement vocabulary as [`Policy::place`]: the `Partition`
+    /// the task actually ran on.
+    fn on_complete(&self, _part: Partition, _exec_time: f64, _now: f64) {}
 
     /// Fairness feedback hook (serving mode): the driver periodically
     /// reports the rolling Jain index over per-app progress plus, per
@@ -348,6 +410,94 @@ impl Policy for PttServing {
 }
 
 // ---------------------------------------------------------------------------
+// Elastic moldable-width scheduler (ROADMAP item 3)
+// ---------------------------------------------------------------------------
+
+/// Elastic width selection under the task's moldability cap — XiTAO's
+/// defining mechanism (paper §2–§3) made a first-class policy.
+///
+/// Decision rule:
+/// - **Critical tasks** search the whole machine for the partition
+///   minimising `time × width`, restricted to widths ≤ the task's
+///   [`TaskView::max_width`] and to partitions touching **no flagged or
+///   dead core** — wide teams only form on clusters whose estimates are
+///   trustworthy and uncontended. If every partition touches a flagged
+///   core there is no safe harbour for a team, so the task *narrows all
+///   the way to width 1* and takes the globally best single slot.
+/// - **Non-critical tasks** keep the paper's cheap local search (width of
+///   the partition enclosing the deciding core), capped by moldability.
+///   When the deciding core itself is flagged or dead the task narrows to
+///   width 1 and escapes within its cluster (a team assembled around an
+///   interfered core would convoy every member on the straggler).
+///
+/// Narrowing triggers, in order of precedence:
+/// 1. **Serving backpressure** — while the rolling Jain index reported
+///    through [`Policy::on_fairness`] sits below [`FAIRNESS_SETPOINT`],
+///    *every* decision is capped at width 1: under fairness pressure,
+///    occupying `w` cores for one tenant's task is exactly the
+///    monopolisation the serving layer is trying to undo.
+/// 2. **Interference/fault flags** — per the rule above.
+/// 3. **Moldability** — the kernel's own `max_width` bounds everything.
+///
+/// With an unflagged machine, no backpressure, and fully moldable tasks
+/// this makes exactly [`PerformanceBased`]'s decisions.
+#[derive(Debug)]
+pub struct PttElastic {
+    /// Rolling fairness is below [`FAIRNESS_SETPOINT`] (narrow to width 1).
+    backpressure: AtomicBool,
+}
+
+impl PttElastic {
+    pub fn new() -> PttElastic {
+        PttElastic { backpressure: AtomicBool::new(false) }
+    }
+}
+
+impl Default for PttElastic {
+    fn default() -> PttElastic {
+        PttElastic::new()
+    }
+}
+
+impl Policy for PttElastic {
+    fn name(&self) -> &'static str {
+        "ptt-elastic"
+    }
+
+    fn place(&self, ctx: &PlaceCtx<'_>) -> Partition {
+        let cap =
+            if self.backpressure.load(Ordering::Relaxed) { 1 } else { ctx.max_width };
+        let flagged = |c: CoreId| ctx.ptt.core_flagged(c) || ctx.ptt.core_dead(c);
+        if ctx.critical {
+            if let Some((p, _)) =
+                ctx.ptt.best_global_capped_avoiding(ctx.type_id, ctx.topo, cap, flagged)
+            {
+                return p;
+            }
+            // Fully flagged machine: no trustworthy home for a team.
+            ctx.ptt.best_global_capped(ctx.type_id, ctx.topo, 1).0
+        } else {
+            if flagged(ctx.core) {
+                if let Some((p, _)) = ctx.ptt.best_in_cluster_capped_avoiding(
+                    ctx.type_id,
+                    ctx.core,
+                    ctx.topo,
+                    1,
+                    flagged,
+                ) {
+                    return p;
+                }
+            }
+            ctx.ptt.best_width_for_capped(ctx.type_id, ctx.core, ctx.topo, cap).0
+        }
+    }
+
+    fn on_fairness(&self, jain: f64, _monopolist: &[Option<usize>]) {
+        self.backpressure.store(jain < FAIRNESS_SETPOINT, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Homogeneous random-work-stealing baseline
 // ---------------------------------------------------------------------------
 
@@ -460,12 +610,12 @@ impl Policy for DheftLike {
         best
     }
 
-    fn on_complete(&self, leader: CoreId, _width: usize, _exec_time: f64, now: f64) {
+    fn on_complete(&self, part: Partition, _exec_time: f64, now: f64) {
         // The task finished; the core is free from `now` (the optimistic
         // reservation may have drifted under contention).
-        let cur = self.avail_of(leader);
+        let cur = self.avail_of(part.leader);
         if now > cur {
-            self.bump(leader, now);
+            self.bump(part.leader, now);
         }
     }
 }
@@ -528,22 +678,31 @@ impl Policy for EnergyMinimizing {
 pub struct PolicyInfo {
     pub name: &'static str,
     pub aliases: &'static [&'static str],
+    /// Width capability: `"1"` = always width 1; `"all"` = PTT searches
+    /// over every valid width, ignoring the task's moldability cap;
+    /// `"elastic"` = searches over widths *capped by task moldability*
+    /// with narrowing triggers; `"plan"` = an offline plan fixes each
+    /// task's partition (any width) ahead of time. Listed by
+    /// `repro policies` so capability and behavior cannot drift.
+    pub widths: &'static str,
     pub description: &'static str,
 }
 
 /// The policy registry, in presentation order. [`policy_by_name`] resolves
 /// through this same table, so the CLI listing and the accepted names
 /// cannot drift.
-pub const POLICIES: [PolicyInfo; 11] = [
+pub const POLICIES: [PolicyInfo; 12] = [
     PolicyInfo {
         name: "performance-based",
         aliases: &["performance", "ptt"],
+        widths: "all",
         description: "the paper's §3.3 scheduler: critical tasks search the PTT globally, \
                       non-critical tasks pick the best local width",
     },
     PolicyInfo {
         name: "ptt-adaptive",
         aliases: &["adaptive", "pttv2"],
+        widths: "all",
         description: "performance-based + PTT v2 change detection: critical tasks avoid \
                       flagged (interfered) cores, non-critical tasks widen the local search \
                       when their own core is flagged",
@@ -551,36 +710,50 @@ pub const POLICIES: [PolicyInfo; 11] = [
     PolicyInfo {
         name: "ptt-serving",
         aliases: &["serving"],
+        widths: "all",
         description: "performance-based + fairness feedback (serving mode): when the rolling \
                       Jain index dips below the setpoint, the monopolising tenant is biased \
                       off the cores it monopolises",
     },
     PolicyInfo {
+        name: "ptt-elastic",
+        aliases: &["elastic", "moldable"],
+        widths: "elastic",
+        description: "moldable-width scheduling: critical tasks go wide (≤ the kernel's \
+                      moldability cap) on unflagged clusters, narrowing to width 1 under \
+                      interference flags or serving backpressure",
+    },
+    PolicyInfo {
         name: "homogeneous-ws",
         aliases: &["homogeneous", "ws"],
+        widths: "1",
         description: "XiTAO's default random work stealing at width 1, PTT-unaware (§5 baseline)",
     },
     PolicyInfo {
         name: "cats-like",
         aliases: &["cats"],
+        widths: "1",
         description: "criticality-aware baseline (§6): critical tasks to the learned-fastest \
                       cluster, width 1",
     },
     PolicyInfo {
         name: "dheft-like",
         aliases: &["dheft"],
+        widths: "1",
         description: "dynamic-HEFT baseline (§6): earliest-finish-time placement from learned \
                       width-1 latencies",
     },
     PolicyInfo {
         name: "energy-minimizing",
         aliases: &["energy"],
+        widths: "all",
         description: "§3.3's alternative objective: minimise exec_time × partition power \
                       (joules per task)",
     },
     PolicyInfo {
         name: "heft",
         aliases: &["heft-static"],
+        widths: "plan",
         description: "offline HEFT: whole-DAG upward-rank plan against the episode-free \
                       analytic model, replayed at place() time (the online dheft-like \
                       baseline stays separate)",
@@ -588,18 +761,21 @@ pub const POLICIES: [PolicyInfo; 11] = [
     PolicyInfo {
         name: "peft",
         aliases: &["peft-static"],
+        widths: "plan",
         description: "offline PEFT: optimistic-cost-table priorities with EFT placement \
                       from a whole-DAG plan",
     },
     PolicyInfo {
         name: "dls",
         aliases: &["dls-static"],
+        widths: "plan",
         description: "offline dynamic-level scheduling: joint (task, partition) argmax of \
                       static level minus earliest start time",
     },
     PolicyInfo {
         name: "portfolio",
         aliases: &["plan-portfolio"],
+        widths: "plan",
         description: "plans each DAG with every offline planner (heft/peft/dls) and keeps \
                       the best predicted makespan",
     },
@@ -619,6 +795,7 @@ pub fn policy_by_name(name: &str, n_cores: usize) -> Option<Box<dyn Policy>> {
         "performance-based" => Box::new(PerformanceBased),
         "ptt-adaptive" => Box::new(PttAdaptive::new(n_cores)),
         "ptt-serving" => Box::new(PttServing::new(n_cores)),
+        "ptt-elastic" => Box::new(PttElastic::new()),
         "homogeneous-ws" => Box::new(HomogeneousWs),
         "cats-like" => Box::new(CatsLike::default()),
         "dheft-like" => Box::new(DheftLike::new(n_cores)),
@@ -649,17 +826,17 @@ mod tests {
         ptt: &'a Ptt,
         topo: &'a Topology,
     ) -> PlaceCtx<'a> {
-        PlaceCtx {
-            core,
-            task: 0,
-            type_id: 0,
-            critical,
-            app_id: 0,
-            qos: QosClass::default(),
-            ptt,
-            topo,
-            now: 0.0,
-        }
+        PlaceCtx::new(
+            TaskView {
+                task: 0,
+                type_id: 0,
+                critical,
+                max_width: usize::MAX,
+                app_id: 0,
+                qos: QosClass::default(),
+            },
+            EngineView { core, ptt, topo, now: 0.0 },
+        )
     }
 
     #[test]
@@ -809,6 +986,8 @@ mod tests {
             ("cats", "cats-like"),
             ("dheft", "dheft-like"),
             ("energy", "energy-minimizing"),
+            ("elastic", "ptt-elastic"),
+            ("moldable", "ptt-elastic"),
         ] {
             assert_eq!(policy_by_name(n, 4).unwrap().name(), expect);
         }
@@ -997,15 +1176,18 @@ mod tests {
         mono[0] = Some(7usize);
         serving.on_fairness(0.4, &mono);
         // The monopolist's critical task is steered off core 0...
-        let c7 = PlaceCtx { app_id: 7, ..ctx(5, true, &ptt, &topo) };
+        let mut c7 = ctx(5, true, &ptt, &topo);
+        c7.app_id = 7;
         let p = serving.place(&c7);
         assert!(!p.contains(0), "monopolist kept its core: {p:?}");
         // ...while another tenant still gets the fast core.
-        let c3 = PlaceCtx { app_id: 3, ..ctx(5, true, &ptt, &topo) };
+        let mut c3 = ctx(5, true, &ptt, &topo);
+        c3.app_id = 3;
         assert_eq!(serving.place(&c3).leader, 0);
         // The monopolist's non-critical task escapes its own monopolised
         // core (cluster-local).
-        let nc7 = PlaceCtx { app_id: 7, ..ctx(0, false, &ptt, &topo) };
+        let mut nc7 = ctx(0, false, &ptt, &topo);
+        nc7.app_id = 7;
         let p = serving.place(&nc7);
         assert!(!p.contains(0), "{p:?}");
         assert_eq!(topo.cluster_of(p.leader).id, 0, "stays in its cluster: {p:?}");
@@ -1025,7 +1207,154 @@ mod tests {
                 assert_eq!(policy_by_name(alias, 4).unwrap().name(), info.name);
             }
             assert!(!info.description.is_empty());
+            assert!(
+                ["1", "all", "elastic", "plan"].contains(&info.widths),
+                "unknown widths capability {:?} for {}",
+                info.widths,
+                info.name
+            );
         }
         assert_eq!(policy_names().len(), POLICIES.len());
+        // The capability column must agree with the flagship rows.
+        let widths_of = |name: &str| POLICIES.iter().find(|p| p.name == name).unwrap().widths;
+        assert_eq!(widths_of("ptt-elastic"), "elastic");
+        assert_eq!(widths_of("homogeneous-ws"), "1");
+        assert_eq!(widths_of("heft"), "plan");
+    }
+
+    #[test]
+    fn elastic_matches_performance_based_when_unconstrained() {
+        // Fully moldable tasks, no flags, no backpressure: the elastic
+        // policy is exactly the paper scheduler.
+        let topo = tx2();
+        for train in [false, true] {
+            let ptt = Ptt::new(1, &topo);
+            if train {
+                for p in topo.all_partitions() {
+                    ptt.update(0, p.leader, p.width, 1.0);
+                }
+                for _ in 0..50 {
+                    ptt.update(0, 0, 2, 0.05);
+                }
+            }
+            let elastic = PttElastic::new();
+            for core in 0..topo.n_cores() {
+                for critical in [false, true] {
+                    let c = ctx(core, critical, &ptt, &topo);
+                    assert_eq!(
+                        elastic.place(&c),
+                        PerformanceBased.place(&c),
+                        "core {core} critical {critical} train {train}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_honors_moldability_cap() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        // Width 4 on the a57 quad looks unbeatable (time × width = 0.04)...
+        for _ in 0..50 {
+            ptt.update(0, 2, 4, 0.01);
+        }
+        let elastic = PttElastic::new();
+        let wide = elastic.place(&ctx(5, true, &ptt, &topo));
+        assert_eq!((wide.leader, wide.width), (2, 4));
+        // ...but a kernel molded to at most 2 lanes may not use it.
+        for cap in [1usize, 2] {
+            for core in 0..topo.n_cores() {
+                for critical in [false, true] {
+                    let mut c = ctx(core, critical, &ptt, &topo);
+                    c.max_width = cap;
+                    let p = elastic.place(&c);
+                    assert!(
+                        p.width <= cap,
+                        "cap {cap} core {core} critical {critical}: got {p:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_narrows_under_interference_flags() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        // The a57 quad team is the trained winner...
+        for _ in 0..50 {
+            ptt.update(0, 2, 4, 0.01);
+        }
+        let elastic = PttElastic::new();
+        assert_eq!(elastic.place(&ctx(5, true, &ptt, &topo)).width, 4);
+        // ...until core 3 (a team member) gets flagged: critical tasks must
+        // not assemble a team across the interfered core.
+        for _ in 0..2 {
+            ptt.update(0, 3, 1, 5.0);
+        }
+        assert!(ptt.core_flagged(3));
+        let p = elastic.place(&ctx(5, true, &ptt, &topo));
+        assert!(!p.contains(3), "team spans the flagged core: {p:?}");
+        // A non-critical task deciding on the flagged core narrows to
+        // width 1 and escapes it (cluster-local).
+        let p = elastic.place(&ctx(3, false, &ptt, &topo));
+        assert!(!p.contains(3), "{p:?}");
+        assert_eq!(p.width, 1, "must narrow under interference: {p:?}");
+        assert_eq!(topo.cluster_of(p.leader).id, 1, "stays in its cluster: {p:?}");
+    }
+
+    #[test]
+    fn elastic_narrows_under_serving_backpressure() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        for p in topo.all_partitions() {
+            ptt.update(0, p.leader, p.width, 1.0);
+        }
+        for _ in 0..50 {
+            ptt.update(0, 2, 4, 0.01); // wide team is the trained winner
+        }
+        let elastic = PttElastic::new();
+        assert_eq!(elastic.place(&ctx(5, true, &ptt, &topo)).width, 4);
+        // Fairness collapses: every decision narrows to width 1.
+        elastic.on_fairness(FAIRNESS_SETPOINT - 0.2, &[]);
+        for core in 0..topo.n_cores() {
+            for critical in [false, true] {
+                let p = elastic.place(&ctx(core, critical, &ptt, &topo));
+                assert_eq!(p.width, 1, "core {core} critical {critical}: {p:?}");
+            }
+        }
+        // Recovery restores wide placement.
+        elastic.on_fairness(FAIRNESS_SETPOINT + 0.1, &[]);
+        assert_eq!(elastic.place(&ctx(5, true, &ptt, &topo)).width, 4);
+    }
+
+    #[test]
+    fn place_ctx_new_clamps_degenerate_cap() {
+        let topo = tx2();
+        let ptt = Ptt::new(1, &topo);
+        let mut c = ctx(0, true, &ptt, &topo);
+        assert_eq!(c.max_width, usize::MAX);
+        c.max_width = 1;
+        assert_eq!(PttElastic::new().place(&c).width, 1);
+        // A zero cap coming through the seam is clamped to 1, never 0.
+        let z = PlaceCtx::new(
+            TaskView {
+                task: 0,
+                type_id: 0,
+                critical: true,
+                max_width: 0,
+                app_id: 0,
+                qos: QosClass::default(),
+            },
+            EngineView { core: 0, ptt: &ptt, topo: &topo, now: 0.0 },
+        );
+        assert_eq!(z.max_width, 1);
     }
 }

@@ -104,6 +104,9 @@ pub struct DagStats {
     pub parallelism: f64,
     /// Distinct data locations allocated per class (memory-reuse step).
     pub data_locations: HashMap<&'static str, usize>,
+    /// Total bytes moved along DAG edges (producer working sets handed to
+    /// consumers; drives the comm-cost terms in planners and perf model).
+    pub edge_bytes: u64,
 }
 
 /// Generate a random TAO-DAG. Returns the finalized DAG and its stats.
@@ -224,7 +227,15 @@ pub fn generate(params: &DagParams) -> (TaoDag, DagStats) {
     }
     for &(a, b) in &edges {
         if a != b {
-            dag.add_edge(a, b);
+            // Data item per edge: the producer hands its working set to the
+            // consumer. A consumer that reuses the producer's data location
+            // (memory step above) receives the full set; otherwise it reads
+            // a quarter-sized result slice. Duplicate edges keep the max.
+            let ws = classes[a].traits().working_set;
+            let same_loc =
+                classes[a].index() == classes[b].index() && loc_of[a] == loc_of[b];
+            let bytes = if same_loc { ws } else { ws / 4 };
+            dag.add_edge_bytes(a, b, bytes);
         }
     }
     dag.finalize().expect("layered construction is acyclic");
@@ -239,6 +250,7 @@ pub fn generate(params: &DagParams) -> (TaoDag, DagStats) {
             .iter()
             .map(|&(c, _)| (c.name(), next_loc.get(&c.index()).copied().unwrap_or(0)))
             .collect(),
+        edge_bytes: dag.total_edge_bytes(),
     };
     (dag, stats)
 }
@@ -320,6 +332,21 @@ mod tests {
         for (a, b) in d1.nodes.iter().zip(&d2.nodes) {
             assert_eq!(a.class, b.class);
             assert_eq!(a.succs, b.succs);
+            assert_eq!(a.succ_bytes, b.succ_bytes);
+        }
+    }
+
+    #[test]
+    fn edges_carry_data_bytes() {
+        let (dag, stats) = generate(&DagParams::mix(300, 4.0, 17));
+        assert!(stats.edge_bytes > 0, "generated DAG should move data");
+        assert_eq!(stats.edge_bytes, dag.total_edge_bytes());
+        // Every edge carries a positive data item (producer working sets
+        // are all non-zero, and the smallest quarter-slice is 12 KiB).
+        for n in &dag.nodes {
+            for &b in &n.succ_bytes {
+                assert!(b > 0);
+            }
         }
     }
 

@@ -24,6 +24,7 @@
 //!   repro bench-serving [--quick] [--json]                # serving ramp
 //!   repro bench-faults [--quick] [--json] [--backend sim|real|both]
 //!                                                         # fault-injection chaos harness
+//!   repro bench-elastic [--quick] [--json]                # moldable-width ablation
 //!   repro experiment [--quick] [--json] [--backend sim|real|both]
 //!                                                         # policy × scenario matrix
 //!
@@ -61,6 +62,7 @@ fn main() {
         "bench-interference" => cmd_bench_interference(&args),
         "bench-serving" => cmd_bench_serving(&args),
         "bench-faults" => cmd_bench_faults(&args),
+        "bench-elastic" => cmd_bench_elastic(&args),
         "experiment" => cmd_experiment(&args),
         "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
@@ -133,6 +135,12 @@ perf:       bench-overhead [--quick] [--json] [--compare] [--pressure]
              makespan inflation, recovery latency and tasks lost (must be
              0, exits non-zero otherwise); --json writes
              BENCH_fault_recovery.json at the repo root)
+            bench-elastic [--quick] [--json] [--seeds N] [--seed S]
+            (moldable-width ablation: ptt-elastic against a width-1-forced
+             twin of the same DAG/seed — scaling (hom64, biglittle44),
+             interference (interference20, dvfs8) and bandwidth-starved
+             (commbound-tx2) scenarios, sim backend; --json writes
+             BENCH_elastic.json at the repo root)
             experiment [--quick] [--json] [--backend sim|real|both]
             [--seeds N] [--tasks N] [--parallelism P] [--seed S]
             (the full policy × scenario matrix: every registered policy on
@@ -147,8 +155,18 @@ diag:       ptt-dump [--platform ...] [--tasks N]
 
 fn cmd_policies() -> i32 {
     println!("registered scheduling policies (run-dag/stream --policy <name-or-alias>):");
+    println!(
+        "(widths: 1 = fixed width 1; all = PTT width search, moldability ignored; \
+         elastic = moldability-capped + narrowing; plan = offline plan fixes partitions)"
+    );
     for p in xitao::coordinator::scheduler::POLICIES {
-        println!("  {:18} aliases: {:22} — {}", p.name, p.aliases.join(", "), p.description);
+        println!(
+            "  {:18} widths: {:8} aliases: {:22} — {}",
+            p.name,
+            p.widths,
+            p.aliases.join(", "),
+            p.description
+        );
     }
     0
 }
@@ -411,6 +429,18 @@ fn cmd_bench_faults(args: &Args) -> i32 {
         );
         return 1;
     }
+    0
+}
+
+fn cmd_bench_elastic(args: &Args) -> i32 {
+    let opts = xitao::bench::ElasticOpts {
+        quick: args.switch("quick"),
+        json: args.switch("json"),
+        seeds: args.get("seeds", 3),
+        seed: args.get("seed", 0xE7),
+        ..Default::default()
+    };
+    xitao::bench::emit_elastic(&opts);
     0
 }
 

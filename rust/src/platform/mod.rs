@@ -15,6 +15,9 @@ pub mod scenarios;
 pub mod topology;
 
 pub use episodes::{Episode, EpisodeKind, EpisodeSchedule};
-pub use perf_model::{ClassTraits, KernelClass, Platform, RunningTask};
+pub use perf_model::{
+    CROSS_CLUSTER_LATENCY_S, ClassTraits, KernelClass, Platform, RunningTask,
+    SAME_CLUSTER_BW_MULT,
+};
 pub use power::{CorePower, core_power, partition_power, run_energy};
 pub use topology::{CoreDesc, CoreId, CoreKind, Cluster, Partition, Topology};

@@ -359,7 +359,46 @@ impl Platform {
         let only = [RunningTask { class, partition }];
         class.traits().base_work / self.rate(class, partition, &only, 0.0)
     }
+
+    /// Time to move a `bytes`-sized data item from a producer to a
+    /// consumer. Within a cluster the item is still resident in the shared
+    /// cache and the consumer re-reads it cache-to-cache at
+    /// [`SAME_CLUSTER_BW_MULT`]× DRAM speed. Crossing clusters forces it
+    /// through DRAM: a fixed hop latency plus the DRAM round trip, doubled
+    /// when the item overflows the destination cluster's cache (it streams
+    /// — write-out plus re-read miss traffic — instead of landing once).
+    /// Zero bytes (control-only edges) are free.
+    pub fn transfer_time(&self, bytes: u64, same_cluster: bool, dest_cache_bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let dram = self.dram_bw_gbps * 1e9; // bytes per second
+        if same_cluster {
+            bytes as f64 / (SAME_CLUSTER_BW_MULT * dram)
+        } else {
+            let spill =
+                if dest_cache_bytes > 0 && bytes > dest_cache_bytes { 2.0 } else { 1.0 };
+            CROSS_CLUSTER_LATENCY_S + spill * bytes as f64 / dram
+        }
+    }
+
+    /// [`Platform::transfer_time`] between two concrete partitions: the
+    /// cost of consuming on `to` an item produced on `from`.
+    pub fn edge_transfer_time(&self, bytes: u64, from: Partition, to: Partition) -> f64 {
+        let same =
+            self.topo.cores[from.leader].cluster == self.topo.cores[to.leader].cluster;
+        self.transfer_time(bytes, same, self.topo.cluster_of(to.leader).cache_bytes)
+    }
 }
+
+/// Fixed latency of a cluster-crossing transfer (coherence hop + DRAM
+/// round-trip setup), seconds. Dominates small items; bandwidth dominates
+/// large ones.
+pub const CROSS_CLUSTER_LATENCY_S: f64 = 2e-6;
+
+/// Same-cluster transfers run cache-to-cache at this multiple of DRAM
+/// bandwidth (the producer's output is still in the shared LLC).
+pub const SAME_CLUSTER_BW_MULT: f64 = 8.0;
 
 #[cfg(test)]
 mod tests {
@@ -474,6 +513,27 @@ mod tests {
             let t = p.ideal_exec_time(class, part(0, 1));
             assert!(t > 0.0 && t.is_finite());
         }
+    }
+
+    #[test]
+    fn transfer_cost_shape() {
+        let p = Platform::tx2();
+        // Control edges are free.
+        assert_eq!(p.transfer_time(0, false, 2 << 20), 0.0);
+        // Crossing clusters costs strictly more than staying inside one.
+        let in_cluster = p.edge_transfer_time(1 << 20, part(2, 1), part(4, 1));
+        let cross = p.edge_transfer_time(1 << 20, part(0, 1), part(4, 1));
+        assert!(in_cluster > 0.0);
+        assert!(cross > in_cluster, "cross {cross} vs local {in_cluster}");
+        // At least the hop latency, even for tiny items.
+        assert!(p.edge_transfer_time(1, part(0, 1), part(2, 1)) >= CROSS_CLUSTER_LATENCY_S);
+        // Monotone in bytes, and cache-overflowing items pay the spill.
+        let small = p.transfer_time(1 << 20, false, 2 << 20);
+        let big = p.transfer_time(4 << 20, false, 2 << 20);
+        assert!(big > small);
+        let fits = p.transfer_time(2 << 20, false, 2 << 20);
+        let spills = p.transfer_time((2 << 20) + 1, false, 2 << 20);
+        assert!(spills > 2.0 * fits - CROSS_CLUSTER_LATENCY_S - 1e-12, "{spills} vs {fits}");
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //!   fault-injection scenarios behind the chaos harness
 //!   (`repro bench-faults`): cores dying mid-run (with and without
 //!   recovery) and a permanent fail-slow degradation of the big cluster.
+//! - `commbound-tx2` / `commbound-numa20` — communication-bound variants
+//!   of the paper platforms: DRAM throttled to
+//!   [`COMMBOUND_DRAM_GBPS`] GB/s so MiB-scale DAG edge payloads make
+//!   cluster crossings the dominant scheduling cost (exercises the
+//!   planners' comm terms and the elastic bench's comm-bound point).
 //! - `hom64` / `hom128` — many-core steal-pressure stress for
 //!   `bench-overhead`: 64/128 homogeneous cores, far past the paper's
 //!   4–44-core platforms, where queue contention (not placement quality)
@@ -174,6 +179,27 @@ fn failslow_biglittle44() -> Platform {
     )]))
 }
 
+/// DRAM bandwidth of the communication-bound scenarios, GB/s. Far below
+/// the nominal platforms (25–100 GB/s): with MiB-scale edge payloads a
+/// cluster crossing costs a task-sized slice of time, so data-movement-
+/// aware placement (comm-cost planners, locality-preserving policies) is
+/// actually exercised instead of being noise.
+pub const COMMBOUND_DRAM_GBPS: f64 = 4.0;
+
+fn commbound_tx2() -> Platform {
+    // TX2 topology with the memory system throttled to interconnect-era
+    // bandwidth: crossing between the Denver and A57 clusters is the
+    // dominant scheduling cost.
+    Platform { dram_bw_gbps: COMMBOUND_DRAM_GBPS, ..Platform::tx2() }
+}
+
+fn commbound_numa20() -> Platform {
+    // haswell20's two NUMA sockets with starved cross-socket bandwidth —
+    // the classical list-scheduling setting where HEFT/PEFT's comm terms
+    // decide placements.
+    Platform { dram_bw_gbps: COMMBOUND_DRAM_GBPS, ..Platform::haswell20() }
+}
+
 fn hom64() -> Platform {
     // Many-core steal-pressure stress (bench-overhead's scaling scenario):
     // identical to the dynamic `hom64` resolution by construction — the
@@ -246,6 +272,16 @@ pub fn scenarios() -> &'static [Scenario] {
             build: failslow_biglittle44,
         },
         Scenario {
+            name: "commbound-tx2",
+            description: "TX2 clusters with 4 GB/s DRAM: cross-cluster data movement dominates",
+            build: commbound_tx2,
+        },
+        Scenario {
+            name: "commbound-numa20",
+            description: "haswell20 NUMA pair with 4 GB/s DRAM: comm-bound list-scheduling setting",
+            build: commbound_numa20,
+        },
+        Scenario {
             name: "hom64",
             description: "64 homogeneous cores: many-core steal-pressure stress (bench-overhead)",
             build: hom64,
@@ -300,12 +336,29 @@ mod tests {
             "failstop20",
             "failstop-recover8",
             "failslow-biglittle44",
+            "commbound-tx2",
+            "commbound-numa20",
             "hom64",
             "hom128",
         ] {
             assert!(names.contains(&expected), "missing scenario {expected}");
         }
-        assert!(names.len() >= 13);
+        assert!(names.len() >= 15);
+    }
+
+    #[test]
+    fn commbound_scenarios_starve_bandwidth_but_keep_topology() {
+        let cb = by_name("commbound-tx2").unwrap();
+        let nominal = Platform::tx2();
+        assert_eq!(cb.topo.n_cores(), nominal.topo.n_cores());
+        assert!(cb.dram_bw_gbps < nominal.dram_bw_gbps / 2.0);
+        // A 2 MiB cross-cluster edge costs a schedulable amount of time
+        // (hundreds of µs at 4 GB/s) instead of rounding to nothing.
+        let t = cb.transfer_time(2 << 20, false, 2 << 20);
+        assert!(t > 1e-4, "comm must be schedulably expensive: {t}");
+        let numa = by_name("commbound-numa20").unwrap();
+        assert_eq!(numa.topo.clusters.len(), 2);
+        assert!((numa.dram_bw_gbps - COMMBOUND_DRAM_GBPS).abs() < 1e-12);
     }
 
     #[test]

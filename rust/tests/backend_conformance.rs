@@ -59,6 +59,121 @@ fn every_policy_completes_the_same_dag_on_both_backends() {
     }
 }
 
+/// `ptt-elastic` placement, frozen-table variant: delegates every
+/// decision to the real policy object but reports `uses_ptt() == false`,
+/// so neither engine writes observed times back into the table. With the
+/// table frozen, a placement depends only on `(type_id, critical,
+/// max_width)` and the pre-trained values — never on wall-clock timing —
+/// which is what lets the test demand bit-identical `(leader, width)`
+/// vectors from a virtual-time and a real-thread engine.
+struct FrozenElastic(Box<dyn xitao::coordinator::Policy>);
+
+impl xitao::coordinator::Policy for FrozenElastic {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn place(
+        &self,
+        ctx: &xitao::coordinator::PlaceCtx<'_>,
+    ) -> xitao::platform::Partition {
+        self.0.place(ctx)
+    }
+    fn uses_ptt(&self) -> bool {
+        false
+    }
+}
+
+#[test]
+fn elastic_places_identically_on_both_backends_across_seeds() {
+    // A serial chain on single-cluster hom4 with a pre-trained table
+    // where (leader 0, width 4) dominates every metric: the root (placed
+    // non-critical, local width search) picks it from any admitting core,
+    // and every other chain task is critical (global search) and picks it
+    // too — so sim and real must produce the *same* (leader, width) for
+    // every task, for every seed, and that placement must be wide.
+    use xitao::coordinator::dag::TaoDag;
+    use xitao::coordinator::ptt::Ptt;
+    use xitao::platform::KernelClass;
+
+    let plat = scenarios::by_name("hom4").expect("dynamic hom<N> scenario");
+    let mut dag = TaoDag::new();
+    let mut prev: Option<usize> = None;
+    for _ in 0..20 {
+        let t = dag.add_task(KernelClass::MatMul, 0, 1.0);
+        if let Some(p) = prev {
+            dag.add_edge(p, t);
+        }
+        prev = Some(t);
+    }
+    dag.finalize().unwrap();
+
+    let placements = |be: &str, seed: u64| -> Vec<(usize, usize)> {
+        let ptt = Ptt::new(1, &plat.topo);
+        for p in plat.topo.all_partitions() {
+            // (0,4) wins on time AND time×width; everything else is far
+            // behind, so no tie-break subtlety is load-bearing.
+            let v = if p.leader == 0 && p.width == 4 { 0.5 } else { 10.0 };
+            for _ in 0..8 {
+                ptt.update(0, p.leader, p.width, v);
+            }
+        }
+        let policy = FrozenElastic(
+            policy_by_name("ptt-elastic", plat.topo.n_cores()).expect("registered policy"),
+        );
+        let backend = backend_by_name(be).expect("registered backend");
+        let run = backend
+            .run(&dag, &plat, &policy, Some(&ptt), &RunOpts { seed, ..Default::default() })
+            .unwrap_or_else(|e| panic!("{be}/{seed}: {e}"));
+        let mut v = vec![(usize::MAX, 0usize); dag.len()];
+        for r in &run.result.records {
+            v[r.task] = (r.partition.leader, r.partition.width);
+        }
+        v
+    };
+    for seed in [1u64, 2, 3] {
+        let sim = placements("sim", seed);
+        let real = placements("real", seed);
+        assert_eq!(sim, real, "seed {seed}: (leader, width) vectors differ across backends");
+        assert!(
+            sim.iter().all(|&(l, w)| l == 0 && w == 4),
+            "seed {seed}: trained wide winner not chosen: {sim:?}"
+        );
+    }
+}
+
+#[test]
+fn elastic_honors_moldability_caps_on_both_backends() {
+    // The same chain with every task forced inelastic must run width 1
+    // everywhere on both engines — the cap travels through PlaceCtx, not
+    // through any backend-specific channel.
+    use xitao::coordinator::dag::TaoDag;
+    use xitao::platform::KernelClass;
+
+    let plat = scenarios::by_name("hom4").expect("dynamic hom<N> scenario");
+    let mut dag = TaoDag::new();
+    let mut prev: Option<usize> = None;
+    for _ in 0..16 {
+        let t = dag.add_task(KernelClass::MatMul, 0, 1.0);
+        if let Some(p) = prev {
+            dag.add_edge(p, t);
+        }
+        prev = Some(t);
+    }
+    dag.finalize().unwrap();
+    let narrow = dag.with_max_width_cap(1);
+    for be in BACKEND_NAMES {
+        let policy = policy_by_name("ptt-elastic", plat.topo.n_cores()).unwrap();
+        let backend = backend_by_name(be).unwrap();
+        let run = backend
+            .run(&narrow, &plat, policy.as_ref(), None, &RunOpts::default())
+            .unwrap_or_else(|e| panic!("{be}: {e}"));
+        assert_eq!(run.result.n_tasks(), narrow.len(), "{be}");
+        for r in &run.result.records {
+            assert_eq!(r.partition.width, 1, "{be}: capped task ran wide: {:?}", r.partition);
+        }
+    }
+}
+
 #[test]
 fn criticality_tagging_is_backend_independent() {
     // Criticality is a DAG property resolved at wake-up time; the set of

@@ -44,6 +44,22 @@ fn policies_command_lists_the_registry_with_aliases() {
 }
 
 #[test]
+fn policies_command_shows_the_widths_column() {
+    // The redesigned registry advertises each policy's width behaviour
+    // (1 / all / elastic / plan); `repro policies` must render it for
+    // every row, and ptt-elastic must be the one flagged elastic.
+    let out = repro().arg("policies").output().expect("spawn repro");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for info in xitao::coordinator::scheduler::POLICIES {
+        let widths_col = format!("widths: {}", info.widths);
+        assert!(text.contains(&widths_col), "missing '{widths_col}' in:\n{text}");
+    }
+    assert!(text.contains("ptt-elastic"), "{text}");
+    assert!(text.contains("widths: elastic"), "{text}");
+}
+
+#[test]
 fn run_dag_quick_exits_zero_on_every_registered_scenario() {
     for name in xitao::platform::scenarios::names() {
         let out = repro()
@@ -278,6 +294,22 @@ fn bench_faults_quick_exits_zero_and_reports_the_fault_matrix() {
     assert!(text.contains("Chaos harness"), "{text}");
     assert!(text.contains("vs fault-free"), "{text}");
     for scen in xitao::bench::fault_scenario_names() {
+        assert!(text.contains(scen), "missing {scen} in:\n{text}");
+    }
+}
+
+#[test]
+fn bench_elastic_quick_exits_zero_and_prints_the_ablation() {
+    // Sim backend by construction. No --json: the smoke must not clobber
+    // the committed BENCH_elastic.json (CI's dedicated step regenerates
+    // it); the acceptance thresholds themselves are asserted in the
+    // bench::elastic unit tests.
+    let out = repro().args(["bench-elastic", "--quick"]).output().expect("spawn repro");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Elastic width ablation"), "{text}");
+    assert!(text.contains("speedup"), "{text}");
+    for (scen, _) in xitao::bench::ELASTIC_CELLS {
         assert!(text.contains(scen), "missing {scen} in:\n{text}");
     }
 }

@@ -93,6 +93,78 @@ fn fail_stop_is_exactly_once_on_the_real_backend_across_seeds() {
 }
 
 #[test]
+fn wide_taos_execute_every_rank_exactly_once_under_fail_stop() {
+    // The moldable-width twin of the exactly-once guarantee: a wide TAO
+    // is one task but `width` payload executions (one per rank). Under
+    // the fail-stop-with-recovery schedule, every committed record must
+    // have run each rank `0..width` exactly once and no rank beyond its
+    // width — reclamation may move a TAO between cores but must never
+    // split, duplicate or truncate its rank set. A serial chain keeps the
+    // run span past the outage window regardless of the widths chosen,
+    // and `ptt-elastic` on an untrained PTT explores wide partitions, so
+    // the property is exercised on genuinely wide placements.
+    use std::sync::atomic::AtomicUsize;
+
+    const MAX_RANKS: usize = 16;
+    let plat = scenarios::by_name("failstop-recover8").unwrap();
+    let n_tasks = 90;
+    let hits: Arc<Vec<Vec<AtomicUsize>>> = Arc::new(
+        (0..n_tasks)
+            .map(|_| (0..MAX_RANKS).map(|_| AtomicUsize::new(0)).collect())
+            .collect(),
+    );
+    let mut dag = TaoDag::new();
+    let mut prev: Option<usize> = None;
+    for t in 0..n_tasks {
+        let h = Arc::clone(&hits);
+        let task = dag.add_task_payload(
+            KernelClass::MatMul,
+            0,
+            1.0,
+            Some(payload_fn(KernelClass::MatMul, move |rank, width| {
+                assert!(rank < width, "rank {rank} outside width {width}");
+                h[t][rank].fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(3));
+            })),
+        );
+        if let Some(p) = prev {
+            dag.add_edge(p, task);
+        }
+        prev = Some(task);
+    }
+    dag.finalize().unwrap();
+
+    let policy = policy_by_name("ptt-elastic", plat.topo.n_cores()).unwrap();
+    let opts = RealEngineOpts { seed: 7, episodes: plat.episodes.clone(), ..Default::default() };
+    let result = run_dag_real(&dag, &plat.topo, policy.as_ref(), None, &opts)
+        .expect("fail-stop chain completes");
+    assert_exactly_once("wide-rank", dag.len(), &result.records);
+
+    let mut saw_wide = false;
+    for r in &result.records {
+        let w = r.partition.width;
+        saw_wide |= w > 1;
+        for rank in 0..MAX_RANKS {
+            let count = hits[r.task][rank].load(std::sync::atomic::Ordering::SeqCst);
+            if rank < w {
+                assert_eq!(
+                    count, 1,
+                    "task {} rank {rank} ran {count} times at width {w}",
+                    r.task
+                );
+            } else {
+                assert_eq!(
+                    count, 0,
+                    "task {} ran phantom rank {rank} beyond its width {w}",
+                    r.task
+                );
+            }
+        }
+    }
+    assert!(saw_wide, "exploration never placed a wide TAO — the property is vacuous");
+}
+
+#[test]
 fn hung_worker_does_not_wedge_and_its_queued_work_completes_elsewhere() {
     // One payload sleeps far past the watchdog's hung threshold (0.25 s)
     // while 40 fast siblings sit queued behind it. Between ordinary

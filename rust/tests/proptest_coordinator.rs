@@ -138,6 +138,57 @@ fn sim_placements_are_always_valid_partitions() {
 }
 
 #[test]
+fn elastic_widths_divide_their_cluster_and_respect_moldability() {
+    // Two invariants of the moldable seam, over random DAGs on both paper
+    // topologies: every width `ptt-elastic` chooses is a registered valid
+    // width of the leader's cluster (equivalently: divides the cluster
+    // length), and never exceeds the placed task's moldability cap.
+    check(Config::cases(30), "elastic widths are valid divisors within the cap",
+        |rng| (rng.gen_usize(1, 100) as u64, rng.next_u64()),
+        |&(n, seed)| {
+            let (dag, _) = generate(&DagParams::mix(n.max(1) as usize, 4.0, seed));
+            for plat in [Platform::tx2(), Platform::haswell20()] {
+                let policy = policy_by_name("ptt-elastic", plat.topo.n_cores()).unwrap();
+                let run = run_dag_sim(
+                    &dag,
+                    &plat,
+                    policy.as_ref(),
+                    None,
+                    &SimOpts { seed, ..Default::default() },
+                )
+                .unwrap();
+                for r in &run.result.records {
+                    let p = r.partition;
+                    if !plat.topo.is_valid_partition(p) {
+                        return Err(format!("invalid partition {p:?}"));
+                    }
+                    let cluster = plat.topo.cluster_of(p.leader);
+                    if !cluster.valid_widths().contains(&p.width) {
+                        return Err(format!(
+                            "width {} not a valid width of cluster {} (len {})",
+                            p.width, cluster.id, cluster.len
+                        ));
+                    }
+                    if cluster.len % p.width != 0 {
+                        return Err(format!(
+                            "width {} does not divide cluster length {}",
+                            p.width, cluster.len
+                        ));
+                    }
+                    let cap = dag.nodes[r.task].max_width;
+                    if p.width > cap {
+                        return Err(format!(
+                            "task {} placed at width {} above its moldability cap {cap}",
+                            r.task, p.width
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
 fn sim_respects_dependencies() {
     check(Config::cases(30), "child never starts before parent ends",
         |rng| rng.gen_usize(2, 80) as u64,
